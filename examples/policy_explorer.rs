@@ -1,0 +1,66 @@
+//! Policy explorer: inspect *what* each eviction policy keeps.
+//!
+//! Prefills the same prompt under several policies and prints, per layer,
+//! the kept-position map of one kv head plus the dynamic budget split —
+//! makes the difference between fixed/dynamic head and layer budgets
+//! visible at a glance.
+//!
+//!   cargo run --release --example policy_explorer            # real model
+//!   cargo run --release --example policy_explorer -- --mock  # no artifacts
+
+use anyhow::Result;
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions};
+use lava::model::backend::{MockBackend, ModelBackend, PjrtBackend};
+use lava::util::cli::Args;
+use lava::util::rng::Rng;
+use lava::workloads;
+
+fn explore<B: ModelBackend>(engine: &mut Engine<B>) -> Result<()> {
+    let mut rng = Rng::new(3);
+    let ctx = 200;
+    let inst = workloads::needle_qa(&mut rng, ctx, 4);
+    // where is the needle?
+    let needle_pos = inst
+        .prompt
+        .windows(2)
+        .position(|w| w[0] == workloads::SEP)
+        .unwrap();
+    println!("prompt {} tokens; needle at ~{}\n", inst.prompt.len(), needle_pos);
+
+    for name in ["snapkv", "ada-snapkv", "pyramidkv", "cake", "lava"] {
+        engine.opts.policy = Policy::by_name(name).unwrap();
+        engine.opts.budget_per_head = 24;
+        let (sess, _) = engine.prefill_only(&inst.prompt)?;
+        println!("policy {name}: layer budgets {:?}", sess.budgets);
+        for (l, cache) in sess.caches.iter().enumerate() {
+            let lens: Vec<usize> = (0..4).map(|h| cache.head_len(h)).collect();
+            // render head 0's keep map
+            let mut map = vec!['.'; inst.prompt.len()];
+            for i in 0..cache.head_len(0) {
+                let p = cache.position(0, i) as usize;
+                map[p] = '#';
+            }
+            let m: String = map.chunks(4).map(|c| if c.contains(&'#') { '#' } else { '.' }).collect();
+            println!("  L{l} head lens {lens:?}  keep[h0]: {m}");
+        }
+        println!();
+    }
+    Ok(())
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    if args.bool("mock") {
+        let mut mock = MockBackend::new(MockBackend::default_config());
+        mock.hot_positions = vec![60, 61];
+        let mut engine = Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+        explore(&mut engine)
+    } else {
+        let dir = args.str_or("artifacts", "artifacts");
+        let backend = PjrtBackend::load(&dir)?;
+        let mut engine =
+            Engine::new(backend, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+        explore(&mut engine)
+    }
+}

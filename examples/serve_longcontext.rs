@@ -1,0 +1,83 @@
+//! Long-context serving over TCP: starts the JSON-lines server with LAVa
+//! compression, then (from a client thread) streams a long needle prompt
+//! and prints the response — the deployment shape of the paper's system.
+//!
+//!   cargo run --release --example serve_longcontext            # real model
+//!   cargo run --release --example serve_longcontext -- --mock
+
+use std::io::{BufRead, BufReader, Write};
+
+use anyhow::Result;
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions};
+use lava::coordinator::server::Server;
+use lava::model::backend::{MockBackend, PjrtBackend};
+use lava::util::cli::Args;
+use lava::util::json::Json;
+use lava::util::rng::Rng;
+use lava::workloads;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let addr = args.str_or("addr", "127.0.0.1:7171");
+    let policy = Policy::by_name(&args.str_or("policy", "lava")).expect("policy");
+    let budget = args.usize_or("budget", 32);
+    let ctx = args.usize_or("ctx", 400);
+    let opts = EngineOptions::new(policy, budget);
+
+    let addr_srv = addr.clone();
+    let mock = args.bool("mock");
+    let artifacts = args.str_or("artifacts", "artifacts");
+    let server_thread = std::thread::spawn(move || -> Result<()> {
+        if mock {
+            let backend = MockBackend::new(MockBackend::default_config());
+            Server::new(Engine::new(backend, opts)).serve(&addr_srv)
+        } else {
+            let backend = PjrtBackend::load(&artifacts)?;
+            Server::new(Engine::new(backend, opts)).serve(&addr_srv)
+        }
+    });
+
+    // client: wait for bind, then send a long-context request
+    let mut conn = None;
+    for _ in 0..200 {
+        if let Ok(c) = std::net::TcpStream::connect(&addr) {
+            conn = Some(c);
+            break;
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+    }
+    let mut c = conn.expect("server did not bind");
+    let mut rng = Rng::new(11);
+    let inst = workloads::needle_qa(&mut rng, ctx, 4);
+    let prompt: Vec<String> = inst.prompt.iter().map(|t| t.to_string()).collect();
+    writeln!(
+        c,
+        "{{\"prompt\": [{}], \"max_new_tokens\": {}}}",
+        prompt.join(","),
+        inst.target.len()
+    )?;
+    let mut reader = BufReader::new(c.try_clone()?);
+    let mut line = String::new();
+    reader.read_line(&mut line)?;
+    let j = Json::parse(line.trim())?;
+    println!("expected : {:?}", inst.target);
+    println!("response : {}", line.trim());
+    let tokens: Vec<i32> = j
+        .get("tokens")
+        .and_then(|t| t.as_arr())
+        .map(|a| a.iter().filter_map(|x| x.as_f64().map(|f| f as i32)).collect())
+        .unwrap_or_default();
+    println!("score    : {:.2}", inst.score(&tokens));
+
+    writeln!(c, "{{\"cmd\": \"metrics\"}}")?;
+    line.clear();
+    reader.read_line(&mut line)?;
+    println!("metrics  : {}", line.trim());
+
+    writeln!(c, "{{\"cmd\": \"shutdown\"}}")?;
+    line.clear();
+    reader.read_line(&mut line)?;
+    server_thread.join().expect("server thread")?;
+    Ok(())
+}

@@ -1,0 +1,178 @@
+"""AOT export: lower every entrypoint to HLO *text* + dump weights + manifest.
+
+HLO text (NOT serialized HloModuleProto) is the interchange format: the
+image's xla_extension 0.5.1 rejects jax>=0.5 protos with 64-bit instruction
+ids; `HloModuleProto::from_text_file` re-parses and reassigns ids cleanly
+(see /opt/xla-example/README.md).
+
+Outputs under artifacts/:
+  manifest.json            model config + entrypoint arg specs + file index
+  weights.npz              training cache
+  weights/<name>.bin       raw little-endian f32 blobs, one per tensor
+  <entry>_<bucket>.hlo.txt lowered modules
+
+Usage: cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import functools
+import json
+import os
+
+import jax
+import numpy as np
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model as M
+from . import train
+from .config import MODEL, ARTIFACTS, manifest_dict
+
+F32 = jnp.float32
+I32 = jnp.int32
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_to_file(fn, args, path):
+    lowered = jax.jit(fn).lower(*args)
+    text = to_hlo_text(lowered)
+    with open(path, "w") as f:
+        f.write(text)
+    return len(text)
+
+
+def sds(shape, dtype=F32):
+    return jax.ShapeDtypeStruct(shape, dtype)
+
+
+def layer_weight_specs(cfg=MODEL):
+    d, hq, hk, dh, ff = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                         cfg.d_head, cfg.d_ff)
+    return [
+        ("ln1", (d,)),
+        ("wq", (d, hq * dh)),
+        ("wk", (d, hk * dh)),
+        ("wv", (d, hk * dh)),
+        ("wo", (hq * dh, d)),
+        ("ln2", (d,)),
+        ("w1", (d, ff)),
+        ("w2", (ff, d)),
+    ]
+
+
+def write_weights(params, out_dir):
+    """One raw LE f32 .bin per tensor + index entries for the manifest."""
+    wdir = os.path.join(out_dir, "weights")
+    os.makedirs(wdir, exist_ok=True)
+    index = []
+
+    def dump(name, arr):
+        arr = np.asarray(arr, np.float32)
+        fname = f"weights/{name}.bin"
+        arr.tofile(os.path.join(out_dir, fname))
+        index.append({"name": name, "file": fname, "shape": list(arr.shape)})
+
+    dump("tok_emb", params["tok_emb"])
+    dump("ln_f", params["ln_f"])
+    dump("unembed", params["unembed"])
+    for li, lw in enumerate(params["layers"]):
+        for k, _ in layer_weight_specs():
+            dump(f"layers.{li}.{k}", lw[k])
+    return index
+
+
+def build(out_dir, skip_existing=True):
+    os.makedirs(out_dir, exist_ok=True)
+    cfg = MODEL
+    params = train.load_or_train(
+        os.path.join(out_dir, "weights.npz"),
+        log_path=os.path.join(out_dir, "train_log.json"),
+    )
+    weight_index = write_weights(params, out_dir)
+
+    lw = layer_weight_specs()
+    lw_sds = [sds(s) for _, s in lw]
+    d, hq, hk, dh, w = (cfg.d_model, cfg.n_heads, cfg.n_kv_heads,
+                        cfg.d_head, cfg.window)
+
+    entrypoints = {}
+    jobs = []
+
+    def add(name, fn, args, arg_names, outs):
+        entrypoints[name] = {"args": arg_names, "outputs": outs}
+        jobs.append((name, fn, args))
+
+    for n in ARTIFACTS.prefill_buckets:
+        add(
+            f"embed_{n}",
+            M.embed,
+            [sds((n,), I32), sds((cfg.vocab_size, d))],
+            ["ids", "tok_emb"],
+            ["x"],
+        )
+        add(
+            f"layer_prefill_{n}",
+            functools.partial(M.layer_prefill, interpret=True),
+            [sds((n, d)), sds((1,), I32)] + lw_sds,
+            ["x", "length"] + [k for k, _ in lw],
+            ["x_out", "k", "v", "win_attn", "acc_attn", "vnorm"],
+        )
+        add(
+            f"lava_score_{n}",
+            functools.partial(M.lava_score_ep, interpret=True),
+            [sds((hq, w, n)), sds((hk, n, dh)), sds((1,), I32)],
+            ["win_attn", "v", "length"],
+            ["scores"],
+        )
+    for m in ARTIFACTS.decode_buckets:
+        add(
+            f"layer_decode_{m}",
+            M.layer_decode,
+            [sds((1, d)), sds((hk, m, dh)), sds((hk, m, dh)),
+             sds((hk, m)), sds((1,), I32)] + lw_sds,
+            ["x", "k_cache", "v_cache", "valid", "pos"] + [k for k, _ in lw],
+            ["x_out", "k_new", "v_new", "attn"],
+        )
+    add(
+        "logits",
+        M.logits,
+        [sds((1, d)), sds((d,)), sds((d, cfg.vocab_size))],
+        ["x", "ln_f", "unembed"],
+        ["p"],
+    )
+
+    for name, fn, args in jobs:
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        if skip_existing and os.path.exists(path):
+            print(f"[aot] keep  {name}")
+            continue
+        nchars = lower_to_file(fn, args, path)
+        print(f"[aot] wrote {name} ({nchars} chars)")
+
+    manifest = manifest_dict()
+    manifest["weights"] = weight_index
+    manifest["entrypoints"] = entrypoints
+    manifest["layer_weight_order"] = [k for k, _ in lw]
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"[aot] manifest + {len(jobs)} entrypoints -> {out_dir}")
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts")
+    ap.add_argument("--force", action="store_true",
+                    help="re-lower even if the .hlo.txt already exists")
+    args = ap.parse_args()
+    build(args.out, skip_existing=not args.force)
+
+
+if __name__ == "__main__":
+    main()

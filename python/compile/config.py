@@ -1,0 +1,63 @@
+"""Model + artifact configuration shared by the whole build path.
+
+This is the single source of truth for the tiny GQA transformer used to
+exercise LAVa. The same values are serialized into artifacts/manifest.json so
+the rust coordinator never hard-codes them.
+
+The model is deliberately small (~1M params): the image is a single CPU core
+and the model is trained at `make artifacts` time on synthetic long-context
+tasks (see train.py + DESIGN.md §3 for why a *trained* model is required for
+eviction-quality comparisons to be meaningful).
+"""
+
+from dataclasses import dataclass, asdict, field
+from typing import List
+
+
+@dataclass(frozen=True)
+class ModelConfig:
+    vocab_size: int = 260          # 256 bytes + BOS/SEP/QUERY/PAD
+    n_layers: int = 4
+    d_model: int = 128
+    n_heads: int = 8               # query heads
+    n_kv_heads: int = 4            # GQA: group size = n_heads / n_kv_heads
+    d_head: int = 16
+    d_ff: int = 256
+    rope_base: float = 10000.0
+    window: int = 16               # recent-window w (SnapKV/LAVa observation;
+                                   # also the never-evicted suffix). Scaled
+                                   # with the ~16x context scale-down.
+    max_seq_len: int = 4096
+
+    # Token ids of the specials.
+    bos_id: int = 256
+    sep_id: int = 257
+    query_id: int = 258
+    pad_id: int = 259
+
+    @property
+    def group_size(self) -> int:
+        return self.n_heads // self.n_kv_heads
+
+
+@dataclass(frozen=True)
+class ArtifactConfig:
+    # Static-shape buckets for prefill/embed (token dimension N).
+    prefill_buckets: List[int] = field(
+        default_factory=lambda: [128, 256, 512, 1024, 2048]
+    )
+    # Static-shape buckets for decode cache capacity (slot dimension M).
+    decode_buckets: List[int] = field(
+        default_factory=lambda: [128, 256, 512, 1024, 2048, 4096]
+    )
+    pool_kernel: int = 7           # maxpool smoothing width (paper App. D)
+
+
+MODEL = ModelConfig()
+ARTIFACTS = ArtifactConfig()
+
+
+def manifest_dict() -> dict:
+    d = asdict(MODEL)
+    d["group_size"] = MODEL.group_size
+    return {"model": d, "artifacts": asdict(ARTIFACTS)}

@@ -1,0 +1,130 @@
+"""Synthetic long-context task generators (build-time training data).
+
+Four byte-level task families chosen so the trained model develops the
+attention structure LAVa's evaluation depends on (induction/retrieval heads
+that attend far back, plus local heads):
+
+  needle   filler ... [SEP] key val*4 [SEP] filler [QUERY] key -> val*4
+  kv       k k v v [SEP] ... pairs ... [QUERY] k k -> v v      (extraction)
+  motif    a short motif repeated to fill the context; predict its
+           continuation (periodic induction; generation-flavoured)
+  copy     [BOS] payload(<=64) [SEP] filler [SEP2=QUERY] payload (generation)
+
+The same generators are re-implemented in rust/src/workloads/ to drive the
+benchmark suite; python only uses them for training. Lengths are interleaved
+per step (never phased) — a phased curriculum catastrophically forgets.
+"""
+
+import numpy as np
+
+from .config import MODEL
+
+BOS, SEP, QUERY, PAD = MODEL.bos_id, MODEL.sep_id, MODEL.query_id, MODEL.pad_id
+BYTES = 256
+
+
+def _fill(rng, n):
+    return rng.integers(0, BYTES, size=n)
+
+
+def gen_needle(rng, seq_len, needle_len=4):
+    """Random filler with an embedded [SEP] key val* [SEP]; query at the end."""
+    key = rng.integers(0, BYTES)
+    val = rng.integers(0, BYTES, size=needle_len)
+    needle = np.concatenate([[SEP, key], val, [SEP]])
+    tail = np.concatenate([[QUERY, key], val])
+    n_fill = seq_len - len(needle) - len(tail) - 1
+    depth = rng.integers(0, max(1, n_fill))
+    toks = np.concatenate(
+        [[BOS], _fill(rng, depth), needle, _fill(rng, n_fill - depth), tail]
+    )
+    mask = np.zeros(len(toks), bool)
+    mask[-needle_len:] = True
+    return toks, mask
+
+
+def gen_kv(rng, seq_len):
+    """k k v v [SEP] pairs, then [QUERY] k k -> v v."""
+    n_pairs = max(1, (seq_len - 6) // 5)
+    keys = rng.integers(0, BYTES, size=(n_pairs, 2))
+    vals = rng.integers(0, BYTES, size=(n_pairs, 2))
+    body = []
+    for i in range(n_pairs):
+        body.extend(keys[i])
+        body.extend(vals[i])
+        body.append(SEP)
+    qi = rng.integers(0, n_pairs)
+    toks = np.concatenate([[BOS], body, [QUERY], keys[qi], vals[qi]])
+    mask = np.zeros(len(toks), bool)
+    mask[-2:] = True
+    return toks, mask
+
+
+def gen_motif(rng, seq_len, min_p=8, max_p=16):
+    """Periodic sequence; supervise the last two periods only.
+
+    Supervision must stay SPARSE: densely supervising every motif position
+    makes this task dominate the batch gradient and blocks the induction
+    breakthrough entirely (verified empirically at build time: echo-only
+    reaches loss 0.004 in 300 steps; +dense-motif stalls at 5.4)."""
+    p = int(rng.integers(min_p, max_p + 1))
+    motif = _fill(rng, p)
+    reps = (seq_len - 1) // p + 1
+    body = np.tile(motif, reps)[: seq_len - 1]
+    toks = np.concatenate([[BOS], body])
+    mask = np.zeros(len(toks), bool)
+    mask[-2 * p:] = True
+    return toks, mask
+
+
+def gen_copy(rng, seq_len, max_payload=64):
+    """[BOS] payload [SEP] filler [QUERY] payload ; loss on the echo."""
+    m = int(min(max_payload, max(4, (seq_len - 3) // 3)))
+    payload = _fill(rng, m)
+    n_fill = seq_len - 2 * m - 3
+    toks = np.concatenate(
+        [[BOS], payload, [SEP], _fill(rng, max(0, n_fill)), [QUERY], payload]
+    )
+    mask = np.zeros(len(toks), bool)
+    mask[-m:] = True
+    return toks, mask
+
+
+def gen_echo(rng, seq_len):
+    """[BOS] payload [SEP] payload — dense copy with a RANDOM payload
+    length. The copy distance must vary per sample: with fixed geometry the
+    model learns a degenerate fixed-offset attention solution that collapses
+    catastrophically the moment any other sequence length appears (observed
+    at build time)."""
+    m = (seq_len - 2) // 2
+    payload = _fill(rng, m)
+    toks = np.concatenate([[BOS], payload, [SEP], payload])
+    mask = np.zeros(len(toks), bool)
+    mask[m + 2:] = True
+    return toks, mask
+
+
+GENERATORS = (gen_needle, gen_kv, gen_motif, gen_copy, gen_echo)
+
+# Bootstrap mixture (no motif): the echo task's dense half-sequence copy is
+# what triggers induction-head formation. Main mixture then adds motif.
+MIX_BOOT = [(gen_echo, 0.4), (gen_kv, 0.25), (gen_needle, 0.25), (gen_copy, 0.1)]
+MIX = [(gen_echo, 0.3), (gen_kv, 0.2), (gen_needle, 0.2), (gen_copy, 0.1),
+       (gen_motif, 0.2)]
+
+
+def batch(rng, batch_size, seq_len, mix=None):
+    """Mixture batch, padded to seq_len. Returns ids [B,T] i32, mask [B,T]."""
+    mix = mix or MIX
+    ids = np.full((batch_size, seq_len), PAD, np.int32)
+    mask = np.zeros((batch_size, seq_len), bool)
+    gens = [g for g, _ in mix]
+    probs = np.array([p for _, p in mix])
+    probs = probs / probs.sum()
+    for b in range(batch_size):
+        gen = gens[rng.choice(len(gens), p=probs)]
+        toks, m = gen(rng, seq_len)
+        toks, m = toks[:seq_len], m[:seq_len]
+        ids[b, : len(toks)] = toks
+        mask[b, : len(m)] = m
+    return ids, mask

@@ -1,0 +1,126 @@
+"""L1 Pallas kernel: tiled causal GQA attention for prefill.
+
+TPU rethink of the paper's FlashAttention-2 substrate (DESIGN.md
+§Hardware-Adaptation): instead of CUDA threadblocks + shared memory we
+express the HBM->VMEM schedule with a Pallas grid + BlockSpecs:
+
+  grid = (H, N // BLOCK_Q)
+    - each step owns one query panel q[h, iq*BQ:(iq+1)*BQ, :] in VMEM,
+    - K/V for the head's GQA group are streamed in BLOCK_K-sized tiles,
+    - the score panel [BLOCK_Q, N] lives in VMEM scratch (<= 32x2048 f32 =
+      256 KiB, far under the ~16 MiB VMEM budget), so softmax is a single
+      in-register pass and the [N, N] matrix never exists in HBM,
+    - QK^T and PV are MXU-shaped matmuls.
+
+Besides the attention output, the kernel accumulates H2O's column attention
+mass acc[h, i] = sum_{j<length} A[j, i] across grid steps for free (the
+output block for `acc` is revisited by every iq step of a head and
+accumulated in place) — this is what lets the rust side implement H2O/TOVA
+without a second pass over the cache.
+
+Must run with interpret=True on this image (CPU PJRT cannot execute Mosaic
+custom-calls); the lowered HLO is what the rust runtime executes.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+BLOCK_Q = 32
+BLOCK_K = 128
+
+
+def _kernel(length_ref, q_ref, k_ref, v_ref, o_ref, acc_ref, *, block_k, n):
+    h_idx = pl.program_id(0)  # noqa: F841  (kept for grid readability)
+    iq = pl.program_id(1)
+    length = length_ref[0]
+
+    q = q_ref[0]                       # [BQ, dh]
+    bq, dh = q.shape
+    nk = n // block_k
+
+    row = iq * bq + jax.lax.broadcasted_iota(jnp.int32, (bq, n), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (bq, n), 1)
+    mask = (col <= row) & (col < length)
+
+    # Score panel in VMEM scratch semantics: built tile-by-tile, kept local.
+    def score_tile(jk, acc):
+        k_tile = jax.lax.dynamic_slice(k_ref[0], (jk * block_k, 0), (block_k, dh))
+        s = jnp.dot(q, k_tile.T, preferred_element_type=jnp.float32)
+        return jax.lax.dynamic_update_slice(acc, s, (0, jk * block_k))
+
+    scores = jax.lax.fori_loop(
+        0, nk, score_tile, jnp.zeros((bq, n), jnp.float32)
+    ) / jnp.sqrt(jnp.float32(dh))
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    l = jnp.sum(p, axis=-1, keepdims=True)
+    probs = p / l                                    # [BQ, N]
+
+    # PV contraction, streamed over the same K tiles.
+    def pv_tile(jk, acc):
+        v_tile = jax.lax.dynamic_slice(v_ref[0], (jk * block_k, 0), (block_k, dh))
+        p_tile = jax.lax.dynamic_slice(probs, (0, jk * block_k), (bq, block_k))
+        return acc + jnp.dot(p_tile, v_tile, preferred_element_type=jnp.float32)
+
+    o_ref[0] = jax.lax.fori_loop(0, nk, pv_tile, jnp.zeros((bq, dh), jnp.float32))
+
+    # Column-mass accumulation (H2O score), only over valid query rows.
+    row_valid = (iq * bq + jnp.arange(bq)) < length
+    colsum = jnp.sum(jnp.where(row_valid[:, None], probs, 0.0), axis=0)  # [N]
+
+    @pl.when(iq == 0)
+    def _init():
+        acc_ref[0] = jnp.zeros_like(acc_ref[0])
+
+    acc_ref[0] += colsum
+
+
+@functools.partial(jax.jit, static_argnames=("interpret",))
+def flash_attention(q, k, v, length, interpret=True):
+    """Tiled causal attention.
+
+    Args:
+      q: [H, N, d_h] RoPE-rotated queries.
+      k: [Hk, N, d_h] RoPE-rotated keys.
+      v: [Hk, N, d_h] values.
+      length: [1] int32, number of valid tokens.
+
+    Returns:
+      o:   [H, N, d_h]
+      acc: [H, N] accumulated column attention mass over valid rows.
+    """
+    h, n, dh = q.shape
+    hk = k.shape[0]
+    g = h // hk
+    block_q = min(BLOCK_Q, n)
+    block_k = min(BLOCK_K, n)
+    assert n % block_q == 0 and n % block_k == 0
+
+    grid = (h, n // block_q)
+    return pl.pallas_call(
+        functools.partial(_kernel, block_k=block_k, n=n),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh, iq: (0,)),
+            pl.BlockSpec((1, block_q, dh), lambda hh, iq: (hh, iq, 0)),
+            pl.BlockSpec((1, n, dh), lambda hh, iq: (hh // g, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda hh, iq: (hh // g, 0, 0)),
+        ],
+        out_specs=[
+            pl.BlockSpec((1, block_q, dh), lambda hh, iq: (hh, iq, 0)),
+            pl.BlockSpec((1, n), lambda hh, iq: (hh, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((h, n, dh), jnp.float32),
+            jax.ShapeDtypeStruct((h, n), jnp.float32),
+        ],
+        interpret=interpret,
+    )(length, q, k, v)

@@ -1,0 +1,87 @@
+"""L1 Pallas kernel: fused LAVa score (the paper's compute hot-spot).
+
+Fuses the whole of Definition 1 + the GQA rule (§4.3) + maxpool smoothing
+(App. D) into one kernel so only the [Hk, N] score row ever leaves fast
+memory:
+
+    window-attn mean over w  ->  x max_k ||V[k]||_1  ->  per-head maxpool(7)
+    ->  GQA group-max        ->  scores [Hk, N]
+
+SnapKV-style reference implementations materialize the [H, w, N] panel in
+HBM and run four separate elementwise/reduction launches; on TPU the fusion
+keeps VMEM traffic at (g*w*N + N*d_h) reads + N writes per kv head.
+
+Schedule: grid = (Hk,); each step owns one GQA group: the group's window
+attention panel [g, w, N] and the kv head's value tile [N, d_h].
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _maxpool_same(x, kernel):
+    """Same-padding max pool along the last axis via shifted maxima."""
+    half = kernel // 2
+    out = x
+    for off in range(1, half + 1):
+        left = jnp.concatenate(
+            [jnp.full(x.shape[:-1] + (off,), NEG_INF, x.dtype), x[..., :-off]],
+            axis=-1,
+        )
+        right = jnp.concatenate(
+            [x[..., off:], jnp.full(x.shape[:-1] + (off,), NEG_INF, x.dtype)],
+            axis=-1,
+        )
+        out = jnp.maximum(out, jnp.maximum(left, right))
+    return out
+
+
+def _kernel(length_ref, attn_ref, v_ref, out_ref, *, pool_kernel):
+    length = length_ref[0]
+    attn = attn_ref[...]                  # [g, w, N]  group's window attention
+    v = v_ref[0]                          # [N, d_h]
+    g, w, n = attn.shape
+
+    valid = jax.lax.broadcasted_iota(jnp.int32, (n,), 0) < length
+
+    a_mean = jnp.mean(attn, axis=1)                        # [g, N]
+    vnorm = jnp.sum(jnp.abs(v), axis=-1)                   # [N]
+    vbar = jnp.max(jnp.where(valid, vnorm, 0.0))           # scalar
+    s = a_mean * vbar                                      # [g, N]
+    s = _maxpool_same(s, pool_kernel)                      # per-head smoothing
+    s = jnp.max(s, axis=0)                                 # GQA group-max [N]
+    out_ref[0] = jnp.where(valid, s, 0.0)
+
+
+@functools.partial(jax.jit, static_argnames=("group", "pool_kernel", "interpret"))
+def lava_score(win_attn, v, length, group, pool_kernel=7, interpret=True):
+    """Fused LAVa scores.
+
+    Args:
+      win_attn: [H, w, N] recent-window attention (window_attention output).
+      v:        [Hk, N, d_h] value cache.
+      length:   [1] int32.
+      group:    GQA group size (H // Hk).
+
+    Returns scores [Hk, N]; positions >= length are 0.
+    """
+    h, w, n = win_attn.shape
+    hk, n2, dh = v.shape
+    assert n == n2 and h == hk * group
+    return pl.pallas_call(
+        functools.partial(_kernel, pool_kernel=pool_kernel),
+        grid=(hk,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (0,)),
+            pl.BlockSpec((group, w, n), lambda i: (i, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda i: (i, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, n), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((hk, n), jnp.float32),
+        interpret=interpret,
+    )(length, win_attn, v)

@@ -1,0 +1,101 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+Everything here is the *semantic definition*; the Pallas kernels in
+flash_attention.py / window_attention.py / lava_score.py must match these to
+within float tolerance (enforced by python/tests/).
+
+Shape conventions (single sequence; batching lives in the rust coordinator):
+  q        [H,  N, d_h]   query heads
+  k, v     [Hk, N, d_h]   kv heads (GQA, group size g = H // Hk)
+  length   scalar int32   number of valid tokens (<= N); rows/cols >= length
+                          are padding and must not contribute.
+"""
+
+import jax
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def repeat_kv(x: jnp.ndarray, group: int) -> jnp.ndarray:
+    """[Hk, N, d] -> [Hk*group, N, d] by repeating each kv head `group` times."""
+    return jnp.repeat(x, group, axis=0)
+
+
+def causal_attention_ref(q, k, v, length):
+    """Full causal attention + accumulated column attention mass.
+
+    Returns:
+      o        [H, N, d_h]  attention output
+      acc_attn [H, N]       sum_{j < length} A[j, i]  (H2O's accumulated score)
+    """
+    h, n, dh = q.shape
+    g = h // k.shape[0]
+    kk, vv = repeat_kv(k, g), repeat_kv(v, g)
+    scores = jnp.einsum("hqd,hkd->hqk", q, kk) / jnp.sqrt(jnp.float32(dh))
+    rows = jnp.arange(n)[:, None]
+    cols = jnp.arange(n)[None, :]
+    mask = (cols <= rows) & (cols < length)
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    a = jax.nn.softmax(scores, axis=-1)
+    o = jnp.einsum("hqk,hkd->hqd", a, vv)
+    row_valid = (jnp.arange(n) < length).astype(a.dtype)
+    acc = jnp.einsum("hqk,q->hk", a, row_valid)
+    return o, acc
+
+
+def window_attention_ref(qw, k, length, window):
+    """Attention probabilities of the last `window` valid queries over all keys.
+
+    qw is the already-sliced (and RoPE-rotated) query block for positions
+    [length - window, length); requires length >= window (enforced upstream).
+
+    Returns A_win [H, window, N]; columns >= length are exactly 0.
+    """
+    h, w, dh = qw.shape
+    g = h // k.shape[0]
+    kk = repeat_kv(k, g)
+    n = k.shape[1]
+    scores = jnp.einsum("hqd,hkd->hqk", qw, kk) / jnp.sqrt(jnp.float32(dh))
+    qpos = length - window + jnp.arange(w)[:, None]      # [w, 1]
+    cols = jnp.arange(n)[None, :]
+    mask = (cols <= qpos) & (cols < length)
+    scores = jnp.where(mask[None], scores, NEG_INF)
+    return jax.nn.softmax(scores, axis=-1) * mask[None]
+
+
+def maxpool1d_ref(x, kernel):
+    """Same-padding max pool along the last axis (paper App. D, kernel=7)."""
+    half = kernel // 2
+    out = x
+    for off in range(1, half + 1):
+        left = jnp.concatenate(
+            [jnp.full(x.shape[:-1] + (off,), NEG_INF, x.dtype), x[..., :-off]],
+            axis=-1,
+        )
+        right = jnp.concatenate(
+            [x[..., off:], jnp.full(x.shape[:-1] + (off,), NEG_INF, x.dtype)],
+            axis=-1,
+        )
+        out = jnp.maximum(out, jnp.maximum(left, right))
+    return out
+
+
+def lava_score_ref(win_attn, v, length, group, pool_kernel):
+    """Fused LAVa score (Definition 1 + GQA group-max + maxpool smoothing).
+
+    s_{l,h}[i] = (max_k ||V[k]||_1 / w) * sum_{j in window} A^j[i]
+    per-head maxpool(pool_kernel), then group-max over the GQA group.
+
+    Returns scores [Hk, N]; positions >= length are 0.
+    """
+    h, w, n = win_attn.shape
+    hk = h // group
+    a_mean = jnp.mean(win_attn, axis=1)                    # [H, N]
+    vnorm = jnp.sum(jnp.abs(v), axis=-1)                   # [Hk, N]
+    valid = jnp.arange(n) < length
+    vbar = jnp.max(jnp.where(valid[None], vnorm, 0.0), axis=-1)   # [Hk]
+    s = a_mean * jnp.repeat(vbar, group)[:, None]          # [H, N]
+    s = maxpool1d_ref(s, pool_kernel)
+    s = jnp.max(s.reshape(hk, group, n), axis=1)           # [Hk, N]
+    return jnp.where(valid[None], s, 0.0)

@@ -1,0 +1,69 @@
+"""L1 Pallas kernel: recent-window attention recompute (the observation pass).
+
+SnapKV/LAVa score cache entries by how much the last `w` queries attend to
+them (Definition 1). FlashAttention never materializes those probability
+rows, so — exactly as in the paper's complexity analysis (App. D, the
+O(H N w d_h) term) — we recompute them in a second, much cheaper pass.
+
+Schedule: grid = (H,); per head the [w, N] probability panel is computed in
+one VMEM-resident block (w=32, N<=2048 -> 256 KiB f32). K is streamed from
+the head's GQA group slot. Columns >= length are exactly zero so downstream
+scoring can treat the panel as dense.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+NEG_INF = -1e30
+
+
+def _kernel(length_ref, qw_ref, k_ref, out_ref, *, window, n):
+    length = length_ref[0]
+    qw = qw_ref[0]                                   # [w, dh]
+    k = k_ref[0]                                     # [n, dh]
+    dh = qw.shape[-1]
+
+    scores = jnp.dot(qw, k.T, preferred_element_type=jnp.float32)
+    scores = scores / jnp.sqrt(jnp.float32(dh))
+
+    qpos = length - window + jax.lax.broadcasted_iota(jnp.int32, (window, n), 0)
+    col = jax.lax.broadcasted_iota(jnp.int32, (window, n), 1)
+    mask = (col <= qpos) & (col < length)
+    scores = jnp.where(mask, scores, NEG_INF)
+
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.exp(scores - m)
+    p = jnp.where(mask, p, 0.0)
+    out_ref[0] = p / jnp.sum(p, axis=-1, keepdims=True)
+
+
+@functools.partial(jax.jit, static_argnames=("window", "interpret"))
+def window_attention(qw, k, length, window, interpret=True):
+    """Attention probabilities of the last `window` queries over all keys.
+
+    Args:
+      qw: [H, w, d_h] RoPE-rotated queries for positions [length-w, length).
+      k:  [Hk, N, d_h] RoPE-rotated keys.
+      length: [1] int32.
+
+    Returns A_win [H, w, N] with zero mass on columns >= length.
+    """
+    h, w, dh = qw.shape
+    assert w == window
+    hk, n, _ = k.shape
+    g = h // hk
+    return pl.pallas_call(
+        functools.partial(_kernel, window=window, n=n),
+        grid=(h,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda hh: (0,)),
+            pl.BlockSpec((1, w, dh), lambda hh: (hh, 0, 0)),
+            pl.BlockSpec((1, n, dh), lambda hh: (hh // g, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, w, n), lambda hh: (hh, 0, 0)),
+        out_shape=jax.ShapeDtypeStruct((h, w, n), jnp.float32),
+        interpret=interpret,
+    )(length, qw, k)

@@ -1,0 +1,278 @@
+"""L2: the GQA transformer, written as the per-entrypoint jax functions the
+rust coordinator executes through PJRT.
+
+Entrypoints (each AOT-lowered to HLO text by aot.py, one per shape bucket):
+
+  embed(ids[N], tok_emb)                      -> x[N, d]
+  layer_prefill(x[N,d], length, <layer w>)    -> x_out, K, V, win_attn,
+                                                 acc_attn, vnorm
+  lava_score_ep(win_attn, V, length)          -> scores[Hk, N]   (fused path)
+  layer_decode(x[1,d], K[Hk,M,dh], V, valid, pos, <layer w>)
+                                              -> x_out, k_new, v_new, attn
+  logits(x[1,d], ln_f, unembed)               -> p[vocab]
+
+Weights are *runtime inputs*, so one compiled `layer_prefill` executable
+serves every layer — the rust side binds each layer's weight literals.
+
+Layer-wise prefill (one PJRT call per layer) is exactly what Algorithm 2
+needs: the coordinator evicts layer l's cache (and recompresses layers < l)
+before layer l+1 runs, so peak memory never holds two uncompressed layers.
+
+The same module also provides full_forward() — a plain-jnp batched forward
+used only by train.py at build time — and reference_prefill(), the oracle
+for the composed entrypoints.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .config import MODEL, ARTIFACTS
+from .kernels.flash_attention import flash_attention
+from .kernels.window_attention import window_attention
+from .kernels.lava_score import lava_score
+from .kernels import ref
+
+NEG_INF = -1e30
+
+# Per-layer weight tensors, in the argument order used by every entrypoint
+# and recorded in the manifest for the rust loader.
+LAYER_WEIGHT_NAMES = ("ln1", "wq", "wk", "wv", "wo", "ln2", "w1", "w2")
+
+
+# --------------------------------------------------------------------------
+# building blocks
+# --------------------------------------------------------------------------
+
+def rms_norm(x, g, eps=1e-5):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps) * g
+
+
+def rope(x, positions, base=MODEL.rope_base):
+    """Rotary embedding. x: [..., T, d_h], positions: [T] int32."""
+    dh = x.shape[-1]
+    half = dh // 2
+    freqs = base ** (-jnp.arange(0, half, dtype=jnp.float32) / half)
+    angles = positions[:, None].astype(jnp.float32) * freqs[None, :]  # [T, half]
+    cos, sin = jnp.cos(angles), jnp.sin(angles)
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def _qkv(h, lw, n):
+    """Project + head-split + RoPE. h: [N, d]. Returns q[H,N,dh], k,v[Hk,N,dh]."""
+    cfg = MODEL
+    q = (h @ lw["wq"]).reshape(n, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    k = (h @ lw["wk"]).reshape(n, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    v = (h @ lw["wv"]).reshape(n, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    pos = jnp.arange(n, dtype=jnp.int32)
+    return rope(q, pos), rope(k, pos), v
+
+
+def _ffn(x, lw):
+    h = rms_norm(x, lw["ln2"])
+    return x + jax.nn.silu(h @ lw["w1"]) @ lw["w2"]
+
+
+# --------------------------------------------------------------------------
+# entrypoints (AOT-lowered)
+# --------------------------------------------------------------------------
+
+def embed(ids, tok_emb):
+    """ids: [N] int32 -> x: [N, d]."""
+    return tok_emb[ids]
+
+
+def layer_prefill(x, length, ln1, wq, wk, wv, wo, ln2, w1, w2, *, interpret=True):
+    """One transformer layer over the whole (padded) prompt.
+
+    Args:
+      x: [N, d] layer input.  length: [1] int32 valid-token count (>= window).
+
+    Returns:
+      x_out    [N, d]      layer output (input to layer l+1)
+      k, v     [Hk, N, dh] the layer's KV cache (keys post-RoPE)
+      win_attn [H, w, N]   recent-window attention (observation pass)
+      acc_attn [H, N]      accumulated column attention mass (H2O score)
+      vnorm    [Hk, N]     per-token value L1 norms
+    """
+    cfg = MODEL
+    lw = dict(ln1=ln1, wq=wq, wk=wk, wv=wv, wo=wo, ln2=ln2, w1=w1, w2=w2)
+    n = x.shape[0]
+    h = rms_norm(x, ln1)
+    q, k, v = _qkv(h, lw, n)
+
+    o, acc_attn = flash_attention(q, k, v, length, interpret=interpret)
+    attn_out = o.transpose(1, 0, 2).reshape(n, cfg.n_heads * cfg.d_head) @ wo
+    x = x + attn_out
+    x_out = _ffn(x, lw)
+
+    start = jnp.maximum(length[0] - cfg.window, 0)
+    qw = jax.lax.dynamic_slice(q, (0, start, 0), (cfg.n_heads, cfg.window, cfg.d_head))
+    win_attn = window_attention(qw, k, length, cfg.window, interpret=interpret)
+    vnorm = jnp.sum(jnp.abs(v), axis=-1)
+    return x_out, k, v, win_attn, acc_attn, vnorm
+
+
+def lava_score_ep(win_attn, v, length, *, interpret=True):
+    """Fused LAVa scoring fast path (kernels/lava_score.py)."""
+    return lava_score(
+        win_attn, v, length, MODEL.group_size, ARTIFACTS.pool_kernel,
+        interpret=interpret,
+    )
+
+
+def layer_decode(x, k_cache, v_cache, valid, pos, ln1, wq, wk, wv, wo, ln2, w1, w2):
+    """One transformer layer for a single decode step.
+
+    Args:
+      x:       [1, d] current residual stream input.
+      k_cache: [Hk, M, dh] (post-RoPE keys), v_cache: [Hk, M, dh].
+      valid:   [Hk, M] f32 {0,1} — per-kv-head ragged occupancy (AdaKV-style
+               dynamic head budgets leave different lengths per head).
+      pos:     [1] int32 absolute position of the new token (RoPE phase).
+
+    Returns:
+      x_out [1, d];  k_new, v_new [Hk, dh];  attn [H, M+1] (col M = self).
+    """
+    cfg = MODEL
+    lw = dict(ln1=ln1, wq=wq, wk=wk, wv=wv, wo=wo, ln2=ln2, w1=w1, w2=w2)
+    h = rms_norm(x, ln1)
+    q = (h @ wq).reshape(1, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    k = (h @ wk).reshape(1, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    v = (h @ wv).reshape(1, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    q = rope(q, pos)
+    k = rope(k, pos)
+
+    k_full = jnp.concatenate([k_cache, k], axis=1)         # [Hk, M+1, dh]
+    v_full = jnp.concatenate([v_cache, v], axis=1)
+    valid_full = jnp.concatenate(
+        [valid, jnp.ones((cfg.n_kv_heads, 1), valid.dtype)], axis=1
+    )
+
+    g = cfg.group_size
+    kk = jnp.repeat(k_full, g, axis=0)                     # [H, M+1, dh]
+    vv = jnp.repeat(v_full, g, axis=0)
+    mask = jnp.repeat(valid_full, g, axis=0) > 0.5         # [H, M+1]
+
+    scores = jnp.einsum("hqd,hkd->hqk", q, kk)[:, 0] / jnp.sqrt(
+        jnp.float32(cfg.d_head)
+    )                                                      # [H, M+1]
+    scores = jnp.where(mask, scores, NEG_INF)
+    attn = jax.nn.softmax(scores, axis=-1) * mask
+    o = jnp.einsum("hk,hkd->hd", attn, vv).reshape(1, cfg.n_heads * cfg.d_head)
+    x = x + o @ wo
+    x_out = _ffn(x, lw)
+    return x_out, k[:, 0], v[:, 0], attn
+
+
+def logits(x, ln_f, unembed):
+    """x: [1, d] -> next-token logits [vocab]."""
+    return (rms_norm(x, ln_f) @ unembed)[0]
+
+
+# --------------------------------------------------------------------------
+# training-only forward (plain jnp, batched) + init
+# --------------------------------------------------------------------------
+
+def init_params(key, cfg=MODEL):
+    """Scaled-normal init; returns the full parameter pytree."""
+    keys = jax.random.split(key, 2 + cfg.n_layers)
+
+    def dense(k, fan_in, fan_out):
+        return jax.random.normal(k, (fan_in, fan_out), jnp.float32) / jnp.sqrt(
+            jnp.float32(fan_in)
+        )
+
+    params = {
+        "tok_emb": jax.random.normal(
+            keys[0], (cfg.vocab_size, cfg.d_model), jnp.float32
+        ) * 0.02,
+        "ln_f": jnp.ones(cfg.d_model),
+        "unembed": dense(keys[1], cfg.d_model, cfg.vocab_size),
+        "layers": [],
+    }
+    for li in range(cfg.n_layers):
+        ks = jax.random.split(keys[2 + li], 6)
+        params["layers"].append(
+            {
+                "ln1": jnp.ones(cfg.d_model),
+                "wq": dense(ks[0], cfg.d_model, cfg.n_heads * cfg.d_head),
+                "wk": dense(ks[1], cfg.d_model, cfg.n_kv_heads * cfg.d_head),
+                "wv": dense(ks[2], cfg.d_model, cfg.n_kv_heads * cfg.d_head),
+                "wo": dense(ks[3], cfg.n_heads * cfg.d_head, cfg.d_model),
+                "ln2": jnp.ones(cfg.d_model),
+                "w1": dense(ks[4], cfg.d_model, cfg.d_ff),
+                "w2": dense(ks[5], cfg.d_ff, cfg.d_model),
+            }
+        )
+    return params
+
+
+def full_forward(params, ids, cfg=MODEL):
+    """Batched training forward. ids: [B, T] int32 -> logits [B, T, vocab]."""
+    b, t = ids.shape
+    x = params["tok_emb"][ids]
+    pos = jnp.arange(t, dtype=jnp.int32)
+    rows = jnp.arange(t)[:, None]
+    cols = jnp.arange(t)[None, :]
+    causal = cols <= rows
+
+    for lw in params["layers"]:
+        h = rms_norm(x, lw["ln1"])
+        q = (h @ lw["wq"]).reshape(b, t, cfg.n_heads, cfg.d_head)
+        k = (h @ lw["wk"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+        v = (h @ lw["wv"]).reshape(b, t, cfg.n_kv_heads, cfg.d_head)
+        q = rope(q.transpose(0, 2, 1, 3).reshape(-1, t, cfg.d_head), pos)
+        k = rope(k.transpose(0, 2, 1, 3).reshape(-1, t, cfg.d_head), pos)
+        q = q.reshape(b, cfg.n_heads, t, cfg.d_head)
+        k = k.reshape(b, cfg.n_kv_heads, t, cfg.d_head)
+        v = v.transpose(0, 2, 1, 3)
+        kk = jnp.repeat(k, cfg.group_size, axis=1)
+        vv = jnp.repeat(v, cfg.group_size, axis=1)
+        scores = jnp.einsum("bhqd,bhkd->bhqk", q, kk) / jnp.sqrt(
+            jnp.float32(cfg.d_head)
+        )
+        scores = jnp.where(causal[None, None], scores, NEG_INF)
+        a = jax.nn.softmax(scores, axis=-1)
+        o = jnp.einsum("bhqk,bhkd->bhqd", a, vv)
+        o = o.transpose(0, 2, 1, 3).reshape(b, t, cfg.n_heads * cfg.d_head)
+        x = x + o @ lw["wo"]
+        h2 = rms_norm(x, lw["ln2"])
+        x = x + jax.nn.silu(h2 @ lw["w1"]) @ lw["w2"]
+
+    return rms_norm(x, params["ln_f"]) @ params["unembed"]
+
+
+# --------------------------------------------------------------------------
+# reference single-sequence forward — the oracle for the composed
+# entrypoints and for Table 14 (layer attention output loss).
+# --------------------------------------------------------------------------
+
+def reference_prefill(params, ids, cfg=MODEL):
+    """Runs all layers (plain jnp, unpadded), returning per-layer internals.
+
+    Returns (per_layer, next_logits) where per_layer[l] has keys
+    x_in, q, k, v, win_attn, acc_attn, vnorm, x_out.
+    """
+    n = ids.shape[0]
+    x = params["tok_emb"][ids]
+    per_layer = []
+    for lw in params["layers"]:
+        h = rms_norm(x, lw["ln1"])
+        q, k, v = _qkv(h, lw, n)
+        o, acc = ref.causal_attention_ref(q, k, v, n)
+        attn_out = (
+            o.transpose(1, 0, 2).reshape(n, cfg.n_heads * cfg.d_head) @ lw["wo"]
+        )
+        x_mid = x + attn_out
+        x_out = _ffn(x_mid, lw)
+        qw = q[:, n - cfg.window:]
+        win = ref.window_attention_ref(qw, k, n, cfg.window)
+        vnorm = jnp.sum(jnp.abs(v), axis=-1)
+        per_layer.append(
+            dict(x_in=x, q=q, k=k, v=v, win_attn=win, acc_attn=acc,
+                 vnorm=vnorm, x_out=x_out)
+        )
+        x = x_out
+    next_logits = rms_norm(x[-1:], params["ln_f"]) @ params["unembed"]
+    return per_layer, next_logits[0]

@@ -1,0 +1,198 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp oracles.
+
+Hypothesis sweeps shapes / head configs / lengths; fixed-seed cases pin the
+exact tolerances. This is the CORE correctness signal for the artifacts the
+rust runtime executes.
+"""
+
+import jax.lax as lax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import ref
+from compile.kernels.flash_attention import flash_attention
+from compile.kernels.window_attention import window_attention
+from compile.kernels.lava_score import lava_score
+
+SETTINGS = dict(max_examples=12, deadline=None)
+
+
+def make_qkv(rng, h, hk, n, dh, scale=1.0):
+    q = jnp.array(rng.normal(size=(h, n, dh)) * scale, jnp.float32)
+    k = jnp.array(rng.normal(size=(hk, n, dh)) * scale, jnp.float32)
+    v = jnp.array(rng.normal(size=(hk, n, dh)) * scale, jnp.float32)
+    return q, k, v
+
+
+# ---------------------------------------------------------------- flash
+
+@pytest.mark.parametrize("n,length", [(128, 128), (128, 100), (256, 161), (512, 512)])
+def test_flash_matches_ref(n, length):
+    rng = np.random.default_rng(n + length)
+    q, k, v = make_qkv(rng, 8, 4, n, 16)
+    o, acc = flash_attention(q, k, v, jnp.array([length], jnp.int32))
+    o_ref, acc_ref = ref.causal_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(o[:, :length], o_ref[:, :length], atol=2e-5)
+    np.testing.assert_allclose(acc, acc_ref, atol=2e-4)
+
+
+def test_flash_acc_is_probability_mass():
+    """Column masses over valid tokens sum to the number of valid rows."""
+    rng = np.random.default_rng(7)
+    n, length = 256, 200
+    q, k, v = make_qkv(rng, 8, 4, n, 16)
+    _, acc = flash_attention(q, k, v, jnp.array([length], jnp.int32))
+    np.testing.assert_allclose(
+        jnp.sum(acc, axis=-1), jnp.full(8, length, jnp.float32), rtol=1e-4
+    )
+    # no attention mass beyond `length`
+    assert float(jnp.abs(acc[:, length:]).max()) < 1e-6
+
+
+@settings(**SETTINGS)
+@given(
+    h_groups=st.sampled_from([(8, 4), (8, 8), (4, 2), (8, 2)]),
+    n=st.sampled_from([64, 128, 256]),
+    dh=st.sampled_from([8, 16, 32]),
+    frac=st.floats(0.3, 1.0),
+    seed=st.integers(0, 2**16),
+)
+def test_flash_hypothesis(h_groups, n, dh, frac, seed):
+    h, hk = h_groups
+    length = max(33, int(n * frac))
+    rng = np.random.default_rng(seed)
+    q, k, v = make_qkv(rng, h, hk, n, dh)
+    o, acc = flash_attention(q, k, v, jnp.array([length], jnp.int32))
+    o_ref, acc_ref = ref.causal_attention_ref(q, k, v, length)
+    np.testing.assert_allclose(o[:, :length], o_ref[:, :length], atol=5e-5)
+    np.testing.assert_allclose(acc, acc_ref, atol=5e-4)
+
+
+# ---------------------------------------------------------------- window
+
+@pytest.mark.parametrize("n,length,w", [(128, 128, 32), (256, 200, 32), (256, 64, 16)])
+def test_window_matches_ref(n, length, w):
+    rng = np.random.default_rng(length)
+    q, k, _ = make_qkv(rng, 8, 4, n, 16)
+    qw = lax.dynamic_slice(q, (0, length - w, 0), (8, w, 16))
+    got = window_attention(qw, k, jnp.array([length], jnp.int32), w)
+    want = ref.window_attention_ref(qw, k, length, w)
+    np.testing.assert_allclose(got, want, atol=2e-6)
+
+
+def test_window_rows_are_distributions():
+    rng = np.random.default_rng(1)
+    n, length, w = 256, 180, 32
+    q, k, _ = make_qkv(rng, 8, 4, n, 16)
+    qw = lax.dynamic_slice(q, (0, length - w, 0), (8, w, 16))
+    a = window_attention(qw, k, jnp.array([length], jnp.int32), w)
+    np.testing.assert_allclose(jnp.sum(a, axis=-1), jnp.ones((8, w)), rtol=1e-5)
+    assert float(jnp.abs(a[..., length:]).max()) == 0.0
+    # causality: row r may not attend past position length - w + r
+    for r in (0, 15, 31):
+        assert float(jnp.abs(a[:, r, length - w + r + 1:]).max()) == 0.0
+
+
+@settings(**SETTINGS)
+@given(
+    n=st.sampled_from([64, 128, 256]),
+    w=st.sampled_from([8, 16, 32]),
+    seed=st.integers(0, 2**16),
+    frac=st.floats(0.5, 1.0),
+)
+def test_window_hypothesis(n, w, seed, frac):
+    length = max(w + 1, int(n * frac))
+    rng = np.random.default_rng(seed)
+    q, k, _ = make_qkv(rng, 8, 4, n, 16)
+    qw = lax.dynamic_slice(q, (0, length - w, 0), (8, w, 16))
+    got = window_attention(qw, k, jnp.array([length], jnp.int32), w)
+    want = ref.window_attention_ref(qw, k, length, w)
+    np.testing.assert_allclose(got, want, atol=5e-6)
+
+
+# ---------------------------------------------------------------- lava score
+
+@pytest.mark.parametrize("group,pool", [(2, 7), (1, 7), (4, 3), (2, 1)])
+def test_lava_score_matches_ref(group, pool):
+    rng = np.random.default_rng(group * 10 + pool)
+    hk, n, dh, w = 4, 256, 16, 32
+    h = hk * group
+    length = 211
+    q, k, v = make_qkv(rng, h, hk, n, dh)
+    qw = lax.dynamic_slice(q, (0, length - w, 0), (h, w, dh))
+    win = window_attention(qw, k, jnp.array([length], jnp.int32), w)
+    got = lava_score(win, v, jnp.array([length], jnp.int32), group, pool)
+    want = ref.lava_score_ref(win, v, length, group, pool)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+def test_lava_score_scales_with_value_norm():
+    """Doubling V doubles the score (Definition 1: s ∝ max ||V||_1)."""
+    rng = np.random.default_rng(3)
+    hk, n, dh, w, g = 4, 128, 16, 32, 2
+    win = jnp.array(rng.uniform(size=(hk * g, w, n)), jnp.float32)
+    v = jnp.array(rng.normal(size=(hk, n, dh)), jnp.float32)
+    length = jnp.array([100], jnp.int32)
+    s1 = lava_score(win, v, length, g, 7)
+    s2 = lava_score(win, 2.0 * v, length, g, 7)
+    np.testing.assert_allclose(s2, 2.0 * s1, rtol=1e-5)
+
+
+def test_lava_score_group_max_dominates_heads():
+    """Group score >= mean window attention of each member head x vbar."""
+    rng = np.random.default_rng(4)
+    hk, n, dh, w, g = 2, 128, 16, 32, 4
+    win = jnp.array(rng.uniform(size=(hk * g, w, n)), jnp.float32)
+    v = jnp.array(rng.normal(size=(hk, n, dh)), jnp.float32)
+    length = 96
+    s = np.asarray(lava_score(win, v, jnp.array([length], jnp.int32), g, 1))
+    vnorm = jnp.sum(jnp.abs(v), axis=-1)
+    vbar = np.asarray(jnp.max(vnorm[:, :length], axis=-1))
+    a_mean = np.asarray(jnp.mean(win, axis=1))
+    for kvh in range(hk):
+        for member in range(g):
+            per_head = a_mean[kvh * g + member, :length] * vbar[kvh]
+            assert (s[kvh, :length] + 1e-6 >= per_head).all()
+
+
+@settings(**SETTINGS)
+@given(
+    hk=st.sampled_from([2, 4]),
+    group=st.sampled_from([1, 2, 4]),
+    n=st.sampled_from([64, 128]),
+    pool=st.sampled_from([1, 3, 7]),
+    seed=st.integers(0, 2**16),
+)
+def test_lava_score_hypothesis(hk, group, n, pool, seed):
+    rng = np.random.default_rng(seed)
+    w, dh = 16, 8
+    h = hk * group
+    length = int(rng.integers(w + 1, n + 1))
+    q, k, v = make_qkv(rng, h, hk, n, dh)
+    qw = lax.dynamic_slice(q, (0, length - w, 0), (h, w, dh))
+    win = window_attention(qw, k, jnp.array([length], jnp.int32), w)
+    got = lava_score(win, v, jnp.array([length], jnp.int32), group, pool)
+    want = ref.lava_score_ref(win, v, length, group, pool)
+    np.testing.assert_allclose(got, want, atol=1e-5)
+
+
+# ---------------------------------------------------------------- maxpool
+
+@settings(**SETTINGS)
+@given(
+    n=st.integers(8, 64),
+    kernel=st.sampled_from([1, 3, 5, 7]),
+    seed=st.integers(0, 2**16),
+)
+def test_maxpool_properties(n, kernel, seed):
+    rng = np.random.default_rng(seed)
+    x = jnp.array(rng.normal(size=(3, n)), jnp.float32)
+    y = np.asarray(ref.maxpool1d_ref(x, kernel))
+    xn = np.asarray(x)
+    half = kernel // 2
+    assert (y >= xn - 1e-7).all()
+    for i in range(n):
+        lo, hi = max(0, i - half), min(n, i + half + 1)
+        np.testing.assert_allclose(y[:, i], xn[:, lo:hi].max(axis=1), rtol=1e-6)

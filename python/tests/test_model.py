@@ -1,0 +1,206 @@
+"""L2 model correctness: composed entrypoints vs the plain-jnp reference.
+
+Validates exactly what the rust coordinator relies on:
+  * layer_prefill over a padded bucket == unpadded reference (per layer)
+  * chained layers + logits == reference next-token logits
+  * layer_decode(step N+1 | full cache of N) == prefill of N+1 tokens
+  * eviction invariance: decode over a cache with evicted slots == decode
+    over the compacted cache (the masking contract the kvcache manager uses)
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import model as M
+from compile.config import MODEL
+
+CFG = MODEL
+
+
+@pytest.fixture(scope="module")
+def params():
+    return M.init_params(jax.random.PRNGKey(42))
+
+
+@pytest.fixture(scope="module")
+def ids():
+    rng = np.random.default_rng(0)
+    return jnp.array(rng.integers(0, 256, size=100), jnp.int32)
+
+
+def lw_args(params, li):
+    lw = params["layers"][li]
+    return [lw[k] for k in M.LAYER_WEIGHT_NAMES]
+
+
+def run_prefill_padded(params, ids, bucket):
+    """Drive the actual entrypoints the way rust does (padded to bucket)."""
+    n = ids.shape[0]
+    padded = jnp.concatenate(
+        [ids, jnp.full((bucket - n,), CFG.pad_id, jnp.int32)]
+    )
+    length = jnp.array([n], jnp.int32)
+    x = M.embed(padded, params["tok_emb"])
+    outs = []
+    for li in range(CFG.n_layers):
+        x, k, v, win, acc, vnorm = M.layer_prefill(x, length, *lw_args(params, li))
+        outs.append(dict(k=k, v=v, win_attn=win, acc_attn=acc, vnorm=vnorm, x=x))
+    return outs
+
+
+def test_prefill_matches_reference(params, ids):
+    n = int(ids.shape[0])
+    bucket = 128
+    got = run_prefill_padded(params, ids, bucket)
+    want, ref_logits = M.reference_prefill(params, ids)
+    for li in range(CFG.n_layers):
+        np.testing.assert_allclose(
+            got[li]["k"][:, :n], want[li]["k"], atol=3e-5, rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            got[li]["v"][:, :n], want[li]["v"], atol=3e-5, rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            got[li]["x"][:n], want[li]["x_out"], atol=3e-4, rtol=1e-3
+        )
+        np.testing.assert_allclose(
+            got[li]["win_attn"][:, :, :n], want[li]["win_attn"], atol=3e-5
+        )
+        np.testing.assert_allclose(
+            got[li]["acc_attn"][:, :n], want[li]["acc_attn"], atol=3e-4
+        )
+        np.testing.assert_allclose(
+            got[li]["vnorm"][:, :n], want[li]["vnorm"], atol=3e-5, rtol=1e-4
+        )
+        # padding region carries no cache content the coordinator would read
+        assert float(jnp.abs(got[li]["win_attn"][:, :, n:]).max()) == 0.0
+
+
+def test_logits_match_reference(params, ids):
+    n = int(ids.shape[0])
+    outs = run_prefill_padded(params, ids, 128)
+    x_last = outs[-1]["x"][n - 1 : n]
+    got = M.logits(x_last, params["ln_f"], params["unembed"])
+    _, want = M.reference_prefill(params, ids)
+    np.testing.assert_allclose(got, want, atol=3e-4, rtol=1e-3)
+
+
+def test_decode_step_matches_prefill(params):
+    """Prefill N tokens, decode token N+1 -> same hidden state as prefilling
+    all N+1 tokens. This is the contract the decode loop depends on."""
+    rng = np.random.default_rng(1)
+    n = 64
+    all_ids = jnp.array(rng.integers(0, 256, size=n + 1), jnp.int32)
+    ref_layers, _ = M.reference_prefill(params, all_ids)
+
+    prefix_layers, _ = M.reference_prefill(params, all_ids[:n])
+
+    m = 128  # decode bucket
+    x = M.embed(all_ids[n : n + 1], params["tok_emb"])
+    pos = jnp.array([n], jnp.int32)
+    for li in range(CFG.n_layers):
+        k_cache = jnp.zeros((CFG.n_kv_heads, m, CFG.d_head))
+        v_cache = jnp.zeros_like(k_cache)
+        valid = jnp.zeros((CFG.n_kv_heads, m))
+        k_cache = k_cache.at[:, :n].set(prefix_layers[li]["k"])
+        v_cache = v_cache.at[:, :n].set(prefix_layers[li]["v"])
+        valid = valid.at[:, :n].set(1.0)
+        x, k_new, v_new, attn = M.layer_decode(
+            x, k_cache, v_cache, valid, pos, *lw_args(params, li)
+        )
+        np.testing.assert_allclose(
+            k_new, ref_layers[li]["k"][:, n], atol=1e-4, rtol=1e-3
+        )
+        np.testing.assert_allclose(
+            x[0], ref_layers[li]["x_out"][n], atol=1e-3, rtol=1e-2
+        )
+        # attention row must be a distribution over the n+1 live slots
+        np.testing.assert_allclose(jnp.sum(attn, axis=-1), jnp.ones(CFG.n_heads),
+                                   rtol=1e-5)
+        assert float(jnp.abs(attn[:, n:m]).max()) == 0.0
+
+
+def test_decode_eviction_mask_equals_compaction(params):
+    """Masking out slots == physically removing them (scatter vs compact)."""
+    rng = np.random.default_rng(5)
+    n, m = 48, 64
+    ids = jnp.array(rng.integers(0, 256, size=n), jnp.int32)
+    layers, _ = M.reference_prefill(params, ids)
+    li = 1
+    keep = np.sort(rng.choice(n, size=20, replace=False))
+
+    x = M.embed(ids[-1:], params["tok_emb"])  # arbitrary decode input
+    pos = jnp.array([n], jnp.int32)
+
+    # (a) masked layout: full cache, valid=keep mask
+    k_cache = jnp.zeros((CFG.n_kv_heads, m, CFG.d_head))
+    v_cache = jnp.zeros_like(k_cache)
+    valid = np.zeros((CFG.n_kv_heads, m), np.float32)
+    k_cache = k_cache.at[:, :n].set(layers[li]["k"])
+    v_cache = v_cache.at[:, :n].set(layers[li]["v"])
+    valid[:, keep] = 1.0
+    out_a = M.layer_decode(x, k_cache, v_cache, jnp.array(valid), pos,
+                           *lw_args(params, li))
+
+    # (b) compacted layout: only kept slots, packed to the front
+    k2 = jnp.zeros((CFG.n_kv_heads, m, CFG.d_head))
+    v2 = jnp.zeros_like(k2)
+    valid2 = np.zeros((CFG.n_kv_heads, m), np.float32)
+    k2 = k2.at[:, : len(keep)].set(layers[li]["k"][:, keep])
+    v2 = v2.at[:, : len(keep)].set(layers[li]["v"][:, keep])
+    valid2[:, : len(keep)] = 1.0
+    out_b = M.layer_decode(x, k2, v2, jnp.array(valid2), pos,
+                           *lw_args(params, li))
+
+    np.testing.assert_allclose(out_a[0], out_b[0], atol=1e-5, rtol=1e-5)
+    np.testing.assert_allclose(out_a[1], out_b[1], atol=1e-6)
+
+
+def test_ragged_head_lengths(params):
+    """Different per-kv-head valid counts (AdaKV layouts) are honoured."""
+    rng = np.random.default_rng(9)
+    n, m = 40, 64
+    ids = jnp.array(rng.integers(0, 256, size=n), jnp.int32)
+    layers, _ = M.reference_prefill(params, ids)
+    li = 0
+    x = M.embed(ids[-1:], params["tok_emb"])
+    pos = jnp.array([n], jnp.int32)
+    k_cache = jnp.zeros((CFG.n_kv_heads, m, CFG.d_head))
+    v_cache = jnp.zeros_like(k_cache)
+    valid = np.zeros((CFG.n_kv_heads, m), np.float32)
+    lens = [10, 20, 30, 40]
+    for hh, ln in enumerate(lens):
+        valid[hh, :ln] = 1.0
+    k_cache = k_cache.at[:, :n].set(layers[li]["k"])
+    v_cache = v_cache.at[:, :n].set(layers[li]["v"])
+    _, _, _, attn = M.layer_decode(x, k_cache, v_cache, jnp.array(valid), pos,
+                                   *lw_args(params, li))
+    g = CFG.group_size
+    for hh, ln in enumerate(lens):
+        for member in range(g):
+            row = attn[hh * g + member]
+            assert float(jnp.abs(row[ln:m]).max()) == 0.0
+            np.testing.assert_allclose(float(jnp.sum(row)), 1.0, rtol=1e-5)
+
+
+def test_rope_relative_phase():
+    """RoPE inner products depend only on relative offsets."""
+    rng = np.random.default_rng(2)
+    x = jnp.array(rng.normal(size=(1, 1, CFG.d_head)), jnp.float32)
+    y = jnp.array(rng.normal(size=(1, 1, CFG.d_head)), jnp.float32)
+
+    def dot_at(px, py):
+        xr = M.rope(x, jnp.array([px], jnp.int32))
+        yr = M.rope(y, jnp.array([py], jnp.int32))
+        return float(jnp.sum(xr * yr))
+
+    np.testing.assert_allclose(dot_at(3, 7), dot_at(103, 107), rtol=1e-4)
+    np.testing.assert_allclose(dot_at(0, 50), dot_at(20, 70), rtol=1e-4)
+
+
+def test_embed_lookup(params):
+    ids = jnp.array([0, 5, 255, CFG.pad_id], jnp.int32)
+    x = M.embed(ids, params["tok_emb"])
+    np.testing.assert_allclose(x[1], params["tok_emb"][5])

@@ -1,0 +1,139 @@
+"""Build-path tests: data generators, a tiny training run, and AOT lowering.
+
+These guard the `make artifacts` pipeline itself (the only python that ever
+runs); kernel/model numerics live in test_kernel.py / test_model.py.
+"""
+
+import os
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from compile import data, train
+from compile.config import MODEL, ARTIFACTS
+from compile import aot
+from compile import model as M
+
+
+# ---------------------------------------------------------------- data
+
+@pytest.mark.parametrize("gen", data.GENERATORS)
+def test_generators_shapes(gen):
+    rng = np.random.default_rng(0)
+    for seq_len in (64, 160, 512):
+        toks, mask = gen(rng, seq_len)
+        assert len(toks) == len(mask)
+        assert len(toks) <= seq_len + 8
+        assert mask.any(), "every sample must supervise something"
+        assert (toks >= 0).all() and (toks < MODEL.vocab_size).all()
+
+
+def test_echo_task_is_copy():
+    rng = np.random.default_rng(1)
+    toks, mask = data.gen_echo(rng, 66)
+    m = (66 - 2) // 2
+    assert toks[0] == MODEL.bos_id and toks[m + 1] == MODEL.sep_id
+    np.testing.assert_array_equal(toks[1 : m + 1], toks[m + 2 :])
+    assert mask[m + 2 :].all() and not mask[: m + 2].any()
+
+
+def test_copy_task_echo_after_filler():
+    rng = np.random.default_rng(1)
+    toks, mask = data.gen_copy(rng, 160)
+    m = int(mask.sum())
+    # supervised suffix equals the payload right after BOS
+    np.testing.assert_array_equal(toks[1 : 1 + m], toks[-m:])
+    assert toks[len(toks) - m - 1] == MODEL.query_id
+
+
+def test_motif_supervision_is_sparse():
+    rng = np.random.default_rng(2)
+    toks, mask = data.gen_motif(rng, 256)
+    assert 0 < mask.sum() <= 32, "dense motif supervision blocks training"
+
+
+def test_needle_answer_is_retrievable():
+    rng = np.random.default_rng(2)
+    toks, mask = data.gen_needle(rng, 256)
+    # the supervised suffix equals the needle value embedded in the body
+    val = toks[mask]
+    key = toks[np.where(toks == MODEL.query_id)[0][-1] + 1]
+    body = list(toks)
+    ki = body.index(MODEL.sep_id) + 1
+    assert body[ki] == key
+    np.testing.assert_array_equal(body[ki + 1 : ki + 1 + len(val)], val)
+
+
+def test_batch_padding():
+    rng = np.random.default_rng(3)
+    ids, mask = data.batch(rng, 4, 128)
+    assert ids.shape == (4, 128) and mask.shape == (4, 128)
+    assert ids.dtype == np.int32
+    # PAD-ed tails are never supervised
+    assert not (mask & (ids == MODEL.pad_id)).any()
+
+
+# ---------------------------------------------------------------- train
+
+def test_loss_decreases_quick():
+    params, hist = train.train(steps=8, lr=3e-3, seed=7, log_every=100,
+                               log=lambda s: None)
+    assert hist[-1]["loss"] < hist[0]["loss"] + 0.5  # no blow-up
+    assert np.isfinite(hist[-1]["loss"])
+
+
+def test_save_load_roundtrip(tmp_path):
+    params = M.init_params(jax.random.PRNGKey(0))
+    path = tmp_path / "w.npz"
+    train.save(params, str(path))
+    loaded = train.load(str(path))
+    np.testing.assert_array_equal(params["tok_emb"], loaded["tok_emb"])
+    for li in range(MODEL.n_layers):
+        for k in M.LAYER_WEIGHT_NAMES:
+            np.testing.assert_array_equal(
+                params["layers"][li][k], loaded["layers"][li][k]
+            )
+
+
+# ---------------------------------------------------------------- aot
+
+def test_hlo_text_lowering_smoke(tmp_path):
+    """Lower the smallest real entrypoints and sanity-check the HLO text."""
+    lw = aot.layer_weight_specs()
+    path = tmp_path / "logits.hlo.txt"
+    aot.lower_to_file(
+        M.logits,
+        [aot.sds((1, MODEL.d_model)), aot.sds((MODEL.d_model,)),
+         aot.sds((MODEL.d_model, MODEL.vocab_size))],
+        str(path),
+    )
+    text = path.read_text()
+    assert "ENTRY" in text and "f32[260]" in text
+
+    path2 = tmp_path / "decode.hlo.txt"
+    m = 128
+    hk, dh = MODEL.n_kv_heads, MODEL.d_head
+    aot.lower_to_file(
+        M.layer_decode,
+        [aot.sds((1, MODEL.d_model)), aot.sds((hk, m, dh)), aot.sds((hk, m, dh)),
+         aot.sds((hk, m)), aot.sds((1,), jnp.int32)]
+        + [aot.sds(s) for _, s in lw],
+        str(path2),
+    )
+    assert "ENTRY" in path2.read_text()
+
+
+def test_manifest_covers_all_weights():
+    """Weight specs in the manifest must match the real parameter shapes."""
+    params = M.init_params(jax.random.PRNGKey(1))
+    for name, shape in aot.layer_weight_specs():
+        assert tuple(params["layers"][0][name].shape) == shape
+
+
+def test_buckets_are_compatible():
+    for n in ARTIFACTS.prefill_buckets:
+        assert n % 32 == 0 and n >= MODEL.window
+    for m in ARTIFACTS.decode_buckets:
+        assert m >= ARTIFACTS.prefill_buckets[0]

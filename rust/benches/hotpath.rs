@@ -1,0 +1,142 @@
+//! Hot-path micro-benchmarks (criterion is not vendored; bench::harness
+//! provides warmup+stats). Covers the paper's §5.3 overhead claims:
+//! scoring + selection + cache compaction must be a negligible fraction of
+//! layer compute.
+//!
+//!   cargo bench --bench hotpath
+
+use lava::bench::harness::{bench, BenchResult};
+use lava::compress::select::{select_prefill, select_recompress};
+use lava::compress::{score, GroupReduce, HeadAlloc, LayerObs, ScoreKind};
+use lava::kvcache::LayerCache;
+use lava::runtime::Tensor;
+use lava::util::rng::Rng;
+
+fn synth_obs(h: usize, hk: usize, w: usize, n: usize, seed: u64) -> LayerObs {
+    let mut rng = Rng::new(seed);
+    let win: Vec<f32> = (0..h * w * n).map(|_| rng.f32()).collect();
+    let acc: Vec<f32> = (0..h * n).map(|_| rng.f32()).collect();
+    let vn: Vec<f32> = (0..hk * n).map(|_| 0.5 + rng.f32()).collect();
+    LayerObs {
+        win_attn: Tensor::f32(win, &[h, w, n]),
+        acc_attn: Tensor::f32(acc, &[h, n]),
+        vnorm: Tensor::f32(vn, &[hk, n]),
+        length: n,
+    }
+}
+
+fn main() {
+    let mut results: Vec<BenchResult> = Vec::new();
+    println!("== hotpath micro-benchmarks ==");
+
+    // 1. scoring, per kind, n = 1024 (the per-layer prefill overhead)
+    for n in [256usize, 1024, 2048] {
+        let obs = synth_obs(8, 4, 16, n, 1);
+        for (label, kind, reduce) in [
+            ("snapkv", ScoreKind::SnapKv, GroupReduce::Mean),
+            ("h2o", ScoreKind::H2o, GroupReduce::Mean),
+            ("cake", ScoreKind::Cake { gamma: 5.0 }, GroupReduce::Mean),
+            ("vatp", ScoreKind::Vatp, GroupReduce::Mean),
+            ("lava", ScoreKind::Lava, GroupReduce::Max),
+        ] {
+            let r = bench(&format!("score/{label}/n{n}"), 3, 30, || {
+                let s = score::kv_head_scores(kind, reduce, &obs, 7);
+                std::hint::black_box(&s);
+            });
+            println!("{}", r.line());
+            results.push(r);
+        }
+    }
+
+    // 2. top-B selection (Algorithm 1), flat vs fixed
+    for n in [1024usize, 4096] {
+        let mut rng = Rng::new(2);
+        let scores: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..n).map(|_| rng.f32()).collect()).collect();
+        for (label, mode) in [("flat", HeadAlloc::Flat), ("fixed", HeadAlloc::Fixed)] {
+            let r = bench(&format!("select/{label}/n{n}"), 3, 50, || {
+                let ks = select_prefill(&scores, n, 4 * 64, 16, mode);
+                std::hint::black_box(&ks);
+            });
+            println!("{}", r.line());
+            results.push(r);
+        }
+    }
+
+    // 3. recompression (Algorithm 2 inner step)
+    {
+        let mut rng = Rng::new(3);
+        let stored: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..256).map(|_| rng.f32()).collect()).collect();
+        let r = bench("recompress/256->128", 3, 200, || {
+            let refs: Vec<&[f32]> = stored.iter().map(|v| v.as_slice()).collect();
+            let keep = select_recompress(&refs, 128 * 4 / 2, HeadAlloc::Flat);
+            std::hint::black_box(&keep);
+        });
+        println!("{}", r.line());
+        results.push(r);
+    }
+
+    // 4. cache ops: load_from_prefill, re_evict, append, decode_tensors
+    {
+        let mut rng = Rng::new(4);
+        let n = 1024;
+        let (hk, dh) = (4, 16);
+        let kdata: Vec<f32> = (0..hk * n * dh).map(|_| rng.f32()).collect();
+        let k = Tensor::f32(kdata.clone(), &[hk, n, dh]);
+        let v = Tensor::f32(kdata, &[hk, n, dh]);
+        let keep: Vec<Vec<usize>> = (0..hk).map(|_| rng.sample_indices(n, 128)).collect();
+        let sc: Vec<Vec<f32>> = keep.iter().map(|k| k.iter().map(|_| rng.f32()).collect()).collect();
+
+        let r = bench("kvcache/load_from_prefill/128of1024", 3, 100, || {
+            let mut c = LayerCache::new(hk, dh, 256);
+            c.load_from_prefill(&k, &v, &keep, &sc);
+            std::hint::black_box(&c);
+        });
+        println!("{}", r.line());
+        results.push(r);
+
+        let mut c = LayerCache::new(hk, dh, 256);
+        c.load_from_prefill(&k, &v, &keep, &sc);
+        let r = bench("kvcache/decode_tensors/cap256", 3, 100, || {
+            let t = c.decode_tensors();
+            std::hint::black_box(&t);
+        });
+        println!("{}", r.line());
+        results.push(r);
+
+        let knew = vec![0.5f32; hk * dh];
+        let r = bench("kvcache/append", 3, 200, || {
+            let mut c2 = c.clone();
+            c2.append(&knew, &knew, 2000, 0.1);
+            std::hint::black_box(&c2);
+        });
+        println!("{}", r.line());
+        results.push(r);
+    }
+
+    // 5. layer-entropy (the dynamic budget overhead, Eq. 7)
+    {
+        let mut rng = Rng::new(5);
+        let scores: Vec<Vec<f32>> =
+            (0..4).map(|_| (0..2048).map(|_| rng.f32()).collect()).collect();
+        let r = bench("alloc/lava_entropy/n2048", 3, 100, || {
+            let e = lava::compress::alloc::lava_layer_entropy(&scores);
+            std::hint::black_box(e);
+        });
+        println!("{}", r.line());
+        results.push(r);
+    }
+
+    // sanity: fail loudly if anything is absurdly slow (>50ms) — these are
+    // supposed to be negligible next to layer compute
+    for r in &results {
+        assert!(
+            r.mean_secs < 0.05,
+            "{} unexpectedly slow: {:.1} ms",
+            r.name,
+            r.mean_secs * 1e3
+        );
+    }
+    println!("hotpath OK ({} benchmarks)", results.len());
+}

@@ -1,0 +1,64 @@
+//! Serving-level benchmarks: end-to-end prefill/decode timing per policy.
+//! Runs on the mock backend by default (isolating coordinator overhead —
+//! scoring, selection, cascade, cache maintenance); pass --pjrt to measure
+//! the real model path (requires `make artifacts`).
+//!
+//!   cargo bench --bench serving [-- --pjrt] [-- --ctx 512]
+
+use lava::bench::harness::bench_for;
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions, GenerateRequest};
+use lava::model::backend::{MockBackend, ModelBackend, PjrtBackend};
+use lava::util::cli::Args;
+use lava::util::rng::Rng;
+use lava::workloads;
+
+fn run<B: ModelBackend>(engine: &mut Engine<B>, ctx: usize, budget_secs: f64) {
+    let mut rng = Rng::new(0);
+    let inst = workloads::needle_qa(&mut rng, ctx, 4);
+
+    for policy in ["full", "snapkv", "ada-snapkv", "cake", "lava"] {
+        engine.opts.policy = Policy::by_name(policy).unwrap();
+        engine.opts.budget_per_head = 32;
+
+        let r = bench_for(&format!("prefill/{policy}/ctx{ctx}"), budget_secs, 3, || {
+            let (sess, _) = engine.prefill_only(&inst.prompt).unwrap();
+            std::hint::black_box(&sess);
+        });
+        println!("{}", r.line());
+
+        // decode: prefill once, then time steps
+        let req = GenerateRequest { prompt: inst.prompt.clone(), max_new_tokens: 10_000 };
+        let mut sess = engine.new_session(&req);
+        engine.prefill(&mut sess).unwrap();
+        let r = bench_for(&format!("decode/{policy}/ctx{ctx}"), budget_secs, 5, || {
+            engine.decode_step(&mut sess).unwrap();
+        });
+        println!("{}", r.line());
+    }
+}
+
+fn main() {
+    let args = Args::parse_env();
+    let ctx = args.usize_or("ctx", 512);
+    let budget_secs = args.f64_or("secs", 0.5);
+    println!("== serving benchmarks (ctx {ctx}) ==");
+    if args.bool("pjrt") {
+        let dir = args.str_or("artifacts", "artifacts");
+        match PjrtBackend::load(&dir) {
+            Ok(backend) => {
+                let mut engine =
+                    Engine::new(backend, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+                run(&mut engine, ctx, budget_secs);
+            }
+            Err(e) => println!("SKIP pjrt serving bench: {e:#}"),
+        }
+    } else {
+        let mock = MockBackend::new(MockBackend::default_config());
+        let mut engine =
+            Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+        run(&mut engine, ctx, budget_secs);
+        println!("(mock backend; pass -- --pjrt for the real model)");
+    }
+    println!("serving OK");
+}

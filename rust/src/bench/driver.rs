@@ -1,0 +1,78 @@
+//! Shared glue for the `bench_*` binaries: CLI -> ExpParams, backend
+//! construction (real PJRT artifacts or the mock), report output.
+
+use crate::compress::Policy;
+use crate::coordinator::engine::{Engine, EngineOptions};
+use crate::model::backend::{MockBackend, PjrtBackend};
+use crate::util::cli::Args;
+
+use super::experiments::ExpParams;
+use super::table::Table;
+
+pub fn params_from_args(args: &Args) -> ExpParams {
+    let d = ExpParams::default();
+    ExpParams {
+        ctx: args.usize_or("ctx", d.ctx),
+        per_task: args.usize_or("per-task", d.per_task),
+        budgets: args.usize_list_or("budgets", &d.budgets),
+        policies: args
+            .str_list_or("policies", &d.policies.iter().map(|s| s.as_str()).collect::<Vec<_>>()),
+        seed: args.usize_or("seed", 0) as u64,
+    }
+}
+
+pub fn mock_engine(args: &Args) -> Engine<MockBackend> {
+    let mut mock = MockBackend::new(MockBackend::default_config());
+    mock.seed = args.usize_or("seed", 0) as u64;
+    Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32))
+}
+
+pub fn pjrt_engine(args: &Args) -> anyhow::Result<Engine<PjrtBackend>> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let backend = PjrtBackend::load(&dir)?;
+    Ok(Engine::new(backend, EngineOptions::new(Policy::by_name("lava").unwrap(), 32)))
+}
+
+/// Print tables and optionally archive to --out (jsonl).
+pub fn emit(args: &Args, tables: &[Table]) {
+    for t in tables {
+        println!("{}", t.render(true));
+        if let Some(path) = args.get("out") {
+            if let Err(e) = t.save_jsonl(path) {
+                eprintln!("warn: could not save to {path}: {e}");
+            }
+        }
+    }
+}
+
+/// Dispatch an experiment body over the mock (`--mock`) or PJRT backend.
+#[macro_export]
+macro_rules! with_engine {
+    ($args:expr, |$engine:ident| $body:expr) => {{
+        if $args.bool("mock") {
+            let mut $engine = $crate::bench::driver::mock_engine(&$args);
+            $body
+        } else {
+            let mut $engine = $crate::bench::driver::pjrt_engine(&$args)?;
+            $body
+        }
+    }};
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_parse() {
+        let args = Args::parse(
+            "--ctx 128 --budgets 16,32 --policies lava,snapkv --per-task 1"
+                .split_whitespace()
+                .map(String::from),
+        );
+        let p = params_from_args(&args);
+        assert_eq!(p.ctx, 128);
+        assert_eq!(p.budgets, vec![16, 32]);
+        assert_eq!(p.policies, vec!["lava", "snapkv"]);
+    }
+}

@@ -1,0 +1,176 @@
+//! Shared evaluation loops: run (policy x budget) over task suites and
+//! aggregate the numbers the paper's tables report.
+
+use std::collections::BTreeMap;
+
+use anyhow::Result;
+
+use crate::compress::Policy;
+use crate::coordinator::engine::{Engine, GenerateRequest};
+use crate::model::backend::ModelBackend;
+use crate::workloads::{self, Category, Instance};
+use crate::util::rng::Rng;
+
+/// Run one instance: greedy-generate exactly `target.len()` tokens, score by
+/// exact-match rate.
+pub fn run_instance<B: ModelBackend>(engine: &mut Engine<B>, inst: &Instance) -> Result<f64> {
+    let req = GenerateRequest {
+        prompt: inst.prompt.clone(),
+        max_new_tokens: inst.target.len(),
+    };
+    let out = engine.generate(&req)?;
+    Ok(inst.score(&out.tokens))
+}
+
+/// Mean score of a policy over a set of instances.
+pub fn run_instances<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    instances: &[Instance],
+) -> Result<f64> {
+    let mut total = 0.0;
+    for inst in instances {
+        total += run_instance(engine, inst)?;
+    }
+    Ok(total / instances.len().max(1) as f64)
+}
+
+/// Switch the engine to a named policy + per-head budget.
+pub fn set_policy<B: ModelBackend>(engine: &mut Engine<B>, policy: &str, budget: usize) {
+    engine.opts.policy = Policy::by_name(policy).unwrap_or_else(|| panic!("policy {policy}"));
+    engine.opts.budget_per_head = budget;
+}
+
+/// Per-task and per-category results of one (policy, budget) suite run.
+#[derive(Debug, Clone)]
+pub struct SuiteResult {
+    pub policy: String,
+    pub budget: usize,
+    pub per_task: Vec<(String, f64)>,
+    pub by_category: BTreeMap<&'static str, f64>,
+    pub extraction_avg: f64,
+    pub generation_avg: f64,
+    pub overall_avg: f64,
+}
+
+/// Evaluate one policy at one budget over the LongBench-proxy suite.
+pub fn run_suite<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    policy: &str,
+    budget: usize,
+    ctx: usize,
+    per_task: usize,
+    seed: u64,
+) -> Result<SuiteResult> {
+    set_policy(engine, policy, budget);
+    let specs = workloads::longbench_suite();
+    let mut per_task_scores = Vec::new();
+    let mut cat_scores: BTreeMap<&'static str, Vec<f64>> = BTreeMap::new();
+    let mut extraction = Vec::new();
+    let mut generation = Vec::new();
+
+    for (ti, spec) in specs.iter().enumerate() {
+        // fixed seed per (task): all policies see identical instances
+        let mut rng = Rng::new(seed ^ ((ti as u64) << 16));
+        let instances = workloads::generate(spec.name, &mut rng, ctx, per_task);
+        let score = run_instances(engine, &instances)?;
+        per_task_scores.push((spec.name.to_string(), score));
+        cat_scores.entry(spec.category.name()).or_default().push(score);
+        if spec.category.is_extraction() {
+            extraction.push(score);
+        } else {
+            generation.push(score);
+        }
+    }
+
+    let mean = |v: &[f64]| v.iter().sum::<f64>() / v.len().max(1) as f64;
+    let by_category =
+        cat_scores.iter().map(|(k, v)| (*k, mean(v))).collect::<BTreeMap<_, _>>();
+    let overall = mean(&per_task_scores.iter().map(|(_, s)| *s).collect::<Vec<_>>());
+    Ok(SuiteResult {
+        policy: policy.to_string(),
+        budget,
+        extraction_avg: mean(&extraction),
+        generation_avg: mean(&generation),
+        overall_avg: overall,
+        per_task: per_task_scores,
+        by_category,
+    })
+}
+
+/// Count head-to-head wins between two policies over the suite tasks at one
+/// budget (Fig. 5's win-rate comparison).
+pub fn win_rate<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    policy_a: &str,
+    policy_b: &str,
+    budget: usize,
+    ctx: usize,
+    per_task: usize,
+    seed: u64,
+) -> Result<(usize, usize, usize)> {
+    let ra = run_suite(engine, policy_a, budget, ctx, per_task, seed)?;
+    let rb = run_suite(engine, policy_b, budget, ctx, per_task, seed)?;
+    let (mut wins_a, mut wins_b, mut ties) = (0, 0, 0);
+    for ((_, sa), (_, sb)) in ra.per_task.iter().zip(rb.per_task.iter()) {
+        if (sa - sb).abs() < 1e-9 {
+            ties += 1;
+        } else if sa > sb {
+            wins_a += 1;
+        } else {
+            wins_b += 1;
+        }
+    }
+    Ok((wins_a, wins_b, ties))
+}
+
+/// Category axis used by Fig. 2 / Fig. 4.
+pub fn category_axis() -> Vec<Category> {
+    vec![
+        Category::SingleDocQa,
+        Category::MultiDocQa,
+        Category::Summarization,
+        Category::FewShot,
+        Category::Synthetic,
+        Category::Code,
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::coordinator::engine::EngineOptions;
+    use crate::model::backend::MockBackend;
+
+    fn engine() -> Engine<MockBackend> {
+        let mock = MockBackend::new(MockBackend::default_config());
+        Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24))
+    }
+
+    #[test]
+    fn suite_runs_on_mock() {
+        let mut e = engine();
+        let r = run_suite(&mut e, "snapkv", 24, 128, 1, 0).unwrap();
+        assert_eq!(r.per_task.len(), workloads::longbench_suite().len());
+        assert!(r.overall_avg >= 0.0 && r.overall_avg <= 1.0);
+        assert!(r.by_category.len() == 6);
+    }
+
+    #[test]
+    fn policies_see_identical_instances() {
+        // determinism check: same seed -> same instance stream regardless of
+        // which policy ran first
+        let mut e = engine();
+        let a1 = run_suite(&mut e, "snapkv", 24, 128, 1, 7).unwrap();
+        let a2 = run_suite(&mut e, "snapkv", 24, 128, 1, 7).unwrap();
+        for ((_, x), (_, y)) in a1.per_task.iter().zip(a2.per_task.iter()) {
+            assert_eq!(x, y);
+        }
+    }
+
+    #[test]
+    fn win_rate_sums_to_task_count() {
+        let mut e = engine();
+        let (a, b, t) = win_rate(&mut e, "lava", "ada-snapkv", 24, 128, 1, 3).unwrap();
+        assert_eq!(a + b + t, workloads::longbench_suite().len());
+    }
+}

@@ -1,0 +1,355 @@
+//! Experiment drivers: one function per paper table/figure, generic over
+//! the backend. The `bench_*` binaries are thin CLI wrappers around these
+//! (see DESIGN.md §5 for the experiment index).
+
+use anyhow::Result;
+
+use super::eval::{self, SuiteResult};
+use super::output_loss;
+use super::table::Table;
+use crate::compress::select::select_prefill;
+use crate::compress::{score, Policy};
+use crate::coordinator::engine::{Engine, GenerateRequest};
+use crate::model::backend::ModelBackend;
+use crate::util::rng::Rng;
+use crate::workloads::{self, niah, ruler};
+
+pub struct ExpParams {
+    pub ctx: usize,
+    pub per_task: usize,
+    pub budgets: Vec<usize>,
+    pub policies: Vec<String>,
+    pub seed: u64,
+}
+
+impl Default for ExpParams {
+    fn default() -> Self {
+        ExpParams {
+            ctx: 256,
+            per_task: 3,
+            budgets: vec![24, 32, 48, 64],
+            policies: vec![
+                "full".into(),
+                "pyramidkv".into(),
+                "snapkv".into(),
+                "ada-pyramidkv".into(),
+                "ada-snapkv".into(),
+                "cake".into(),
+                "lava".into(),
+            ],
+            seed: 0,
+        }
+    }
+}
+
+/// Table 2 (+ per-budget category breakdown): the LongBench-proxy grid.
+pub fn table2<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    p: &ExpParams,
+) -> Result<(Vec<Table>, Vec<SuiteResult>)> {
+    let mut tables = Vec::new();
+    let mut all = Vec::new();
+    for &budget in &p.budgets {
+        let task_names: Vec<String> = workloads::longbench_suite()
+            .iter()
+            .map(|s| s.name.to_string())
+            .collect();
+        let mut cols: Vec<&str> = task_names.iter().map(|s| s.as_str()).collect();
+        cols.push("avg");
+        let mut t = Table::new(&format!("Table 2 proxy — budget {budget}/head, ctx {}", p.ctx), &cols);
+        for pol in &p.policies {
+            let r = eval::run_suite(engine, pol, budget, p.ctx, p.per_task, p.seed)?;
+            let mut vals: Vec<f64> = r.per_task.iter().map(|(_, s)| *s * 100.0).collect();
+            vals.push(r.overall_avg * 100.0);
+            t.row(pol, vals);
+            all.push(r);
+        }
+        tables.push(t);
+    }
+    Ok((tables, all))
+}
+
+/// Fig. 2: extraction vs generation averages per budget per policy.
+pub fn figure2(results: &[SuiteResult], budgets: &[usize], policies: &[String]) -> Table {
+    let mut cols = Vec::new();
+    for b in budgets {
+        cols.push(format!("extr@{b}"));
+        cols.push(format!("gen@{b}"));
+    }
+    let colrefs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Figure 2 proxy — extraction vs generation", &colrefs);
+    for pol in policies {
+        let mut vals = Vec::new();
+        for &b in budgets {
+            let r = results
+                .iter()
+                .find(|r| &r.policy == pol && r.budget == b)
+                .expect("missing suite result");
+            vals.push(r.extraction_avg * 100.0);
+            vals.push(r.generation_avg * 100.0);
+        }
+        t.row(pol, vals);
+    }
+    t
+}
+
+/// Fig. 4 / Table 10 ablation: lava vs -layer vs -head.
+pub fn figure4<B: ModelBackend>(engine: &mut Engine<B>, p: &ExpParams) -> Result<Table> {
+    let mut cols = Vec::new();
+    for b in &p.budgets {
+        cols.push(format!("extr@{b}"));
+        cols.push(format!("gen@{b}"));
+        cols.push(format!("avg@{b}"));
+    }
+    let colrefs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Figure 4 / Table 10 — ablation", &colrefs);
+    for pol in ["lava", "lava-uniform", "lava-nohead"] {
+        let mut vals = Vec::new();
+        for &b in &p.budgets {
+            let r = eval::run_suite(engine, pol, b, p.ctx, p.per_task, p.seed)?;
+            vals.push(r.extraction_avg * 100.0);
+            vals.push(r.generation_avg * 100.0);
+            vals.push(r.overall_avg * 100.0);
+        }
+        t.row(pol, vals);
+    }
+    Ok(t)
+}
+
+/// Fig. 5: win-rates of the LAVa score vs the AdaKV score under matched
+/// allocation (uniform + pyramid).
+pub fn figure5<B: ModelBackend>(engine: &mut Engine<B>, p: &ExpParams) -> Result<Table> {
+    let mut t = Table::new(
+        "Figure 5 — LAVa score vs AdaKV score (wins / losses / ties)",
+        &["wins", "losses", "ties"],
+    );
+    for &b in &p.budgets {
+        let (w, l, ti) =
+            eval::win_rate(engine, "lava-uniform", "ada-snapkv", b, p.ctx, p.per_task, p.seed)?;
+        t.row(&format!("uniform@{b}"), vec![w as f64, l as f64, ti as f64]);
+        let (w2, l2, t2) =
+            eval::win_rate(engine, "lava-pyramid", "ada-pyramidkv", b, p.ctx, p.per_task, p.seed)?;
+        t.row(&format!("pyramid@{b}"), vec![w2 as f64, l2 as f64, t2 as f64]);
+    }
+    Ok(t)
+}
+
+/// Table 5: VATP vs LAVa vs LAVa(-layer).
+pub fn table5<B: ModelBackend>(engine: &mut Engine<B>, p: &ExpParams) -> Result<Table> {
+    let cols: Vec<String> = p.budgets.iter().map(|b| format!("@{b}")).collect();
+    let colrefs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 5 — VATP comparison (overall avg)", &colrefs);
+    for pol in ["snapkv", "vatp", "lava", "lava-uniform"] {
+        let mut vals = Vec::new();
+        for &b in &p.budgets {
+            let r = eval::run_suite(engine, pol, b, p.ctx, p.per_task, p.seed)?;
+            vals.push(r.overall_avg * 100.0);
+        }
+        t.row(pol, vals);
+    }
+    Ok(t)
+}
+
+/// Table 9: NIAH average score at small + large budgets.
+pub fn table9<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    p: &ExpParams,
+    ctx_lens: &[usize],
+) -> Result<Table> {
+    let cols: Vec<String> = p.budgets.iter().map(|b| format!("@{b}")).collect();
+    let colrefs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 9 — Needle-In-A-Haystack avg", &colrefs);
+    let depths = niah::standard_depths();
+    for pol in &p.policies {
+        let mut vals = Vec::new();
+        for &b in &p.budgets {
+            eval::set_policy(engine, pol, b);
+            let grid = niah::grid(ctx_lens, &depths, p.per_task, p.seed);
+            let mut sum = 0.0;
+            let mut cnt = 0usize;
+            for cell in &grid {
+                sum += eval::run_instances(engine, &cell.instances)?;
+                cnt += 1;
+            }
+            vals.push(sum / cnt as f64 * 100.0);
+        }
+        t.row(pol, vals);
+    }
+    Ok(t)
+}
+
+/// Table 11: Ruler-proxy at several context lengths (one budget).
+pub fn table11<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    p: &ExpParams,
+    ctx_lens: &[usize],
+    budget: usize,
+) -> Result<Table> {
+    let cols: Vec<String> = ctx_lens.iter().map(|c| format!("{c}")).collect();
+    let colrefs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new(&format!("Table 11 — Ruler proxy (budget {budget}/head)"), &colrefs);
+    for pol in &p.policies {
+        let mut vals = Vec::new();
+        for (ci, &ctx) in ctx_lens.iter().enumerate() {
+            eval::set_policy(engine, pol, budget);
+            let mut rng = Rng::new(p.seed ^ ((ci as u64) << 8));
+            let mut sum = 0.0;
+            let mut cnt = 0;
+            for (_, instances) in ruler::suite(&mut rng, ctx, p.per_task) {
+                sum += eval::run_instances(engine, &instances)?;
+                cnt += 1;
+            }
+            vals.push(sum / cnt as f64 * 100.0);
+        }
+        t.row(pol, vals);
+    }
+    Ok(t)
+}
+
+/// Table 12: InfiniteBench-proxy — the longest contexts we support.
+pub fn table12<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    p: &ExpParams,
+    ctx: usize,
+    budget: usize,
+) -> Result<Table> {
+    let mut t = Table::new(
+        &format!("Table 12 — InfiniteBench proxy (ctx {ctx}, budget {budget}/head)"),
+        &["Sum", "MC", "Dia"],
+    );
+    for pol in &p.policies {
+        eval::set_policy(engine, pol, budget);
+        let mut rng = Rng::new(p.seed ^ 0xD1A);
+        // Sum -> long salient-span echo; MC -> multi-needle; Dia -> kv chat
+        let sum_insts: Vec<_> =
+            (0..p.per_task).map(|_| workloads::summarize_echo(&mut rng, ctx, 48)).collect();
+        let mc_insts: Vec<_> =
+            (0..p.per_task).map(|_| workloads::multi_needle(&mut rng, ctx, 4, 4)).collect();
+        let dia_insts: Vec<_> =
+            (0..p.per_task).map(|_| workloads::kv_retrieve(&mut rng, ctx)).collect();
+        t.row(
+            pol,
+            vec![
+                eval::run_instances(engine, &sum_insts)? * 100.0,
+                eval::run_instances(engine, &mc_insts)? * 100.0,
+                eval::run_instances(engine, &dia_insts)? * 100.0,
+            ],
+        );
+    }
+    Ok(t)
+}
+
+/// Table 13: layer-allocation comparison for the LAVa score.
+pub fn table13<B: ModelBackend>(engine: &mut Engine<B>, p: &ExpParams) -> Result<Table> {
+    let cols: Vec<String> = p.budgets.iter().map(|b| format!("@{b}")).collect();
+    let colrefs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut t = Table::new("Table 13 — layer allocation (overall avg)", &colrefs);
+    for pol in ["lava-pyramid", "lava-uniform", "lava"] {
+        let mut vals = Vec::new();
+        for &b in &p.budgets {
+            let r = eval::run_suite(engine, pol, b, p.ctx, p.per_task, p.seed)?;
+            vals.push(r.overall_avg * 100.0);
+        }
+        t.row(pol, vals);
+    }
+    Ok(t)
+}
+
+/// Table 14: exact layer attention output loss, AdaKV-score vs LAVa-score,
+/// at the first and last layers.
+pub fn table14<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    wo_per_layer: &[crate::runtime::Tensor],
+    p: &ExpParams,
+    budget: usize,
+) -> Result<Table> {
+    let cfg = engine.config().clone();
+    let tasks = ["needle-qa", "summ-echo", "kv-retrieve", "code-motif"];
+    let cols: Vec<&str> = tasks.to_vec();
+    let mut t = Table::new(
+        &format!("Table 14 — layer attention output loss (budget {budget}/head)"),
+        &cols,
+    );
+    let score_variants: Vec<(&str, Policy)> = vec![
+        ("adakv-L0", Policy::by_name("ada-snapkv").unwrap()),
+        ("lava-L0", Policy::by_name("lava-uniform").unwrap()),
+        ("adakv-Llast", Policy::by_name("ada-snapkv").unwrap()),
+        ("lava-Llast", Policy::by_name("lava-uniform").unwrap()),
+    ];
+    for (vi, (label, pol)) in score_variants.iter().enumerate() {
+        let layer = if vi < 2 { 0 } else { cfg.n_layers - 1 };
+        let mut vals = Vec::new();
+        for (ti, task) in tasks.iter().enumerate() {
+            let mut rng = Rng::new(p.seed ^ ((ti as u64) << 24));
+            let insts = workloads::generate(task, &mut rng, p.ctx, p.per_task);
+            let mut total = 0.0;
+            for inst in &insts {
+                // run the layers up to `layer` to get its observation
+                let n = inst.prompt.len();
+                let bucket =
+                    crate::runtime::Runtime::pick_bucket(engine.backend.prefill_buckets(), n)
+                        .unwrap();
+                let mut x = engine.backend.embed(&inst.prompt, bucket)?;
+                let mut out = None;
+                for l in 0..=layer {
+                    let o = engine.backend.layer_prefill(l, &x, n)?;
+                    x = o.x_out.clone();
+                    out = Some(o);
+                }
+                let out = out.unwrap();
+                let scores =
+                    score::kv_head_scores(pol.score, pol.group_reduce, &out.obs, 7);
+                let keep = select_prefill(
+                    &scores,
+                    n,
+                    budget * cfg.n_kv_heads,
+                    cfg.window,
+                    pol.head_alloc,
+                );
+                let attn = output_loss::last_row_attention(&out.obs);
+                total += output_loss::layer_output_loss(
+                    &attn,
+                    &out.v,
+                    &wo_per_layer[layer],
+                    &keep.keep,
+                    n,
+                );
+            }
+            vals.push(total / insts.len() as f64);
+        }
+        t.row(label, vals);
+    }
+    Ok(t)
+}
+
+/// Fig. 3: decode latency + peak KV memory vs context length.
+pub fn figure3<B: ModelBackend>(
+    engine: &mut Engine<B>,
+    ctx_lens: &[usize],
+    policies: &[String],
+    budget: usize,
+    out_tokens: usize,
+    seed: u64,
+) -> Result<(Table, Table)> {
+    let cols: Vec<String> = ctx_lens.iter().map(|c| format!("{c}")).collect();
+    let colrefs: Vec<&str> = cols.iter().map(|s| s.as_str()).collect();
+    let mut lat = Table::new("Figure 3a — decode latency ms/token", &colrefs);
+    let mut mem = Table::new("Figure 3b — peak KV MiB", &colrefs);
+    for pol in policies {
+        let mut lat_vals = Vec::new();
+        let mut mem_vals = Vec::new();
+        for (ci, &ctx) in ctx_lens.iter().enumerate() {
+            eval::set_policy(engine, pol, budget);
+            engine.metrics = crate::coordinator::metrics::Metrics::new();
+            let mut rng = Rng::new(seed ^ ((ci as u64) << 4));
+            let inst = workloads::needle_qa(&mut rng, ctx, 4);
+            let req = GenerateRequest { prompt: inst.prompt, max_new_tokens: out_tokens };
+            let r = engine.generate(&req)?;
+            lat_vals.push(r.decode_secs * 1e3 / out_tokens as f64);
+            mem_vals.push(engine.metrics.peak_kv_bytes as f64 / (1024.0 * 1024.0));
+        }
+        lat.row(pol, lat_vals);
+        mem.row(pol, mem_vals);
+    }
+    Ok((lat, mem))
+}

@@ -1,0 +1,103 @@
+//! Micro-benchmark harness: warmup + timed iterations + robust stats.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: usize,
+    pub mean_secs: f64,
+    pub stddev_secs: f64,
+    pub p50_secs: f64,
+    pub p99_secs: f64,
+    pub min_secs: f64,
+}
+
+impl BenchResult {
+    pub fn mean_ms(&self) -> f64 {
+        self.mean_secs * 1e3
+    }
+
+    pub fn line(&self) -> String {
+        format!(
+            "{:<40} {:>10.4} ms/iter (sd {:>8.4}, p50 {:>8.4}, p99 {:>8.4}, n={})",
+            self.name,
+            self.mean_secs * 1e3,
+            self.stddev_secs * 1e3,
+            self.p50_secs * 1e3,
+            self.p99_secs * 1e3,
+            self.iters
+        )
+    }
+}
+
+/// Time `f` with `warmup` discarded runs and `iters` measured runs.
+pub fn bench<F: FnMut()>(name: &str, warmup: usize, iters: usize, mut f: F) -> BenchResult {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::with_capacity(iters);
+    for _ in 0..iters {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed().as_secs_f64());
+    }
+    summarize(name, &samples)
+}
+
+/// Adaptive: run until `budget_secs` is spent (at least `min_iters`).
+pub fn bench_for<F: FnMut()>(name: &str, budget_secs: f64, min_iters: usize, mut f: F) -> BenchResult {
+    // warmup once
+    f();
+    let mut samples = Vec::new();
+    let t0 = Instant::now();
+    while samples.len() < min_iters || t0.elapsed().as_secs_f64() < budget_secs {
+        let s = Instant::now();
+        f();
+        samples.push(s.elapsed().as_secs_f64());
+        if samples.len() > 10_000 {
+            break;
+        }
+    }
+    summarize(name, &samples)
+}
+
+fn summarize(name: &str, samples: &[f64]) -> BenchResult {
+    BenchResult {
+        name: name.to_string(),
+        iters: samples.len(),
+        mean_secs: stats::mean(samples),
+        stddev_secs: stats::stddev(samples),
+        p50_secs: stats::percentile(samples, 50.0),
+        p99_secs: stats::percentile(samples, 99.0),
+        min_secs: samples.iter().copied().fold(f64::INFINITY, f64::min),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something() {
+        let mut x = 0u64;
+        let r = bench("spin", 2, 10, || {
+            for i in 0..10_000 {
+                x = x.wrapping_add(i);
+            }
+        });
+        assert_eq!(r.iters, 10);
+        assert!(r.mean_secs > 0.0);
+        assert!(r.p99_secs >= r.p50_secs);
+        assert!(r.min_secs <= r.mean_secs);
+        assert!(x > 0);
+    }
+
+    #[test]
+    fn adaptive_respects_min_iters() {
+        let r = bench_for("fast", 0.0, 5, || {});
+        assert!(r.iters >= 5);
+    }
+}

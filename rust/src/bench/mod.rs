@@ -1,0 +1,17 @@
+//! Measurement harness + experiment drivers (criterion is not in the
+//! offline vendor set, so `cargo bench` targets use this harness via
+//! `harness = false`).
+//!
+//! * [`harness`] — warmup/iteration timing with mean/stddev/percentiles.
+//! * [`table`] — aligned-table + markdown + JSON report rendering.
+//! * [`eval`] — shared evaluation loops: run a policy over a task suite and
+//!   aggregate per-category scores (drives Table 2 / Fig 2 / Fig 4 / ...).
+//! * [`output_loss`] — the Table 14 oracle: exact layer attention output
+//!   loss ||y - ŷ||_1 under an eviction mask.
+
+pub mod driver;
+pub mod eval;
+pub mod experiments;
+pub mod harness;
+pub mod output_loss;
+pub mod table;

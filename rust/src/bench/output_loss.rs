@@ -1,0 +1,228 @@
+//! Table 14 oracle: exact layer attention output loss under an eviction
+//! mask (Lemma 1),
+//!
+//!   ||y - ŷ||_1,   y = Cat_h(A^N_h V_h) W^O,
+//!                  ŷ = Cat_h( (A^N_h ⊙ I_h / ||A^N_h ⊙ I_h||_1) V_h ) W^O
+//!
+//! computed host-side from the prefill observation (the last window row is
+//! exactly A^N) + the layer's V cache + W^O. This is the paper's only fully
+//! model-faithful quantitative claim we can measure *exactly*, with no
+//! scale substitution.
+
+use crate::compress::LayerObs;
+use crate::runtime::Tensor;
+
+/// A^N per q-head over valid positions: the last row of the window panel.
+pub fn last_row_attention(obs: &LayerObs) -> Vec<Vec<f32>> {
+    let h = obs.n_heads();
+    let w = obs.window();
+    let n = obs.bucket();
+    let len = obs.length;
+    let win = obs.win_attn.as_f32().expect("win_attn");
+    (0..h)
+        .map(|hh| win[(hh * w + (w - 1)) * n..(hh * w + (w - 1)) * n + len].to_vec())
+        .collect()
+}
+
+/// ||y - ŷ||_1 for one layer.
+///
+/// * `attn` — [H][len] current-step attention (see `last_row_attention`).
+/// * `v` — [Hk, N, dh] value cache tensor from prefill.
+/// * `wo` — [H*dh, d] output projection.
+/// * `keep` — per-kv-head kept indices (the eviction mask I).
+pub fn layer_output_loss(
+    attn: &[Vec<f32>],
+    v: &Tensor,
+    wo: &Tensor,
+    keep: &[Vec<usize>],
+    length: usize,
+) -> f64 {
+    let h = attn.len();
+    let hk = v.shape[0];
+    let n = v.shape[1];
+    let dh = v.shape[2];
+    let group = h / hk;
+    let d = wo.shape[1];
+    let vf = v.as_f32().expect("v");
+    let wof = wo.as_f32().expect("wo");
+
+    // per-head context vectors with and without the mask
+    let mut cat_full = vec![0.0f32; h * dh];
+    let mut cat_masked = vec![0.0f32; h * dh];
+    for hh in 0..h {
+        let kv = hh / group;
+        // full
+        for i in 0..length {
+            let a = attn[hh][i];
+            if a == 0.0 {
+                continue;
+            }
+            let base = (kv * n + i) * dh;
+            for j in 0..dh {
+                cat_full[hh * dh + j] += a * vf[base + j];
+            }
+        }
+        // masked + renormalized
+        let mass: f32 = keep[kv].iter().map(|&i| attn[hh][i]).sum();
+        if mass > 0.0 {
+            for &i in &keep[kv] {
+                let a = attn[hh][i] / mass;
+                let base = (kv * n + i) * dh;
+                for j in 0..dh {
+                    cat_masked[hh * dh + j] += a * vf[base + j];
+                }
+            }
+        }
+    }
+
+    // y - ŷ = (cat_full - cat_masked) @ Wo ; L1 norm
+    let mut loss = 0.0f64;
+    for col in 0..d {
+        let mut acc = 0.0f32;
+        for row in 0..h * dh {
+            acc += (cat_full[row] - cat_masked[row]) * wof[row * d + col];
+        }
+        loss += acc.abs() as f64;
+    }
+    loss
+}
+
+/// Theorem 1 upper bound: 2 * ||Wo^T||_1 * sum_h sum_{evicted} A[i] * Vbar_h.
+pub fn theorem1_upper_bound(
+    attn: &[Vec<f32>],
+    v: &Tensor,
+    wo: &Tensor,
+    keep: &[Vec<usize>],
+    length: usize,
+) -> f64 {
+    let h = attn.len();
+    let hk = v.shape[0];
+    let n = v.shape[1];
+    let dh = v.shape[2];
+    let group = h / hk;
+    let d = wo.shape[1];
+    let vf = v.as_f32().expect("v");
+    let wof = wo.as_f32().expect("wo");
+
+    // C = ||Wo^T||_1 = max over columns of sum of |entries| in that column
+    // (matrix 1-norm of Wo^T = max row-sum of |Wo| ... the paper uses the
+    // largest column-absolute-sum of Wo^T, i.e. largest row sum of Wo^T's
+    // columns = max_j sum_i |Wo[i][j]| over ... we follow Lemma 2: max
+    // column abs sum of W^T = max row abs sum of W.)
+    let mut c = 0.0f64;
+    for row in 0..h * dh {
+        let mut s = 0.0f64;
+        for col in 0..d {
+            s += wof[row * d + col].abs() as f64;
+        }
+        c = c.max(s);
+    }
+
+    let mut bound = 0.0f64;
+    for kv in 0..hk {
+        // Vbar = max_i ||V[i]||_1
+        let mut vbar = 0.0f64;
+        for i in 0..length {
+            let mut s = 0.0f64;
+            for j in 0..dh {
+                s += vf[(kv * n + i) * dh + j].abs() as f64;
+            }
+            vbar = vbar.max(s);
+        }
+        for g in 0..group {
+            let hh = kv * group + g;
+            let mut evicted_mass = 0.0f64;
+            for i in 0..length {
+                if !keep[kv].contains(&i) {
+                    evicted_mass += attn[hh][i] as f64;
+                }
+            }
+            bound += evicted_mass * vbar;
+        }
+    }
+    2.0 * c * bound
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Rng;
+
+    fn setup(seed: u64) -> (Vec<Vec<f32>>, Tensor, Tensor, usize) {
+        let mut rng = Rng::new(seed);
+        let (h, hk, n, dh, d, len) = (4usize, 2usize, 32usize, 4usize, 16usize, 24usize);
+        let mut attn = vec![vec![0.0f32; len]; h];
+        for row in attn.iter_mut() {
+            let mut s = 0.0;
+            for x in row.iter_mut() {
+                *x = rng.f32();
+                s += *x;
+            }
+            for x in row.iter_mut() {
+                *x /= s;
+            }
+        }
+        let v = Tensor::f32((0..hk * n * dh).map(|_| rng.normal() as f32).collect(), &[hk, n, dh]);
+        let wo = Tensor::f32((0..h * dh * d).map(|_| rng.normal() as f32).collect(), &[h * dh, d]);
+        (attn, v, wo, len)
+    }
+
+    #[test]
+    fn zero_loss_when_nothing_evicted() {
+        let (attn, v, wo, len) = setup(0);
+        let keep: Vec<Vec<usize>> = vec![(0..len).collect(), (0..len).collect()];
+        let loss = layer_output_loss(&attn, &v, &wo, &keep, len);
+        assert!(loss < 1e-4, "loss {loss}");
+    }
+
+    #[test]
+    fn loss_positive_when_evicting() {
+        let (attn, v, wo, len) = setup(1);
+        let keep: Vec<Vec<usize>> = vec![(0..len / 2).collect(), (0..len / 2).collect()];
+        let loss = layer_output_loss(&attn, &v, &wo, &keep, len);
+        assert!(loss > 0.0);
+    }
+
+    #[test]
+    fn bound_holds() {
+        // Theorem 1: the exact loss never exceeds the upper bound.
+        for seed in 0..10 {
+            let (attn, v, wo, len) = setup(seed);
+            let mut rng = Rng::new(seed + 100);
+            let keep: Vec<Vec<usize>> = (0..2)
+                .map(|_| {
+                    let k = 4 + rng.below(len - 4);
+                    rng.sample_indices(len, k)
+                })
+                .collect();
+            let loss = layer_output_loss(&attn, &v, &wo, &keep, len);
+            let bound = theorem1_upper_bound(&attn, &v, &wo, &keep, len);
+            assert!(
+                loss <= bound + 1e-6,
+                "seed {seed}: loss {loss} > bound {bound}"
+            );
+        }
+    }
+
+    #[test]
+    fn keeping_high_attention_tokens_reduces_loss() {
+        let (attn, v, wo, len) = setup(2);
+        // keep-top-attention vs keep-bottom-attention (head-0 ranking)
+        let mut order: Vec<usize> = (0..len).collect();
+        order.sort_by(|&a, &b| attn[0][b].partial_cmp(&attn[0][a]).unwrap());
+        let top: Vec<usize> = {
+            let mut t = order[..len / 2].to_vec();
+            t.sort_unstable();
+            t
+        };
+        let bottom: Vec<usize> = {
+            let mut t = order[len / 2..].to_vec();
+            t.sort_unstable();
+            t
+        };
+        let loss_top = layer_output_loss(&attn, &v, &wo, &vec![top.clone(), top], len);
+        let loss_bottom =
+            layer_output_loss(&attn, &v, &wo, &vec![bottom.clone(), bottom], len);
+        assert!(loss_top < loss_bottom);
+    }
+}

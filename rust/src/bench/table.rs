@@ -1,0 +1,155 @@
+//! Report rendering: aligned console tables, markdown, and JSON dumps so
+//! every experiment driver prints the same row/series structure the paper's
+//! tables/figures use and archives machine-readable results.
+
+use std::collections::BTreeMap;
+
+use crate::util::json::{self, Json};
+
+#[derive(Debug, Clone, Default)]
+pub struct Table {
+    pub title: String,
+    pub columns: Vec<String>,
+    pub rows: Vec<(String, Vec<f64>)>,
+}
+
+impl Table {
+    pub fn new(title: &str, columns: &[&str]) -> Table {
+        Table {
+            title: title.to_string(),
+            columns: columns.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, label: &str, values: Vec<f64>) {
+        assert_eq!(values.len(), self.columns.len(), "row width mismatch");
+        self.rows.push((label.to_string(), values));
+    }
+
+    /// Column-wise best (max) markers like the paper's bold entries.
+    fn best_per_column(&self) -> Vec<Option<usize>> {
+        (0..self.columns.len())
+            .map(|c| {
+                let mut best: Option<(usize, f64)> = None;
+                for (r, (_, vals)) in self.rows.iter().enumerate() {
+                    if best.map(|(_, b)| vals[c] > b).unwrap_or(true) {
+                        best = Some((r, vals[c]));
+                    }
+                }
+                best.map(|(r, _)| r)
+            })
+            .collect()
+    }
+
+    pub fn render(&self, mark_best: bool) -> String {
+        let label_w = self
+            .rows
+            .iter()
+            .map(|(l, _)| l.len())
+            .chain(std::iter::once(self.title.len().min(24)))
+            .max()
+            .unwrap_or(8)
+            .max(8);
+        let col_w = self.columns.iter().map(|c| c.len().max(9)).collect::<Vec<_>>();
+        let best = if mark_best { self.best_per_column() } else { vec![None; self.columns.len()] };
+
+        let mut out = String::new();
+        out.push_str(&format!("== {} ==\n", self.title));
+        out.push_str(&format!("{:<label_w$}", ""));
+        for (c, w) in self.columns.iter().zip(&col_w) {
+            out.push_str(&format!(" {:>w$}", c, w = w));
+        }
+        out.push('\n');
+        for (r, (label, vals)) in self.rows.iter().enumerate() {
+            out.push_str(&format!("{:<label_w$}", label));
+            for ((&v, w), b) in vals.iter().zip(&col_w).zip(&best) {
+                let cell = format!("{:.2}", v);
+                let marked = if *b == Some(r) { format!("*{cell}") } else { cell };
+                out.push_str(&format!(" {:>w$}", marked, w = w));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_markdown(&self) -> String {
+        let mut out = format!("### {}\n\n| |", self.title);
+        for c in &self.columns {
+            out.push_str(&format!(" {c} |"));
+        }
+        out.push_str("\n|---|");
+        for _ in &self.columns {
+            out.push_str("---|");
+        }
+        out.push('\n');
+        for (label, vals) in &self.rows {
+            out.push_str(&format!("| {label} |"));
+            for v in vals {
+                out.push_str(&format!(" {v:.2} |"));
+            }
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut rows = BTreeMap::new();
+        for (label, vals) in &self.rows {
+            rows.insert(
+                label.clone(),
+                Json::Arr(vals.iter().map(|&v| Json::num(v)).collect()),
+            );
+        }
+        Json::obj(vec![
+            ("title", Json::str(self.title.clone())),
+            (
+                "columns",
+                Json::Arr(self.columns.iter().map(|c| Json::str(c.clone())).collect()),
+            ),
+            ("rows", Json::Obj(rows)),
+        ])
+    }
+
+    /// Append the JSON form to `path` (one table per line).
+    pub fn save_jsonl(&self, path: &str) -> std::io::Result<()> {
+        use std::io::Write;
+        if let Some(dir) = std::path::Path::new(path).parent() {
+            std::fs::create_dir_all(dir)?;
+        }
+        let mut f = std::fs::OpenOptions::new().create(true).append(true).open(path)?;
+        writeln!(f, "{}", json::to_string(&self.to_json()))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_and_marks_best() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row("x", vec![1.0, 5.0]);
+        t.row("y", vec![2.0, 3.0]);
+        let s = t.render(true);
+        assert!(s.contains("*2.00"), "{s}");
+        assert!(s.contains("*5.00"), "{s}");
+        let md = t.to_markdown();
+        assert!(md.contains("| x | 1.00 | 5.00 |"));
+    }
+
+    #[test]
+    fn json_round_trip() {
+        let mut t = Table::new("demo", &["c1"]);
+        t.row("r1", vec![1.5]);
+        let j = t.to_json();
+        assert_eq!(j.path("rows.r1").unwrap().as_arr().unwrap()[0].as_f64(), Some(1.5));
+    }
+
+    #[test]
+    #[should_panic(expected = "row width mismatch")]
+    fn rejects_ragged_rows() {
+        let mut t = Table::new("demo", &["a", "b"]);
+        t.row("x", vec![1.0]);
+    }
+}

@@ -1,0 +1,22 @@
+//! Table 12: InfiniteBench-proxy — the longest contexts the buckets allow
+//! (Sum / MC / Dia proxies; see DESIGN.md §3).
+//!
+//!   cargo run --release --bin bench_infinite -- [--mock] [--ctx 2048]
+//!       [--budget 48] [--per-task 2] [--out results/infinite.jsonl]
+
+use anyhow::Result;
+use lava::bench::{driver, experiments};
+use lava::util::cli::Args;
+use lava::with_engine;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let p = driver::params_from_args(&args);
+    let ctx = args.usize_or("ctx", 2048);
+    let budget = args.usize_or("budget", 48);
+    with_engine!(args, |engine| {
+        let t = experiments::table12(&mut engine, &p, ctx, budget)?;
+        driver::emit(&args, &[t]);
+        Ok(())
+    })
+}

@@ -1,0 +1,39 @@
+//! Figure 3: decode latency (ms/token) and peak KV memory vs context
+//! length, full cache vs compressed policies.
+//!
+//! Two regimes:
+//!   * real model (default): context lengths within the artifact buckets;
+//!   * --mock: coordinator-only scaling to paper-scale contexts (128k) —
+//!     isolates the L3 overhead the way the paper's Fig. 3 isolates
+//!     FlashAttention + cache handling.
+//!
+//!   cargo run --release --bin bench_latency -- [--mock]
+//!       [--ctx-lens 128,256,512,1024,2048] [--budget 32] [--out-tokens 16]
+
+use anyhow::Result;
+use lava::bench::{driver, experiments};
+use lava::util::cli::Args;
+use lava::with_engine;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let default_ctx: Vec<usize> = if args.bool("mock") {
+        vec![1024, 4096, 16384, 65536, 131072]
+    } else {
+        vec![128, 256, 512, 1024, 2048]
+    };
+    let ctx_lens = args.usize_list_or("ctx-lens", &default_ctx);
+    let budget = args.usize_or("budget", 32);
+    let out_tokens = args.usize_or("out-tokens", 16);
+    let policies = args.str_list_or(
+        "policies",
+        &["full", "snapkv", "ada-snapkv", "cake", "lava"],
+    );
+    let seed = args.usize_or("seed", 0) as u64;
+    with_engine!(args, |engine| {
+        let (lat, mem) =
+            experiments::figure3(&mut engine, &ctx_lens, &policies, budget, out_tokens, seed)?;
+        driver::emit(&args, &[lat, mem]);
+        Ok(())
+    })
+}

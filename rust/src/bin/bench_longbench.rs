@@ -1,0 +1,23 @@
+//! Table 2 + Figure 2: the LongBench-proxy grid — every policy x budget,
+//! per-task scores and extraction/generation category averages.
+//!
+//!   cargo run --release --bin bench_longbench -- [--mock] [--ctx 256]
+//!       [--budgets 24,32,48,64] [--per-task 3] [--out results/longbench.jsonl]
+
+use anyhow::Result;
+use lava::bench::{driver, experiments};
+use lava::util::cli::Args;
+use lava::with_engine;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let p = driver::params_from_args(&args);
+    with_engine!(args, |engine| {
+        let (tables, results) = experiments::table2(&mut engine, &p)?;
+        driver::emit(&args, &tables);
+        let fig2 = experiments::figure2(&results, &p.budgets, &p.policies);
+        driver::emit(&args, &[fig2]);
+        println!("{}", engine.metrics.report());
+        Ok(())
+    })
+}

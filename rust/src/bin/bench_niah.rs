@@ -1,0 +1,21 @@
+//! Table 9: Needle-In-A-Haystack — context x depth grid, averaged, per
+//! policy at small and large budgets.
+//!
+//!   cargo run --release --bin bench_niah -- [--mock] [--ctx-lens 128,256,512]
+//!       [--budgets 24,64] [--per-task 2] [--out results/niah.jsonl]
+
+use anyhow::Result;
+use lava::bench::{driver, experiments};
+use lava::util::cli::Args;
+use lava::with_engine;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let p = driver::params_from_args(&args);
+    let ctx_lens = args.usize_list_or("ctx-lens", &[128, 256, 512]);
+    with_engine!(args, |engine| {
+        let t = experiments::table9(&mut engine, &p, &ctx_lens)?;
+        driver::emit(&args, &[t]);
+        Ok(())
+    })
+}

@@ -1,0 +1,34 @@
+//! Table 14: exact layer attention output loss ||y - ŷ||_1 (Lemma 1) at
+//! the first and last layers, AdaKV score vs LAVa score. Model-faithful —
+//! no scale substitution — so this is the repo's strongest direct check of
+//! Theorem 1's claim that LAVa's bound is tighter in practice.
+//!
+//! Needs the real artifacts (W^O weights); no --mock mode.
+//!
+//!   cargo run --release --bin bench_output_loss -- [--ctx 256] [--budget 16]
+//!       [--per-task 3] [--out results/output_loss.jsonl]
+
+use anyhow::Result;
+use lava::bench::{driver, experiments};
+use lava::model::{Manifest, Weights};
+use lava::util::cli::Args;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let p = driver::params_from_args(&args);
+    let budget = args.usize_or("budget", 16);
+    let dir = args.str_or("artifacts", "artifacts");
+    let manifest = Manifest::load(&dir)?;
+    let weights = Weights::load(&manifest)?;
+    let wo_idx = manifest
+        .layer_weight_order
+        .iter()
+        .position(|w| w == "wo")
+        .expect("wo in layer weights");
+    let wo_per_layer: Vec<_> = weights.layers.iter().map(|lw| lw[wo_idx].clone()).collect();
+
+    let mut engine = driver::pjrt_engine(&args)?;
+    let t = experiments::table14(&mut engine, &wo_per_layer, &p, budget)?;
+    driver::emit(&args, &[t]);
+    Ok(())
+}

@@ -1,0 +1,22 @@
+//! Table 11: Ruler-proxy — multi-key / multi-hop / kv retrieval at several
+//! context lengths (paper: 4k/8k/16k; here the ~16x scale-down).
+//!
+//!   cargo run --release --bin bench_ruler -- [--mock] [--ctx-lens 256,512,1024]
+//!       [--budget 32] [--per-task 2] [--out results/ruler.jsonl]
+
+use anyhow::Result;
+use lava::bench::{driver, experiments};
+use lava::util::cli::Args;
+use lava::with_engine;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let p = driver::params_from_args(&args);
+    let ctx_lens = args.usize_list_or("ctx-lens", &[256, 512, 1024]);
+    let budget = args.usize_or("budget", 32);
+    with_engine!(args, |engine| {
+        let t = experiments::table11(&mut engine, &p, &ctx_lens, budget)?;
+        driver::emit(&args, &[t]);
+        Ok(())
+    })
+}

@@ -1,0 +1,19 @@
+//! Table 5
+//!
+//!   cargo run --release --bin bench_vatp -- [--mock] [--ctx 256]
+//!       [--budgets 24,32,48,64] [--per-task 3] [--out results/bench_vatp.jsonl]
+
+use anyhow::Result;
+use lava::bench::{driver, experiments};
+use lava::util::cli::Args;
+use lava::with_engine;
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let p = driver::params_from_args(&args);
+    with_engine!(args, |engine| {
+        let t = experiments::table5(&mut engine, &p)?;
+        driver::emit(&args, &[t]);
+        Ok(())
+    })
+}

@@ -1,0 +1,228 @@
+//! Layer-budget allocators (§4.2 / Table 1).
+//!
+//! All allocators map a total budget 𝔹 (cache entries across all layers) to
+//! per-layer budgets B_l, with a floor of `min_per_layer` (the protected
+//! window) per layer:
+//!
+//!   Uniform   B_l = 𝔹 / L                       (SnapKV, AdaKV, H2O, ...)
+//!   Pyramid   Eq. 21, shape parameter beta       (PyramidKV)
+//!   CakeHv    P_l = H_l^{1/g1} * V_l^{1/g2}      (CAKE Eq. 22-23)
+//!   Entropy   e_l = normalized score entropy     (LAVa Eq. 6-7)
+//!
+//! The dynamic allocators (CakeHv, Entropy) are used inside Algorithm 2's
+//! cascade: after prefilling layer l, `proportional` re-splits the full 𝔹
+//! over the l+1 layers seen so far, so earlier layers shrink monotonically
+//! as later layers arrive.
+
+use super::LayerObs;
+use crate::util::stats;
+
+/// Largest-remainder proportional split of `total` by `weights`, with a
+/// per-layer floor. Guarantees: sum == total (when total >= L * floor) and
+/// every budget >= floor.
+pub fn proportional(weights: &[f64], total: usize, floor: usize) -> Vec<usize> {
+    let l = weights.len();
+    if l == 0 {
+        return vec![];
+    }
+    if total <= l * floor {
+        return vec![total / l; l];
+    }
+    let spread = total - l * floor;
+    let wsum: f64 = weights.iter().map(|w| w.max(0.0)).sum();
+    if wsum <= 0.0 {
+        // degenerate weights -> uniform
+        let mut out = vec![floor + spread / l; l];
+        let mut rem = spread - (spread / l) * l;
+        for b in out.iter_mut() {
+            if rem == 0 {
+                break;
+            }
+            *b += 1;
+            rem -= 1;
+        }
+        return out;
+    }
+    let mut out = vec![floor; l];
+    let mut fracs: Vec<(f64, usize)> = Vec::with_capacity(l);
+    let mut assigned = 0usize;
+    for (i, w) in weights.iter().enumerate() {
+        let exact = w.max(0.0) / wsum * spread as f64;
+        let fl = exact.floor() as usize;
+        out[i] += fl;
+        assigned += fl;
+        fracs.push((exact - fl as f64, i));
+    }
+    let mut rem = spread - assigned;
+    fracs.sort_by(|a, b| b.0.partial_cmp(&a.0).unwrap().then(a.1.cmp(&b.1)));
+    for (_, i) in fracs {
+        if rem == 0 {
+            break;
+        }
+        out[i] += 1;
+        rem -= 1;
+    }
+    out
+}
+
+/// Uniform split (integer floor; remainder to the earliest layers).
+pub fn uniform(total: usize, n_layers: usize) -> Vec<usize> {
+    proportional(&vec![1.0; n_layers], total, 0)
+}
+
+/// PyramidKV Eq. 21: linearly descending budgets controlled by beta.
+/// B_{L-1} = 𝔹/(beta*L); B_0 = 2𝔹/L - B_{L-1}; linear in between.
+pub fn pyramid(total: usize, n_layers: usize, beta: f32, floor: usize) -> Vec<usize> {
+    let l = n_layers as f64;
+    let b_last = total as f64 / (beta as f64 * l);
+    let b_first = 2.0 * total as f64 / l - b_last;
+    let weights: Vec<f64> = (0..n_layers)
+        .map(|i| {
+            let t = if n_layers == 1 { 0.0 } else { i as f64 / (l - 1.0) };
+            (b_first + (b_last - b_first) * t).max(0.0)
+        })
+        .collect();
+    proportional(&weights, total, floor)
+}
+
+/// LAVa Eq. 6-7: normalized entropy of a layer's (kv-head) score
+/// distribution. Constant H*N factors cancel in `proportional`, but we keep
+/// the paper's normalization for reportability.
+pub fn lava_layer_entropy(scores: &[Vec<f32>]) -> f64 {
+    let count: usize = scores.iter().map(|s| s.len()).sum();
+    if count == 0 {
+        return 0.0;
+    }
+    let flat: Vec<f32> = scores.iter().flatten().copied().collect();
+    stats::entropy(&flat) / count as f64
+}
+
+/// CAKE Eq. 22: spatial entropy H_l of the window-attention distributions
+/// and temporal variance V_l of per-token attention across window steps.
+pub fn cake_hv(obs: &LayerObs) -> (f64, f64) {
+    let h = obs.n_heads();
+    let w = obs.window();
+    let n = obs.bucket();
+    let len = obs.length;
+    let win = obs.win_attn.as_f32().expect("win_attn");
+    // spatial: mean entropy of each window row's attention distribution
+    let mut hsum = 0.0;
+    for hh in 0..h {
+        for r in 0..w {
+            let row = &win[(hh * w + r) * n..(hh * w + r) * n + len];
+            hsum += stats::entropy(row);
+        }
+    }
+    let spatial = hsum / (h * w) as f64;
+    // temporal: sum over tokens of the variance of attention across rows
+    let mut vsum = 0.0;
+    for hh in 0..h {
+        for i in 0..len {
+            let xs: Vec<f64> = (0..w).map(|r| win[(hh * w + r) * n + i] as f64).collect();
+            vsum += stats::variance(&xs);
+        }
+    }
+    let temporal = vsum / h as f64;
+    (spatial, temporal)
+}
+
+/// CAKE Eq. 23 preference weight.
+pub fn cake_preference(spatial: f64, temporal: f64, g1: f32, g2: f32) -> f64 {
+    spatial.max(1e-12).powf(1.0 / g1 as f64) * temporal.max(1e-12).powf(1.0 / g2 as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    #[test]
+    fn proportional_sums_and_floors() {
+        let b = proportional(&[1.0, 2.0, 3.0], 60, 5);
+        assert_eq!(b.iter().sum::<usize>(), 60);
+        assert!(b.iter().all(|&x| x >= 5));
+        assert!(b[2] > b[1] && b[1] > b[0]);
+    }
+
+    #[test]
+    fn proportional_exact_thirds() {
+        assert_eq!(proportional(&[1.0, 1.0, 1.0], 9, 0), vec![3, 3, 3]);
+    }
+
+    #[test]
+    fn uniform_remainder_goes_early() {
+        assert_eq!(uniform(10, 4), vec![3, 3, 2, 2]);
+    }
+
+    #[test]
+    fn pyramid_descends() {
+        let b = pyramid(1000, 8, 10.0, 0);
+        assert_eq!(b.iter().sum::<usize>(), 1000);
+        for w in b.windows(2) {
+            assert!(w[0] >= w[1], "pyramid must descend: {:?}", b);
+        }
+        // beta controls steepness: larger beta -> smaller last layer
+        let steep = pyramid(1000, 8, 20.0, 0);
+        assert!(steep[7] <= b[7]);
+    }
+
+    #[test]
+    fn entropy_allocator_prefers_uncertain_layers() {
+        // layer A: all mass on one token (low entropy) vs layer B: uniform
+        let low = vec![vec![1.0f32, 0.0, 0.0, 0.0], vec![1.0, 0.0, 0.0, 0.0]];
+        let high = vec![vec![0.25f32; 4], vec![0.25; 4]];
+        let ea = lava_layer_entropy(&low);
+        let eb = lava_layer_entropy(&high);
+        assert!(eb > ea);
+        let budgets = proportional(&[ea, eb], 100, 10);
+        assert!(budgets[1] > budgets[0]);
+        assert_eq!(budgets.iter().sum::<usize>(), 100);
+    }
+
+    #[test]
+    fn cake_hv_detects_shape() {
+        use crate::compress::score::tests::synth_obs;
+        // peaked obs has lower spatial entropy than uniform-ish obs
+        let peaked = synth_obs(2, 2, 4, 32, 24, 3, 0);
+        let (h1, _) = cake_hv(&peaked);
+        assert!(h1 > 0.0 && h1 < (24f64).ln());
+    }
+
+    #[test]
+    fn cake_preference_monotone() {
+        let p1 = cake_preference(1.0, 1.0, 2.0, 2.0);
+        let p2 = cake_preference(2.0, 1.0, 2.0, 2.0);
+        let p3 = cake_preference(2.0, 2.0, 2.0, 2.0);
+        assert!(p2 > p1 && p3 > p2);
+    }
+
+    #[test]
+    fn prop_proportional_invariants() {
+        prop::check(100, |rng| {
+            let l = 1 + rng.below(12);
+            let floor = rng.below(8);
+            let total = l * floor + rng.below(500);
+            let weights: Vec<f64> = (0..l).map(|_| rng.f64()).collect();
+            let b = proportional(&weights, total, floor);
+            prop::assert_prop(b.len() == l, "len", &b)?;
+            prop::assert_prop(b.iter().sum::<usize>() == total, "sum", &(total, &b))?;
+            prop::assert_prop(b.iter().all(|&x| x >= floor), "floor", &(floor, &b))
+        });
+    }
+
+    #[test]
+    fn prop_proportional_monotone_in_weight() {
+        prop::check(50, |rng| {
+            let l = 2 + rng.below(6);
+            let total = 100 + rng.below(400);
+            let mut weights: Vec<f64> = (0..l).map(|_| 0.1 + rng.f64()).collect();
+            weights.sort_by(|a, b| a.partial_cmp(b).unwrap());
+            let b = proportional(&weights, total, 0);
+            // allow off-by-one from largest-remainder rounding
+            for w in b.windows(2) {
+                prop::assert_prop(w[1] + 1 >= w[0], "monotone-ish", &b)?;
+            }
+            Ok(())
+        });
+    }
+}

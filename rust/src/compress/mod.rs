@@ -1,0 +1,240 @@
+//! Cache compression policies: LAVa (the paper's contribution) and every
+//! baseline it is evaluated against, expressed in one shared vocabulary so
+//! comparisons are apples-to-apples (DESIGN.md §4):
+//!
+//!   score kind      x  GQA group reduce  x  head-budget mode  x  layer-budget mode
+//!   (Table 1/4)        (§4.3)               (Alg. 1)             (§4.2)
+//!
+//! All policies consume the same `LayerObs` produced by the
+//! `layer_prefill_{N}` artifact (recent-window attention, accumulated
+//! attention mass, value norms).
+
+pub mod alloc;
+pub mod score;
+pub mod select;
+
+use crate::runtime::Tensor;
+
+/// Per-layer observation statistics from the prefill pass.
+#[derive(Debug, Clone)]
+pub struct LayerObs {
+    /// [H, w, N] attention of the last w queries over all positions.
+    pub win_attn: Tensor,
+    /// [H, N] accumulated column attention mass over all valid rows (H2O).
+    pub acc_attn: Tensor,
+    /// [Hk, N] per-token value L1 norms.
+    pub vnorm: Tensor,
+    /// Valid token count (<= N bucket).
+    pub length: usize,
+}
+
+impl LayerObs {
+    pub fn n_heads(&self) -> usize {
+        self.win_attn.shape[0]
+    }
+
+    pub fn window(&self) -> usize {
+        self.win_attn.shape[1]
+    }
+
+    pub fn bucket(&self) -> usize {
+        self.win_attn.shape[2]
+    }
+
+    pub fn n_kv_heads(&self) -> usize {
+        self.vnorm.shape[0]
+    }
+}
+
+/// Token-scoring rule (Table 1 / Table 4 of the paper).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ScoreKind {
+    /// Mean recent-window attention (SnapKV; also AdaKV / PyramidKV).
+    SnapKv,
+    /// Accumulated attention over all past queries (H2O).
+    H2o,
+    /// Last-token attention (TOVA).
+    Tova,
+    /// SnapKV + gamma * temporal variance over the window (CAKE).
+    Cake { gamma: f32 },
+    /// Per-token value-norm-weighted window attention (VATP).
+    Vatp,
+    /// max value norm per head x window attention (LAVa, Definition 1).
+    Lava,
+    /// Position-based sink + recency (StreamingLLM); needs no statistics.
+    Streaming { sinks: usize },
+}
+
+/// How per-query-head scores collapse onto the (GQA-shared) kv heads.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GroupReduce {
+    /// Average over the group (baseline implementations).
+    Mean,
+    /// Max over the group — the paper's conservative rule (§4.3).
+    Max,
+}
+
+/// Head-budget mode (Algorithm 1).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum HeadAlloc {
+    /// B_l / H_k per head, head-local top-k.
+    Fixed,
+    /// Flatten scores across heads; one layer-wide top-B_l (dynamic).
+    Flat,
+}
+
+/// Layer-budget mode (§4.2).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum LayerAlloc {
+    Uniform,
+    /// PyramidKV Eq. 21, parameterized by beta.
+    Pyramid { beta: f32 },
+    /// CAKE Eq. 22-23: spatial entropy ^ (1/g1) * temporal variance ^ (1/g2).
+    CakeHv { g1: f32, g2: f32 },
+    /// LAVa Eq. 6-7: normalized entropy of the layer's score distribution.
+    Entropy,
+}
+
+/// A complete eviction policy.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Policy {
+    pub name: &'static str,
+    pub score: ScoreKind,
+    pub group_reduce: GroupReduce,
+    pub head_alloc: HeadAlloc,
+    pub layer_alloc: LayerAlloc,
+    /// Evict one entry per head per decode step once over budget (how H2O
+    /// and TOVA operate at decode time).
+    pub decode_evict: bool,
+    /// No compression at all (the Full Cache reference row).
+    pub full_cache: bool,
+}
+
+impl Policy {
+    /// Whether the layer budgets depend on the prompt (dynamic -> requires
+    /// Algorithm 2's cascading recompression during layer-wise prefill).
+    pub fn dynamic_layer(&self) -> bool {
+        matches!(self.layer_alloc, LayerAlloc::CakeHv { .. } | LayerAlloc::Entropy)
+    }
+
+    fn base(name: &'static str, score: ScoreKind) -> Policy {
+        Policy {
+            name,
+            score,
+            group_reduce: GroupReduce::Mean,
+            head_alloc: HeadAlloc::Fixed,
+            layer_alloc: LayerAlloc::Uniform,
+            decode_evict: false,
+            full_cache: false,
+        }
+    }
+
+    /// The policy registry: every method from DESIGN.md §4 by name.
+    pub fn by_name(name: &str) -> Option<Policy> {
+        let p = match name {
+            "full" => Policy { full_cache: true, ..Policy::base("full", ScoreKind::SnapKv) },
+            "streaming" => Policy::base("streaming", ScoreKind::Streaming { sinks: 4 }),
+            "h2o" => Policy { decode_evict: true, ..Policy::base("h2o", ScoreKind::H2o) },
+            "tova" => Policy { decode_evict: true, ..Policy::base("tova", ScoreKind::Tova) },
+            "snapkv" => Policy::base("snapkv", ScoreKind::SnapKv),
+            "pyramidkv" => Policy {
+                layer_alloc: LayerAlloc::Pyramid { beta: 10.0 },
+                ..Policy::base("pyramidkv", ScoreKind::SnapKv)
+            },
+            "ada-snapkv" | "adakv" => Policy {
+                name: "ada-snapkv",
+                head_alloc: HeadAlloc::Flat,
+                ..Policy::base("ada-snapkv", ScoreKind::SnapKv)
+            },
+            "ada-pyramidkv" => Policy {
+                head_alloc: HeadAlloc::Flat,
+                layer_alloc: LayerAlloc::Pyramid { beta: 10.0 },
+                ..Policy::base("ada-pyramidkv", ScoreKind::SnapKv)
+            },
+            "cake" => Policy {
+                layer_alloc: LayerAlloc::CakeHv { g1: 2.0, g2: 2.0 },
+                ..Policy::base("cake", ScoreKind::Cake { gamma: 5.0 })
+            },
+            "vatp" => Policy::base("vatp", ScoreKind::Vatp),
+            "lava" => Policy {
+                group_reduce: GroupReduce::Max,
+                head_alloc: HeadAlloc::Flat,
+                layer_alloc: LayerAlloc::Entropy,
+                ..Policy::base("lava", ScoreKind::Lava)
+            },
+            // ablations (Fig. 4) and layer-allocation variants (Table 13)
+            "lava-nolayer" | "lava-uniform" => Policy {
+                group_reduce: GroupReduce::Max,
+                head_alloc: HeadAlloc::Flat,
+                layer_alloc: LayerAlloc::Uniform,
+                ..Policy::base("lava-uniform", ScoreKind::Lava)
+            },
+            "lava-nohead" => Policy {
+                group_reduce: GroupReduce::Max,
+                head_alloc: HeadAlloc::Fixed,
+                layer_alloc: LayerAlloc::Entropy,
+                ..Policy::base("lava-nohead", ScoreKind::Lava)
+            },
+            "lava-pyramid" => Policy {
+                group_reduce: GroupReduce::Max,
+                head_alloc: HeadAlloc::Flat,
+                layer_alloc: LayerAlloc::Pyramid { beta: 10.0 },
+                ..Policy::base("lava-pyramid", ScoreKind::Lava)
+            },
+            _ => return None,
+        };
+        Some(p)
+    }
+
+    pub fn all_names() -> &'static [&'static str] {
+        &[
+            "full", "streaming", "h2o", "tova", "snapkv", "pyramidkv", "ada-snapkv",
+            "ada-pyramidkv", "cake", "vatp", "lava", "lava-uniform", "lava-nohead",
+            "lava-pyramid",
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn registry_resolves_all() {
+        for name in Policy::all_names() {
+            let p = Policy::by_name(name).unwrap_or_else(|| panic!("missing {name}"));
+            if *name != "ada-snapkv" {
+                assert_eq!(&p.name, name);
+            }
+        }
+        assert!(Policy::by_name("nope").is_none());
+    }
+
+    #[test]
+    fn lava_is_fully_dynamic() {
+        let p = Policy::by_name("lava").unwrap();
+        assert_eq!(p.head_alloc, HeadAlloc::Flat);
+        assert_eq!(p.layer_alloc, LayerAlloc::Entropy);
+        assert_eq!(p.group_reduce, GroupReduce::Max);
+        assert!(p.dynamic_layer());
+    }
+
+    #[test]
+    fn table1_budget_combinations() {
+        // Table 1: SnapKV fixed/fixed, CAKE fixed/dynamic, AdaKV dyn/fixed,
+        // LAVa dyn/dyn.
+        let snap = Policy::by_name("snapkv").unwrap();
+        assert_eq!((snap.head_alloc, snap.dynamic_layer()), (HeadAlloc::Fixed, false));
+        let cake = Policy::by_name("cake").unwrap();
+        assert_eq!((cake.head_alloc, cake.dynamic_layer()), (HeadAlloc::Fixed, true));
+        let ada = Policy::by_name("ada-snapkv").unwrap();
+        assert_eq!((ada.head_alloc, ada.dynamic_layer()), (HeadAlloc::Flat, false));
+        let lava = Policy::by_name("lava").unwrap();
+        assert_eq!((lava.head_alloc, lava.dynamic_layer()), (HeadAlloc::Flat, true));
+    }
+
+    #[test]
+    fn adakv_alias() {
+        assert_eq!(Policy::by_name("adakv"), Policy::by_name("ada-snapkv"));
+    }
+}

@@ -1,0 +1,321 @@
+//! Token-scoring functions: from a layer's observation statistics to
+//! kv-head-level eviction scores [Hk, length].
+//!
+//! Pipeline (matches the fused L1 `lava_score` kernel exactly for LAVa):
+//!   per-q-head base score -> maxpool(pool_kernel) -> GQA group reduce.
+//!
+//! All scores are computed over valid positions [0, length); positions in
+//! the protected recent window never reach the selector anyway, but their
+//! scores are still defined (the paper computes s only for i < N - w; we
+//! compute them everywhere and let the selector enforce the window).
+
+use super::{GroupReduce, LayerObs, ScoreKind};
+
+/// Same-padding max pool along a row.
+pub fn maxpool_row(row: &mut [f32], kernel: usize) {
+    if kernel <= 1 || row.is_empty() {
+        return;
+    }
+    let half = kernel / 2;
+    let n = row.len();
+    let src = row.to_vec();
+    for i in 0..n {
+        let lo = i.saturating_sub(half);
+        let hi = (i + half + 1).min(n);
+        let mut m = f32::NEG_INFINITY;
+        for &x in &src[lo..hi] {
+            m = m.max(x);
+        }
+        row[i] = m;
+    }
+}
+
+/// Per-q-head base scores [H][length] for a score kind.
+fn base_scores(kind: ScoreKind, obs: &LayerObs, group: usize) -> Vec<Vec<f32>> {
+    let h = obs.n_heads();
+    let w = obs.window();
+    let n = obs.bucket();
+    let len = obs.length;
+    let win = obs.win_attn.as_f32().expect("win_attn");
+    let acc = obs.acc_attn.as_f32().expect("acc_attn");
+    let vnorm = obs.vnorm.as_f32().expect("vnorm");
+
+    // helpers over the [H, w, N] window panel
+    let at = |hh: usize, r: usize, i: usize| win[(hh * w + r) * n + i];
+    let mean_window = |hh: usize, i: usize| -> f32 {
+        let mut s = 0.0;
+        for r in 0..w {
+            s += at(hh, r, i);
+        }
+        s / w as f32
+    };
+
+    let mut out = vec![vec![0.0f32; len]; h];
+    match kind {
+        ScoreKind::SnapKv => {
+            for hh in 0..h {
+                for i in 0..len {
+                    out[hh][i] = mean_window(hh, i);
+                }
+            }
+        }
+        ScoreKind::H2o => {
+            for hh in 0..h {
+                for i in 0..len {
+                    out[hh][i] = acc[hh * n + i];
+                }
+            }
+        }
+        ScoreKind::Tova => {
+            // last window row = the current (N-th) query's attention
+            for hh in 0..h {
+                for i in 0..len {
+                    out[hh][i] = at(hh, w - 1, i);
+                }
+            }
+        }
+        ScoreKind::Cake { gamma } => {
+            for hh in 0..h {
+                for i in 0..len {
+                    let m = mean_window(hh, i);
+                    let mut var = 0.0;
+                    for r in 0..w {
+                        let d = at(hh, r, i) - m;
+                        var += d * d;
+                    }
+                    out[hh][i] = m + gamma * var / w as f32;
+                }
+            }
+        }
+        ScoreKind::Vatp => {
+            for hh in 0..h {
+                let kv = hh / group;
+                for i in 0..len {
+                    out[hh][i] = mean_window(hh, i) * vnorm[kv * n + i];
+                }
+            }
+        }
+        ScoreKind::Lava => {
+            // vbar per kv head = max valid value norm (Theorem 1)
+            let hk = obs.n_kv_heads();
+            let mut vbar = vec![0.0f32; hk];
+            for kv in 0..hk {
+                for i in 0..len {
+                    vbar[kv] = vbar[kv].max(vnorm[kv * n + i]);
+                }
+            }
+            for hh in 0..h {
+                let kv = hh / group;
+                for i in 0..len {
+                    out[hh][i] = mean_window(hh, i) * vbar[kv];
+                }
+            }
+        }
+        ScoreKind::Streaming { sinks } => {
+            // deterministic recency score: sinks get +inf, otherwise the
+            // position itself (later = larger). Selector's top-k then keeps
+            // sinks + the most recent tokens.
+            for hh in 0..h {
+                for (i, o) in out[hh].iter_mut().enumerate() {
+                    *o = if i < sinks { f32::MAX } else { i as f32 };
+                }
+            }
+        }
+    }
+    out
+}
+
+/// Full scoring pipeline -> [Hk][length] kv-head scores.
+pub fn kv_head_scores(
+    kind: ScoreKind,
+    reduce: GroupReduce,
+    obs: &LayerObs,
+    pool_kernel: usize,
+) -> Vec<Vec<f32>> {
+    let h = obs.n_heads();
+    let hk = obs.n_kv_heads();
+    let group = h / hk;
+    let len = obs.length;
+    let mut per_head = base_scores(kind, obs, group);
+    // pooling smooths per-q-head scores (paper App. D; skipped for the
+    // position-based streaming score where it would be meaningless)
+    if !matches!(kind, ScoreKind::Streaming { .. }) {
+        for row in per_head.iter_mut() {
+            maxpool_row(row, pool_kernel);
+        }
+    }
+    let mut out = vec![vec![0.0f32; len]; hk];
+    for kv in 0..hk {
+        for i in 0..len {
+            let mut agg: f32 = match reduce {
+                GroupReduce::Mean => 0.0,
+                GroupReduce::Max => f32::NEG_INFINITY,
+            };
+            for g in 0..group {
+                let v = per_head[kv * group + g][i];
+                agg = match reduce {
+                    GroupReduce::Mean => agg + v,
+                    GroupReduce::Max => agg.max(v),
+                };
+            }
+            out[kv][i] = match reduce {
+                GroupReduce::Mean => agg / group as f32,
+                GroupReduce::Max => agg,
+            };
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+pub(crate) mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+    use crate::util::rng::Rng;
+
+    /// Build a synthetic LayerObs with a known peaked position.
+    pub fn synth_obs(h: usize, hk: usize, w: usize, n: usize, len: usize, peak: usize,
+                     seed: u64) -> LayerObs {
+        let mut rng = Rng::new(seed);
+        let mut win = vec![0.0f32; h * w * n];
+        for hh in 0..h {
+            for r in 0..w {
+                // near-uniform over valid prefix + a spike at `peak`
+                let row_len = len;
+                let base = 1.0 / row_len as f32;
+                for i in 0..row_len {
+                    win[(hh * w + r) * n + i] = base * (0.5 + rng.f32());
+                }
+                win[(hh * w + r) * n + peak] += 0.5;
+                // renormalize
+                let s: f32 = win[(hh * w + r) * n..(hh * w + r) * n + row_len].iter().sum();
+                for i in 0..row_len {
+                    win[(hh * w + r) * n + i] /= s;
+                }
+            }
+        }
+        let mut acc = vec![0.0f32; h * n];
+        for hh in 0..h {
+            for i in 0..len {
+                acc[hh * n + i] = rng.f32();
+            }
+            acc[hh * n + peak] += 2.0;
+        }
+        let mut vn = vec![0.0f32; hk * n];
+        for kv in 0..hk {
+            for i in 0..len {
+                vn[kv * n + i] = 0.5 + rng.f32();
+            }
+        }
+        LayerObs {
+            win_attn: Tensor::f32(win, &[h, w, n]),
+            acc_attn: Tensor::f32(acc, &[h, n]),
+            vnorm: Tensor::f32(vn, &[hk, n]),
+            length: len,
+        }
+    }
+
+    #[test]
+    fn maxpool_basics() {
+        let mut r = vec![0.0, 1.0, 0.0, 0.0, 5.0, 0.0];
+        maxpool_row(&mut r, 3);
+        assert_eq!(r, vec![1.0, 1.0, 1.0, 5.0, 5.0, 5.0]);
+        let mut r2 = vec![3.0, 1.0];
+        maxpool_row(&mut r2, 1);
+        assert_eq!(r2, vec![3.0, 1.0]); // kernel 1 = identity
+    }
+
+    #[test]
+    fn all_kinds_rank_the_peak_high() {
+        let peak = 17;
+        let obs = synth_obs(4, 2, 8, 64, 50, peak, 0);
+        for kind in [
+            ScoreKind::SnapKv,
+            ScoreKind::H2o,
+            ScoreKind::Tova,
+            ScoreKind::Cake { gamma: 5.0 },
+            ScoreKind::Vatp,
+            ScoreKind::Lava,
+        ] {
+            let s = kv_head_scores(kind, GroupReduce::Mean, &obs, 1);
+            for kv in 0..2 {
+                let argmax = s[kv]
+                    .iter()
+                    .enumerate()
+                    .max_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+                    .unwrap()
+                    .0;
+                assert_eq!(argmax, peak, "{kind:?} head {kv}");
+            }
+        }
+    }
+
+    #[test]
+    fn lava_scales_with_value_norm() {
+        let mut obs = synth_obs(4, 2, 8, 64, 50, 10, 1);
+        let s1 = kv_head_scores(ScoreKind::Lava, GroupReduce::Max, &obs, 7);
+        let vn = obs.vnorm.as_f32_mut().unwrap();
+        for x in vn.iter_mut() {
+            *x *= 3.0;
+        }
+        let s2 = kv_head_scores(ScoreKind::Lava, GroupReduce::Max, &obs, 7);
+        for kv in 0..2 {
+            for i in 0..50 {
+                assert!((s2[kv][i] - 3.0 * s1[kv][i]).abs() < 1e-5);
+            }
+        }
+    }
+
+    #[test]
+    fn group_max_dominates_mean() {
+        let obs = synth_obs(4, 2, 8, 64, 40, 5, 2);
+        let smax = kv_head_scores(ScoreKind::SnapKv, GroupReduce::Max, &obs, 7);
+        let smean = kv_head_scores(ScoreKind::SnapKv, GroupReduce::Mean, &obs, 7);
+        for kv in 0..2 {
+            for i in 0..40 {
+                assert!(smax[kv][i] >= smean[kv][i] - 1e-7);
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_scores_are_positional() {
+        let obs = synth_obs(4, 2, 8, 64, 40, 5, 3);
+        let s = kv_head_scores(ScoreKind::Streaming { sinks: 4 }, GroupReduce::Mean,
+                               &obs, 7);
+        // sinks are pinned at +big (mean-reduce over the group may take
+        // f32::MAX to +inf; any value >= f32::MAX means "always keep")
+        assert!(s[0][0] >= f32::MAX);
+        assert!(s[0][3] >= f32::MAX);
+        assert!(s[0][4] < s[0][39]);
+    }
+
+    #[test]
+    fn tova_is_last_row() {
+        let obs = synth_obs(2, 2, 4, 32, 20, 7, 4);
+        let s = kv_head_scores(ScoreKind::Tova, GroupReduce::Mean, &obs, 1);
+        let win = obs.win_attn.as_f32().unwrap();
+        let w = 4usize;
+        let n = 32usize;
+        // head 0 == kv head 0 (group size 1)
+        assert!((s[0][7] - win[(0 * w + 3) * n + 7]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn vatp_uses_per_token_norm_lava_uses_max() {
+        let mut obs = synth_obs(2, 2, 4, 32, 20, 7, 5);
+        // make vnorm strongly non-uniform: token 3 has huge value norm
+        {
+            let vn = obs.vnorm.as_f32_mut().unwrap();
+            for kv in 0..2 {
+                vn[kv * 32 + 3] = 100.0;
+            }
+        }
+        let vatp = kv_head_scores(ScoreKind::Vatp, GroupReduce::Mean, &obs, 1);
+        let lava = kv_head_scores(ScoreKind::Lava, GroupReduce::Mean, &obs, 1);
+        // VATP boosts token 3 by its own norm; LAVa scales all tokens equally
+        let ratio_vatp = vatp[0][3] / vatp[0][7];
+        let ratio_lava = lava[0][3] / lava[0][7];
+        assert!(ratio_vatp > ratio_lava * 10.0);
+    }
+}

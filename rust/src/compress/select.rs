@@ -1,0 +1,373 @@
+//! Top-B selection: from kv-head scores to per-head keep lists.
+//!
+//! Implements Algorithm 1 (LayerEvict): flatten scores across heads and keep
+//! the layer-wide top-B_l (dynamic head budgets fall out of the ranking), or
+//! the fixed-budget variant (head-local top-(B_l/H_k)). The most recent
+//! `window` tokens of every head are always retained (the final constraint
+//! of Eq. 1) and are stored with score = +inf so that Algorithm 2's
+//! recompression (which reuses stored scores with a shrunken budget) keeps
+//! them too.
+
+use std::cmp::Ordering;
+use std::collections::BinaryHeap;
+
+use super::HeadAlloc;
+
+/// Keep-decision for one layer: sorted original indices + aligned scores.
+#[derive(Debug, Clone, PartialEq)]
+pub struct KeepSet {
+    pub keep: Vec<Vec<usize>>,
+    pub scores: Vec<Vec<f32>>,
+}
+
+impl KeepSet {
+    pub fn total(&self) -> usize {
+        self.keep.iter().map(|k| k.len()).sum()
+    }
+}
+
+#[derive(PartialEq)]
+struct HeapItem(f32, usize, usize); // (score, head, idx) min-heap by score
+
+impl Eq for HeapItem {}
+
+impl PartialOrd for HeapItem {
+    fn partial_cmp(&self, other: &Self) -> Option<Ordering> {
+        Some(self.cmp(other))
+    }
+}
+
+impl Ord for HeapItem {
+    fn cmp(&self, other: &Self) -> Ordering {
+        // BinaryHeap is a max-heap; reverse for min-heap-of-top-k semantics,
+        // breaking score ties by (head, idx) for determinism.
+        other
+            .0
+            .partial_cmp(&self.0)
+            .unwrap_or(Ordering::Equal)
+            .then_with(|| other.1.cmp(&self.1))
+            .then_with(|| other.2.cmp(&self.2))
+    }
+}
+
+/// Top-k (index, score) pairs from an iterator of candidates via a bounded
+/// min-heap: O(C log k) for C candidates.
+fn top_k<I: Iterator<Item = (f32, usize, usize)>>(cands: I, k: usize) -> Vec<(f32, usize, usize)> {
+    if k == 0 {
+        return vec![];
+    }
+    let mut heap: BinaryHeap<HeapItem> = BinaryHeap::with_capacity(k + 1);
+    for (s, h, i) in cands {
+        if heap.len() < k {
+            heap.push(HeapItem(s, h, i));
+        } else if let Some(top) = heap.peek() {
+            // top is the *smallest* kept score
+            if s > top.0 || (s == top.0 && (h, i) < (top.1, top.2)) {
+                heap.pop();
+                heap.push(HeapItem(s, h, i));
+            }
+        }
+    }
+    heap.into_iter().map(|HeapItem(s, h, i)| (s, h, i)).collect()
+}
+
+/// Select entries to keep at prefill time.
+///
+/// * `scores[h]` — kv-head scores over [0, length).
+/// * `budget` — total entries for this layer across all kv heads, including
+///   the protected window.
+/// * `window` — number of most recent tokens always kept per head.
+pub fn select_prefill(
+    scores: &[Vec<f32>],
+    length: usize,
+    budget: usize,
+    window: usize,
+    mode: HeadAlloc,
+) -> KeepSet {
+    let hk = scores.len();
+    let win_start = length.saturating_sub(window);
+
+    // Budget >= everything: keep all (window entries still pinned with +inf).
+    if budget >= hk * length {
+        let keep: Vec<Vec<usize>> = (0..hk).map(|_| (0..length).collect()).collect();
+        let sc = (0..hk)
+            .map(|h| {
+                (0..length)
+                    .map(|i| if i >= win_start { f32::MAX } else { scores[h][i] })
+                    .collect()
+            })
+            .collect();
+        return KeepSet { keep, scores: sc };
+    }
+
+    let protected_per_head = length - win_start; // == min(window, length)
+    let protected_total = hk * protected_per_head;
+
+    if budget <= protected_total {
+        // degenerate: budget smaller than the window — keep only the most
+        // recent floor(budget / hk) per head.
+        let per = (budget / hk).max(1).min(length);
+        let keep: Vec<Vec<usize>> = (0..hk).map(|_| (length - per..length).collect()).collect();
+        let sc = (0..hk).map(|_| vec![f32::MAX; per]).collect();
+        return KeepSet { keep, scores: sc };
+    }
+
+    let extra = budget - protected_total; // entries chosen by score
+
+    let mut keep: Vec<Vec<usize>> = vec![Vec::new(); hk];
+    let mut kept_scores: Vec<Vec<f32>> = vec![Vec::new(); hk];
+
+    let mut chosen: Vec<(f32, usize, usize)> = match mode {
+        HeadAlloc::Flat => top_k(
+            (0..hk).flat_map(|h| (0..win_start).map(move |i| (h, i)))
+                .map(|(h, i)| (scores[h][i], h, i)),
+            extra,
+        ),
+        HeadAlloc::Fixed => {
+            let per_head = extra / hk;
+            let mut all = Vec::new();
+            for h in 0..hk {
+                all.extend(top_k(
+                    (0..win_start).map(|i| (scores[h][i], h, i)),
+                    per_head,
+                ));
+            }
+            all
+        }
+    };
+    chosen.sort_by(|a, b| (a.1, a.2).cmp(&(b.1, b.2)));
+
+    for (s, h, i) in chosen {
+        keep[h].push(i);
+        kept_scores[h].push(s);
+    }
+    for h in 0..hk {
+        for i in win_start..length {
+            keep[h].push(i);
+            kept_scores[h].push(f32::MAX);
+        }
+    }
+    KeepSet { keep, scores: kept_scores }
+}
+
+/// Algorithm 2 recompression: given the *stored* per-entry scores of a
+/// compacted cache, pick the new top-`budget` (window entries carry +inf so
+/// they always survive). Returns per-head keep lists of compact-slot
+/// indices, sorted.
+pub fn select_recompress(stored: &[&[f32]], budget: usize, mode: HeadAlloc) -> Vec<Vec<usize>> {
+    let hk = stored.len();
+    let total: usize = stored.iter().map(|s| s.len()).sum();
+    if budget >= total {
+        return stored.iter().map(|s| (0..s.len()).collect()).collect();
+    }
+    let mut chosen: Vec<(f32, usize, usize)> = match mode {
+        HeadAlloc::Flat => top_k(
+            (0..hk).flat_map(|h| stored[h].iter().copied().enumerate().map(move |(i, s)| (s, h, i))),
+            budget,
+        ),
+        HeadAlloc::Fixed => {
+            let per_head = budget / hk;
+            let mut all = Vec::new();
+            for h in 0..hk {
+                all.extend(top_k(
+                    stored[h].iter().copied().enumerate().map(|(i, s)| (s, h, i)),
+                    per_head,
+                ));
+            }
+            all
+        }
+    };
+    chosen.sort_by(|a, b| (a.1, a.2).cmp(&(b.1, b.2)));
+    let mut keep: Vec<Vec<usize>> = vec![Vec::new(); hk];
+    for (_, h, i) in chosen {
+        keep[h].push(i);
+    }
+    keep
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+
+    fn flat(scores: Vec<Vec<f32>>, len: usize, budget: usize, win: usize) -> KeepSet {
+        select_prefill(&scores, len, budget, win, HeadAlloc::Flat)
+    }
+
+    #[test]
+    fn window_always_kept() {
+        let scores = vec![vec![0.0; 20], vec![0.0; 20]];
+        let ks = flat(scores, 20, 12, 4);
+        for h in 0..2 {
+            for i in 16..20 {
+                assert!(ks.keep[h].contains(&i), "head {h} missing window pos {i}");
+            }
+        }
+        assert_eq!(ks.total(), 12);
+    }
+
+    #[test]
+    fn flat_mode_is_dynamic_per_head() {
+        // head 0 has all the mass outside the window -> gets all extra slots
+        let mut s0 = vec![0.0f32; 32];
+        for i in 0..16 {
+            s0[i] = 10.0 + i as f32;
+        }
+        let s1 = vec![0.001f32; 32];
+        let ks = flat(vec![s0, s1], 32, 2 * 4 + 6, 4);
+        assert_eq!(ks.keep[0].len() - 4, 6, "head 0 should win all extra");
+        assert_eq!(ks.keep[1].len(), 4, "head 1 only keeps its window");
+    }
+
+    #[test]
+    fn fixed_mode_splits_evenly() {
+        let s0: Vec<f32> = (0..32).map(|i| i as f32).collect();
+        let s1 = s0.clone();
+        let ks = select_prefill(&[s0, s1].to_vec(), 32, 2 * 4 + 8, 4, HeadAlloc::Fixed);
+        assert_eq!(ks.keep[0].len(), 8);
+        assert_eq!(ks.keep[1].len(), 8);
+        // top non-window scores are 24..27 (window is 28..31)
+        assert_eq!(ks.keep[0], vec![24, 25, 26, 27, 28, 29, 30, 31]);
+    }
+
+    #[test]
+    fn keeps_highest_scores() {
+        let mut s = vec![0.0f32; 64];
+        s[3] = 9.0;
+        s[40] = 8.0;
+        s[10] = 7.0;
+        let ks = flat(vec![s], 64, 8 + 3, 8);
+        assert_eq!(ks.keep[0][..3], [3, 10, 40]);
+        // stored scores align with keep order; window pinned at +inf
+        assert_eq!(ks.scores[0][0], 9.0);
+        assert_eq!(ks.scores[0][3], f32::MAX);
+    }
+
+    #[test]
+    fn budget_larger_than_cache_keeps_all() {
+        let ks = flat(vec![vec![1.0; 10], vec![1.0; 10]], 10, 1000, 4);
+        assert_eq!(ks.total(), 20);
+    }
+
+    #[test]
+    fn degenerate_budget_below_window() {
+        let ks = flat(vec![vec![1.0; 32], vec![1.0; 32]], 32, 6, 8);
+        assert_eq!(ks.total(), 6);
+        assert_eq!(ks.keep[0], vec![29, 30, 31]);
+    }
+
+    #[test]
+    fn recompress_respects_pinned_window() {
+        let stored: Vec<Vec<f32>> = vec![
+            vec![0.5, 0.9, f32::MAX, f32::MAX],
+            vec![0.8, 0.1, f32::MAX, f32::MAX],
+        ];
+        let refs: Vec<&[f32]> = stored.iter().map(|v| v.as_slice()).collect();
+        let keep = select_recompress(&refs, 6, HeadAlloc::Flat);
+        // 4 pinned + top-2 of {0.5, 0.9, 0.8, 0.1} = idx1 head0, idx0 head1
+        assert_eq!(keep[0], vec![1, 2, 3]);
+        assert_eq!(keep[1], vec![0, 2, 3]);
+    }
+
+    #[test]
+    fn recompress_noop_when_budget_covers() {
+        let stored = vec![vec![0.1f32, 0.2], vec![0.3f32]];
+        let refs: Vec<&[f32]> = stored.iter().map(|v| v.as_slice()).collect();
+        let keep = select_recompress(&refs, 10, HeadAlloc::Flat);
+        assert_eq!(keep[0], vec![0, 1]);
+        assert_eq!(keep[1], vec![0]);
+    }
+
+    #[test]
+    fn prop_selection_invariants() {
+        prop::check(100, |rng| {
+            let hk = 1 + rng.below(4);
+            let len = 16 + rng.below(100);
+            let win = 1 + rng.below(8.min(len));
+            let budget = hk * win + rng.below(hk * len);
+            let scores: Vec<Vec<f32>> =
+                (0..hk).map(|_| (0..len).map(|_| rng.f32()).collect()).collect();
+            let mode = if rng.below(2) == 0 { HeadAlloc::Flat } else { HeadAlloc::Fixed };
+            let ks = select_prefill(&scores, len, budget, win, mode);
+
+            prop::assert_prop(ks.total() <= budget, "within budget", &(ks.total(), budget))?;
+            for h in 0..hk {
+                prop::assert_prop(
+                    ks.keep[h].windows(2).all(|w| w[0] < w[1]),
+                    "sorted unique",
+                    &ks.keep[h],
+                )?;
+                prop::assert_prop(
+                    ks.keep[h].iter().all(|&i| i < len),
+                    "in range",
+                    &ks.keep[h],
+                )?;
+                prop::assert_prop(
+                    ks.keep[h].len() == ks.scores[h].len(),
+                    "scores aligned",
+                    &h,
+                )?;
+                // window suffix present whenever budget allows
+                if budget >= hk * win {
+                    for i in len - win..len {
+                        prop::assert_prop(
+                            ks.keep[h].contains(&i),
+                            "window kept",
+                            &(h, i, win, budget),
+                        )?;
+                    }
+                }
+            }
+            // Flat mode uses the budget exactly; Fixed mode may leave up to
+            // hk-1 entries on the table (integer division of the extra).
+            let used = ks.total();
+            let cap = budget.min(hk * len);
+            match mode {
+                HeadAlloc::Flat => {
+                    prop::assert_prop(used == cap, "budget fully used", &(used, cap))?
+                }
+                HeadAlloc::Fixed => prop::assert_prop(
+                    used <= cap && cap - used < hk,
+                    "budget used modulo per-head rounding",
+                    &(used, cap, hk),
+                )?,
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_flat_keeps_global_top() {
+        prop::check(50, |rng| {
+            let len = 32 + rng.below(64);
+            let win = 4;
+            let hk = 2;
+            let extra = 1 + rng.below(16);
+            let scores: Vec<Vec<f32>> =
+                (0..hk).map(|_| (0..len).map(|_| rng.f32()).collect()).collect();
+            let ks = select_prefill(&scores, len, hk * win + extra, win, HeadAlloc::Flat);
+            // min kept non-window score >= max dropped score
+            let mut kept_min = f32::MAX;
+            for h in 0..hk {
+                for (j, &i) in ks.keep[h].iter().enumerate() {
+                    if ks.scores[h][j] != f32::MAX {
+                        kept_min = kept_min.min(scores[h][i]);
+                    }
+                }
+            }
+            let mut dropped_max = f32::MIN;
+            for h in 0..hk {
+                for i in 0..len - win {
+                    if !ks.keep[h].contains(&i) {
+                        dropped_max = dropped_max.max(scores[h][i]);
+                    }
+                }
+            }
+            prop::assert_prop(
+                kept_min >= dropped_max || kept_min == f32::MAX,
+                "greedy optimality",
+                &(kept_min, dropped_max),
+            )
+        });
+    }
+}

@@ -1,0 +1,147 @@
+//! Request queue + shape-bucket batching.
+//!
+//! The coordinator executes one sequence per PJRT call (the artifacts are
+//! single-sequence), so "batching" here is the continuous-batching form:
+//! admission + interleaving decisions, plus grouping queued prefills by
+//! shape bucket so executable compilation (one per bucket) is amortized and
+//! cache-warm buckets are preferred.
+
+use std::collections::VecDeque;
+
+use crate::coordinator::engine::GenerateRequest;
+use crate::runtime::Runtime;
+
+#[derive(Debug, Clone)]
+pub struct QueuedRequest {
+    pub id: u64,
+    pub request: GenerateRequest,
+    pub bucket: usize,
+    pub enqueued_at: std::time::Instant,
+}
+
+/// FIFO with bucket-aware dequeue.
+#[derive(Debug, Default)]
+pub struct Batcher {
+    queue: VecDeque<QueuedRequest>,
+    next_id: u64,
+    buckets: Vec<usize>,
+}
+
+impl Batcher {
+    pub fn new(prefill_buckets: &[usize]) -> Batcher {
+        Batcher { queue: VecDeque::new(), next_id: 0, buckets: prefill_buckets.to_vec() }
+    }
+
+    /// Enqueue; returns the assigned request id, or None if the prompt
+    /// exceeds every bucket.
+    pub fn push(&mut self, request: GenerateRequest) -> Option<u64> {
+        let bucket = Runtime::pick_bucket(&self.buckets, request.prompt.len())?;
+        self.next_id += 1;
+        let id = self.next_id;
+        self.queue.push_back(QueuedRequest {
+            id,
+            request,
+            bucket,
+            enqueued_at: std::time::Instant::now(),
+        });
+        Some(id)
+    }
+
+    pub fn len(&self) -> usize {
+        self.queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.queue.is_empty()
+    }
+
+    /// Pop the oldest request.
+    pub fn pop(&mut self) -> Option<QueuedRequest> {
+        self.queue.pop_front()
+    }
+
+    /// Pop the oldest request in `bucket` (compile-warm preference), falling
+    /// back to plain FIFO.
+    pub fn pop_preferring(&mut self, bucket: usize) -> Option<QueuedRequest> {
+        if let Some(idx) = self.queue.iter().position(|q| q.bucket == bucket) {
+            return self.queue.remove(idx);
+        }
+        self.pop()
+    }
+
+    /// Take up to `k` oldest requests sharing one bucket (a prefill batch).
+    pub fn pop_batch(&mut self, k: usize) -> Vec<QueuedRequest> {
+        let Some(first) = self.pop() else { return vec![] };
+        let bucket = first.bucket;
+        let mut out = vec![first];
+        while out.len() < k {
+            match self.queue.iter().position(|q| q.bucket == bucket) {
+                Some(idx) => out.push(self.queue.remove(idx).unwrap()),
+                None => break,
+            }
+        }
+        out
+    }
+
+    /// Oldest queue wait in seconds (for backpressure / SLO decisions).
+    pub fn oldest_wait_secs(&self) -> f64 {
+        self.queue
+            .front()
+            .map(|q| q.enqueued_at.elapsed().as_secs_f64())
+            .unwrap_or(0.0)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(n: usize) -> GenerateRequest {
+        GenerateRequest { prompt: vec![0; n], max_new_tokens: 4 }
+    }
+
+    #[test]
+    fn assigns_buckets() {
+        let mut b = Batcher::new(&[128, 256, 512]);
+        let id = b.push(req(100)).unwrap();
+        assert_eq!(id, 1);
+        assert_eq!(b.queue[0].bucket, 128);
+        assert!(b.push(req(4000)).is_none(), "oversized prompt rejected");
+    }
+
+    #[test]
+    fn fifo_order() {
+        let mut b = Batcher::new(&[128, 256]);
+        b.push(req(10));
+        b.push(req(200));
+        b.push(req(20));
+        assert_eq!(b.pop().unwrap().id, 1);
+        assert_eq!(b.pop().unwrap().id, 2);
+        assert_eq!(b.pop().unwrap().id, 3);
+        assert!(b.pop().is_none());
+    }
+
+    #[test]
+    fn bucket_preference() {
+        let mut b = Batcher::new(&[128, 256]);
+        b.push(req(200)); // bucket 256
+        b.push(req(10));  // bucket 128
+        let got = b.pop_preferring(128).unwrap();
+        assert_eq!(got.id, 2);
+        // falls back to FIFO when no match
+        let got2 = b.pop_preferring(128).unwrap();
+        assert_eq!(got2.id, 1);
+    }
+
+    #[test]
+    fn batch_same_bucket() {
+        let mut b = Batcher::new(&[128, 256]);
+        b.push(req(10));
+        b.push(req(200));
+        b.push(req(30));
+        b.push(req(40));
+        let batch = b.pop_batch(3);
+        assert_eq!(batch.iter().map(|q| q.id).collect::<Vec<_>>(), vec![1, 3, 4]);
+        assert_eq!(b.len(), 1);
+    }
+}

@@ -1,0 +1,108 @@
+//! Serving metrics: the quantities the paper's efficiency evaluation (§5.3,
+//! Fig. 3) reports — decode latency and peak KV memory — plus the usual
+//! serving counters.
+
+use std::time::Instant;
+
+use crate::util::stats;
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub requests_finished: u64,
+    pub tokens_generated: u64,
+    pub prefill_secs: Vec<f64>,
+    /// Per-token decode latencies (seconds).
+    pub decode_secs: Vec<f64>,
+    /// Peak live KV bytes observed (incl. the transient uncompressed layer
+    /// during prefill — the paper's "memory peak").
+    pub peak_kv_bytes: usize,
+    /// Current live KV bytes.
+    pub live_kv_bytes: usize,
+    started: Option<Instant>,
+}
+
+impl Metrics {
+    pub fn new() -> Metrics {
+        Metrics { started: Some(Instant::now()), ..Default::default() }
+    }
+
+    pub fn observe_kv(&mut self, live: usize) {
+        self.live_kv_bytes = live;
+        self.peak_kv_bytes = self.peak_kv_bytes.max(live);
+    }
+
+    /// Record a transient high-water mark (prefill holds one uncompressed
+    /// layer on top of the retained caches).
+    pub fn observe_transient(&mut self, bytes: usize) {
+        self.peak_kv_bytes = self.peak_kv_bytes.max(bytes);
+    }
+
+    pub fn finish_request(&mut self, prefill_secs: f64, decode_secs: f64, tokens: usize) {
+        self.requests_finished += 1;
+        self.tokens_generated += tokens as u64;
+        self.prefill_secs.push(prefill_secs);
+        if tokens > 0 {
+            self.decode_secs.push(decode_secs / tokens as f64);
+        }
+    }
+
+    pub fn mean_decode_ms(&self) -> f64 {
+        stats::mean(&self.decode_secs) * 1e3
+    }
+
+    pub fn p99_decode_ms(&self) -> f64 {
+        stats::percentile(&self.decode_secs, 99.0) * 1e3
+    }
+
+    pub fn mean_prefill_ms(&self) -> f64 {
+        stats::mean(&self.prefill_secs) * 1e3
+    }
+
+    pub fn throughput_tok_per_sec(&self) -> f64 {
+        match self.started {
+            Some(t0) => self.tokens_generated as f64 / t0.elapsed().as_secs_f64().max(1e-9),
+            None => 0.0,
+        }
+    }
+
+    pub fn report(&self) -> String {
+        format!(
+            "requests={} tokens={} prefill_ms(mean)={:.2} decode_ms(mean)={:.3} \
+             decode_ms(p99)={:.3} peak_kv_mb={:.2} throughput_tok_s={:.1}",
+            self.requests_finished,
+            self.tokens_generated,
+            self.mean_prefill_ms(),
+            self.mean_decode_ms(),
+            self.p99_decode_ms(),
+            self.peak_kv_bytes as f64 / 1e6,
+            self.throughput_tok_per_sec(),
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn peak_tracking() {
+        let mut m = Metrics::new();
+        m.observe_kv(100);
+        m.observe_kv(50);
+        m.observe_transient(500);
+        m.observe_kv(80);
+        assert_eq!(m.peak_kv_bytes, 500);
+        assert_eq!(m.live_kv_bytes, 80);
+    }
+
+    #[test]
+    fn request_aggregation() {
+        let mut m = Metrics::new();
+        m.finish_request(0.1, 0.4, 4);
+        m.finish_request(0.3, 0.2, 2);
+        assert_eq!(m.requests_finished, 2);
+        assert_eq!(m.tokens_generated, 6);
+        assert!((m.mean_decode_ms() - 100.0).abs() < 1e-9);
+        assert!((m.mean_prefill_ms() - 200.0).abs() < 1e-9);
+    }
+}

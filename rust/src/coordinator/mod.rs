@@ -1,0 +1,19 @@
+//! L3 coordinator: the serving side of the paper.
+//!
+//! * [`engine`] — layer-wise prefill with cascading compression
+//!   (Algorithm 2), the decode loop, and per-policy budget handling.
+//! * [`session`] — per-request state: token ids, per-layer caches, metrics.
+//! * [`scheduler`] — continuous-batching scheduler: admission control by
+//!   KV-memory budget, prefill/decode interleaving, fairness.
+//! * [`batcher`] — request queue + grouping by shape bucket.
+//! * [`server`] — JSON-lines TCP front-end over the engine.
+//! * [`metrics`] — latency/memory counters (the quantities Fig. 3 plots).
+
+pub mod batcher;
+pub mod engine;
+pub mod metrics;
+pub mod scheduler;
+pub mod server;
+pub mod session;
+
+pub use engine::{Engine, EngineOptions, GenerateRequest, GenerateResult};

@@ -1,0 +1,235 @@
+//! Continuous-batching scheduler.
+//!
+//! Owns the engine + the request queue and interleaves work:
+//!   * admission control — a new prefill is admitted only if projected KV
+//!     memory (existing live bytes + new request's budget + one
+//!     uncompressed layer) fits the configured limit;
+//!   * prefill/decode interleaving — decode-first with a prefill every
+//!     `prefill_every` scheduler ticks (bounds TTFT without starving
+//!     decodes), the standard continuous-batching compromise;
+//!   * round-robin decode across active sessions.
+
+use std::collections::VecDeque;
+
+use anyhow::Result;
+
+use super::batcher::Batcher;
+use super::engine::{Engine, GenerateRequest, GenerateResult};
+use super::session::Session;
+use crate::model::backend::ModelBackend;
+
+#[derive(Debug, Clone)]
+pub struct SchedulerOptions {
+    /// Cap on total live KV bytes across sessions (None = unlimited).
+    pub kv_mem_limit: Option<usize>,
+    /// Max concurrently decoding sessions.
+    pub max_active: usize,
+    /// Attempt one prefill admission every this many ticks.
+    pub prefill_every: usize,
+}
+
+impl Default for SchedulerOptions {
+    fn default() -> Self {
+        SchedulerOptions { kv_mem_limit: None, max_active: 8, prefill_every: 4 }
+    }
+}
+
+pub struct Scheduler<B: ModelBackend> {
+    pub engine: Engine<B>,
+    pub queue: Batcher,
+    pub opts: SchedulerOptions,
+    active: VecDeque<Session>,
+    finished: Vec<(u64, GenerateResult)>,
+    tick: usize,
+    /// request-id remap: batcher id -> session id
+    id_map: Vec<(u64, u64)>,
+}
+
+impl<B: ModelBackend> Scheduler<B> {
+    pub fn new(engine: Engine<B>, opts: SchedulerOptions) -> Scheduler<B> {
+        let queue = Batcher::new(engine.backend.prefill_buckets());
+        Scheduler { engine, queue, opts, active: VecDeque::new(), finished: Vec::new(), tick: 0, id_map: Vec::new() }
+    }
+
+    pub fn submit(&mut self, req: GenerateRequest) -> Option<u64> {
+        self.queue.push(req)
+    }
+
+    pub fn active_count(&self) -> usize {
+        self.active.len()
+    }
+
+    pub fn pending_count(&self) -> usize {
+        self.queue.len()
+    }
+
+    fn live_kv_bytes(&self) -> usize {
+        self.active.iter().map(|s| s.kv_bytes()).sum()
+    }
+
+    /// Projected bytes a request will hold after prefill (its budget) plus
+    /// the transient uncompressed layer during prefill.
+    fn projected_bytes(&self, prompt_len: usize) -> usize {
+        let cfg = self.engine.config();
+        let budget_entries =
+            self.engine.opts.budget_per_head * cfg.n_kv_heads * cfg.n_layers;
+        let retained = budget_entries.min(prompt_len * cfg.n_kv_heads * cfg.n_layers)
+            * cfg.d_head * 2 * 4;
+        let transient = 2 * cfg.n_kv_heads * prompt_len * cfg.d_head * 4;
+        retained + transient
+    }
+
+    fn can_admit(&self, prompt_len: usize) -> bool {
+        if self.active.len() >= self.opts.max_active {
+            return false;
+        }
+        match self.opts.kv_mem_limit {
+            None => true,
+            Some(limit) => self.live_kv_bytes() + self.projected_bytes(prompt_len) <= limit,
+        }
+    }
+
+    /// One scheduler tick: either admit+prefill one request or advance every
+    /// active session by one decode step. Returns true if any work was done.
+    pub fn tick(&mut self) -> Result<bool> {
+        self.tick += 1;
+        let want_prefill = self.active.is_empty()
+            || (self.tick % self.opts.prefill_every == 0 && !self.queue.is_empty());
+
+        if want_prefill {
+            // peek oldest; admit if memory allows
+            if let Some(q) = self.queue.pop() {
+                if self.can_admit(q.request.prompt.len()) {
+                    let mut sess = self.engine.new_session(&q.request);
+                    self.id_map.push((q.id, sess.id));
+                    self.engine.prefill(&mut sess)?;
+                    if sess.is_done() {
+                        self.retire(sess);
+                    } else {
+                        self.active.push_back(sess);
+                    }
+                    return Ok(true);
+                } else {
+                    // no capacity: requeue at the front by re-pushing last
+                    // (simplest backpressure: defer)
+                    let id = q.id;
+                    self.queue.push(q.request);
+                    let _ = id;
+                }
+            }
+        }
+
+        if self.active.is_empty() {
+            return Ok(false);
+        }
+        // round-robin: one decode step per active session
+        let mut still_active = VecDeque::new();
+        while let Some(mut sess) = self.active.pop_front() {
+            self.engine.decode_step(&mut sess)?;
+            if sess.is_done() {
+                self.retire(sess);
+            } else {
+                still_active.push_back(sess);
+            }
+        }
+        self.active = still_active;
+        Ok(true)
+    }
+
+    fn retire(&mut self, sess: Session) {
+        self.engine.metrics.finish_request(
+            sess.prefill_secs,
+            sess.decode_secs,
+            sess.generated.len(),
+        );
+        let result = GenerateResult {
+            tokens: sess.generated.clone(),
+            prefill_secs: sess.prefill_secs,
+            decode_secs: sess.decode_secs,
+            kv_bytes_after_prefill: sess.kv_bytes(),
+            peak_kv_bytes: self.engine.metrics.peak_kv_bytes,
+            budgets: sess.budgets.clone(),
+        };
+        self.finished.push((sess.id, result));
+    }
+
+    /// Drive everything to completion; returns finished (session-id, result)
+    /// pairs in completion order.
+    pub fn run_to_completion(&mut self) -> Result<Vec<(u64, GenerateResult)>> {
+        while !self.queue.is_empty() || !self.active.is_empty() {
+            self.tick()?;
+        }
+        Ok(std::mem::take(&mut self.finished))
+    }
+
+    pub fn take_finished(&mut self) -> Vec<(u64, GenerateResult)> {
+        std::mem::take(&mut self.finished)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Policy;
+    use crate::coordinator::engine::EngineOptions;
+    use crate::model::backend::MockBackend;
+
+    fn sched(limit: Option<usize>) -> Scheduler<MockBackend> {
+        let mock = MockBackend::new(MockBackend::default_config());
+        let engine =
+            Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+        Scheduler::new(engine, SchedulerOptions { kv_mem_limit: limit, ..Default::default() })
+    }
+
+    fn req(n: usize, out: usize) -> GenerateRequest {
+        GenerateRequest { prompt: (0..n).map(|i| (i % 251) as i32).collect(), max_new_tokens: out }
+    }
+
+    #[test]
+    fn runs_all_requests() {
+        let mut s = sched(None);
+        for _ in 0..5 {
+            s.submit(req(100, 4)).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 5);
+        for (_, r) in &done {
+            assert_eq!(r.tokens.len(), 4);
+        }
+        assert_eq!(s.engine.metrics.requests_finished, 5);
+    }
+
+    #[test]
+    fn interleaves_decodes_and_prefills() {
+        let mut s = sched(None);
+        for _ in 0..3 {
+            s.submit(req(100, 12)).unwrap();
+        }
+        // after a few ticks there should be >1 active session (continuous
+        // batching, not sequential draining)
+        let mut max_active = 0;
+        for _ in 0..8 {
+            s.tick().unwrap();
+            max_active = max_active.max(s.active_count());
+        }
+        assert!(max_active >= 2, "expected interleaving, got {max_active}");
+        s.run_to_completion().unwrap();
+    }
+
+    #[test]
+    fn memory_limit_defers_admission() {
+        // limit allows roughly one session's budget
+        let mut s = sched(Some(300_000));
+        for _ in 0..4 {
+            s.submit(req(200, 6)).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4, "deferred requests must still finish");
+    }
+
+    #[test]
+    fn rejects_oversized() {
+        let mut s = sched(None);
+        assert!(s.submit(req(1 << 20, 1)).is_none());
+    }
+}

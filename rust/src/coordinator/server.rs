@@ -1,0 +1,196 @@
+//! JSON-lines TCP front-end.
+//!
+//! Protocol (one JSON object per line):
+//!   request:  {"prompt": [int, ...], "max_new_tokens": int}
+//!             or {"text": "...", "max_new_tokens": int} (byte-level)
+//!   response: {"tokens": [...], "text": "...", "prefill_ms": f,
+//!              "decode_ms": f, "kv_bytes": n}
+//!   control:  {"cmd": "metrics"} | {"cmd": "shutdown"}
+//!
+//! The engine is single-threaded (one CPU core, one PJRT client); the server
+//! accepts connections on the caller's thread and serves requests in order —
+//! concurrency across requests happens in the scheduler, not across sockets.
+
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
+use anyhow::Result;
+
+use super::engine::{Engine, GenerateRequest};
+use crate::model::backend::ModelBackend;
+use crate::util::json::{self, Json};
+
+pub struct Server<B: ModelBackend> {
+    pub engine: Engine<B>,
+}
+
+impl<B: ModelBackend> Server<B> {
+    pub fn new(engine: Engine<B>) -> Server<B> {
+        Server { engine }
+    }
+
+    /// Parse one request line. Exposed for tests.
+    pub fn parse_request(&self, line: &str) -> Result<ParsedLine> {
+        let j = Json::parse(line)?;
+        if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+            return Ok(ParsedLine::Command(cmd.to_string()));
+        }
+        let max_new = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
+        let prompt: Vec<i32> = if let Some(arr) = j.get("prompt").and_then(|v| v.as_arr()) {
+            arr.iter().filter_map(|x| x.as_f64().map(|f| f as i32)).collect()
+        } else if let Some(text) = j.get("text").and_then(|v| v.as_str()) {
+            text.bytes().map(|b| b as i32).collect()
+        } else {
+            anyhow::bail!("request needs 'prompt' or 'text'");
+        };
+        Ok(ParsedLine::Request(GenerateRequest { prompt, max_new_tokens: max_new }))
+    }
+
+    /// Serve one request and render the response line. Exposed for tests.
+    pub fn handle_request(&mut self, req: &GenerateRequest) -> String {
+        match self.engine.generate(req) {
+            Ok(r) => {
+                let text: String = r
+                    .tokens
+                    .iter()
+                    .filter(|&&t| (0..256).contains(&t))
+                    .map(|&t| t as u8 as char)
+                    .collect();
+                json::to_string(&Json::obj(vec![
+                    ("tokens", Json::Arr(r.tokens.iter().map(|&t| Json::num(t as f64)).collect())),
+                    ("text", Json::str(text)),
+                    ("prefill_ms", Json::num(r.prefill_secs * 1e3)),
+                    ("decode_ms", Json::num(r.decode_secs * 1e3)),
+                    ("kv_bytes", Json::num(r.kv_bytes_after_prefill as f64)),
+                ]))
+            }
+            Err(e) => json::to_string(&Json::obj(vec![("error", Json::str(format!("{e:#}")))])),
+        }
+    }
+
+    fn handle_conn(&mut self, stream: TcpStream) -> Result<bool> {
+        let peer = stream.peer_addr().ok();
+        let mut writer = stream.try_clone()?;
+        let reader = BufReader::new(stream);
+        for line in reader.lines() {
+            let line = line?;
+            if line.trim().is_empty() {
+                continue;
+            }
+            let reply = match self.parse_request(&line) {
+                Ok(ParsedLine::Command(cmd)) if cmd == "shutdown" => {
+                    writeln!(writer, "{}", json::to_string(&Json::obj(vec![("ok", Json::Bool(true))])))?;
+                    return Ok(true);
+                }
+                Ok(ParsedLine::Command(cmd)) if cmd == "metrics" => json::to_string(&Json::obj(
+                    vec![("metrics", Json::str(self.engine.metrics.report()))],
+                )),
+                Ok(ParsedLine::Command(cmd)) => {
+                    json::to_string(&Json::obj(vec![("error", Json::str(format!("unknown cmd {cmd}")))]))
+                }
+                Ok(ParsedLine::Request(req)) => self.handle_request(&req),
+                Err(e) => json::to_string(&Json::obj(vec![("error", Json::str(format!("{e:#}")))])),
+            };
+            writeln!(writer, "{reply}")?;
+        }
+        let _ = peer;
+        Ok(false)
+    }
+
+    /// Blocking accept loop; returns after a shutdown command.
+    pub fn serve(&mut self, addr: &str) -> Result<()> {
+        let listener = TcpListener::bind(addr)?;
+        eprintln!("[lava] serving on {addr}");
+        for stream in listener.incoming() {
+            match stream {
+                Ok(s) => {
+                    if self.handle_conn(s)? {
+                        break;
+                    }
+                }
+                Err(e) => eprintln!("[lava] accept error: {e}"),
+            }
+        }
+        Ok(())
+    }
+}
+
+pub enum ParsedLine {
+    Request(GenerateRequest),
+    Command(String),
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Policy;
+    use crate::coordinator::engine::EngineOptions;
+    use crate::model::backend::MockBackend;
+
+    fn server() -> Server<MockBackend> {
+        let mock = MockBackend::new(MockBackend::default_config());
+        Server::new(Engine::new(
+            mock,
+            EngineOptions::new(Policy::by_name("lava").unwrap(), 24),
+        ))
+    }
+
+    #[test]
+    fn parses_prompt_and_text() {
+        let s = server();
+        match s.parse_request(r#"{"prompt": [1,2,3], "max_new_tokens": 5}"#).unwrap() {
+            ParsedLine::Request(r) => {
+                assert_eq!(r.prompt, vec![1, 2, 3]);
+                assert_eq!(r.max_new_tokens, 5);
+            }
+            _ => panic!(),
+        }
+        match s.parse_request(r#"{"text": "AB"}"#).unwrap() {
+            ParsedLine::Request(r) => {
+                assert_eq!(r.prompt, vec![65, 66]);
+                assert_eq!(r.max_new_tokens, 32);
+            }
+            _ => panic!(),
+        }
+        match s.parse_request(r#"{"cmd": "metrics"}"#).unwrap() {
+            ParsedLine::Command(c) => assert_eq!(c, "metrics"),
+            _ => panic!(),
+        }
+        assert!(s.parse_request(r#"{"nope": 1}"#).is_err());
+    }
+
+    #[test]
+    fn end_to_end_over_tcp() {
+        use std::io::{BufRead, BufReader, Write};
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        drop(listener);
+        let addr_s = format!("{addr}");
+        let handle = std::thread::spawn(move || {
+            let mut srv = server();
+            srv.serve(&addr_s).unwrap();
+        });
+        // retry-connect until the server binds
+        let mut conn = None;
+        for _ in 0..100 {
+            if let Ok(c) = std::net::TcpStream::connect(addr) {
+                conn = Some(c);
+                break;
+            }
+            std::thread::sleep(std::time::Duration::from_millis(20));
+        }
+        let mut c = conn.expect("connect");
+        let prompt: Vec<String> = (0..64).map(|i| format!("{}", i % 250)).collect();
+        writeln!(c, "{{\"prompt\": [{}], \"max_new_tokens\": 3}}", prompt.join(","))
+            .unwrap();
+        let mut reader = BufReader::new(c.try_clone().unwrap());
+        let mut line = String::new();
+        reader.read_line(&mut line).unwrap();
+        let j = Json::parse(line.trim()).unwrap();
+        assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        writeln!(c, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut line2 = String::new();
+        reader.read_line(&mut line2).unwrap();
+        handle.join().unwrap();
+    }
+}

@@ -1,0 +1,82 @@
+//! Per-request serving state.
+
+use crate::kvcache::LayerCache;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    Queued,
+    Prefilling,
+    Decoding,
+    Finished,
+}
+
+/// One in-flight request: prompt, per-layer compressed caches, generation.
+pub struct Session {
+    pub id: u64,
+    pub prompt: Vec<i32>,
+    pub max_new_tokens: usize,
+    pub phase: Phase,
+    /// One cache per layer (created during prefill).
+    pub caches: Vec<LayerCache>,
+    /// Per-layer entry budgets decided at prefill (Algorithm 2 output).
+    pub budgets: Vec<usize>,
+    pub generated: Vec<i32>,
+    /// Absolute position of the next token to decode.
+    pub next_pos: usize,
+    /// Timing (seconds, from request arrival).
+    pub queued_at: std::time::Instant,
+    pub prefill_secs: f64,
+    pub decode_secs: f64,
+}
+
+impl Session {
+    pub fn new(id: u64, prompt: Vec<i32>, max_new_tokens: usize) -> Session {
+        Session {
+            id,
+            prompt,
+            max_new_tokens,
+            phase: Phase::Queued,
+            caches: Vec::new(),
+            budgets: Vec::new(),
+            generated: Vec::new(),
+            next_pos: 0,
+            queued_at: std::time::Instant::now(),
+            prefill_secs: 0.0,
+            decode_secs: 0.0,
+        }
+    }
+
+    /// Live KV bytes across all layers.
+    pub fn kv_bytes(&self) -> usize {
+        self.caches.iter().map(|c| c.live_bytes()).sum()
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.caches.iter().map(|c| c.total_entries()).sum()
+    }
+
+    pub fn is_done(&self) -> bool {
+        self.phase == Phase::Finished || self.generated.len() >= self.max_new_tokens
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn lifecycle_flags() {
+        let mut s = Session::new(1, vec![1, 2, 3], 4);
+        assert_eq!(s.phase, Phase::Queued);
+        assert!(!s.is_done());
+        s.generated = vec![0; 4];
+        assert!(s.is_done());
+    }
+
+    #[test]
+    fn kv_accounting_empty() {
+        let s = Session::new(2, vec![1], 1);
+        assert_eq!(s.kv_bytes(), 0);
+        assert_eq!(s.total_entries(), 0);
+    }
+}

@@ -1,0 +1,26 @@
+//! # LAVa — Layer-wise KV Cache Eviction with Dynamic Budget Allocation
+//!
+//! A full serving-stack reproduction of *LAVa* (Shen et al., Findings of
+//! EMNLP 2025): a rust coordinator (request router, dynamic batcher,
+//! layer-wise prefill with cascading compression, decode loop) executing a
+//! GQA transformer that was AOT-compiled from JAX + Pallas to HLO text and
+//! runs through the PJRT C API — python is never on the request path.
+//!
+//! Crate map (see DESIGN.md for the full inventory):
+//! * [`runtime`] — PJRT client, artifact loading, host tensors
+//! * [`model`] — manifest + weights from `artifacts/`
+//! * [`kvcache`] — ragged per-head KV store with compaction
+//! * [`compress`] — LAVa + all baseline eviction policies
+//! * [`coordinator`] — engine, batcher, scheduler, sessions, server
+//! * [`workloads`] — synthetic benchmark suite + scorers
+//! * [`bench`] — measurement harness + table regeneration drivers
+//! * [`util`] — offline substrates (JSON, RNG, stats, CLI, prop-testing)
+
+pub mod bench;
+pub mod compress;
+pub mod coordinator;
+pub mod kvcache;
+pub mod model;
+pub mod runtime;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,110 @@
+//! `lava` — the serving launcher.
+//!
+//! Subcommands:
+//!   serve     --addr 127.0.0.1:7171 --policy lava --budget 32
+//!   generate  --text "..." (or --prompt 1,2,3) --max-new 16
+//!   bench     --policy lava --budget 32 --ctx 256 --per-task 3   (quick suite)
+//!   info      print manifest / artifact / platform details
+//!
+//! All subcommands take --artifacts <dir> (default ./artifacts) and run the
+//! AOT-compiled model through PJRT; python is never invoked.
+
+use anyhow::{bail, Result};
+
+use lava::bench::eval;
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions, GenerateRequest};
+use lava::coordinator::server::Server;
+use lava::model::backend::PjrtBackend;
+use lava::util::cli::Args;
+
+fn usage() -> ! {
+    eprintln!(
+        "usage: lava <serve|generate|bench|info> [--artifacts DIR] [--policy NAME] \
+         [--budget N] [--addr HOST:PORT] [--text STR | --prompt a,b,c] [--max-new N]\n\
+         policies: {}",
+        Policy::all_names().join(", ")
+    );
+    std::process::exit(2);
+}
+
+fn build_engine(args: &Args) -> Result<Engine<PjrtBackend>> {
+    let dir = args.str_or("artifacts", "artifacts");
+    let policy_name = args.str_or("policy", "lava");
+    let Some(policy) = Policy::by_name(&policy_name) else {
+        bail!("unknown policy {policy_name}; known: {}", Policy::all_names().join(", "));
+    };
+    let budget = args.usize_or("budget", 32);
+    let backend = PjrtBackend::load(&dir)?;
+    let mut opts = EngineOptions::new(policy, budget);
+    opts.max_new_tokens = args.usize_or("max-new", 32);
+    Ok(Engine::new(backend, opts))
+}
+
+fn main() -> Result<()> {
+    let args = Args::parse_env();
+    let cmd = args.positional().first().cloned().unwrap_or_default();
+    match cmd.as_str() {
+        "serve" => {
+            let engine = build_engine(&args)?;
+            let addr = args.str_or("addr", "127.0.0.1:7171");
+            Server::new(engine).serve(&addr)?;
+        }
+        "generate" => {
+            let mut engine = build_engine(&args)?;
+            let prompt: Vec<i32> = if let Some(t) = args.get("text") {
+                t.bytes().map(|b| b as i32).collect()
+            } else if let Some(p) = args.get("prompt") {
+                p.split(',').filter_map(|s| s.trim().parse().ok()).collect()
+            } else {
+                bail!("generate needs --text or --prompt");
+            };
+            let max_new = args.usize_or("max-new", 32);
+            let r = engine.generate(&GenerateRequest { prompt, max_new_tokens: max_new })?;
+            println!("tokens: {:?}", r.tokens);
+            let text: String = r
+                .tokens
+                .iter()
+                .filter(|&&t| (0..256).contains(&t))
+                .map(|&t| t as u8 as char)
+                .collect();
+            println!("text:   {text:?}");
+            println!(
+                "prefill {:.1} ms, decode {:.1} ms, kv {:.1} KiB, budgets {:?}",
+                r.prefill_secs * 1e3,
+                r.decode_secs * 1e3,
+                r.kv_bytes_after_prefill as f64 / 1024.0,
+                r.budgets
+            );
+        }
+        "bench" => {
+            let mut engine = build_engine(&args)?;
+            let policy = args.str_or("policy", "lava");
+            let budget = args.usize_or("budget", 32);
+            let ctx = args.usize_or("ctx", 256);
+            let per_task = args.usize_or("per-task", 2);
+            let r = eval::run_suite(&mut engine, &policy, budget, ctx, per_task, 0)?;
+            println!("policy={policy} budget={budget} ctx={ctx}");
+            for (task, score) in &r.per_task {
+                println!("  {task:<20} {score:.3}");
+            }
+            println!(
+                "  extraction={:.3} generation={:.3} overall={:.3}",
+                r.extraction_avg, r.generation_avg, r.overall_avg
+            );
+            println!("{}", engine.metrics.report());
+        }
+        "info" => {
+            let dir = args.str_or("artifacts", "artifacts");
+            let manifest = lava::model::Manifest::load(&dir)?;
+            let backend = PjrtBackend::load(&dir)?;
+            println!("platform:        {}", backend.runtime.platform());
+            println!("model:           {:?}", manifest.model);
+            println!("prefill buckets: {:?}", manifest.buckets.prefill);
+            println!("decode buckets:  {:?}", manifest.buckets.decode);
+            println!("weights:         {} tensors", manifest.weight_shapes.len());
+        }
+        _ => usage(),
+    }
+    Ok(())
+}

@@ -1,0 +1,479 @@
+//! `ModelBackend`: the engine's view of the model.
+//!
+//! Two implementations:
+//! * [`PjrtBackend`] — the real path: executes the AOT-compiled HLO-text
+//!   artifacts through PJRT, with weights resident on the device.
+//! * [`MockBackend`] — a deterministic synthetic model used by unit tests
+//!   and by the large-N latency scaling benches (Fig. 3 beyond the real
+//!   model's bucket range), producing peaked attention at configurable
+//!   positions so eviction policies have structure to react to.
+//!
+//! Token embedding is a row lookup; the engine does it host-side from the
+//! `tok_emb` weights (cheaper than a PJRT call), so `embed_{N}` artifacts
+//! exist only for parity tests.
+
+use anyhow::{anyhow, Result};
+
+use super::{Manifest, ModelConfig, Weights};
+use crate::compress::LayerObs;
+use crate::kvcache::LayerCache;
+use crate::runtime::{Arg, Runtime, Tensor};
+use crate::util::rng::Rng;
+
+/// Output of one layer's prefill pass.
+pub struct PrefillOut {
+    pub x_out: Tensor, // [N, d]
+    pub k: Tensor,     // [Hk, N, dh]
+    pub v: Tensor,     // [Hk, N, dh]
+    pub obs: LayerObs,
+}
+
+/// Output of one layer's decode step.
+pub struct DecodeOut {
+    pub x_out: Tensor,  // [1, d]
+    pub k_new: Vec<f32>, // [Hk*dh]
+    pub v_new: Vec<f32>,
+    /// [H, M+1] attention over cache slots; column M is the new token.
+    pub attn: Tensor,
+}
+
+pub trait ModelBackend {
+    fn config(&self) -> &ModelConfig;
+    fn prefill_buckets(&self) -> &[usize];
+    fn decode_buckets(&self) -> &[usize];
+
+    /// Host-side token embedding: ids -> [n, d] (padded to `bucket` rows).
+    fn embed(&self, ids: &[i32], bucket: usize) -> Result<Tensor>;
+
+    fn layer_prefill(&self, layer: usize, x: &Tensor, length: usize) -> Result<PrefillOut>;
+
+    fn layer_decode(
+        &self,
+        layer: usize,
+        x: &Tensor,
+        cache: &LayerCache,
+        pos: usize,
+    ) -> Result<DecodeOut>;
+
+    fn logits(&self, x: &Tensor) -> Result<Vec<f32>>;
+
+    /// Optional fused LAVa scoring fast path (the L1 Pallas kernel artifact);
+    /// `None` -> the engine computes scores host-side.
+    fn fused_lava_score(
+        &self,
+        _win_attn: &Tensor,
+        _v: &Tensor,
+        _length: usize,
+    ) -> Result<Option<Vec<Vec<f32>>>> {
+        Ok(None)
+    }
+}
+
+// ---------------------------------------------------------------- PJRT
+
+pub struct PjrtBackend {
+    pub runtime: Runtime,
+    cfg: ModelConfig,
+    buckets_prefill: Vec<usize>,
+    buckets_decode: Vec<usize>,
+    weights_host: Weights,
+    // device-resident weights
+    layer_bufs: Vec<Vec<xla::PjRtBuffer>>,
+    ln_f_buf: xla::PjRtBuffer,
+    unembed_buf: xla::PjRtBuffer,
+    /// Use the fused lava_score_{N} artifact when available.
+    pub use_fused_score: bool,
+}
+
+impl PjrtBackend {
+    pub fn load(artifact_dir: &str) -> Result<PjrtBackend> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let weights = Weights::load(&manifest)?;
+        let runtime = Runtime::new(artifact_dir)?;
+        let mut layer_bufs = Vec::with_capacity(manifest.model.n_layers);
+        for lw in &weights.layers {
+            let mut bufs = Vec::with_capacity(lw.len());
+            for t in lw {
+                bufs.push(runtime.upload(t)?);
+            }
+            layer_bufs.push(bufs);
+        }
+        let ln_f_buf = runtime.upload(&weights.ln_f)?;
+        let unembed_buf = runtime.upload(&weights.unembed)?;
+        Ok(PjrtBackend {
+            runtime,
+            cfg: manifest.model.clone(),
+            buckets_prefill: manifest.buckets.prefill.clone(),
+            buckets_decode: manifest.buckets.decode.clone(),
+            weights_host: weights,
+            layer_bufs,
+            ln_f_buf,
+            unembed_buf,
+            use_fused_score: true,
+        })
+    }
+
+    fn layer_args<'a>(&'a self, layer: usize) -> Vec<Arg<'a>> {
+        self.layer_bufs[layer].iter().map(Arg::Device).collect()
+    }
+}
+
+impl ModelBackend for PjrtBackend {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets_prefill
+    }
+
+    fn decode_buckets(&self) -> &[usize] {
+        &self.buckets_decode
+    }
+
+    fn embed(&self, ids: &[i32], bucket: usize) -> Result<Tensor> {
+        let d = self.cfg.d_model;
+        let emb = self.weights_host.tok_emb.as_f32()?;
+        let mut x = vec![0.0f32; bucket * d];
+        for (i, &id) in ids.iter().enumerate() {
+            let id = id as usize;
+            x[i * d..(i + 1) * d].copy_from_slice(&emb[id * d..(id + 1) * d]);
+        }
+        // padding rows embed PAD (keeps parity with the python reference)
+        let pad = self.cfg.pad_id as usize;
+        for i in ids.len()..bucket {
+            x[i * d..(i + 1) * d].copy_from_slice(&emb[pad * d..(pad + 1) * d]);
+        }
+        Ok(Tensor::f32(x, &[bucket, d]))
+    }
+
+    fn layer_prefill(&self, layer: usize, x: &Tensor, length: usize) -> Result<PrefillOut> {
+        let n = x.shape[0];
+        let name = format!("layer_prefill_{n}");
+        let len_t = Tensor::scalar_i32(length as i32);
+        let mut args: Vec<Arg> = vec![Arg::Host(x), Arg::Host(&len_t)];
+        args.extend(self.layer_args(layer));
+        let mut out = self.runtime.execute(&name, &args)?;
+        if out.len() != 6 {
+            return Err(anyhow!("{name}: expected 6 outputs, got {}", out.len()));
+        }
+        let vnorm = out.pop().unwrap();
+        let acc_attn = out.pop().unwrap();
+        let win_attn = out.pop().unwrap();
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let x_out = out.pop().unwrap();
+        Ok(PrefillOut {
+            x_out,
+            k,
+            v,
+            obs: LayerObs { win_attn, acc_attn, vnorm, length },
+        })
+    }
+
+    fn layer_decode(
+        &self,
+        layer: usize,
+        x: &Tensor,
+        cache: &LayerCache,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        let m = cache.capacity;
+        let name = format!("layer_decode_{m}");
+        let (k, v, valid) = cache.decode_tensors();
+        let pos_t = Tensor::scalar_i32(pos as i32);
+        let mut args: Vec<Arg> =
+            vec![Arg::Host(x), Arg::Host(&k), Arg::Host(&v), Arg::Host(&valid), Arg::Host(&pos_t)];
+        args.extend(self.layer_args(layer));
+        let mut out = self.runtime.execute(&name, &args)?;
+        if out.len() != 4 {
+            return Err(anyhow!("{name}: expected 4 outputs, got {}", out.len()));
+        }
+        let attn = out.pop().unwrap();
+        let v_new = out.pop().unwrap().into_f32()?;
+        let k_new = out.pop().unwrap().into_f32()?;
+        let x_out = out.pop().unwrap();
+        Ok(DecodeOut { x_out, k_new, v_new, attn })
+    }
+
+    fn logits(&self, x: &Tensor) -> Result<Vec<f32>> {
+        let out = self.runtime.execute(
+            "logits",
+            &[Arg::Host(x), Arg::Device(&self.ln_f_buf), Arg::Device(&self.unembed_buf)],
+        )?;
+        out.into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("logits: no output"))?
+            .into_f32()
+    }
+
+    fn fused_lava_score(
+        &self,
+        win_attn: &Tensor,
+        v: &Tensor,
+        length: usize,
+    ) -> Result<Option<Vec<Vec<f32>>>> {
+        if !self.use_fused_score {
+            return Ok(None);
+        }
+        let n = win_attn.shape[2];
+        let name = format!("lava_score_{n}");
+        if !self.runtime.has_artifact(&name) {
+            return Ok(None);
+        }
+        self.lava_score_artifact(win_attn, v, length).map(Some)
+    }
+}
+
+impl PjrtBackend {
+    /// Fused LAVa scoring through the L1 Pallas kernel artifact.
+    pub fn lava_score_artifact(
+        &self,
+        win_attn: &Tensor,
+        v: &Tensor,
+        length: usize,
+    ) -> Result<Vec<Vec<f32>>> {
+        let n = win_attn.shape[2];
+        let name = format!("lava_score_{n}");
+        let len_t = Tensor::scalar_i32(length as i32);
+        let out = self
+            .runtime
+            .execute(&name, &[Arg::Host(win_attn), Arg::Host(v), Arg::Host(&len_t)])?;
+        let scores = out
+            .into_iter()
+            .next()
+            .ok_or_else(|| anyhow!("lava_score: no output"))?;
+        let hk = scores.shape[0];
+        let data = scores.into_f32()?;
+        Ok((0..hk).map(|h| data[h * n..h * n + length].to_vec()).collect())
+    }
+}
+
+// ---------------------------------------------------------------- mock
+
+/// Deterministic synthetic model. Attention is peaked at `hot_positions`
+/// (plus a local-recency component), values have per-position norms, and
+/// hidden states are cheap hashes — enough structure for every policy and
+/// scheduler test, at ~zero cost, any context length.
+pub struct MockBackend {
+    cfg: ModelConfig,
+    buckets_prefill: Vec<usize>,
+    buckets_decode: Vec<usize>,
+    pub hot_positions: Vec<usize>,
+    pub seed: u64,
+}
+
+impl MockBackend {
+    pub fn new(cfg: ModelConfig) -> MockBackend {
+        MockBackend {
+            cfg,
+            buckets_prefill: vec![128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 131072, 262144],
+            buckets_decode: vec![128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 131072, 262144],
+            hot_positions: vec![],
+            seed: 0,
+        }
+    }
+
+    /// Default config mirroring the build-time python model.
+    pub fn default_config() -> ModelConfig {
+        ModelConfig {
+            vocab_size: 260,
+            n_layers: 4,
+            n_heads: 8,
+            n_kv_heads: 4,
+            d_model: 128,
+            d_head: 16,
+            d_ff: 256,
+            window: 16,
+            max_seq_len: 131072,
+            bos_id: 256,
+            sep_id: 257,
+            query_id: 258,
+            pad_id: 259,
+        }
+    }
+
+    fn h01(&self, a: u64, b: u64, c: u64) -> f32 {
+        let mut r = Rng::new(self.seed ^ a.wrapping_mul(0x9E37).wrapping_add(b) ^ (c << 32));
+        r.f32()
+    }
+}
+
+impl ModelBackend for MockBackend {
+    fn config(&self) -> &ModelConfig {
+        &self.cfg
+    }
+
+    fn prefill_buckets(&self) -> &[usize] {
+        &self.buckets_prefill
+    }
+
+    fn decode_buckets(&self) -> &[usize] {
+        &self.buckets_decode
+    }
+
+    fn embed(&self, ids: &[i32], bucket: usize) -> Result<Tensor> {
+        let d = self.cfg.d_model;
+        let mut x = vec![0.0f32; bucket * d];
+        for (i, &id) in ids.iter().enumerate() {
+            for j in 0..d {
+                x[i * d + j] = self.h01(id as u64, j as u64, 1) - 0.5;
+            }
+        }
+        Ok(Tensor::f32(x, &[bucket, d]))
+    }
+
+    fn layer_prefill(&self, layer: usize, x: &Tensor, length: usize) -> Result<PrefillOut> {
+        let cfg = &self.cfg;
+        let n = x.shape[0];
+        let (h, hk, w, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head);
+        let l64 = layer as u64;
+
+        let mut win = vec![0.0f32; h * w * n];
+        for hh in 0..h {
+            for r in 0..w {
+                let qpos = length - w + r;
+                let mut sum = 0.0f32;
+                for i in 0..=qpos {
+                    let mut a = 0.02 + self.h01(l64 * 131 + hh as u64, (r * n + i) as u64, 2);
+                    // recency bump + hot positions (head-dependent strength)
+                    if qpos - i < 8 {
+                        a += 1.0;
+                    }
+                    if self.hot_positions.contains(&i) {
+                        a += 6.0 * (1.0 + (hh as f32 * 0.5)); // heads differ -> dynamic budgets matter
+                    }
+                    win[(hh * w + r) * n + i] = a;
+                    sum += a;
+                }
+                for i in 0..=qpos {
+                    win[(hh * w + r) * n + i] /= sum;
+                }
+            }
+        }
+        let mut acc = vec![0.0f32; h * n];
+        for hh in 0..h {
+            for i in 0..length {
+                let base = self.h01(l64 * 37 + hh as u64, i as u64, 3);
+                let hot = if self.hot_positions.contains(&i) { 4.0 } else { 0.0 };
+                acc[hh * n + i] = base + hot + (length - i) as f32 * 0.01;
+            }
+        }
+        let mut vn = vec![0.0f32; hk * n];
+        for kv in 0..hk {
+            for i in 0..length {
+                vn[kv * n + i] = 0.5 + self.h01(l64 * 57 + kv as u64, i as u64, 4);
+            }
+        }
+        let kdata: Vec<f32> = (0..hk * n * dh)
+            .map(|i| self.h01(l64 * 71, i as u64, 5) - 0.5)
+            .collect();
+        let vdata: Vec<f32> = (0..hk * n * dh)
+            .map(|i| self.h01(l64 * 83, i as u64, 6) - 0.5)
+            .collect();
+        Ok(PrefillOut {
+            x_out: x.clone(),
+            k: Tensor::f32(kdata, &[hk, n, dh]),
+            v: Tensor::f32(vdata, &[hk, n, dh]),
+            obs: LayerObs {
+                win_attn: Tensor::f32(win, &[h, w, n]),
+                acc_attn: Tensor::f32(acc, &[h, n]),
+                vnorm: Tensor::f32(vn, &[hk, n]),
+                length,
+            },
+        })
+    }
+
+    fn layer_decode(
+        &self,
+        layer: usize,
+        x: &Tensor,
+        cache: &LayerCache,
+        pos: usize,
+    ) -> Result<DecodeOut> {
+        let cfg = &self.cfg;
+        let (h, hk, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head);
+        let m = cache.capacity;
+        let l64 = layer as u64;
+        let mut attn = vec![0.0f32; h * (m + 1)];
+        for hh in 0..h {
+            let kv = hh / (h / hk);
+            let live = cache.head_len(kv);
+            let mut sum = 0.0f32;
+            for i in 0..live {
+                let p = cache.position(kv, i).max(0) as usize;
+                let mut a = 0.05 + self.h01(l64 + hh as u64, p as u64, 7);
+                if pos.saturating_sub(p) < 8 {
+                    a += 1.0;
+                }
+                if self.hot_positions.contains(&p) {
+                    a += 6.0;
+                }
+                attn[hh * (m + 1) + i] = a;
+                sum += a;
+            }
+            attn[hh * (m + 1) + m] = 1.0; // self
+            sum += 1.0;
+            for i in 0..=m {
+                attn[hh * (m + 1) + i] /= sum;
+            }
+        }
+        let k_new: Vec<f32> =
+            (0..hk * dh).map(|i| self.h01(l64 * 91, (pos * 64 + i) as u64, 8) - 0.5).collect();
+        let v_new: Vec<f32> =
+            (0..hk * dh).map(|i| self.h01(l64 * 93, (pos * 64 + i) as u64, 9) - 0.5).collect();
+        Ok(DecodeOut {
+            x_out: x.clone(),
+            k_new,
+            v_new,
+            attn: Tensor::f32(attn, &[h, m + 1]),
+        })
+    }
+
+    fn logits(&self, _x: &Tensor) -> Result<Vec<f32>> {
+        let mut v = vec![0.0f32; self.cfg.vocab_size];
+        for (i, o) in v.iter_mut().enumerate() {
+            *o = self.h01(999, i as u64, 10);
+        }
+        Ok(v)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mock_prefill_shapes_and_distributions() {
+        let mut b = MockBackend::new(MockBackend::default_config());
+        b.hot_positions = vec![10];
+        let x = b.embed(&[1, 2, 3], 128).unwrap();
+        assert_eq!(x.shape, vec![128, 128]);
+        let out = b.layer_prefill(0, &x, 100).unwrap();
+        assert_eq!(out.k.shape, vec![4, 128, 16]);
+        assert_eq!(out.obs.win_attn.shape, vec![8, 16, 128]);
+        // window rows are distributions
+        let win = out.obs.win_attn.as_f32().unwrap();
+        let s: f32 = win[0..128].iter().sum();
+        assert!((s - 1.0).abs() < 1e-4);
+        // hot position carries extra mass
+        let hot = win[10];
+        let cold = win[30];
+        assert!(hot > cold);
+    }
+
+    #[test]
+    fn mock_decode_attends_to_hot() {
+        let mut b = MockBackend::new(MockBackend::default_config());
+        b.hot_positions = vec![5];
+        let mut cache = crate::kvcache::LayerCache::new(4, 16, 32);
+        for p in 0..10 {
+            cache.append(&vec![0.1; 64], &vec![0.1; 64], p, 0.5);
+        }
+        let x = Tensor::zeros(&[1, 128]);
+        let out = b.layer_decode(0, &x, &cache, 10).unwrap();
+        assert_eq!(out.attn.shape, vec![8, 33]);
+        let attn = out.attn.as_f32().unwrap();
+        assert!(attn[5] > attn[8], "hot position should dominate");
+    }
+}

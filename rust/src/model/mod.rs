@@ -1,0 +1,275 @@
+//! Model configuration + weights, loaded from `artifacts/manifest.json` and
+//! the raw `.bin` blobs emitted by `python/compile/aot.py`. Nothing here is
+//! hard-coded to the build-time python config — swap the artifacts and the
+//! coordinator follows.
+
+pub mod backend;
+
+use std::collections::HashMap;
+use std::fs;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::runtime::Tensor;
+use crate::util::json::Json;
+
+/// Model hyperparameters (mirrors python/compile/config.py::ModelConfig).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelConfig {
+    pub vocab_size: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_model: usize,
+    pub d_head: usize,
+    pub d_ff: usize,
+    pub window: usize,
+    pub max_seq_len: usize,
+    pub bos_id: i32,
+    pub sep_id: i32,
+    pub query_id: i32,
+    pub pad_id: i32,
+}
+
+impl ModelConfig {
+    pub fn group_size(&self) -> usize {
+        self.n_heads / self.n_kv_heads
+    }
+
+    /// Bytes per cached token per layer (K + V, f32).
+    pub fn kv_bytes_per_token(&self) -> usize {
+        2 * self.n_kv_heads * self.d_head * 4
+    }
+}
+
+/// Shape-bucket configuration (mirrors ArtifactConfig).
+#[derive(Debug, Clone)]
+pub struct BucketConfig {
+    pub prefill: Vec<usize>,
+    pub decode: Vec<usize>,
+    pub pool_kernel: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct Manifest {
+    pub model: ModelConfig,
+    pub buckets: BucketConfig,
+    pub layer_weight_order: Vec<String>,
+    pub weight_shapes: HashMap<String, Vec<usize>>,
+    pub weight_files: HashMap<String, PathBuf>,
+    pub dir: PathBuf,
+}
+
+fn req_usize(j: &Json, path: &str) -> Result<usize> {
+    j.path(path)
+        .and_then(|v| v.as_usize())
+        .ok_or_else(|| anyhow!("manifest missing {path}"))
+}
+
+impl Manifest {
+    pub fn load(artifact_dir: impl AsRef<Path>) -> Result<Manifest> {
+        let dir = artifact_dir.as_ref().to_path_buf();
+        let path = dir.join("manifest.json");
+        let text = fs::read_to_string(&path)
+            .with_context(|| format!("reading {}", path.display()))?;
+        let j = Json::parse(&text).context("parsing manifest.json")?;
+
+        let model = ModelConfig {
+            vocab_size: req_usize(&j, "model.vocab_size")?,
+            n_layers: req_usize(&j, "model.n_layers")?,
+            n_heads: req_usize(&j, "model.n_heads")?,
+            n_kv_heads: req_usize(&j, "model.n_kv_heads")?,
+            d_model: req_usize(&j, "model.d_model")?,
+            d_head: req_usize(&j, "model.d_head")?,
+            d_ff: req_usize(&j, "model.d_ff")?,
+            window: req_usize(&j, "model.window")?,
+            max_seq_len: req_usize(&j, "model.max_seq_len")?,
+            bos_id: req_usize(&j, "model.bos_id")? as i32,
+            sep_id: req_usize(&j, "model.sep_id")? as i32,
+            query_id: req_usize(&j, "model.query_id")? as i32,
+            pad_id: req_usize(&j, "model.pad_id")? as i32,
+        };
+        if model.n_heads % model.n_kv_heads != 0 {
+            bail!("n_heads must be a multiple of n_kv_heads");
+        }
+
+        let buckets = BucketConfig {
+            prefill: j
+                .path("artifacts.prefill_buckets")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            decode: j
+                .path("artifacts.decode_buckets")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            pool_kernel: req_usize(&j, "artifacts.pool_kernel")?,
+        };
+
+        let layer_weight_order = j
+            .get("layer_weight_order")
+            .and_then(|v| v.as_arr())
+            .map(|a| a.iter().filter_map(|x| x.as_str().map(String::from)).collect())
+            .unwrap_or_default();
+
+        let mut weight_shapes = HashMap::new();
+        let mut weight_files = HashMap::new();
+        for w in j
+            .get("weights")
+            .and_then(|v| v.as_arr())
+            .ok_or_else(|| anyhow!("manifest missing weights"))?
+        {
+            let name = w
+                .get("name")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("weight missing name"))?
+                .to_string();
+            let shape: Vec<usize> = w
+                .get("shape")
+                .and_then(|v| v.as_arr())
+                .ok_or_else(|| anyhow!("weight missing shape"))?
+                .iter()
+                .filter_map(|x| x.as_usize())
+                .collect();
+            let file = w
+                .get("file")
+                .and_then(|v| v.as_str())
+                .ok_or_else(|| anyhow!("weight missing file"))?;
+            weight_shapes.insert(name.clone(), shape);
+            weight_files.insert(name, dir.join(file));
+        }
+
+        Ok(Manifest { model, buckets, layer_weight_order, weight_shapes, weight_files, dir })
+    }
+}
+
+/// All model weights as host tensors, in manifest order.
+#[derive(Debug)]
+pub struct Weights {
+    pub tok_emb: Tensor,
+    pub ln_f: Tensor,
+    pub unembed: Tensor,
+    /// layers[l][w] in `layer_weight_order`.
+    pub layers: Vec<Vec<Tensor>>,
+}
+
+fn read_bin_f32(path: &Path, shape: &[usize]) -> Result<Tensor> {
+    let bytes = fs::read(path).with_context(|| format!("reading {}", path.display()))?;
+    let n: usize = shape.iter().product();
+    if bytes.len() != n * 4 {
+        bail!("{}: expected {} bytes, got {}", path.display(), n * 4, bytes.len());
+    }
+    let mut data = vec![0f32; n];
+    for (i, chunk) in bytes.chunks_exact(4).enumerate() {
+        data[i] = f32::from_le_bytes([chunk[0], chunk[1], chunk[2], chunk[3]]);
+    }
+    Ok(Tensor::f32(data, shape))
+}
+
+impl Weights {
+    pub fn load(manifest: &Manifest) -> Result<Weights> {
+        let get = |name: &str| -> Result<Tensor> {
+            let shape = manifest
+                .weight_shapes
+                .get(name)
+                .ok_or_else(|| anyhow!("weight {name} not in manifest"))?;
+            let file = manifest.weight_files.get(name).unwrap();
+            read_bin_f32(file, shape)
+        };
+        let mut layers = Vec::with_capacity(manifest.model.n_layers);
+        for li in 0..manifest.model.n_layers {
+            let mut lw = Vec::with_capacity(manifest.layer_weight_order.len());
+            for wname in &manifest.layer_weight_order {
+                lw.push(get(&format!("layers.{li}.{wname}"))?);
+            }
+            layers.push(lw);
+        }
+        Ok(Weights {
+            tok_emb: get("tok_emb")?,
+            ln_f: get("ln_f")?,
+            unembed: get("unembed")?,
+            layers,
+        })
+    }
+
+    pub fn total_bytes(&self) -> usize {
+        self.tok_emb.nbytes()
+            + self.ln_f.nbytes()
+            + self.unembed.nbytes()
+            + self.layers.iter().flatten().map(|t| t.nbytes()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn demo_manifest_json() -> String {
+        r#"{
+          "model": {"vocab_size": 260, "n_layers": 2, "d_model": 8,
+                    "n_heads": 4, "n_kv_heads": 2, "d_head": 2, "d_ff": 16,
+                    "rope_base": 10000.0, "window": 4, "max_seq_len": 64,
+                    "bos_id": 256, "sep_id": 257, "query_id": 258,
+                    "pad_id": 259, "group_size": 2},
+          "artifacts": {"prefill_buckets": [16, 32], "decode_buckets": [32],
+                        "pool_kernel": 7},
+          "layer_weight_order": ["ln1", "wq"],
+          "weights": [
+            {"name": "tok_emb", "file": "weights/tok_emb.bin", "shape": [4, 2]},
+            {"name": "ln_f", "file": "weights/ln_f.bin", "shape": [8]},
+            {"name": "unembed", "file": "weights/unembed.bin", "shape": [2, 2]},
+            {"name": "layers.0.ln1", "file": "weights/l0ln1.bin", "shape": [8]},
+            {"name": "layers.0.wq", "file": "weights/l0wq.bin", "shape": [2, 4]},
+            {"name": "layers.1.ln1", "file": "weights/l1ln1.bin", "shape": [8]},
+            {"name": "layers.1.wq", "file": "weights/l1wq.bin", "shape": [2, 4]}
+          ]
+        }"#
+        .to_string()
+    }
+
+    fn write_demo(dir: &Path) {
+        fs::create_dir_all(dir.join("weights")).unwrap();
+        fs::write(dir.join("manifest.json"), demo_manifest_json()).unwrap();
+        let files = [
+            ("weights/tok_emb.bin", 8),
+            ("weights/ln_f.bin", 8),
+            ("weights/unembed.bin", 4),
+            ("weights/l0ln1.bin", 8),
+            ("weights/l0wq.bin", 8),
+            ("weights/l1ln1.bin", 8),
+            ("weights/l1wq.bin", 8),
+        ];
+        for (f, n) in files {
+            let data: Vec<u8> = (0..n).flat_map(|i| (i as f32).to_le_bytes()).collect();
+            fs::write(dir.join(f), data).unwrap();
+        }
+    }
+
+    #[test]
+    fn manifest_and_weights_roundtrip() {
+        let dir = std::env::temp_dir().join(format!("lava_test_{}", std::process::id()));
+        write_demo(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        assert_eq!(m.model.n_layers, 2);
+        assert_eq!(m.model.group_size(), 2);
+        assert_eq!(m.buckets.prefill, vec![16, 32]);
+        let w = Weights::load(&m).unwrap();
+        assert_eq!(w.layers.len(), 2);
+        assert_eq!(w.layers[0].len(), 2);
+        assert_eq!(w.tok_emb.shape, vec![4, 2]);
+        assert_eq!(w.tok_emb.as_f32().unwrap()[3], 3.0);
+        fs::remove_dir_all(&dir).ok();
+    }
+
+    #[test]
+    fn kv_bytes_accounting() {
+        let dir = std::env::temp_dir().join(format!("lava_test2_{}", std::process::id()));
+        write_demo(&dir);
+        let m = Manifest::load(&dir).unwrap();
+        // 2 kv heads * d_head 2 * 2 (K+V) * 4 bytes
+        assert_eq!(m.model.kv_bytes_per_token(), 32);
+        fs::remove_dir_all(&dir).ok();
+    }
+}

@@ -1,0 +1,173 @@
+//! PJRT runtime: loads AOT-compiled HLO-text artifacts and executes them.
+//!
+//! `PjRtClient::cpu()` -> `HloModuleProto::from_text_file` ->
+//! `client.compile` -> `execute` (the /opt/xla-example/load_hlo pattern),
+//! wrapped with:
+//!   * an executable cache keyed by entrypoint name (compile once per
+//!     (entrypoint, shape-bucket)),
+//!   * persistent device buffers for weights (uploaded once, passed by
+//!     reference on every call — python is never on this path),
+//!   * host `Tensor` conversion at the boundary,
+//!   * per-entrypoint call/latency counters for the perf pass.
+
+pub mod tensor;
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::Mutex;
+use std::time::Instant;
+
+use anyhow::{anyhow, Context, Result};
+
+pub use tensor::{Tensor, TensorData};
+
+/// An argument to an entrypoint: either host data (converted per call) or a
+/// persistent device buffer (weights).
+pub enum Arg<'a> {
+    Host(&'a Tensor),
+    Device(&'a xla::PjRtBuffer),
+}
+
+#[derive(Debug, Default, Clone)]
+pub struct CallStats {
+    pub calls: u64,
+    pub total_secs: f64,
+}
+
+pub struct Runtime {
+    client: xla::PjRtClient,
+    artifact_dir: PathBuf,
+    exes: Mutex<HashMap<String, std::sync::Arc<xla::PjRtLoadedExecutable>>>,
+    stats: Mutex<HashMap<String, CallStats>>,
+}
+
+impl Runtime {
+    pub fn new(artifact_dir: impl AsRef<Path>) -> Result<Runtime> {
+        let client = xla::PjRtClient::cpu()?;
+        Ok(Runtime {
+            client,
+            artifact_dir: artifact_dir.as_ref().to_path_buf(),
+            exes: Mutex::new(HashMap::new()),
+            stats: Mutex::new(HashMap::new()),
+        })
+    }
+
+    pub fn artifact_dir(&self) -> &Path {
+        &self.artifact_dir
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Upload host data as a persistent device buffer (used for weights).
+    pub fn upload(&self, t: &Tensor) -> Result<xla::PjRtBuffer> {
+        let buf = match &t.data {
+            TensorData::F32(v) => self.client.buffer_from_host_buffer(v, &t.shape, None)?,
+            TensorData::I32(v) => self.client.buffer_from_host_buffer(v, &t.shape, None)?,
+        };
+        Ok(buf)
+    }
+
+    /// Compile (or fetch from cache) the executable for an entrypoint.
+    pub fn load(&self, name: &str) -> Result<std::sync::Arc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.exes.lock().unwrap().get(name) {
+            return Ok(exe.clone());
+        }
+        let path = self.artifact_dir.join(format!("{name}.hlo.txt"));
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(&path)
+            .with_context(|| format!("loading HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = std::sync::Arc::new(self.client.compile(&comp)?);
+        let dt = t0.elapsed().as_secs_f64();
+        self.record(&format!("compile:{name}"), dt);
+        self.exes.lock().unwrap().insert(name.to_string(), exe.clone());
+        Ok(exe)
+    }
+
+    /// True if the artifact file for `name` exists.
+    pub fn has_artifact(&self, name: &str) -> bool {
+        self.artifact_dir.join(format!("{name}.hlo.txt")).exists()
+    }
+
+    /// Execute an entrypoint. All jax entrypoints are lowered with
+    /// `return_tuple=True`, so the single output is a tuple that we
+    /// decompose into host tensors.
+    pub fn execute(&self, name: &str, args: &[Arg]) -> Result<Vec<Tensor>> {
+        let exe = self.load(name)?;
+        let t0 = Instant::now();
+
+        // Mixed host/device args: upload host tensors, then execute_b.
+        let mut owned: Vec<xla::PjRtBuffer> = Vec::new();
+        let mut idx: Vec<usize> = Vec::with_capacity(args.len()); // usize::MAX = device
+        for a in args {
+            match a {
+                Arg::Host(t) => {
+                    owned.push(self.upload(t)?);
+                    idx.push(owned.len() - 1);
+                }
+                Arg::Device(_) => idx.push(usize::MAX),
+            }
+        }
+        let mut refs: Vec<&xla::PjRtBuffer> = Vec::with_capacity(args.len());
+        for (a, &i) in args.iter().zip(&idx) {
+            match a {
+                Arg::Host(_) => refs.push(&owned[i]),
+                Arg::Device(b) => refs.push(b),
+            }
+        }
+        let result = exe.execute_b(&refs)?;
+        let lit = result
+            .first()
+            .and_then(|d| d.first())
+            .ok_or_else(|| anyhow!("no output from {name}"))?
+            .to_literal_sync()?;
+        let parts = lit.to_tuple()?;
+        let mut out = Vec::with_capacity(parts.len());
+        for p in &parts {
+            out.push(Tensor::from_literal(p)?);
+        }
+        self.record(name, t0.elapsed().as_secs_f64());
+        Ok(out)
+    }
+
+    fn record(&self, name: &str, secs: f64) {
+        let mut stats = self.stats.lock().unwrap();
+        let e = stats.entry(name.to_string()).or_default();
+        e.calls += 1;
+        e.total_secs += secs;
+    }
+
+    pub fn stats_snapshot(&self) -> Vec<(String, CallStats)> {
+        let mut v: Vec<_> = self
+            .stats
+            .lock()
+            .unwrap()
+            .iter()
+            .map(|(k, s)| (k.clone(), s.clone()))
+            .collect();
+        v.sort_by(|a, b| b.1.total_secs.partial_cmp(&a.1.total_secs).unwrap());
+        v
+    }
+
+    /// Pick the smallest bucket >= `n` from a sorted bucket list.
+    pub fn pick_bucket(buckets: &[usize], n: usize) -> Option<usize> {
+        buckets.iter().copied().find(|&b| b >= n)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_selection() {
+        let b = [128, 256, 512, 1024, 2048];
+        assert_eq!(Runtime::pick_bucket(&b, 1), Some(128));
+        assert_eq!(Runtime::pick_bucket(&b, 128), Some(128));
+        assert_eq!(Runtime::pick_bucket(&b, 129), Some(256));
+        assert_eq!(Runtime::pick_bucket(&b, 2048), Some(2048));
+        assert_eq!(Runtime::pick_bucket(&b, 4000), None);
+    }
+}

@@ -1,0 +1,149 @@
+//! Host tensors: the coordinator-side representation of model inputs and
+//! outputs. Row-major f32/i32 with explicit shape; converts to/from the
+//! `xla` crate's `Literal`/`PjRtBuffer` at the runtime boundary.
+
+use anyhow::{bail, Result};
+
+#[derive(Debug, Clone, PartialEq)]
+pub enum TensorData {
+    F32(Vec<f32>),
+    I32(Vec<i32>),
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Tensor {
+    pub shape: Vec<usize>,
+    pub data: TensorData,
+}
+
+impl Tensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::F32(data) }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> Tensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        Tensor { shape: shape.to_vec(), data: TensorData::I32(data) }
+    }
+
+    pub fn zeros(shape: &[usize]) -> Tensor {
+        Tensor::f32(vec![0.0; shape.iter().product()], shape)
+    }
+
+    pub fn scalar_i32(v: i32) -> Tensor {
+        Tensor::i32(vec![v], &[1])
+    }
+
+    pub fn len(&self) -> usize {
+        self.shape.iter().product()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match &self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_f32_mut(&mut self) -> Result<&mut [f32]> {
+        match &mut self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match &self.data {
+            TensorData::I32(v) => Ok(v),
+            _ => bail!("tensor is not i32"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self.data {
+            TensorData::F32(v) => Ok(v),
+            _ => bail!("tensor is not f32"),
+        }
+    }
+
+    /// Row-major strides for the current shape.
+    pub fn strides(&self) -> Vec<usize> {
+        let mut s = vec![1; self.shape.len()];
+        for i in (0..self.shape.len().saturating_sub(1)).rev() {
+            s[i] = s[i + 1] * self.shape[i + 1];
+        }
+        s
+    }
+
+    /// Value at a multi-index (f32 tensors).
+    pub fn at(&self, idx: &[usize]) -> f32 {
+        let strides = self.strides();
+        assert_eq!(idx.len(), self.shape.len());
+        let flat: usize = idx.iter().zip(&strides).map(|(i, s)| i * s).sum();
+        self.as_f32().expect("at() on non-f32")[flat]
+    }
+
+    /// Memory footprint in bytes (host side).
+    pub fn nbytes(&self) -> usize {
+        self.len() * 4
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape.iter().map(|&d| d as i64).collect();
+        let lit = match &self.data {
+            TensorData::F32(v) => xla::Literal::vec1(v),
+            TensorData::I32(v) => xla::Literal::vec1(v),
+        };
+        Ok(lit.reshape(&dims)?)
+    }
+
+    pub fn from_literal(lit: &xla::Literal) -> Result<Tensor> {
+        let shape = lit.array_shape()?;
+        let dims: Vec<usize> = shape.dims().iter().map(|&d| d as usize).collect();
+        let data = match shape.primitive_type() {
+            xla::PrimitiveType::F32 => TensorData::F32(lit.to_vec::<f32>()?),
+            xla::PrimitiveType::S32 => TensorData::I32(lit.to_vec::<i32>()?),
+            t => bail!("unsupported literal type {:?}", t),
+        };
+        let t = Tensor { shape: dims, data };
+        Ok(t)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn strides_and_at() {
+        let t = Tensor::f32((0..24).map(|x| x as f32).collect(), &[2, 3, 4]);
+        assert_eq!(t.strides(), vec![12, 4, 1]);
+        assert_eq!(t.at(&[1, 2, 3]), 23.0);
+        assert_eq!(t.at(&[0, 1, 0]), 4.0);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_bad_shape() {
+        Tensor::f32(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn scalar_helpers() {
+        let s = Tensor::scalar_i32(7);
+        assert_eq!(s.as_i32().unwrap(), &[7]);
+        assert_eq!(s.shape, vec![1]);
+    }
+
+    #[test]
+    fn zeros() {
+        let z = Tensor::zeros(&[4, 8]);
+        assert_eq!(z.len(), 32);
+        assert!(z.as_f32().unwrap().iter().all(|&x| x == 0.0));
+    }
+}

@@ -1,0 +1,122 @@
+//! Tiny flag parser (clap is not in the offline vendor set).
+//!
+//! Supports `--key value`, `--key=value`, boolean `--flag`, and positional
+//! arguments. Typed getters with defaults keep the launcher/bench binaries
+//! terse.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default, Clone)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse_env() -> Args {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn parse<I: IntoIterator<Item = String>>(it: I) -> Args {
+        let mut out = Args::default();
+        let mut it = it.into_iter().peekable();
+        while let Some(a) = it.next() {
+            if let Some(body) = a.strip_prefix("--") {
+                if let Some((k, v)) = body.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(body.to_string(), v);
+                } else {
+                    out.flags.insert(body.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(a);
+            }
+        }
+        out
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f64_or(&self, key: &str, default: f64) -> f64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool(&self, key: &str) -> bool {
+        matches!(self.get(key), Some("true") | Some("1") | Some("yes"))
+    }
+
+    /// Comma-separated list, e.g. `--budgets 128,256,512`.
+    pub fn usize_list_or(&self, key: &str, default: &[usize]) -> Vec<usize> {
+        match self.get(key) {
+            Some(v) => v.split(',').filter_map(|s| s.trim().parse().ok()).collect(),
+            None => default.to_vec(),
+        }
+    }
+
+    pub fn str_list_or(&self, key: &str, default: &[&str]) -> Vec<String> {
+        match self.get(key) {
+            Some(v) => v.split(',').map(|s| s.trim().to_string()).collect(),
+            None => default.iter().map(|s| s.to_string()).collect(),
+        }
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string()))
+    }
+
+    #[test]
+    fn kv_forms() {
+        // note: `--flag value` binds value to flag (so boolean flags must be
+        // last or use `--flag=true`); positionals come before flags, the
+        // `lava <subcommand> --opts` convention.
+        let a = parse("run --a 1 --b=2 --c 3.5 --flag");
+        assert_eq!(a.usize_or("a", 0), 1);
+        assert_eq!(a.usize_or("b", 0), 2);
+        assert!(a.bool("flag"));
+        assert_eq!(a.f64_or("c", 0.0), 3.5);
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("");
+        assert_eq!(a.usize_or("missing", 7), 7);
+        assert_eq!(a.str_or("m", "x"), "x");
+        assert!(!a.bool("m"));
+    }
+
+    #[test]
+    fn lists() {
+        let a = parse("--budgets 128,256,512 --methods lava,snapkv");
+        assert_eq!(a.usize_list_or("budgets", &[]), vec![128, 256, 512]);
+        assert_eq!(a.str_list_or("methods", &[]), vec!["lava", "snapkv"]);
+        assert_eq!(a.usize_list_or("other", &[1]), vec![1]);
+    }
+
+    #[test]
+    fn trailing_bool_flag() {
+        let a = parse("--verbose");
+        assert!(a.bool("verbose"));
+    }
+}

@@ -1,0 +1,12 @@
+//! Self-contained substrates the coordinator depends on.
+//!
+//! The build is fully offline against the `xla` crate's vendored closure, so
+//! everything that would normally be a crates.io dependency (JSON, RNG,
+//! stats, CLI parsing, property testing) is implemented here and unit-tested
+//! like any other module.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod stats;

@@ -1,0 +1,95 @@
+//! Small numeric helpers shared by the bench harness and the compressor
+//! (means, percentiles, entropy, variance).
+
+/// Arithmetic mean; 0 for empty input.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    xs.iter().sum::<f64>() / xs.len() as f64
+}
+
+pub fn variance(xs: &[f64]) -> f64 {
+    if xs.len() < 2 {
+        return 0.0;
+    }
+    let m = mean(xs);
+    xs.iter().map(|x| (x - m) * (x - m)).sum::<f64>() / (xs.len() - 1) as f64
+}
+
+pub fn stddev(xs: &[f64]) -> f64 {
+    variance(xs).sqrt()
+}
+
+/// Percentile by linear interpolation; p in [0, 100].
+pub fn percentile(xs: &[f64], p: f64) -> f64 {
+    if xs.is_empty() {
+        return 0.0;
+    }
+    let mut v = xs.to_vec();
+    v.sort_by(|a, b| a.partial_cmp(b).unwrap());
+    let rank = (p / 100.0) * (v.len() - 1) as f64;
+    let lo = rank.floor() as usize;
+    let hi = rank.ceil() as usize;
+    if lo == hi {
+        v[lo]
+    } else {
+        v[lo] + (rank - lo as f64) * (v[hi] - v[lo])
+    }
+}
+
+/// Shannon entropy (nats) of a non-negative weight vector, normalizing to a
+/// distribution first. Zero weights contribute zero. This is the e_l
+/// numerator in the paper's Eq. 7.
+pub fn entropy(weights: &[f32]) -> f64 {
+    let total: f64 = weights.iter().map(|&w| w.max(0.0) as f64).sum();
+    if total <= 0.0 {
+        return 0.0;
+    }
+    let mut h = 0.0;
+    for &w in weights {
+        let p = w.max(0.0) as f64 / total;
+        if p > 0.0 {
+            h -= p * p.ln();
+        }
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mean_var() {
+        let xs = [1.0, 2.0, 3.0, 4.0];
+        assert!((mean(&xs) - 2.5).abs() < 1e-12);
+        assert!((variance(&xs) - 5.0 / 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn percentiles() {
+        let xs = [10.0, 20.0, 30.0, 40.0, 50.0];
+        assert_eq!(percentile(&xs, 0.0), 10.0);
+        assert_eq!(percentile(&xs, 100.0), 50.0);
+        assert_eq!(percentile(&xs, 50.0), 30.0);
+        assert_eq!(percentile(&xs, 25.0), 20.0);
+    }
+
+    #[test]
+    fn entropy_limits() {
+        // uniform over n -> ln(n); point mass -> 0
+        let u = [1.0f32; 8];
+        assert!((entropy(&u) - (8.0f64).ln()).abs() < 1e-9);
+        let p = [1.0f32, 0.0, 0.0, 0.0];
+        assert!(entropy(&p).abs() < 1e-12);
+    }
+
+    #[test]
+    fn entropy_ignores_negatives_and_zeros() {
+        assert_eq!(entropy(&[]), 0.0);
+        assert_eq!(entropy(&[0.0, 0.0]), 0.0);
+        let h = entropy(&[1.0, 1.0, -5.0]);
+        assert!((h - (2.0f64).ln()).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,52 @@
+//! Needle-In-A-Haystack sweep (paper Table 9): context length x needle
+//! depth grid; each cell averages several seeds.
+
+use super::{needle_at_depth, Instance};
+use crate::util::rng::Rng;
+
+#[derive(Debug, Clone)]
+pub struct NiahCell {
+    pub ctx: usize,
+    pub depth_frac: f64,
+    pub instances: Vec<Instance>,
+}
+
+/// Build the full sweep grid.
+pub fn grid(ctx_lens: &[usize], depths: &[f64], per_cell: usize, seed: u64) -> Vec<NiahCell> {
+    let mut out = Vec::new();
+    for (ci, &ctx) in ctx_lens.iter().enumerate() {
+        for (di, &depth) in depths.iter().enumerate() {
+            let mut rng = Rng::new(seed ^ ((ci as u64) << 32) ^ di as u64);
+            out.push(NiahCell {
+                ctx,
+                depth_frac: depth,
+                instances: (0..per_cell).map(|_| needle_at_depth(&mut rng, ctx, depth, 4)).collect(),
+            });
+        }
+    }
+    out
+}
+
+/// Standard depth fractions used by NIAH plots.
+pub fn standard_depths() -> Vec<f64> {
+    vec![0.0, 0.25, 0.5, 0.75, 1.0]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn grid_shape() {
+        let g = grid(&[128, 256], &standard_depths(), 3, 0);
+        assert_eq!(g.len(), 10);
+        assert!(g.iter().all(|c| c.instances.len() == 3));
+    }
+
+    #[test]
+    fn cells_are_reproducible() {
+        let a = grid(&[128], &[0.5], 2, 42);
+        let b = grid(&[128], &[0.5], 2, 42);
+        assert_eq!(a[0].instances[0].prompt, b[0].instances[0].prompt);
+    }
+}

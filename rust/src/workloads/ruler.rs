@@ -1,0 +1,78 @@
+//! Ruler-proxy tasks (paper Table 11): retrieval difficulty scaled along
+//! two axes the Ruler benchmark isolates — number of needles (multi-key)
+//! and chained lookups (variable tracking / multi-hop).
+
+use super::{fill, Instance, BOS, QUERY, SEP};
+use crate::util::rng::Rng;
+
+/// Multi-hop: k1 -> k2 stored in one needle, k2 -> v in another; query k1,
+/// expect v. Exercises two dependent retrievals (Ruler's variable tracking).
+pub fn multi_hop(rng: &mut Rng, ctx: usize) -> Instance {
+    let k1 = rng.below(256) as i32;
+    let k2 = rng.below(256) as i32;
+    let val = vec![rng.below(256) as i32, rng.below(256) as i32];
+    let mut hop1 = vec![SEP, k1, k2, SEP];
+    let mut hop2 = vec![SEP, k2];
+    hop2.extend(&val);
+    hop2.push(SEP);
+    let n_fill = ctx.saturating_sub(hop1.len() + hop2.len() + 4);
+    let c1 = rng.below(n_fill / 2 + 1);
+    let c2 = n_fill / 2 + rng.below(n_fill / 2 + 1).min(n_fill - n_fill / 2);
+    let mut prompt = vec![BOS];
+    prompt.extend(fill(rng, c1));
+    prompt.append(&mut hop1);
+    prompt.extend(fill(rng, c2 - c1));
+    prompt.append(&mut hop2);
+    prompt.extend(fill(rng, n_fill - c2));
+    prompt.push(QUERY);
+    prompt.push(k1);
+    prompt.push(k2);
+    Instance { prompt, target: val }
+}
+
+/// The Ruler-proxy task set at one context length.
+pub fn suite(rng: &mut Rng, ctx: usize, per_task: usize) -> Vec<(&'static str, Vec<Instance>)> {
+    vec![
+        (
+            "niah-single",
+            (0..per_task).map(|_| super::needle_qa(rng, ctx, 4)).collect(),
+        ),
+        (
+            "niah-multikey",
+            (0..per_task).map(|_| super::multi_needle(rng, ctx, 4, 4)).collect(),
+        ),
+        (
+            "multi-hop",
+            (0..per_task).map(|_| multi_hop(rng, ctx)).collect(),
+        ),
+        (
+            "kv-retrieve",
+            (0..per_task).map(|_| super::kv_retrieve(rng, ctx)).collect(),
+        ),
+    ]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn multi_hop_layout() {
+        let mut rng = Rng::new(0);
+        let inst = multi_hop(&mut rng, 512);
+        assert!(inst.prompt.len() <= 514);
+        assert_eq!(inst.target.len(), 2);
+        // query carries both hops' keys so retrieval is attention-bound, not
+        // reasoning-bound (the model is tiny)
+        let n = inst.prompt.len();
+        assert_eq!(inst.prompt[n - 3], QUERY);
+    }
+
+    #[test]
+    fn suite_contains_four_tasks() {
+        let mut rng = Rng::new(1);
+        let s = suite(&mut rng, 256, 2);
+        assert_eq!(s.len(), 4);
+        assert!(s.iter().all(|(_, v)| v.len() == 2));
+    }
+}

@@ -1,0 +1,176 @@
+//! Cross-module integration tests on the mock backend: policies x engine x
+//! scheduler x workloads compose correctly, with the paper's invariants
+//! (budget conservation, window protection, cascade monotonicity) holding
+//! end to end.
+
+use lava::bench::eval;
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions, GenerateRequest};
+use lava::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lava::model::backend::MockBackend;
+use lava::util::prop;
+use lava::util::rng::Rng;
+use lava::workloads;
+
+fn engine_with(policy: &str, budget: usize, hot: Vec<usize>) -> Engine<MockBackend> {
+    let mut mock = MockBackend::new(MockBackend::default_config());
+    mock.hot_positions = hot;
+    Engine::new(mock, EngineOptions::new(Policy::by_name(policy).unwrap(), budget))
+}
+
+#[test]
+fn every_policy_serves_every_task() {
+    for policy in Policy::all_names() {
+        let mut engine = engine_with(policy, 24, vec![50]);
+        for spec in workloads::longbench_suite() {
+            let mut rng = Rng::new(9);
+            let insts = workloads::generate(spec.name, &mut rng, 160, 1);
+            let score = eval::run_instances(&mut engine, &insts).unwrap();
+            assert!((0.0..=1.0).contains(&score), "{policy}/{}", spec.name);
+        }
+    }
+}
+
+#[test]
+fn budget_conservation_across_policies() {
+    // total kept entries never exceed 𝔹, and dynamic budgets sum to 𝔹
+    for policy in ["snapkv", "ada-snapkv", "pyramidkv", "cake", "lava", "vatp"] {
+        let mut engine = engine_with(policy, 32, vec![]);
+        let prompt: Vec<i32> = (0..300).map(|i| (i % 251) as i32).collect();
+        let (sess, _) = engine.prefill_only(&prompt).unwrap();
+        let total: usize = sess.caches.iter().map(|c| c.total_entries()).sum();
+        let budget_total = 32 * 4 * 4;
+        assert!(total <= budget_total, "{policy}: {total}");
+        assert_eq!(sess.budgets.iter().sum::<usize>(), budget_total, "{policy}");
+        for c in &sess.caches {
+            c.check_invariants().unwrap();
+        }
+    }
+}
+
+#[test]
+fn cascade_recompression_is_monotone() {
+    // After Algorithm 2, no layer may exceed its final budget, and every
+    // head keeps at least the protected window.
+    let mut engine = engine_with("lava", 40, vec![10, 200]);
+    let prompt: Vec<i32> = (0..400).map(|i| (i % 250) as i32).collect();
+    let (sess, _) = engine.prefill_only(&prompt).unwrap();
+    for (l, c) in sess.caches.iter().enumerate() {
+        assert!(
+            c.total_entries() <= sess.budgets[l],
+            "layer {l}: {} > {}",
+            c.total_entries(),
+            sess.budgets[l]
+        );
+        for h in 0..4 {
+            assert!(c.head_len(h) >= 16, "window must survive recompression");
+            // window = positions 384..400 present
+            let positions: Vec<i32> = (0..c.head_len(h)).map(|i| c.position(h, i)).collect();
+            for p in 395..400 {
+                assert!(positions.contains(&p), "recent {p} missing in layer {l}");
+            }
+        }
+    }
+}
+
+#[test]
+fn decode_after_compression_is_stable() {
+    // generate well past the prefill budget; caches stay consistent
+    let mut engine = engine_with("lava", 24, vec![]);
+    let req = GenerateRequest {
+        prompt: (0..200).map(|i| (i % 13) as i32).collect(),
+        max_new_tokens: 40,
+    };
+    let mut sess = engine.new_session(&req);
+    engine.prefill(&mut sess).unwrap();
+    for _ in 0..40 {
+        if sess.is_done() {
+            break;
+        }
+        engine.decode_step(&mut sess).unwrap();
+        for c in &sess.caches {
+            c.check_invariants().unwrap();
+        }
+    }
+    assert_eq!(sess.generated.len(), 40);
+}
+
+#[test]
+fn scheduler_matches_sequential_results() {
+    // continuous batching must not change outputs (same tokens as running
+    // each request alone)
+    let mut rng = Rng::new(5);
+    let instances: Vec<_> = (0..4).map(|_| workloads::needle_qa(&mut rng, 160, 4)).collect();
+
+    // sequential
+    let mut seq_tokens = Vec::new();
+    {
+        let mut engine = engine_with("lava", 24, vec![]);
+        for inst in &instances {
+            let r = engine
+                .generate(&GenerateRequest {
+                    prompt: inst.prompt.clone(),
+                    max_new_tokens: 4,
+                })
+                .unwrap();
+            seq_tokens.push(r.tokens);
+        }
+    }
+
+    // scheduled
+    let engine = engine_with("lava", 24, vec![]);
+    let mut sched = Scheduler::new(engine, SchedulerOptions::default());
+    for inst in &instances {
+        sched
+            .submit(GenerateRequest { prompt: inst.prompt.clone(), max_new_tokens: 4 })
+            .unwrap();
+    }
+    let mut done = sched.run_to_completion().unwrap();
+    done.sort_by_key(|(id, _)| *id);
+    for ((_, r), expect) in done.iter().zip(&seq_tokens) {
+        assert_eq!(&r.tokens, expect, "batching changed results");
+    }
+}
+
+#[test]
+fn dynamic_head_budgets_follow_attention() {
+    // make kv-head 3's group attend overwhelmingly to hot positions; flat
+    // selection should give it more slots than the mean policy would
+    let mut engine = engine_with("ada-snapkv", 24, (40..80).collect());
+    let prompt: Vec<i32> = (0..300).map(|i| (i % 251) as i32).collect();
+    let (sess, _) = engine.prefill_only(&prompt).unwrap();
+    let lens: Vec<usize> = (0..4).map(|h| sess.caches[0].head_len(h)).collect();
+    // mock gives later q-heads stronger hot bumps -> later kv heads win slots
+    assert!(lens[3] >= lens[0], "expected dynamic skew, got {lens:?}");
+}
+
+#[test]
+fn prop_engine_total_entries_bounded() {
+    prop::check(15, |rng| {
+        let budget = 16 + rng.below(48);
+        let n = 100 + rng.below(300);
+        let policy = *rng.choice(&["lava", "cake", "ada-snapkv", "snapkv"]);
+        let mut engine = engine_with(policy, budget, vec![]);
+        let prompt: Vec<i32> = (0..n).map(|_| rng.below(256) as i32).collect();
+        let (sess, _) = engine.prefill_only(&prompt).unwrap();
+        let total: usize = sess.caches.iter().map(|c| c.total_entries()).sum();
+        let cap = (budget * 4 * 4).min(n * 4 * 4);
+        prop::assert_prop(total <= cap, "entries within budget", &(policy, total, cap))
+    });
+}
+
+#[test]
+fn metrics_accumulate_across_requests() {
+    let mut engine = engine_with("lava", 24, vec![]);
+    for _ in 0..3 {
+        engine
+            .generate(&GenerateRequest {
+                prompt: (0..150).map(|i| i % 200).collect(),
+                max_new_tokens: 5,
+            })
+            .unwrap();
+    }
+    assert_eq!(engine.metrics.requests_finished, 3);
+    assert_eq!(engine.metrics.tokens_generated, 15);
+    assert!(engine.metrics.peak_kv_bytes > 0);
+}

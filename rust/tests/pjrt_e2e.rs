@@ -1,0 +1,134 @@
+//! PJRT end-to-end tests against the real AOT artifacts. Skipped (with a
+//! loud note) when `artifacts/manifest.json` is absent — run
+//! `make artifacts` first. These are the tests that prove the three layers
+//! (Pallas kernels -> JAX model -> rust coordinator) compose.
+
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions, GenerateRequest};
+use lava::model::backend::{ModelBackend, PjrtBackend};
+use lava::model::Manifest;
+use lava::util::rng::Rng;
+use lava::workloads;
+
+fn artifacts_dir() -> Option<String> {
+    for dir in ["artifacts", "../artifacts"] {
+        if std::path::Path::new(dir).join("manifest.json").exists() {
+            return Some(dir.to_string());
+        }
+    }
+    eprintln!("SKIP: artifacts/ not built (run `make artifacts`)");
+    None
+}
+
+fn engine(policy: &str, budget: usize) -> Option<Engine<PjrtBackend>> {
+    let dir = artifacts_dir()?;
+    let backend = PjrtBackend::load(&dir).expect("load artifacts");
+    Some(Engine::new(backend, EngineOptions::new(Policy::by_name(policy).unwrap(), budget)))
+}
+
+#[test]
+fn manifest_matches_workload_specials() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = Manifest::load(&dir).unwrap();
+    assert_eq!(m.model.bos_id, workloads::BOS);
+    assert_eq!(m.model.sep_id, workloads::SEP);
+    assert_eq!(m.model.query_id, workloads::QUERY);
+}
+
+#[test]
+fn full_cache_generation_runs() {
+    let Some(mut e) = engine("full", 64) else { return };
+    let mut rng = Rng::new(0);
+    let inst = workloads::needle_qa(&mut rng, 100, 4);
+    let r = e
+        .generate(&GenerateRequest { prompt: inst.prompt.clone(), max_new_tokens: 4 })
+        .unwrap();
+    assert_eq!(r.tokens.len(), 4);
+    assert!(r.tokens.iter().all(|&t| (0..260).contains(&t)));
+}
+
+#[test]
+fn compressed_equals_full_when_budget_covers() {
+    // With a budget >= prompt length, LAVa must keep everything -> outputs
+    // identical to the full cache.
+    let Some(mut e) = engine("full", 999) else { return };
+    let mut rng = Rng::new(1);
+    let inst = workloads::needle_qa(&mut rng, 90, 4);
+    let full = e
+        .generate(&GenerateRequest { prompt: inst.prompt.clone(), max_new_tokens: 4 })
+        .unwrap();
+    let mut e2 = engine("lava", 999).unwrap();
+    let lava = e2
+        .generate(&GenerateRequest { prompt: inst.prompt.clone(), max_new_tokens: 4 })
+        .unwrap();
+    assert_eq!(full.tokens, lava.tokens, "no-eviction must be lossless");
+}
+
+#[test]
+fn all_policies_generate_on_real_model() {
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::load(&dir).unwrap();
+    let mut e = Engine::new(backend, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+    let mut rng = Rng::new(2);
+    let inst = workloads::needle_qa(&mut rng, 120, 4);
+    for policy in ["snapkv", "ada-snapkv", "pyramidkv", "cake", "vatp", "lava", "h2o", "tova", "streaming"] {
+        e.opts.policy = Policy::by_name(policy).unwrap();
+        let r = e
+            .generate(&GenerateRequest { prompt: inst.prompt.clone(), max_new_tokens: 3 })
+            .unwrap();
+        assert_eq!(r.tokens.len(), 3, "{policy}");
+    }
+}
+
+#[test]
+fn fused_lava_score_matches_host_path() {
+    // the L1 Pallas fused-score artifact and the rust host scorer must
+    // select the same keep sets (scores equal within float tolerance)
+    let Some(dir) = artifacts_dir() else { return };
+    let backend = PjrtBackend::load(&dir).unwrap();
+    let cfg = backend.config().clone();
+    let mut rng = Rng::new(3);
+    let inst = workloads::needle_qa(&mut rng, 120, 4);
+    let n = inst.prompt.len();
+    let bucket = lava::runtime::Runtime::pick_bucket(backend.prefill_buckets(), n).unwrap();
+    let x = backend.embed(&inst.prompt, bucket).unwrap();
+    let out = backend.layer_prefill(0, &x, n).unwrap();
+
+    let fused = backend
+        .fused_lava_score(&out.obs.win_attn, &out.v, n)
+        .unwrap()
+        .expect("fused artifact available");
+    let host = lava::compress::score::kv_head_scores(
+        lava::compress::ScoreKind::Lava,
+        lava::compress::GroupReduce::Max,
+        &out.obs,
+        7,
+    );
+    assert_eq!(fused.len(), host.len());
+    for (hf, hh) in fused.iter().zip(&host) {
+        assert_eq!(hf.len(), hh.len());
+        for (a, b) in hf.iter().zip(hh) {
+            assert!((a - b).abs() < 1e-4 * (1.0 + b.abs()), "fused {a} vs host {b}");
+        }
+    }
+    let _ = cfg;
+}
+
+#[test]
+fn decode_positions_progress() {
+    let Some(mut e) = engine("lava", 32) else { return };
+    let mut rng = Rng::new(4);
+    let inst = workloads::kv_retrieve(&mut rng, 150);
+    let req = GenerateRequest { prompt: inst.prompt.clone(), max_new_tokens: 6 };
+    let mut sess = e.new_session(&req);
+    e.prefill(&mut sess).unwrap();
+    let n = inst.prompt.len();
+    for step in 0..5 {
+        e.decode_step(&mut sess).unwrap();
+        assert_eq!(sess.next_pos, n + step + 1);
+    }
+    // decoded entries appended with correct positions
+    let c = &sess.caches[0];
+    let last = c.position(0, c.head_len(0) - 1);
+    assert_eq!(last as usize, n + 4);
+}
