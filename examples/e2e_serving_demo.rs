@@ -40,6 +40,8 @@ fn run<B: ModelBackend>(engine: Engine<B>, args: &Args) -> Result<()> {
             kv_mem_limit: Some(args.usize_or("mem-limit", 8 * 1024 * 1024)),
             max_active: args.usize_or("max-active", 4),
             prefill_every: args.usize_or("prefill-every", 2),
+            max_prefill_batch: args.usize_or("prefill-batch", 4),
+            ..Default::default()
         },
     );
 
@@ -51,20 +53,19 @@ fn run<B: ModelBackend>(engine: Engine<B>, args: &Args) -> Result<()> {
                 prompt: inst.prompt.clone(),
                 max_new_tokens: inst.target.len(),
             })
-            .expect("prompt fits buckets");
+            .unwrap_or_else(|e| panic!("submit refused: {e}"));
         id_map.push((id, name.clone(), inst.clone()));
     }
     let mut finished = sched.run_to_completion()?;
-    // completion order != submit order under continuous batching; session
-    // ids are assigned in admission (= submit) order, so sort to re-pair
+    // completion order != submit order under continuous batching; the id
+    // submit() returned is the id on the result, so sorting re-pairs exactly
     finished.sort_by_key(|(id, _)| *id);
     let wall = t0.elapsed().as_secs_f64();
 
-    // score by completion order: scheduler returns (session-id, result);
-    // session ids are assigned in admission order which here == submit order
     let mut total_score = 0.0;
     let mut per_task: std::collections::BTreeMap<String, (f64, usize)> = Default::default();
-    for ((_, result), (_, name, inst)) in finished.iter().zip(&id_map) {
+    for ((id, result), (want_id, name, inst)) in finished.iter().zip(&id_map) {
+        assert_eq!(id, want_id, "request identity lost in the scheduler");
         let s = inst.score(&result.tokens);
         total_score += s;
         let e = per_task.entry(name.clone()).or_insert((0.0, 0));

@@ -1,0 +1,139 @@
+//! Offline stand-in for the `anyhow` crate: the exact subset the lava crate
+//! uses (`Result`, `Error`, `anyhow!`, `bail!`, `Context`), so the workspace
+//! builds with zero registry dependencies. Error messages eagerly fold the
+//! source chain into one string — `{e}` and `{e:#}` both print the chain,
+//! which matches how the real crate is used here (reporting, not recovery).
+//!
+//! Like the real crate, `Error` deliberately does NOT implement
+//! `std::error::Error`: that is what makes the blanket `From<E>` (the `?`
+//! conversion) coherent.
+
+use std::fmt;
+
+pub struct Error {
+    msg: String,
+}
+
+impl Error {
+    pub fn msg<M: fmt::Display>(message: M) -> Error {
+        Error { msg: message.to_string() }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl fmt::Debug for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.msg)
+    }
+}
+
+impl<E> From<E> for Error
+where
+    E: std::error::Error + Send + Sync + 'static,
+{
+    fn from(e: E) -> Error {
+        let mut msg = e.to_string();
+        let mut src = e.source();
+        while let Some(s) = src {
+            msg.push_str(": ");
+            msg.push_str(&s.to_string());
+            src = s.source();
+        }
+        Error { msg }
+    }
+}
+
+pub type Result<T, E = Error> = std::result::Result<T, E>;
+
+pub trait Context<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T>;
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T>;
+}
+
+impl<T, E> Context<T> for std::result::Result<T, E>
+where
+    E: Into<Error>,
+{
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {}", context, e.into().msg) })
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error { msg: format!("{}: {}", f(), e.into().msg) })
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context<C: fmt::Display>(self, context: C) -> Result<T> {
+        self.ok_or_else(|| Error::msg(context))
+    }
+
+    fn with_context<C: fmt::Display, F: FnOnce() -> C>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+#[macro_export]
+macro_rules! anyhow {
+    ($msg:literal $(,)?) => {
+        $crate::Error::msg(format!($msg))
+    };
+    ($fmt:literal, $($arg:tt)*) => {
+        $crate::Error::msg(format!($fmt, $($arg)*))
+    };
+    ($err:expr $(,)?) => {
+        $crate::Error::msg($err)
+    };
+}
+
+#[macro_export]
+macro_rules! bail {
+    ($($t:tt)*) => {
+        return Err($crate::anyhow!($($t)*))
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn io_fail() -> Result<()> {
+        std::fs::read("/definitely/not/a/file/anywhere")?;
+        Ok(())
+    }
+
+    #[test]
+    fn question_mark_converts_std_errors() {
+        let e = io_fail().unwrap_err();
+        assert!(!format!("{e}").is_empty());
+        assert!(!format!("{e:#}").is_empty());
+    }
+
+    #[test]
+    fn macros_and_context() {
+        let n = 3;
+        let e = anyhow!("bad count {n}");
+        assert_eq!(format!("{e}"), "bad count 3");
+        let e2 = anyhow!("{} of {}", 1, 2);
+        assert_eq!(format!("{e2}"), "1 of 2");
+
+        fn bails() -> Result<()> {
+            bail!("nope {}", 7)
+        }
+        assert_eq!(format!("{}", bails().unwrap_err()), "nope 7");
+
+        let r: std::result::Result<(), std::io::Error> =
+            Err(std::io::Error::new(std::io::ErrorKind::Other, "inner"));
+        let e3 = r.context("outer").unwrap_err();
+        assert_eq!(format!("{e3}"), "outer: inner");
+
+        let none: Option<u32> = None;
+        let e4 = none.with_context(|| "missing").unwrap_err();
+        assert_eq!(format!("{e4}"), "missing");
+    }
+}

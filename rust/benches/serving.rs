@@ -1,13 +1,21 @@
-//! Serving-level benchmarks: end-to-end prefill/decode timing per policy.
-//! Runs on the mock backend by default (isolating coordinator overhead —
-//! scoring, selection, cascade, cache maintenance); pass --pjrt to measure
-//! the real model path (requires `make artifacts`).
+//! Serving-level benchmarks.
 //!
-//!   cargo bench --bench serving [-- --pjrt] [-- --ctx 512]
+//! Part 1 — engine: end-to-end prefill/decode timing per policy. Runs on the
+//! mock backend by default (isolating coordinator overhead — scoring,
+//! selection, cascade, cache maintenance); pass --pjrt to measure the real
+//! model path (requires `make artifacts`).
+//!
+//! Part 2 — scheduler: a mixed-shape-bucket workload driven through the
+//! continuous-batching scheduler, reporting TTFT, queue wait, and decode
+//! tokens/s for one-at-a-time admission (max_prefill_batch=1, the old
+//! behavior) vs batched same-bucket admission (the pop_batch path).
+//!
+//!   cargo bench --bench serving [-- --pjrt] [-- --ctx 512] [-- --requests 24]
 
 use lava::bench::harness::bench_for;
 use lava::compress::Policy;
 use lava::coordinator::engine::{Engine, EngineOptions, GenerateRequest};
+use lava::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use lava::model::backend::{MockBackend, ModelBackend, PjrtBackend};
 use lava::util::cli::Args;
 use lava::util::rng::Rng;
@@ -38,10 +46,74 @@ fn run<B: ModelBackend>(engine: &mut Engine<B>, ctx: usize, budget_secs: f64) {
     }
 }
 
+/// Mixed-bucket request list: one third each of three context scales.
+fn mixed_workload(ctx: usize, n_requests: usize) -> Vec<GenerateRequest> {
+    let mut rng = Rng::new(7);
+    (0..n_requests)
+        .map(|i| {
+            let scale = match i % 3 {
+                0 => ctx / 4,
+                1 => ctx / 2,
+                _ => ctx,
+            };
+            let inst = workloads::needle_qa(&mut rng, scale.max(64), 4);
+            GenerateRequest { prompt: inst.prompt, max_new_tokens: 8 }
+        })
+        .collect()
+}
+
+fn run_scheduler_bench(ctx: usize, n_requests: usize, reps: usize) {
+    for (label, batch) in [("serial-admission", 1usize), ("batched-admission", 4usize)] {
+        let mut walls = Vec::new();
+        let mut last_report = String::new();
+        for _ in 0..reps {
+            let mock = MockBackend::new(MockBackend::default_config());
+            let engine =
+                Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+            let mut sched = Scheduler::new(
+                engine,
+                SchedulerOptions {
+                    max_active: 8,
+                    prefill_every: 2,
+                    max_prefill_batch: batch,
+                    ..Default::default()
+                },
+            );
+            let reqs = mixed_workload(ctx, n_requests);
+            let t0 = std::time::Instant::now();
+            for req in reqs {
+                sched.submit(req).unwrap();
+            }
+            let done = sched.run_to_completion().unwrap();
+            walls.push(t0.elapsed().as_secs_f64());
+            assert_eq!(done.len(), n_requests);
+            let m = &sched.engine.metrics;
+            last_report = format!(
+                "ttft_ms(mean)={:.3} ttft_ms(p99)={:.3} queue_wait_ms(mean)={:.3} \
+                 decode_tok_s={:.1} admission_rounds={}",
+                m.mean_ttft_ms(),
+                m.p99_ttft_ms(),
+                m.mean_queue_wait_ms(),
+                m.decode_tok_per_sec(),
+                m.admission_rounds,
+            );
+        }
+        let mean_wall: f64 = walls.iter().sum::<f64>() / walls.len() as f64;
+        println!(
+            "{:<40} {:>10.2} ms wall ({} reqs) | {}",
+            format!("sched/{label}/ctx{ctx}"),
+            mean_wall * 1e3,
+            n_requests,
+            last_report
+        );
+    }
+}
+
 fn main() {
     let args = Args::parse_env();
     let ctx = args.usize_or("ctx", 512);
     let budget_secs = args.f64_or("secs", 0.5);
+    let n_requests = args.usize_or("requests", 24);
     println!("== serving benchmarks (ctx {ctx}) ==");
     if args.bool("pjrt") {
         let dir = args.str_or("artifacts", "artifacts");
@@ -58,6 +130,8 @@ fn main() {
         let mut engine =
             Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
         run(&mut engine, ctx, budget_secs);
+        println!("-- scheduler: mixed buckets, serial vs batched prefill admission --");
+        run_scheduler_bench(ctx, n_requests, 3);
         println!("(mock backend; pass -- --pjrt for the real model)");
     }
     println!("serving OK");

@@ -18,15 +18,24 @@ use super::LayerObs;
 use crate::util::stats;
 
 /// Largest-remainder proportional split of `total` by `weights`, with a
-/// per-layer floor. Guarantees: sum == total (when total >= L * floor) and
-/// every budget >= floor.
+/// per-layer floor. Guarantees: sum == total always, and every budget
+/// >= floor whenever total >= L * floor (with less than that there is not
+/// enough budget to honor the floor, so the split degrades to near-even).
 pub fn proportional(weights: &[f64], total: usize, floor: usize) -> Vec<usize> {
     let l = weights.len();
     if l == 0 {
         return vec![];
     }
     if total <= l * floor {
-        return vec![total / l; l];
+        // not enough for the floor everywhere: near-even split, remainder
+        // to the earliest layers, so `sum == total` still holds
+        let base = total / l;
+        let rem = total - base * l;
+        let mut out = vec![base; l];
+        for b in out.iter_mut().take(rem) {
+            *b += 1;
+        }
+        return out;
     }
     let spread = total - l * floor;
     let wsum: f64 = weights.iter().map(|w| w.max(0.0)).sum();
@@ -150,6 +159,17 @@ mod tests {
     }
 
     #[test]
+    fn proportional_below_floor_keeps_sum() {
+        // regression: total=7 < l*floor=12 used to return [2,2,2] (sum 6)
+        let b = proportional(&[1.0, 1.0, 1.0], 7, 4);
+        assert_eq!(b, vec![3, 2, 2]);
+        assert_eq!(b.iter().sum::<usize>(), 7);
+        // boundary: exactly l*floor gives the floor everywhere
+        assert_eq!(proportional(&[3.0, 1.0, 2.0], 12, 4), vec![4, 4, 4]);
+        assert_eq!(proportional(&[1.0], 0, 5), vec![0]);
+    }
+
+    #[test]
     fn uniform_remainder_goes_early() {
         assert_eq!(uniform(10, 4), vec![3, 3, 2, 2]);
     }
@@ -201,12 +221,16 @@ mod tests {
         prop::check(100, |rng| {
             let l = 1 + rng.below(12);
             let floor = rng.below(8);
-            let total = l * floor + rng.below(500);
+            // cover the degenerate branch too: total may fall below l*floor
+            let total = rng.below(l * floor + 500);
             let weights: Vec<f64> = (0..l).map(|_| rng.f64()).collect();
             let b = proportional(&weights, total, floor);
             prop::assert_prop(b.len() == l, "len", &b)?;
             prop::assert_prop(b.iter().sum::<usize>() == total, "sum", &(total, &b))?;
-            prop::assert_prop(b.iter().all(|&x| x >= floor), "floor", &(floor, &b))
+            if total >= l * floor {
+                prop::assert_prop(b.iter().all(|&x| x >= floor), "floor", &(floor, &b))?;
+            }
+            Ok(())
         });
     }
 

@@ -30,102 +30,131 @@ pub fn maxpool_row(row: &mut [f32], kernel: usize) {
     }
 }
 
-/// Per-q-head base scores [H][length] for a score kind.
-fn base_scores(kind: ScoreKind, obs: &LayerObs, group: usize) -> Vec<Vec<f32>> {
-    let h = obs.n_heads();
+/// Max valid value norm of one kv head (the Lava vbar of Theorem 1).
+fn lava_vbar(obs: &LayerObs, kv: usize) -> f32 {
+    let n = obs.bucket();
+    let vnorm = obs.vnorm.as_f32().expect("vnorm");
+    let mut vbar = 0.0f32;
+    for i in 0..obs.length {
+        vbar = vbar.max(vnorm[kv * n + i]);
+    }
+    vbar
+}
+
+/// Base scores for one q-head `hh` over [0, length). `vbar` is the
+/// precomputed per-kv-head Lava scale (computed once per group, not per
+/// q-head); ignored by every other score kind.
+fn base_row(kind: ScoreKind, obs: &LayerObs, hh: usize, group: usize, vbar: f32) -> Vec<f32> {
     let w = obs.window();
     let n = obs.bucket();
     let len = obs.length;
     let win = obs.win_attn.as_f32().expect("win_attn");
-    let acc = obs.acc_attn.as_f32().expect("acc_attn");
-    let vnorm = obs.vnorm.as_f32().expect("vnorm");
 
-    // helpers over the [H, w, N] window panel
-    let at = |hh: usize, r: usize, i: usize| win[(hh * w + r) * n + i];
-    let mean_window = |hh: usize, i: usize| -> f32 {
+    // helpers over this head's [w, N] window panel
+    let at = |r: usize, i: usize| win[(hh * w + r) * n + i];
+    let mean_window = |i: usize| -> f32 {
         let mut s = 0.0;
         for r in 0..w {
-            s += at(hh, r, i);
+            s += at(r, i);
         }
         s / w as f32
     };
 
-    let mut out = vec![vec![0.0f32; len]; h];
+    let mut out = vec![0.0f32; len];
     match kind {
         ScoreKind::SnapKv => {
-            for hh in 0..h {
-                for i in 0..len {
-                    out[hh][i] = mean_window(hh, i);
-                }
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = mean_window(i);
             }
         }
         ScoreKind::H2o => {
-            for hh in 0..h {
-                for i in 0..len {
-                    out[hh][i] = acc[hh * n + i];
-                }
-            }
+            let acc = obs.acc_attn.as_f32().expect("acc_attn");
+            out.copy_from_slice(&acc[hh * n..hh * n + len]);
         }
         ScoreKind::Tova => {
             // last window row = the current (N-th) query's attention
-            for hh in 0..h {
-                for i in 0..len {
-                    out[hh][i] = at(hh, w - 1, i);
-                }
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = at(w - 1, i);
             }
         }
         ScoreKind::Cake { gamma } => {
-            for hh in 0..h {
-                for i in 0..len {
-                    let m = mean_window(hh, i);
-                    let mut var = 0.0;
-                    for r in 0..w {
-                        let d = at(hh, r, i) - m;
-                        var += d * d;
-                    }
-                    out[hh][i] = m + gamma * var / w as f32;
+            for (i, o) in out.iter_mut().enumerate() {
+                let m = mean_window(i);
+                let mut var = 0.0;
+                for r in 0..w {
+                    let d = at(r, i) - m;
+                    var += d * d;
                 }
+                *o = m + gamma * var / w as f32;
             }
         }
         ScoreKind::Vatp => {
-            for hh in 0..h {
-                let kv = hh / group;
-                for i in 0..len {
-                    out[hh][i] = mean_window(hh, i) * vnorm[kv * n + i];
-                }
+            let vnorm = obs.vnorm.as_f32().expect("vnorm");
+            let kv = hh / group;
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = mean_window(i) * vnorm[kv * n + i];
             }
         }
         ScoreKind::Lava => {
-            // vbar per kv head = max valid value norm (Theorem 1)
-            let hk = obs.n_kv_heads();
-            let mut vbar = vec![0.0f32; hk];
-            for kv in 0..hk {
-                for i in 0..len {
-                    vbar[kv] = vbar[kv].max(vnorm[kv * n + i]);
-                }
-            }
-            for hh in 0..h {
-                let kv = hh / group;
-                for i in 0..len {
-                    out[hh][i] = mean_window(hh, i) * vbar[kv];
-                }
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = mean_window(i) * vbar;
             }
         }
         ScoreKind::Streaming { sinks } => {
             // deterministic recency score: sinks get +inf, otherwise the
             // position itself (later = larger). Selector's top-k then keeps
             // sinks + the most recent tokens.
-            for hh in 0..h {
-                for (i, o) in out[hh].iter_mut().enumerate() {
-                    *o = if i < sinks { f32::MAX } else { i as f32 };
-                }
+            for (i, o) in out.iter_mut().enumerate() {
+                *o = if i < sinks { f32::MAX } else { i as f32 };
             }
         }
     }
     out
 }
 
-/// Full scoring pipeline -> [Hk][length] kv-head scores.
+/// One kv head's full pipeline: base scores for its q-head group ->
+/// maxpool smoothing (paper App. D; skipped for the position-based
+/// streaming score where it would be meaningless) -> GQA group reduce.
+fn kv_head_row(
+    kind: ScoreKind,
+    reduce: GroupReduce,
+    obs: &LayerObs,
+    pool_kernel: usize,
+    kv: usize,
+    group: usize,
+) -> Vec<f32> {
+    let len = obs.length;
+    let vbar = if kind == ScoreKind::Lava { lava_vbar(obs, kv) } else { 0.0 };
+    let mut agg = match reduce {
+        GroupReduce::Mean => vec![0.0f32; len],
+        GroupReduce::Max => vec![f32::NEG_INFINITY; len],
+    };
+    for g in 0..group {
+        let mut row = base_row(kind, obs, kv * group + g, group, vbar);
+        if !matches!(kind, ScoreKind::Streaming { .. }) {
+            maxpool_row(&mut row, pool_kernel);
+        }
+        for (a, v) in agg.iter_mut().zip(&row) {
+            match reduce {
+                GroupReduce::Mean => *a += v,
+                GroupReduce::Max => *a = a.max(*v),
+            }
+        }
+    }
+    if reduce == GroupReduce::Mean {
+        for a in agg.iter_mut() {
+            *a /= group as f32;
+        }
+    }
+    agg
+}
+
+/// Below this many (q-head x position) cells the whole layer is scored
+/// serially — thread spawn costs more than the arithmetic.
+const PAR_MIN_CELLS: usize = 8192;
+
+/// Full scoring pipeline -> [Hk][length] kv-head scores. Each kv head is an
+/// independent unit of work, so large layers fan out across scoped threads.
 pub fn kv_head_scores(
     kind: ScoreKind,
     reduce: GroupReduce,
@@ -135,33 +164,14 @@ pub fn kv_head_scores(
     let h = obs.n_heads();
     let hk = obs.n_kv_heads();
     let group = h / hk;
-    let len = obs.length;
-    let mut per_head = base_scores(kind, obs, group);
-    // pooling smooths per-q-head scores (paper App. D; skipped for the
-    // position-based streaming score where it would be meaningless)
-    if !matches!(kind, ScoreKind::Streaming { .. }) {
-        for row in per_head.iter_mut() {
-            maxpool_row(row, pool_kernel);
-        }
-    }
-    let mut out = vec![vec![0.0f32; len]; hk];
-    for kv in 0..hk {
-        for i in 0..len {
-            let mut agg: f32 = match reduce {
-                GroupReduce::Mean => 0.0,
-                GroupReduce::Max => f32::NEG_INFINITY,
-            };
-            for g in 0..group {
-                let v = per_head[kv * group + g][i];
-                agg = match reduce {
-                    GroupReduce::Mean => agg + v,
-                    GroupReduce::Max => agg.max(v),
-                };
-            }
-            out[kv][i] = match reduce {
-                GroupReduce::Mean => agg / group as f32,
-                GroupReduce::Max => agg,
-            };
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); hk];
+    if hk > 1 && h * obs.length >= PAR_MIN_CELLS {
+        crate::util::par::scoped_for_each(out.iter_mut().enumerate(), |(kv, row)| {
+            *row = kv_head_row(kind, reduce, obs, pool_kernel, kv, group);
+        });
+    } else {
+        for (kv, row) in out.iter_mut().enumerate() {
+            *row = kv_head_row(kind, reduce, obs, pool_kernel, kv, group);
         }
     }
     out
@@ -246,6 +256,23 @@ pub(crate) mod tests {
                     .unwrap()
                     .0;
                 assert_eq!(argmax, peak, "{kind:?} head {kv}");
+            }
+        }
+    }
+
+    #[test]
+    fn parallel_scores_match_serial() {
+        // above PAR_MIN_CELLS the fan-out path runs; it must be bit-identical
+        // to scoring each kv head directly
+        let obs = synth_obs(8, 4, 8, 2048, 1200, 37, 6);
+        assert!(8 * obs.length >= PAR_MIN_CELLS, "test must exercise the parallel path");
+        for kind in [ScoreKind::Lava, ScoreKind::SnapKv, ScoreKind::H2o] {
+            for reduce in [GroupReduce::Mean, GroupReduce::Max] {
+                let fanned = kv_head_scores(kind, reduce, &obs, 7);
+                for kv in 0..4 {
+                    let serial = kv_head_row(kind, reduce, &obs, 7, kv, 2);
+                    assert_eq!(fanned[kv], serial, "{kind:?}/{reduce:?} head {kv}");
+                }
             }
         }
     }

@@ -104,11 +104,20 @@ pub fn select_prefill(
     let protected_total = hk * protected_per_head;
 
     if budget <= protected_total {
-        // degenerate: budget smaller than the window — keep only the most
-        // recent floor(budget / hk) per head.
-        let per = (budget / hk).max(1).min(length);
-        let keep: Vec<Vec<usize>> = (0..hk).map(|_| (length - per..length).collect()).collect();
-        let sc = (0..hk).map(|_| vec![f32::MAX; per]).collect();
+        // degenerate: budget smaller than the protected window — keep only
+        // the most recent tokens, splitting the budget across heads (the
+        // old `(budget / hk).max(1)` kept hk entries even when budget < hk).
+        // Every head still keeps >= 1 entry so decode has something to
+        // attend to, so total() <= max(budget, hk).
+        let base = budget / hk;
+        let rem = budget - base * hk;
+        let mut keep: Vec<Vec<usize>> = Vec::with_capacity(hk);
+        let mut sc: Vec<Vec<f32>> = Vec::with_capacity(hk);
+        for h in 0..hk {
+            let per = (base + usize::from(h < rem)).max(1).min(length);
+            keep.push((length - per..length).collect());
+            sc.push(vec![f32::MAX; per]);
+        }
         return KeepSet { keep, scores: sc };
     }
 
@@ -254,6 +263,30 @@ mod tests {
         let ks = flat(vec![vec![1.0; 32], vec![1.0; 32]], 32, 6, 8);
         assert_eq!(ks.total(), 6);
         assert_eq!(ks.keep[0], vec![29, 30, 31]);
+    }
+
+    #[test]
+    fn tiny_budget_clamps_total() {
+        // regression: budget < hk used to return hk entries (one per head),
+        // silently exceeding the layer budget
+        let scores = vec![vec![1.0f32; 32]; 4];
+        let ks = flat(scores.clone(), 32, 2, 8);
+        assert_eq!(ks.total(), 4, "minimum viable is one entry per head");
+        // budget between hk and the protected window: split across heads,
+        // earliest heads take the remainder
+        let ks6 = flat(scores.clone(), 32, 6, 8);
+        assert_eq!(ks6.total(), 6);
+        assert_eq!(ks6.keep[0], vec![30, 31]);
+        assert_eq!(ks6.keep[2], vec![31]);
+        // the bound holds across the whole small-budget range
+        for budget in 1..40 {
+            let ks = flat(scores.clone(), 32, budget, 8);
+            assert!(
+                ks.total() <= budget.max(4),
+                "budget {budget}: kept {} > max(budget, hk)",
+                ks.total()
+            );
+        }
     }
 
     #[test]

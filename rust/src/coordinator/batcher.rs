@@ -74,6 +74,30 @@ impl Batcher {
         let Some(first) = self.pop() else { return vec![] };
         let bucket = first.bucket;
         let mut out = vec![first];
+        out.extend(self.pop_matching(bucket, k.saturating_sub(1)));
+        out
+    }
+
+    /// `pop_batch`, but seeded by `pop_preferring(bucket)`: the batch grows
+    /// around the oldest request of the preferred (compile-warm) bucket,
+    /// falling back to the plain FIFO head when that bucket has no work.
+    pub fn pop_batch_preferring(&mut self, bucket: usize, k: usize) -> Vec<QueuedRequest> {
+        let Some(first) = self.pop_preferring(bucket) else { return vec![] };
+        let bucket = first.bucket;
+        let mut out = vec![first];
+        out.extend(self.pop_matching(bucket, k.saturating_sub(1)));
+        out
+    }
+
+    /// Shape bucket of the queue's oldest request.
+    pub fn front_bucket(&self) -> Option<usize> {
+        self.queue.front().map(|q| q.bucket)
+    }
+
+    /// Take up to `k` oldest requests from one specific bucket (used to grow
+    /// a batch around a `pop_preferring` hit).
+    pub fn pop_matching(&mut self, bucket: usize, k: usize) -> Vec<QueuedRequest> {
+        let mut out = Vec::new();
         while out.len() < k {
             match self.queue.iter().position(|q| q.bucket == bucket) {
                 Some(idx) => out.push(self.queue.remove(idx).unwrap()),
@@ -81,6 +105,25 @@ impl Batcher {
             }
         }
         out
+    }
+
+    /// Put a popped request back without losing its identity or its place:
+    /// ids are assigned in arrival order, so inserting by id restores exact
+    /// FIFO position (admission deferral must not reorder or re-id).
+    pub fn requeue(&mut self, q: QueuedRequest) {
+        let idx = self.queue.iter().position(|r| r.id > q.id).unwrap_or(self.queue.len());
+        self.queue.insert(idx, q);
+    }
+
+    /// Remove a queued request by id (cancellation before admission).
+    pub fn remove(&mut self, id: u64) -> Option<QueuedRequest> {
+        let idx = self.queue.iter().position(|q| q.id == id)?;
+        self.queue.remove(idx)
+    }
+
+    /// True if any queued request maps to `bucket`.
+    pub fn has_bucket(&self, bucket: usize) -> bool {
+        self.queue.iter().any(|q| q.bucket == bucket)
     }
 
     /// Oldest queue wait in seconds (for backpressure / SLO decisions).
@@ -143,5 +186,48 @@ mod tests {
         let batch = b.pop_batch(3);
         assert_eq!(batch.iter().map(|q| q.id).collect::<Vec<_>>(), vec![1, 3, 4]);
         assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn requeue_restores_fifo_position_and_id() {
+        let mut b = Batcher::new(&[128, 256]);
+        b.push(req(10)); // id 1, bucket 128
+        b.push(req(200)); // id 2, bucket 256
+        b.push(req(30)); // id 3, bucket 128
+        let q = b.pop().unwrap();
+        assert_eq!(q.id, 1);
+        b.requeue(q);
+        assert_eq!(
+            b.queue.iter().map(|q| q.id).collect::<Vec<_>>(),
+            vec![1, 2, 3],
+            "requeue must restore exact FIFO order with the original id"
+        );
+        // a mid-queue pop requeues back to its slot, not the front
+        let q2 = b.pop_preferring(256).unwrap();
+        assert_eq!(q2.id, 2);
+        b.requeue(q2);
+        assert_eq!(b.queue.iter().map(|q| q.id).collect::<Vec<_>>(), vec![1, 2, 3]);
+    }
+
+    #[test]
+    fn remove_by_id() {
+        let mut b = Batcher::new(&[128]);
+        b.push(req(10));
+        b.push(req(20));
+        assert_eq!(b.remove(1).unwrap().id, 1);
+        assert!(b.remove(1).is_none());
+        assert_eq!(b.len(), 1);
+    }
+
+    #[test]
+    fn pop_matching_only_takes_bucket() {
+        let mut b = Batcher::new(&[128, 256]);
+        b.push(req(200)); // id 1, bucket 256
+        b.push(req(10)); // id 2, bucket 128
+        b.push(req(20)); // id 3, bucket 128
+        let got = b.pop_matching(128, 5);
+        assert_eq!(got.iter().map(|q| q.id).collect::<Vec<_>>(), vec![2, 3]);
+        assert!(b.has_bucket(256));
+        assert!(!b.has_bucket(128));
     }
 }

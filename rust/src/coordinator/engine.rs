@@ -58,8 +58,27 @@ pub struct GenerateRequest {
     pub max_new_tokens: usize,
 }
 
+/// How a request's lifecycle ended. Non-`Completed` results carry whatever
+/// was generated before the cut (empty for admission rejections).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FinishStatus {
+    Completed,
+    /// Refused by admission control (can never fit, invalid prompt, ...).
+    Rejected,
+    /// Cut short by an explicit cancel.
+    Canceled,
+    /// The engine errored mid-flight (prefill or decode); other sessions
+    /// are unaffected.
+    Failed,
+}
+
 #[derive(Debug, Clone)]
 pub struct GenerateResult {
+    /// The id handed out at submission; stable through deferral/requeue.
+    pub id: u64,
+    pub status: FinishStatus,
+    /// Rejection/cancellation detail (None on the happy path).
+    pub error: Option<String>,
     pub tokens: Vec<i32>,
     pub prefill_secs: f64,
     pub decode_secs: f64,
@@ -92,6 +111,13 @@ impl<B: ModelBackend> Engine<B> {
     pub fn new_session(&mut self, req: &GenerateRequest) -> Session {
         self.next_id += 1;
         Session::new(self.next_id, req.prompt.clone(), req.max_new_tokens)
+    }
+
+    /// Session with a caller-supplied id: the scheduler threads the id the
+    /// batcher handed out at submission all the way to the result, so one id
+    /// names the request end-to-end.
+    pub fn new_session_with_id(&self, id: u64, req: &GenerateRequest) -> Session {
+        Session::new(id, req.prompt.clone(), req.max_new_tokens)
     }
 
     /// Compute policy scores for one prefilled layer -> [Hk][length].
@@ -201,19 +227,12 @@ impl<B: ModelBackend> Engine<B> {
 
             // Algorithm 2: recompress earlier layers to their shrunken budgets.
             if dynamic {
-                for l2 in 0..l {
-                    if sess.caches[l2].total_entries() > budgets[l2] {
-                        let stored: Vec<&[f32]> = (0..cfg.n_kv_heads)
-                            .map(|h| sess.caches[l2].head_scores(h))
-                            .collect();
-                        let keep = select_recompress(
-                            &stored,
-                            budgets[l2],
-                            self.opts.policy.head_alloc,
-                        );
-                        sess.caches[l2].re_evict(&keep);
-                    }
-                }
+                recompress_earlier(
+                    &mut sess.caches[..l],
+                    &budgets,
+                    cfg.n_kv_heads,
+                    self.opts.policy.head_alloc,
+                );
             }
 
             x = out.x_out;
@@ -289,6 +308,9 @@ impl<B: ModelBackend> Engine<B> {
         self.metrics
             .finish_request(sess.prefill_secs, sess.decode_secs, sess.generated.len());
         Ok(GenerateResult {
+            id: sess.id,
+            status: FinishStatus::Completed,
+            error: None,
             tokens: sess.generated.clone(),
             prefill_secs: sess.prefill_secs,
             decode_secs: sess.decode_secs,
@@ -304,6 +326,34 @@ impl<B: ModelBackend> Engine<B> {
         let mut sess = self.new_session(&req);
         let tok = self.prefill(&mut sess)?;
         Ok((sess, tok))
+    }
+}
+
+/// Cascade recompression work is per-layer independent (each layer reuses
+/// its own stored scores), so fan it out across scoped threads once there is
+/// enough live cache to be worth a spawn; tiny prompts stay serial.
+const RECOMPRESS_PAR_MIN_ENTRIES: usize = 8192;
+
+fn recompress_earlier(
+    caches: &mut [LayerCache],
+    budgets: &[usize],
+    n_kv_heads: usize,
+    head_alloc: crate::compress::HeadAlloc,
+) {
+    let shrink_one = |(l2, cache): (usize, &mut LayerCache)| {
+        if cache.total_entries() > budgets[l2] {
+            let stored: Vec<&[f32]> = (0..n_kv_heads).map(|h| cache.head_scores(h)).collect();
+            let keep = select_recompress(&stored, budgets[l2], head_alloc);
+            cache.re_evict(&keep);
+        }
+    };
+    let live: usize = caches.iter().map(|c| c.total_entries()).sum();
+    if caches.len() > 1 && live >= RECOMPRESS_PAR_MIN_ENTRIES {
+        crate::util::par::scoped_for_each(caches.iter_mut().enumerate(), shrink_one);
+    } else {
+        for item in caches.iter_mut().enumerate() {
+            shrink_one(item);
+        }
     }
 }
 

@@ -9,10 +9,23 @@ use crate::util::stats;
 #[derive(Debug, Default)]
 pub struct Metrics {
     pub requests_finished: u64,
+    /// Requests refused by admission control (can never fit / bad prompt).
+    pub requests_rejected: u64,
+    /// Requests cut short by an explicit cancel.
+    pub requests_canceled: u64,
+    /// Requests that died to an engine error mid-flight.
+    pub requests_failed: u64,
     pub tokens_generated: u64,
     pub prefill_secs: Vec<f64>,
     /// Per-token decode latencies (seconds).
     pub decode_secs: Vec<f64>,
+    /// Queue wait per admitted request (submission -> prefill start).
+    pub queue_wait_secs: Vec<f64>,
+    /// Time-to-first-token per admitted request (queue wait + prefill).
+    pub ttft_secs: Vec<f64>,
+    /// Scheduler step counters.
+    pub admission_rounds: u64,
+    pub decode_steps: u64,
     /// Peak live KV bytes observed (incl. the transient uncompressed layer
     /// during prefill — the paper's "memory peak").
     pub peak_kv_bytes: usize,
@@ -35,6 +48,12 @@ impl Metrics {
     /// layer on top of the retained caches).
     pub fn observe_transient(&mut self, bytes: usize) {
         self.peak_kv_bytes = self.peak_kv_bytes.max(bytes);
+    }
+
+    /// Record one admission: how long the request queued and its TTFT.
+    pub fn observe_admission(&mut self, queue_wait_secs: f64, ttft_secs: f64) {
+        self.queue_wait_secs.push(queue_wait_secs);
+        self.ttft_secs.push(ttft_secs);
     }
 
     pub fn finish_request(&mut self, prefill_secs: f64, decode_secs: f64, tokens: usize) {
@@ -65,17 +84,50 @@ impl Metrics {
         }
     }
 
+    pub fn mean_ttft_ms(&self) -> f64 {
+        stats::mean(&self.ttft_secs) * 1e3
+    }
+
+    pub fn p99_ttft_ms(&self) -> f64 {
+        stats::percentile(&self.ttft_secs, 99.0) * 1e3
+    }
+
+    pub fn mean_queue_wait_ms(&self) -> f64 {
+        stats::mean(&self.queue_wait_secs) * 1e3
+    }
+
+    /// Steady-state decode speed: tokens per second of decode wall time
+    /// (1 / mean per-token decode latency).
+    pub fn decode_tok_per_sec(&self) -> f64 {
+        let mean = stats::mean(&self.decode_secs);
+        if mean > 0.0 {
+            1.0 / mean
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} tokens={} prefill_ms(mean)={:.2} decode_ms(mean)={:.3} \
-             decode_ms(p99)={:.3} peak_kv_mb={:.2} throughput_tok_s={:.1}",
+            "requests={} rejected={} canceled={} failed={} tokens={} ttft_ms(mean)={:.2} \
+             queue_wait_ms(mean)={:.2} prefill_ms(mean)={:.2} decode_ms(mean)={:.3} \
+             decode_ms(p99)={:.3} decode_tok_s={:.1} peak_kv_mb={:.2} \
+             throughput_tok_s={:.1} admission_rounds={} decode_steps={}",
             self.requests_finished,
+            self.requests_rejected,
+            self.requests_canceled,
+            self.requests_failed,
             self.tokens_generated,
+            self.mean_ttft_ms(),
+            self.mean_queue_wait_ms(),
             self.mean_prefill_ms(),
             self.mean_decode_ms(),
             self.p99_decode_ms(),
+            self.decode_tok_per_sec(),
             self.peak_kv_bytes as f64 / 1e6,
             self.throughput_tok_per_sec(),
+            self.admission_rounds,
+            self.decode_steps,
         )
     }
 }
@@ -104,5 +156,17 @@ mod tests {
         assert_eq!(m.tokens_generated, 6);
         assert!((m.mean_decode_ms() - 100.0).abs() < 1e-9);
         assert!((m.mean_prefill_ms() - 200.0).abs() < 1e-9);
+        // mean per-token decode latency is 100 ms -> 10 tok/s
+        assert!((m.decode_tok_per_sec() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn admission_aggregation() {
+        let mut m = Metrics::new();
+        m.observe_admission(0.010, 0.050);
+        m.observe_admission(0.030, 0.070);
+        assert!((m.mean_queue_wait_ms() - 20.0).abs() < 1e-9);
+        assert!((m.mean_ttft_ms() - 60.0).abs() < 1e-9);
+        assert!(m.p99_ttft_ms() >= m.mean_ttft_ms());
     }
 }

@@ -16,4 +16,5 @@ pub mod scheduler;
 pub mod server;
 pub mod session;
 
-pub use engine::{Engine, EngineOptions, GenerateRequest, GenerateResult};
+pub use engine::{Engine, EngineOptions, FinishStatus, GenerateRequest, GenerateResult};
+pub use scheduler::{Scheduler, SchedulerOptions, SubmitError};

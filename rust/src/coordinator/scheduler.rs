@@ -1,20 +1,31 @@
 //! Continuous-batching scheduler.
 //!
-//! Owns the engine + the request queue and interleaves work:
-//!   * admission control — a new prefill is admitted only if projected KV
-//!     memory (existing live bytes + new request's budget + one
-//!     uncompressed layer) fits the configured limit;
-//!   * prefill/decode interleaving — decode-first with a prefill every
-//!     `prefill_every` scheduler ticks (bounds TTFT without starving
-//!     decodes), the standard continuous-batching compromise;
-//!   * round-robin decode across active sessions.
+//! Owns the engine + the request queue and interleaves work through three
+//! explicit steps, composed by [`Scheduler::tick`]:
+//!   * [`Scheduler::admit`] — pull a same-shape-bucket batch off the queue
+//!     (compile-warm buckets preferred) and apply admission control: a
+//!     request is admitted only if projected KV memory (existing live bytes
+//!     + its budget + one uncompressed layer) fits the configured limit.
+//!     Requests that do not fit *now* are requeued at their original FIFO
+//!     position with their original id; requests that can *never* fit are
+//!     rejected with an explicit error result (no livelock).
+//!   * [`Scheduler::prefill_batch`] — run Algorithm 2 prefill for each
+//!     admitted request, recording queue-wait and TTFT per request.
+//!   * [`Scheduler::decode_round`] — one round-robin decode step across all
+//!     active sessions.
+//!
+//! Prefill admission is attempted every `prefill_every` ticks (bounds TTFT
+//! without starving decodes — the standard continuous-batching compromise).
+//! One request id, assigned by the batcher at `submit`, names the request
+//! end-to-end: queue entry, session, and `GenerateResult`.
 
 use std::collections::VecDeque;
+use std::fmt;
 
 use anyhow::Result;
 
-use super::batcher::Batcher;
-use super::engine::{Engine, GenerateRequest, GenerateResult};
+use super::batcher::{Batcher, QueuedRequest};
+use super::engine::{Engine, FinishStatus, GenerateRequest, GenerateResult};
 use super::session::Session;
 use crate::model::backend::ModelBackend;
 
@@ -26,13 +37,62 @@ pub struct SchedulerOptions {
     pub max_active: usize,
     /// Attempt one prefill admission every this many ticks.
     pub prefill_every: usize,
+    /// Max prefills admitted as one same-bucket batch per admission round
+    /// (1 = the old one-at-a-time behavior).
+    pub max_prefill_batch: usize,
+    /// Backpressure: refuse new submissions once the oldest queued request
+    /// has waited longer than this (None = accept until memory runs out).
+    pub max_queue_wait_secs: Option<f64>,
 }
 
 impl Default for SchedulerOptions {
     fn default() -> Self {
-        SchedulerOptions { kv_mem_limit: None, max_active: 8, prefill_every: 4 }
+        SchedulerOptions {
+            kv_mem_limit: None,
+            max_active: 8,
+            prefill_every: 4,
+            max_prefill_batch: 4,
+            max_queue_wait_secs: None,
+        }
     }
 }
+
+/// Why `submit` refused a request (queue state is unchanged on refusal).
+#[derive(Debug, Clone, PartialEq)]
+pub enum SubmitError {
+    /// Prompt exceeds the largest prefill shape bucket.
+    PromptTooLong { len: usize },
+    /// Projected KV for this request alone exceeds `kv_mem_limit`.
+    OverMemoryLimit { projected: usize, limit: usize },
+    /// Backpressure: the queue is already missing its wait SLO.
+    QueueSaturated { oldest_wait_secs: f64 },
+}
+
+impl fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SubmitError::PromptTooLong { len } => {
+                write!(f, "prompt length {len} exceeds the largest prefill bucket")
+            }
+            SubmitError::OverMemoryLimit { projected, limit } => write!(
+                f,
+                "projected KV bytes {projected} exceed kv_mem_limit {limit}: can never be admitted"
+            ),
+            SubmitError::QueueSaturated { oldest_wait_secs } => write!(
+                f,
+                "queue saturated: oldest request has waited {oldest_wait_secs:.3}s"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+/// How many consecutive admission rounds may jump the queue head for a
+/// compile-warm bucket before the head is served unconditionally. Bounds
+/// cross-bucket starvation: a queued request is bypassed at most this many
+/// rounds before its bucket becomes the batch seed.
+const MAX_WARM_BYPASS_ROUNDS: usize = 4;
 
 pub struct Scheduler<B: ModelBackend> {
     pub engine: Engine<B>,
@@ -41,18 +101,89 @@ pub struct Scheduler<B: ModelBackend> {
     active: VecDeque<Session>,
     finished: Vec<(u64, GenerateResult)>,
     tick: usize,
-    /// request-id remap: batcher id -> session id
-    id_map: Vec<(u64, u64)>,
+    /// Bucket of the most recent prefill: its executable is compile-warm,
+    /// so admission prefers queued requests sharing it.
+    warm_bucket: Option<usize>,
+    /// Consecutive admission rounds in which warm preference bypassed an
+    /// older request at the queue head.
+    warm_bypass_streak: usize,
+    /// The queue head was deferred for memory: suspend warm preference so
+    /// freed memory goes to the oldest request, not younger warm-bucket
+    /// arrivals (unbounded-TTFT starvation otherwise).
+    head_memory_blocked: bool,
 }
 
 impl<B: ModelBackend> Scheduler<B> {
     pub fn new(engine: Engine<B>, opts: SchedulerOptions) -> Scheduler<B> {
         let queue = Batcher::new(engine.backend.prefill_buckets());
-        Scheduler { engine, queue, opts, active: VecDeque::new(), finished: Vec::new(), tick: 0, id_map: Vec::new() }
+        Scheduler {
+            engine,
+            queue,
+            opts,
+            active: VecDeque::new(),
+            finished: Vec::new(),
+            tick: 0,
+            warm_bucket: None,
+            warm_bypass_streak: 0,
+            head_memory_blocked: false,
+        }
     }
 
-    pub fn submit(&mut self, req: GenerateRequest) -> Option<u64> {
-        self.queue.push(req)
+    /// Enqueue a request; the returned id is the one its `GenerateResult`
+    /// will carry, no matter how often admission defers it.
+    pub fn submit(&mut self, req: GenerateRequest) -> Result<u64, SubmitError> {
+        if let Some(limit) = self.opts.kv_mem_limit {
+            let projected = self.projected_bytes(req.prompt.len());
+            if projected > limit {
+                self.engine.metrics.requests_rejected += 1;
+                return Err(SubmitError::OverMemoryLimit { projected, limit });
+            }
+        }
+        if let Some(max_wait) = self.opts.max_queue_wait_secs {
+            let oldest_wait_secs = self.queue.oldest_wait_secs();
+            if oldest_wait_secs > max_wait {
+                self.engine.metrics.requests_rejected += 1;
+                return Err(SubmitError::QueueSaturated { oldest_wait_secs });
+            }
+        }
+        let len = req.prompt.len();
+        match self.queue.push(req) {
+            Some(id) => Ok(id),
+            None => {
+                self.engine.metrics.requests_rejected += 1;
+                Err(SubmitError::PromptTooLong { len })
+            }
+        }
+    }
+
+    /// Cancel a request by id: dequeues it if still waiting, or retires the
+    /// session mid-decode with whatever it generated so far. Returns false
+    /// for unknown / already-finished ids.
+    pub fn cancel(&mut self, id: u64) -> bool {
+        if self.queue.remove(id).is_some() {
+            self.engine.metrics.requests_canceled += 1;
+            self.finished.push((
+                id,
+                GenerateResult {
+                    id,
+                    status: FinishStatus::Canceled,
+                    error: Some("canceled while queued".to_string()),
+                    tokens: vec![],
+                    prefill_secs: 0.0,
+                    decode_secs: 0.0,
+                    kv_bytes_after_prefill: 0,
+                    peak_kv_bytes: self.engine.metrics.peak_kv_bytes,
+                    budgets: vec![],
+                },
+            ));
+            return true;
+        }
+        if let Some(pos) = self.active.iter().position(|s| s.id == id) {
+            let sess = self.active.remove(pos).expect("position just found");
+            self.retire(sess, FinishStatus::Canceled, Some("canceled mid-decode".to_string()));
+            return true;
+        }
+        false
     }
 
     pub fn active_count(&self) -> usize {
@@ -67,82 +198,224 @@ impl<B: ModelBackend> Scheduler<B> {
         self.active.iter().map(|s| s.kv_bytes()).sum()
     }
 
-    /// Projected bytes a request will hold after prefill (its budget) plus
-    /// the transient uncompressed layer during prefill.
-    fn projected_bytes(&self, prompt_len: usize) -> usize {
+    /// Bytes a request's compressed caches hold after prefill (its budget).
+    fn retained_bytes(&self, prompt_len: usize) -> usize {
         let cfg = self.engine.config();
         let budget_entries =
             self.engine.opts.budget_per_head * cfg.n_kv_heads * cfg.n_layers;
-        let retained = budget_entries.min(prompt_len * cfg.n_kv_heads * cfg.n_layers)
-            * cfg.d_head * 2 * 4;
-        let transient = 2 * cfg.n_kv_heads * prompt_len * cfg.d_head * 4;
-        retained + transient
+        budget_entries.min(prompt_len * cfg.n_kv_heads * cfg.n_layers) * cfg.d_head * 2 * 4
     }
 
-    fn can_admit(&self, prompt_len: usize) -> bool {
-        if self.active.len() >= self.opts.max_active {
-            return false;
-        }
-        match self.opts.kv_mem_limit {
-            None => true,
-            Some(limit) => self.live_kv_bytes() + self.projected_bytes(prompt_len) <= limit,
-        }
+    /// Bytes of the transient uncompressed layer live *during* prefill only.
+    fn transient_bytes(&self, prompt_len: usize) -> usize {
+        let cfg = self.engine.config();
+        2 * cfg.n_kv_heads * prompt_len * cfg.d_head * 4
     }
 
-    /// One scheduler tick: either admit+prefill one request or advance every
+    /// Peak bytes a request needs while prefilling: retained caches plus one
+    /// uncompressed layer.
+    fn projected_bytes(&self, prompt_len: usize) -> usize {
+        self.retained_bytes(prompt_len) + self.transient_bytes(prompt_len)
+    }
+
+    /// Admission step: pull up to one same-bucket batch off the queue and
+    /// split it into admitted requests (returned, in FIFO order), deferred
+    /// requests (requeued at their original position, same id), and
+    /// impossible requests (rejected with an error result).
+    pub fn admit(&mut self) -> Vec<QueuedRequest> {
+        let slots = self.opts.max_active.saturating_sub(self.active.len());
+        if slots == 0 || self.queue.is_empty() {
+            return vec![];
+        }
+        let k = slots.min(self.opts.max_prefill_batch).max(1);
+
+        // Prefer the compile-warm bucket when it has queued work, but never
+        // bypass the queue head more than MAX_WARM_BYPASS_ROUNDS rounds in a
+        // row, and not at all while the head is blocked on memory —
+        // otherwise a steady stream of warm-bucket traffic starves other
+        // buckets (and, with max_queue_wait_secs set, the starved head would
+        // shed all new load).
+        let head_bucket = self.queue.front_bucket();
+        let batch = match self.warm_bucket {
+            Some(b)
+                if !self.head_memory_blocked
+                    && self.queue.has_bucket(b)
+                    && (head_bucket == Some(b)
+                        || self.warm_bypass_streak < MAX_WARM_BYPASS_ROUNDS) =>
+            {
+                if head_bucket == Some(b) {
+                    self.warm_bypass_streak = 0;
+                } else {
+                    self.warm_bypass_streak += 1;
+                }
+                self.queue.pop_batch_preferring(b, k)
+            }
+            _ => {
+                self.warm_bypass_streak = 0;
+                self.queue.pop_batch(k)
+            }
+        };
+        // is this batch seeded by the true queue head?
+        let head_seeded = batch.first().map(|q| Some(q.bucket) == head_bucket).unwrap_or(false);
+        let head_seed_id = batch.first().map(|q| q.id);
+
+        let mut admitted: Vec<QueuedRequest> = Vec::new();
+        let mut deferred: Vec<QueuedRequest> = Vec::new();
+        // The batch prefills sequentially, so at any instant memory holds the
+        // retained caches of everything admitted so far plus ONE transient
+        // uncompressed layer — peak-check each request, then accumulate only
+        // its retained bytes.
+        let mut projected = self.live_kv_bytes();
+        for q in batch {
+            let len = q.request.prompt.len();
+            let peak = self.projected_bytes(len);
+            match self.opts.kv_mem_limit {
+                // a request that can never fit must not spin in the queue
+                Some(limit) if peak > limit => {
+                    let reason = format!(
+                        "projected KV bytes {peak} exceed kv_mem_limit {limit}: rejected"
+                    );
+                    self.park_queued(q, FinishStatus::Rejected, reason);
+                }
+                // once one request defers, defer the rest of the batch too:
+                // a younger request must not overtake an older one that was
+                // only short on memory (FIFO fairness)
+                Some(limit) if !deferred.is_empty() || projected + peak > limit => {
+                    deferred.push(q)
+                }
+                _ => {
+                    projected += self.retained_bytes(len);
+                    admitted.push(q);
+                }
+            }
+        }
+        // If the oldest request itself was just deferred for memory, freeze
+        // warm preference until a head-seeded round admits (or rejects) it —
+        // freed memory must reach the head, not younger warm arrivals.
+        if head_seeded {
+            self.head_memory_blocked = head_seed_id
+                .map(|id| deferred.iter().any(|q| q.id == id))
+                .unwrap_or(false);
+        }
+        for q in deferred.into_iter().rev() {
+            self.queue.requeue(q);
+        }
+        self.engine.metrics.admission_rounds += 1;
+        admitted
+    }
+
+    /// Prefill every admitted request (they share a shape bucket, so after
+    /// the first the executable is compile-warm). A per-request prefill
+    /// failure parks that request with an error result instead of poisoning
+    /// the serving loop.
+    pub fn prefill_batch(&mut self, batch: Vec<QueuedRequest>) -> Result<usize> {
+        let mut done = 0;
+        for q in batch {
+            self.warm_bucket = Some(q.bucket);
+            let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
+            let mut sess = self.engine.new_session_with_id(q.id, &q.request);
+            match self.engine.prefill(&mut sess) {
+                Ok(_) => {
+                    self.engine
+                        .metrics
+                        .observe_admission(wait_secs, wait_secs + sess.prefill_secs);
+                    done += 1;
+                    if sess.is_done() {
+                        self.retire(sess, FinishStatus::Completed, None);
+                    } else {
+                        self.active.push_back(sess);
+                    }
+                }
+                Err(e) => {
+                    drop(sess);
+                    self.park_queued(q, FinishStatus::Failed, format!("prefill failed: {e:#}"));
+                }
+            }
+        }
+        Ok(done)
+    }
+
+    /// One round-robin decode step per active session. A decode error kills
+    /// only that session (retired as `Failed`); the rest keep serving.
+    pub fn decode_round(&mut self) -> usize {
+        let mut stepped: usize = 0;
+        let mut still_active = VecDeque::new();
+        while let Some(mut sess) = self.active.pop_front() {
+            match self.engine.decode_step(&mut sess) {
+                Ok(_) => {
+                    stepped += 1;
+                    if sess.is_done() {
+                        self.retire(sess, FinishStatus::Completed, None);
+                    } else {
+                        still_active.push_back(sess);
+                    }
+                }
+                Err(e) => {
+                    self.retire(sess, FinishStatus::Failed, Some(format!("decode failed: {e:#}")));
+                }
+            }
+        }
+        self.active = still_active;
+        self.engine.metrics.decode_steps += stepped as u64;
+        stepped
+    }
+
+    /// One scheduler tick: admit+prefill a batch when due, then advance every
     /// active session by one decode step. Returns true if any work was done.
     pub fn tick(&mut self) -> Result<bool> {
         self.tick += 1;
         let want_prefill = self.active.is_empty()
             || (self.tick % self.opts.prefill_every == 0 && !self.queue.is_empty());
 
+        let finished_before = self.finished.len();
+        let mut worked = false;
         if want_prefill {
-            // peek oldest; admit if memory allows
-            if let Some(q) = self.queue.pop() {
-                if self.can_admit(q.request.prompt.len()) {
-                    let mut sess = self.engine.new_session(&q.request);
-                    self.id_map.push((q.id, sess.id));
-                    self.engine.prefill(&mut sess)?;
-                    if sess.is_done() {
-                        self.retire(sess);
-                    } else {
-                        self.active.push_back(sess);
-                    }
-                    return Ok(true);
-                } else {
-                    // no capacity: requeue at the front by re-pushing last
-                    // (simplest backpressure: defer)
-                    let id = q.id;
-                    self.queue.push(q.request);
-                    let _ = id;
-                }
-            }
+            let batch = self.admit();
+            worked |= self.prefill_batch(batch)? > 0;
         }
-
-        if self.active.is_empty() {
-            return Ok(false);
-        }
-        // round-robin: one decode step per active session
-        let mut still_active = VecDeque::new();
-        while let Some(mut sess) = self.active.pop_front() {
-            self.engine.decode_step(&mut sess)?;
-            if sess.is_done() {
-                self.retire(sess);
-            } else {
-                still_active.push_back(sess);
-            }
-        }
-        self.active = still_active;
-        Ok(true)
+        worked |= self.decode_round() > 0;
+        // a tick that only rejected requests still made progress
+        worked |= self.finished.len() > finished_before;
+        Ok(worked)
     }
 
-    fn retire(&mut self, sess: Session) {
-        self.engine.metrics.finish_request(
-            sess.prefill_secs,
-            sess.decode_secs,
-            sess.generated.len(),
-        );
+    /// Park a queued request with a terminal non-completed result.
+    fn park_queued(&mut self, q: QueuedRequest, status: FinishStatus, reason: String) {
+        match status {
+            FinishStatus::Failed => self.engine.metrics.requests_failed += 1,
+            _ => self.engine.metrics.requests_rejected += 1,
+        }
+        self.finished.push((
+            q.id,
+            GenerateResult {
+                id: q.id,
+                status,
+                error: Some(reason),
+                tokens: vec![],
+                prefill_secs: 0.0,
+                decode_secs: 0.0,
+                kv_bytes_after_prefill: 0,
+                peak_kv_bytes: self.engine.metrics.peak_kv_bytes,
+                budgets: vec![],
+            },
+        ));
+    }
+
+    fn retire(&mut self, sess: Session, status: FinishStatus, error: Option<String>) {
+        match status {
+            FinishStatus::Completed => self.engine.metrics.finish_request(
+                sess.prefill_secs,
+                sess.decode_secs,
+                sess.generated.len(),
+            ),
+            FinishStatus::Canceled => self.engine.metrics.requests_canceled += 1,
+            FinishStatus::Failed => self.engine.metrics.requests_failed += 1,
+            FinishStatus::Rejected => self.engine.metrics.requests_rejected += 1,
+        }
         let result = GenerateResult {
+            id: sess.id,
+            status,
+            error,
             tokens: sess.generated.clone(),
             prefill_secs: sess.prefill_secs,
             decode_secs: sess.decode_secs,
@@ -153,8 +426,9 @@ impl<B: ModelBackend> Scheduler<B> {
         self.finished.push((sess.id, result));
     }
 
-    /// Drive everything to completion; returns finished (session-id, result)
-    /// pairs in completion order.
+    /// Drive everything to completion; returns finished (request-id, result)
+    /// pairs in completion order. Terminates even when some requests can
+    /// never be admitted — those come back with `FinishStatus::Rejected`.
     pub fn run_to_completion(&mut self) -> Result<Vec<(u64, GenerateResult)>> {
         while !self.queue.is_empty() || !self.active.is_empty() {
             self.tick()?;
@@ -195,6 +469,7 @@ mod tests {
         assert_eq!(done.len(), 5);
         for (_, r) in &done {
             assert_eq!(r.tokens.len(), 4);
+            assert_eq!(r.status, FinishStatus::Completed);
         }
         assert_eq!(s.engine.metrics.requests_finished, 5);
     }
@@ -225,11 +500,83 @@ mod tests {
         }
         let done = s.run_to_completion().unwrap();
         assert_eq!(done.len(), 4, "deferred requests must still finish");
+        for (_, r) in &done {
+            assert_eq!(r.status, FinishStatus::Completed, "deferral must not reject");
+        }
     }
 
     #[test]
     fn rejects_oversized() {
         let mut s = sched(None);
-        assert!(s.submit(req(1 << 20, 1)).is_none());
+        assert!(matches!(
+            s.submit(req(1 << 20, 1)),
+            Err(SubmitError::PromptTooLong { .. })
+        ));
+    }
+
+    #[test]
+    fn same_bucket_prefills_admitted_as_group() {
+        // 4 requests in the same shape bucket, room for all: one admission
+        // round (the first tick) must bring in the whole group.
+        let mut s = sched(None);
+        for _ in 0..4 {
+            s.submit(req(100, 8)).unwrap();
+        }
+        s.tick().unwrap();
+        assert_eq!(s.active_count(), 4, "pop_batch group must be admitted together");
+        assert_eq!(s.pending_count(), 0);
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4);
+    }
+
+    #[test]
+    fn oversized_request_is_rejected_not_livelocked() {
+        // Regression: a request whose projected KV alone exceeds the limit
+        // used to be requeued forever, spinning run_to_completion.
+        let mut s = sched(Some(1_000));
+        // bypass the submit-time guard to exercise the admission-time one
+        s.queue.push(req(200, 4)).unwrap();
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].1.status, FinishStatus::Rejected);
+        assert!(done[0].1.error.as_deref().unwrap().contains("kv_mem_limit"));
+        assert_eq!(s.engine.metrics.requests_rejected, 1);
+    }
+
+    #[test]
+    fn submit_rejects_impossible_requests_upfront() {
+        let mut s = sched(Some(1_000));
+        assert!(matches!(
+            s.submit(req(200, 4)),
+            Err(SubmitError::OverMemoryLimit { .. })
+        ));
+    }
+
+    #[test]
+    fn backpressure_knob_sheds_load() {
+        let mut s = sched(None);
+        s.opts.max_queue_wait_secs = Some(0.0);
+        s.submit(req(100, 4)).unwrap();
+        std::thread::sleep(std::time::Duration::from_millis(5));
+        // oldest has now waited > 0.0s -> new submissions are shed
+        assert!(matches!(
+            s.submit(req(100, 4)),
+            Err(SubmitError::QueueSaturated { .. })
+        ));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+    }
+
+    #[test]
+    fn cancel_queued_and_unknown() {
+        let mut s = sched(None);
+        let id = s.submit(req(100, 4)).unwrap();
+        assert!(s.cancel(id));
+        assert!(!s.cancel(id), "double-cancel must be a no-op");
+        assert!(!s.cancel(9999));
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].1.status, FinishStatus::Canceled);
+        assert!(done[0].1.tokens.is_empty());
     }
 }

@@ -1,75 +1,134 @@
-//! JSON-lines TCP front-end.
+//! JSON-lines TCP front-end over the scheduler.
 //!
-//! Protocol (one JSON object per line):
+//! Protocol (one JSON value per line):
 //!   request:  {"prompt": [int, ...], "max_new_tokens": int}
 //!             or {"text": "...", "max_new_tokens": int} (byte-level)
-//!   response: {"tokens": [...], "text": "...", "prefill_ms": f,
-//!              "decode_ms": f, "kv_bytes": n}
-//!   control:  {"cmd": "metrics"} | {"cmd": "shutdown"}
+//!   batch:    [request, request, ...] — submitted together, admitted by
+//!             shape bucket through the scheduler's batched prefill path;
+//!             the reply is one JSON array of responses in submission order
+//!   response: {"id": n, "status": "completed"|"rejected"|"canceled"|
+//!              "failed", "tokens": [...], "text": "...", "prefill_ms": f,
+//!              "decode_ms": f, "kv_bytes": n} (plus "error" when not ok;
+//!              "id" is null for requests refused at submit time)
+//!   control:  {"cmd": "metrics"} | {"cmd": "cancel", "id": n}
+//!             | {"cmd": "shutdown"}
 //!
 //! The engine is single-threaded (one CPU core, one PJRT client); the server
-//! accepts connections on the caller's thread and serves requests in order —
+//! accepts connections on the caller's thread and serves line-by-line —
 //! concurrency across requests happens in the scheduler, not across sockets.
+//! Because each line is driven to completion before the next is read,
+//! `cancel` over this transport only ever sees already-finished ids (it
+//! replies {"ok": false}); it is wired for embedders driving the scheduler
+//! directly and for the async front-end planned in ROADMAP "Open items".
 
 use std::io::{BufRead, BufReader, Write};
 use std::net::{TcpListener, TcpStream};
 
 use anyhow::Result;
 
-use super::engine::{Engine, GenerateRequest};
+use super::engine::{Engine, FinishStatus, GenerateRequest, GenerateResult};
+use super::scheduler::{Scheduler, SchedulerOptions};
 use crate::model::backend::ModelBackend;
 use crate::util::json::{self, Json};
 
 pub struct Server<B: ModelBackend> {
-    pub engine: Engine<B>,
+    pub sched: Scheduler<B>,
 }
 
 impl<B: ModelBackend> Server<B> {
     pub fn new(engine: Engine<B>) -> Server<B> {
-        Server { engine }
+        Server::with_options(engine, SchedulerOptions::default())
+    }
+
+    pub fn with_options(engine: Engine<B>, opts: SchedulerOptions) -> Server<B> {
+        Server { sched: Scheduler::new(engine, opts) }
     }
 
     /// Parse one request line. Exposed for tests.
     pub fn parse_request(&self, line: &str) -> Result<ParsedLine> {
         let j = Json::parse(line)?;
-        if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
-            return Ok(ParsedLine::Command(cmd.to_string()));
+        if let Some(batch) = j.as_arr() {
+            let reqs: Result<Vec<GenerateRequest>> =
+                batch.iter().map(request_from_json).collect();
+            return Ok(ParsedLine::Batch(reqs?));
         }
-        let max_new = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
-        let prompt: Vec<i32> = if let Some(arr) = j.get("prompt").and_then(|v| v.as_arr()) {
-            arr.iter().filter_map(|x| x.as_f64().map(|f| f as i32)).collect()
-        } else if let Some(text) = j.get("text").and_then(|v| v.as_str()) {
-            text.bytes().map(|b| b as i32).collect()
-        } else {
-            anyhow::bail!("request needs 'prompt' or 'text'");
-        };
-        Ok(ParsedLine::Request(GenerateRequest { prompt, max_new_tokens: max_new }))
+        if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+            let id = j.get("id").and_then(|v| v.as_usize()).map(|v| v as u64);
+            return Ok(ParsedLine::Command(cmd.to_string(), id));
+        }
+        Ok(ParsedLine::Request(request_from_json(&j)?))
     }
 
-    /// Serve one request and render the response line. Exposed for tests.
-    pub fn handle_request(&mut self, req: &GenerateRequest) -> String {
-        match self.engine.generate(req) {
-            Ok(r) => {
-                let text: String = r
-                    .tokens
-                    .iter()
-                    .filter(|&&t| (0..256).contains(&t))
-                    .map(|&t| t as u8 as char)
-                    .collect();
-                json::to_string(&Json::obj(vec![
-                    ("tokens", Json::Arr(r.tokens.iter().map(|&t| Json::num(t as f64)).collect())),
-                    ("text", Json::str(text)),
-                    ("prefill_ms", Json::num(r.prefill_secs * 1e3)),
-                    ("decode_ms", Json::num(r.decode_secs * 1e3)),
-                    ("kv_bytes", Json::num(r.kv_bytes_after_prefill as f64)),
-                ]))
+    /// Serve one batch of requests through the scheduler and render one
+    /// response per request, in submission order. Exposed for tests.
+    pub fn handle_batch(&mut self, reqs: &[GenerateRequest]) -> Vec<Json> {
+        // submission-order slot for every request: either an id to wait for
+        // or an immediate submit-error response
+        let mut slots: Vec<Result<u64, Json>> = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            match self.sched.submit(req.clone()) {
+                Ok(id) => slots.push(Ok(id)),
+                // refused before an id was assigned -> "id": null
+                Err(e) => slots.push(Err(Json::obj(vec![
+                    ("id", Json::Null),
+                    ("status", Json::str("rejected")),
+                    ("error", Json::str(format!("{e}"))),
+                ]))),
             }
-            Err(e) => json::to_string(&Json::obj(vec![("error", Json::str(format!("{e:#}")))])),
         }
+        let (finished, engine_err) = match self.sched.run_to_completion() {
+            Ok(f) => (f, None),
+            // Defensive: the scheduler currently parks every engine error as
+            // a Failed result, so this arm should be unreachable — but if a
+            // future step does propagate, drain what finished and keep the
+            // submit-time rejections intact.
+            Err(e) => (self.sched.take_finished(), Some(format!("{e:#}"))),
+        };
+        slots
+            .into_iter()
+            .map(|slot| match slot {
+                Err(resp) => resp,
+                Ok(id) => finished
+                    .iter()
+                    .find(|(fid, _)| *fid == id)
+                    .map(|(_, r)| result_to_json(r))
+                    .unwrap_or_else(|| {
+                        let detail = engine_err
+                            .clone()
+                            .unwrap_or_else(|| format!("result lost for id {id}"));
+                        Json::obj(vec![
+                            ("id", Json::num(id as f64)),
+                            ("status", Json::str("failed")),
+                            ("error", Json::str(detail)),
+                        ])
+                    }),
+            })
+            .collect()
+    }
+
+    fn metrics_json(&self) -> Json {
+        let m = &self.sched.engine.metrics;
+        Json::obj(vec![
+            ("requests", Json::num(m.requests_finished as f64)),
+            ("rejected", Json::num(m.requests_rejected as f64)),
+            ("canceled", Json::num(m.requests_canceled as f64)),
+            ("failed", Json::num(m.requests_failed as f64)),
+            ("tokens", Json::num(m.tokens_generated as f64)),
+            ("ttft_ms_mean", Json::num(m.mean_ttft_ms())),
+            ("ttft_ms_p99", Json::num(m.p99_ttft_ms())),
+            ("queue_wait_ms_mean", Json::num(m.mean_queue_wait_ms())),
+            ("prefill_ms_mean", Json::num(m.mean_prefill_ms())),
+            ("decode_ms_mean", Json::num(m.mean_decode_ms())),
+            ("decode_ms_p99", Json::num(m.p99_decode_ms())),
+            ("decode_tok_s", Json::num(m.decode_tok_per_sec())),
+            ("peak_kv_mb", Json::num(m.peak_kv_bytes as f64 / 1e6)),
+            ("admission_rounds", Json::num(m.admission_rounds as f64)),
+            ("decode_steps", Json::num(m.decode_steps as f64)),
+            ("report", Json::str(m.report())),
+        ])
     }
 
     fn handle_conn(&mut self, stream: TcpStream) -> Result<bool> {
-        let peer = stream.peer_addr().ok();
         let mut writer = stream.try_clone()?;
         let reader = BufReader::new(stream);
         for line in reader.lines() {
@@ -78,22 +137,42 @@ impl<B: ModelBackend> Server<B> {
                 continue;
             }
             let reply = match self.parse_request(&line) {
-                Ok(ParsedLine::Command(cmd)) if cmd == "shutdown" => {
-                    writeln!(writer, "{}", json::to_string(&Json::obj(vec![("ok", Json::Bool(true))])))?;
+                Ok(ParsedLine::Command(cmd, _)) if cmd == "shutdown" => {
+                    writeln!(
+                        writer,
+                        "{}",
+                        json::to_string(&Json::obj(vec![("ok", Json::Bool(true))]))
+                    )?;
                     return Ok(true);
                 }
-                Ok(ParsedLine::Command(cmd)) if cmd == "metrics" => json::to_string(&Json::obj(
-                    vec![("metrics", Json::str(self.engine.metrics.report()))],
-                )),
-                Ok(ParsedLine::Command(cmd)) => {
-                    json::to_string(&Json::obj(vec![("error", Json::str(format!("unknown cmd {cmd}")))]))
+                Ok(ParsedLine::Command(cmd, _)) if cmd == "metrics" => {
+                    json::to_string(&Json::obj(vec![("metrics", self.metrics_json())]))
                 }
-                Ok(ParsedLine::Request(req)) => self.handle_request(&req),
+                Ok(ParsedLine::Command(cmd, id)) if cmd == "cancel" => match id {
+                    Some(id) => {
+                        let ok = self.sched.cancel(id);
+                        json::to_string(&Json::obj(vec![("ok", Json::Bool(ok))]))
+                    }
+                    None => json::to_string(&Json::obj(vec![(
+                        "error",
+                        Json::str("cancel needs an 'id'"),
+                    )])),
+                },
+                Ok(ParsedLine::Command(cmd, _)) => json::to_string(&Json::obj(vec![(
+                    "error",
+                    Json::str(format!("unknown cmd {cmd}")),
+                )])),
+                Ok(ParsedLine::Request(req)) => {
+                    let resps = self.handle_batch(std::slice::from_ref(&req));
+                    json::to_string(&resps[0])
+                }
+                Ok(ParsedLine::Batch(reqs)) => {
+                    json::to_string(&Json::Arr(self.handle_batch(&reqs)))
+                }
                 Err(e) => json::to_string(&Json::obj(vec![("error", Json::str(format!("{e:#}")))])),
             };
             writeln!(writer, "{reply}")?;
         }
-        let _ = peer;
         Ok(false)
     }
 
@@ -115,9 +194,53 @@ impl<B: ModelBackend> Server<B> {
     }
 }
 
+fn request_from_json(j: &Json) -> Result<GenerateRequest> {
+    let max_new = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
+    let prompt: Vec<i32> = if let Some(arr) = j.get("prompt").and_then(|v| v.as_arr()) {
+        arr.iter().filter_map(|x| x.as_f64().map(|f| f as i32)).collect()
+    } else if let Some(text) = j.get("text").and_then(|v| v.as_str()) {
+        text.bytes().map(|b| b as i32).collect()
+    } else {
+        anyhow::bail!("request needs 'prompt' or 'text'");
+    };
+    Ok(GenerateRequest { prompt, max_new_tokens: max_new })
+}
+
+fn status_str(s: FinishStatus) -> &'static str {
+    match s {
+        FinishStatus::Completed => "completed",
+        FinishStatus::Rejected => "rejected",
+        FinishStatus::Canceled => "canceled",
+        FinishStatus::Failed => "failed",
+    }
+}
+
+fn result_to_json(r: &GenerateResult) -> Json {
+    let text: String = r
+        .tokens
+        .iter()
+        .filter(|&&t| (0..256).contains(&t))
+        .map(|&t| t as u8 as char)
+        .collect();
+    let mut pairs = vec![
+        ("id", Json::num(r.id as f64)),
+        ("status", Json::str(status_str(r.status))),
+        ("tokens", Json::Arr(r.tokens.iter().map(|&t| Json::num(t as f64)).collect())),
+        ("text", Json::str(text)),
+        ("prefill_ms", Json::num(r.prefill_secs * 1e3)),
+        ("decode_ms", Json::num(r.decode_secs * 1e3)),
+        ("kv_bytes", Json::num(r.kv_bytes_after_prefill as f64)),
+    ];
+    if let Some(e) = &r.error {
+        pairs.push(("error", Json::str(e.clone())));
+    }
+    Json::obj(pairs)
+}
+
 pub enum ParsedLine {
     Request(GenerateRequest),
-    Command(String),
+    Batch(Vec<GenerateRequest>),
+    Command(String, Option<u64>),
 }
 
 #[cfg(test)]
@@ -153,10 +276,46 @@ mod tests {
             _ => panic!(),
         }
         match s.parse_request(r#"{"cmd": "metrics"}"#).unwrap() {
-            ParsedLine::Command(c) => assert_eq!(c, "metrics"),
+            ParsedLine::Command(c, _) => assert_eq!(c, "metrics"),
+            _ => panic!(),
+        }
+        match s.parse_request(r#"{"cmd": "cancel", "id": 7}"#).unwrap() {
+            ParsedLine::Command(c, id) => {
+                assert_eq!(c, "cancel");
+                assert_eq!(id, Some(7));
+            }
+            _ => panic!(),
+        }
+        match s
+            .parse_request(r#"[{"prompt": [1,2], "max_new_tokens": 2}, {"text": "A"}]"#)
+            .unwrap()
+        {
+            ParsedLine::Batch(rs) => assert_eq!(rs.len(), 2),
             _ => panic!(),
         }
         assert!(s.parse_request(r#"{"nope": 1}"#).is_err());
+    }
+
+    #[test]
+    fn batch_replies_in_submission_order_with_ids() {
+        let mut s = server();
+        let reqs: Vec<GenerateRequest> = (0..3)
+            .map(|i| GenerateRequest {
+                prompt: (0..100).map(|t| (t % 250) as i32).collect(),
+                max_new_tokens: i + 1,
+            })
+            .collect();
+        let resps = s.handle_batch(&reqs);
+        assert_eq!(resps.len(), 3);
+        for (i, r) in resps.iter().enumerate() {
+            assert_eq!(r.get("status").unwrap().as_str().unwrap(), "completed");
+            assert_eq!(
+                r.get("tokens").unwrap().as_arr().unwrap().len(),
+                i + 1,
+                "response {i} must map back to its submission"
+            );
+            assert_eq!(r.get("id").unwrap().as_usize().unwrap(), i + 1);
+        }
     }
 
     #[test]
@@ -188,6 +347,33 @@ mod tests {
         reader.read_line(&mut line).unwrap();
         let j = Json::parse(line.trim()).unwrap();
         assert_eq!(j.get("tokens").unwrap().as_arr().unwrap().len(), 3);
+        assert_eq!(j.get("status").unwrap().as_str().unwrap(), "completed");
+        assert!(j.get("id").unwrap().as_usize().unwrap() >= 1);
+
+        // a batch line gets an array reply, in submission order
+        writeln!(
+            c,
+            "[{{\"prompt\": [{p}], \"max_new_tokens\": 1}}, {{\"prompt\": [{p}], \"max_new_tokens\": 2}}]",
+            p = prompt.join(",")
+        )
+        .unwrap();
+        let mut line_b = String::new();
+        reader.read_line(&mut line_b).unwrap();
+        let jb = Json::parse(line_b.trim()).unwrap();
+        let arr = jb.as_arr().unwrap();
+        assert_eq!(arr.len(), 2);
+        assert_eq!(arr[0].get("tokens").unwrap().as_arr().unwrap().len(), 1);
+        assert_eq!(arr[1].get("tokens").unwrap().as_arr().unwrap().len(), 2);
+
+        // structured metrics reply
+        writeln!(c, "{{\"cmd\": \"metrics\"}}").unwrap();
+        let mut line_m = String::new();
+        reader.read_line(&mut line_m).unwrap();
+        let jm = Json::parse(line_m.trim()).unwrap();
+        let m = jm.get("metrics").unwrap();
+        assert_eq!(m.get("requests").unwrap().as_usize().unwrap(), 3);
+        assert!(m.get("ttft_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
+
         writeln!(c, "{{\"cmd\": \"shutdown\"}}").unwrap();
         let mut line2 = String::new();
         reader.read_line(&mut line2).unwrap();

@@ -1,0 +1,84 @@
+//! Scoped-thread fan-out for the scoring / recompression hot paths.
+//!
+//! rayon is not in the offline vendor set, so this is the minimal shape the
+//! engine needs: run a closure over a set of items on `std::thread::scope`
+//! workers, with round-robin sharding (each item is touched by exactly one
+//! worker, so `&mut` items are fine). Callers gate on a work-size threshold
+//! and fall back to a serial loop below it — thread spawn is ~tens of
+//! microseconds, which dwarfs small layers.
+
+use std::num::NonZeroUsize;
+
+/// Worker cap: one thread per available core.
+pub fn max_threads() -> usize {
+    std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+}
+
+/// Apply `f` to every item, fanning out across up to `max_threads()` scoped
+/// workers. Items are sharded round-robin; ordering of side effects across
+/// items is unspecified, so `f` must be independent per item (it is handed
+/// each item exactly once). Serial when one worker or one item.
+pub fn scoped_for_each<T, I, F>(items: I, f: F)
+where
+    I: Iterator<Item = T>,
+    T: Send,
+    F: Fn(T) + Sync,
+{
+    let items: Vec<T> = items.collect();
+    let workers = max_threads().min(items.len());
+    if workers <= 1 {
+        for item in items {
+            f(item);
+        }
+        return;
+    }
+    let mut shards: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
+    for (i, item) in items.into_iter().enumerate() {
+        shards[i % workers].push(item);
+    }
+    std::thread::scope(|s| {
+        for shard in shards {
+            let f = &f;
+            s.spawn(move || {
+                for item in shard {
+                    f(item);
+                }
+            });
+        }
+    });
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn visits_every_item_once() {
+        let hits = AtomicUsize::new(0);
+        let sum = AtomicUsize::new(0);
+        scoped_for_each(0..100usize, |i| {
+            hits.fetch_add(1, Ordering::SeqCst);
+            sum.fetch_add(i, Ordering::SeqCst);
+        });
+        assert_eq!(hits.load(Ordering::SeqCst), 100);
+        assert_eq!(sum.load(Ordering::SeqCst), 99 * 100 / 2);
+    }
+
+    #[test]
+    fn mutates_disjoint_items() {
+        let mut xs = vec![0usize; 64];
+        scoped_for_each(xs.iter_mut().enumerate(), |(i, x)| *x = i * 2);
+        for (i, &x) in xs.iter().enumerate() {
+            assert_eq!(x, i * 2);
+        }
+    }
+
+    #[test]
+    fn empty_and_single() {
+        scoped_for_each(std::iter::empty::<usize>(), |_| panic!("no items"));
+        let mut one = vec![0];
+        scoped_for_each(one.iter_mut(), |x| *x = 7);
+        assert_eq!(one[0], 7);
+    }
+}
