@@ -10,7 +10,16 @@
 //! tokens/s for one-at-a-time admission (max_prefill_batch=1, the old
 //! behavior) vs batched same-bucket admission (the pop_batch path).
 //!
+//! Part 3 — tiering: the same mixed workload under a kv_mem_limit tight
+//! enough to force deferrals, with hot/warm tiering off (the old
+//! defer-and-wait scheduler) vs on (spill idle layers to Q8 warm blocks,
+//! prefetch before decode), reporting wall time, deferrals, spill/prefetch
+//! counts, and peak hot-tier bytes.
+//!
 //!   cargo bench --bench serving [-- --pjrt] [-- --ctx 512] [-- --requests 24]
+//!
+//! `--smoke` runs every mock-backend section with tiny iteration counts so
+//! CI can compile-and-exercise the whole bench path in seconds.
 
 use lava::bench::harness::bench_for;
 use lava::compress::Policy;
@@ -109,12 +118,89 @@ fn run_scheduler_bench(ctx: usize, n_requests: usize, reps: usize) {
     }
 }
 
+fn tiering_sched(tiering: bool, limit: Option<usize>) -> Scheduler<MockBackend> {
+    let mock = MockBackend::new(MockBackend::default_config());
+    let engine = Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+    Scheduler::new(
+        engine,
+        SchedulerOptions {
+            kv_mem_limit: limit,
+            max_active: 8,
+            prefill_every: 2,
+            max_prefill_batch: 4,
+            tiering,
+            ..Default::default()
+        },
+    )
+}
+
+fn run_tiering_bench(ctx: usize, n_requests: usize, reps: usize) {
+    // A kv_mem_limit tight enough that the seed scheduler must defer most
+    // of the mixed workload, derived from the scheduler's own projection
+    // accounting (stays calibrated if the formulas change): one
+    // largest-request peak plus one retained budget.
+    let limit = {
+        let probe = tiering_sched(false, None);
+        let max_len = mixed_workload(ctx, n_requests)
+            .iter()
+            .map(|r| r.prompt.len())
+            .max()
+            .unwrap_or(ctx);
+        probe.projected_bytes(max_len) + probe.retained_bytes(max_len)
+    };
+    for (label, tiering) in [("tiering-off", false), ("tiering-on", true)] {
+        let mut walls = Vec::new();
+        let mut last_report = String::new();
+        for _ in 0..reps {
+            let mut sched = tiering_sched(tiering, Some(limit));
+            let reqs = mixed_workload(ctx, n_requests);
+            let t0 = std::time::Instant::now();
+            for req in reqs {
+                sched.submit(req).unwrap();
+            }
+            let done = sched.run_to_completion().unwrap();
+            walls.push(t0.elapsed().as_secs_f64());
+            assert_eq!(done.len(), n_requests);
+            let m = &sched.engine.metrics;
+            if tiering {
+                assert!(
+                    m.peak_hot_kv_bytes <= limit,
+                    "hot tier exceeded the limit: {} > {limit}",
+                    m.peak_hot_kv_bytes
+                );
+            }
+            last_report = format!(
+                "completed={} deferrals={} spills={} prefetches={} \
+                 peak_hot_mb={:.2} peak_warm_mb={:.2} ttft_ms(mean)={:.3}",
+                m.requests_finished,
+                m.requests_deferred,
+                m.spills,
+                m.prefetches,
+                m.peak_hot_kv_bytes as f64 / 1e6,
+                m.peak_warm_kv_bytes as f64 / 1e6,
+                m.mean_ttft_ms(),
+            );
+        }
+        let mean_wall: f64 = walls.iter().sum::<f64>() / walls.len() as f64;
+        println!(
+            "{:<40} {:>10.2} ms wall ({} reqs, limit {:.2} MB) | {}",
+            format!("tiering/{label}/ctx{ctx}"),
+            mean_wall * 1e3,
+            n_requests,
+            limit as f64 / 1e6,
+            last_report
+        );
+    }
+}
+
 fn main() {
     let args = Args::parse_env();
-    let ctx = args.usize_or("ctx", 512);
-    let budget_secs = args.f64_or("secs", 0.5);
-    let n_requests = args.usize_or("requests", 24);
-    println!("== serving benchmarks (ctx {ctx}) ==");
+    let smoke = args.bool("smoke");
+    let ctx = args.usize_or("ctx", if smoke { 128 } else { 512 });
+    let budget_secs = args.f64_or("secs", if smoke { 0.02 } else { 0.5 });
+    let n_requests = args.usize_or("requests", if smoke { 6 } else { 24 });
+    let reps = if smoke { 1 } else { 3 };
+    println!("== serving benchmarks (ctx {ctx}{}) ==", if smoke { ", smoke" } else { "" });
     if args.bool("pjrt") {
         let dir = args.str_or("artifacts", "artifacts");
         match PjrtBackend::load(&dir) {
@@ -131,7 +217,9 @@ fn main() {
             Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
         run(&mut engine, ctx, budget_secs);
         println!("-- scheduler: mixed buckets, serial vs batched prefill admission --");
-        run_scheduler_bench(ctx, n_requests, 3);
+        run_scheduler_bench(ctx, n_requests, reps);
+        println!("-- tiering: memory pressure, hot/warm spill off vs on --");
+        run_tiering_bench(ctx, n_requests, reps);
         println!("(mock backend; pass -- --pjrt for the real model)");
     }
     println!("serving OK");

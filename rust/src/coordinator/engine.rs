@@ -21,7 +21,8 @@ use super::metrics::Metrics;
 use super::session::{Phase, Session};
 use crate::compress::select::{select_prefill, select_recompress, KeepSet};
 use crate::compress::{alloc, score, LayerAlloc, LayerObs, Policy, ScoreKind};
-use crate::kvcache::LayerCache;
+use crate::kvcache::tier::Residency;
+use crate::kvcache::HotStore;
 use crate::model::backend::{ModelBackend, PrefillOut};
 use crate::model::ModelConfig;
 use crate::runtime::{Runtime, Tensor};
@@ -221,9 +222,10 @@ impl<B: ModelBackend> Engine<B> {
                 n,
                 sess.max_new_tokens,
             )?;
-            let mut cache = LayerCache::new(cfg.n_kv_heads, cfg.d_head, capacity);
+            let mut cache = HotStore::new(cfg.n_kv_heads, cfg.d_head, capacity);
             cache.load_from_prefill(&out.k, &out.v, &keepset.keep, &keepset.scores);
             sess.caches.push(cache);
+            sess.residency.push(Residency::Hot);
 
             // Algorithm 2: recompress earlier layers to their shrunken budgets.
             if dynamic {
@@ -256,7 +258,15 @@ impl<B: ModelBackend> Engine<B> {
     }
 
     /// One decode step: feed the last generated token, produce the next.
+    /// Residency boundary: the engine only ever sees hot caches — a session
+    /// with warm layers must be prefetched by the tier manager first.
     pub fn decode_step(&mut self, sess: &mut Session) -> Result<i32> {
+        if !sess.is_fully_hot() {
+            bail!(
+                "decode_step on session {} with non-resident layers (prefetch before decode)",
+                sess.id
+            );
+        }
         let t0 = std::time::Instant::now();
         let cfg = self.backend.config().clone();
         let tok = *sess.generated.last().ok_or_else(|| anyhow!("decode before prefill"))?;
@@ -335,12 +345,12 @@ impl<B: ModelBackend> Engine<B> {
 const RECOMPRESS_PAR_MIN_ENTRIES: usize = 8192;
 
 fn recompress_earlier(
-    caches: &mut [LayerCache],
+    caches: &mut [HotStore],
     budgets: &[usize],
     n_kv_heads: usize,
     head_alloc: crate::compress::HeadAlloc,
 ) {
-    let shrink_one = |(l2, cache): (usize, &mut LayerCache)| {
+    let shrink_one = |(l2, cache): (usize, &mut HotStore)| {
         if cache.total_entries() > budgets[l2] {
             let stored: Vec<&[f32]> = (0..n_kv_heads).map(|h| cache.head_scores(h)).collect();
             let keep = select_recompress(&stored, budgets[l2], head_alloc);
@@ -379,7 +389,7 @@ fn decode_entry_score(policy: &Policy) -> f32 {
 
 /// H2O/TOVA decode-time score maintenance from the decode attention row.
 fn update_decode_scores(
-    cache: &mut LayerCache,
+    cache: &mut HotStore,
     attn: &Tensor,
     cfg: &ModelConfig,
     kind: ScoreKind,
@@ -408,8 +418,8 @@ fn update_decode_scores(
 }
 
 /// Evict the lowest-scored non-recent entry per over-budget head.
-fn evict_decode_overflow(cache: &mut LayerCache, per_head_budget: usize, pos: usize, window: usize) {
-    let hk = cache.n_kv_heads;
+fn evict_decode_overflow(cache: &mut HotStore, per_head_budget: usize, pos: usize, window: usize) {
+    let hk = cache.n_kv_heads();
     for h in 0..hk {
         while cache.head_len(h) > per_head_budget {
             let mut victim: Option<(usize, f32)> = None;
@@ -559,6 +569,19 @@ mod tests {
             e.decode_step(&mut sess).unwrap();
         }
         assert!(sess.total_entries() > before, "snapkv keeps decoded tokens");
+    }
+
+    #[test]
+    fn decode_refuses_non_resident_session() {
+        let mut e = engine("lava", 24);
+        let req = GenerateRequest { prompt: prompt(100), max_new_tokens: 4 };
+        let mut sess = e.new_session(&req);
+        e.prefill(&mut sess).unwrap();
+        sess.residency[0] = Residency::Warm;
+        let err = e.decode_step(&mut sess);
+        assert!(err.is_err(), "engine must refuse spilled (warm) layers");
+        sess.residency[0] = Residency::Hot;
+        e.decode_step(&mut sess).unwrap();
     }
 
     #[test]

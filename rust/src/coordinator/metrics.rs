@@ -26,11 +26,32 @@ pub struct Metrics {
     /// Scheduler step counters.
     pub admission_rounds: u64,
     pub decode_steps: u64,
+    /// Admission deferral events (a queued request bounced for memory and
+    /// requeued; one event per request per admission round).
+    pub requests_deferred: u64,
     /// Peak live KV bytes observed (incl. the transient uncompressed layer
     /// during prefill — the paper's "memory peak").
     pub peak_kv_bytes: usize,
     /// Current live KV bytes.
     pub live_kv_bytes: usize,
+    /// Hot-tier bytes across all active sessions (what `kv_mem_limit`
+    /// bounds once tiering is on) and their observed peak. This tracks
+    /// *retained* caches; the transient uncompressed layer live during
+    /// prefill is budgeted by admission and shows up in `peak_kv_bytes`
+    /// (via `observe_transient`), not in this gauge.
+    pub hot_kv_bytes: usize,
+    pub peak_hot_kv_bytes: usize,
+    /// Warm-tier (Q8 spilled) bytes and their observed peak.
+    pub warm_kv_bytes: usize,
+    pub peak_warm_kv_bytes: usize,
+    /// Tier transition counters: spills/prefetches, bytes moved (hot-side
+    /// accounting), and cumulative transition latency.
+    pub spills: u64,
+    pub prefetches: u64,
+    pub spilled_bytes: u64,
+    pub prefetched_bytes: u64,
+    pub spill_secs: f64,
+    pub prefetch_secs: f64,
     started: Option<Instant>,
 }
 
@@ -54,6 +75,38 @@ impl Metrics {
     pub fn observe_admission(&mut self, queue_wait_secs: f64, ttft_secs: f64) {
         self.queue_wait_secs.push(queue_wait_secs);
         self.ttft_secs.push(ttft_secs);
+    }
+
+    /// Record current hot-tier bytes (sum of resident caches across active
+    /// sessions — the quantity `kv_mem_limit` bounds under tiering).
+    pub fn observe_hot(&mut self, hot: usize) {
+        self.hot_kv_bytes = hot;
+        self.peak_hot_kv_bytes = self.peak_hot_kv_bytes.max(hot);
+    }
+
+    /// Record current warm-tier bytes.
+    pub fn observe_warm(&mut self, warm: usize) {
+        self.warm_kv_bytes = warm;
+        self.peak_warm_kv_bytes = self.peak_warm_kv_bytes.max(warm);
+    }
+
+    /// Record one hot→warm spill: hot bytes freed and transition latency.
+    pub fn observe_spill(&mut self, bytes: usize, secs: f64) {
+        self.spills += 1;
+        self.spilled_bytes += bytes as u64;
+        self.spill_secs += secs;
+    }
+
+    /// Record one warm→hot prefetch: hot bytes restored and latency.
+    pub fn observe_prefetch(&mut self, bytes: usize, secs: f64) {
+        self.prefetches += 1;
+        self.prefetched_bytes += bytes as u64;
+        self.prefetch_secs += secs;
+    }
+
+    /// Record one admission deferral event.
+    pub fn observe_deferral(&mut self) {
+        self.requests_deferred += 1;
     }
 
     pub fn finish_request(&mut self, prefill_secs: f64, decode_secs: f64, tokens: usize) {
@@ -107,16 +160,38 @@ impl Metrics {
         }
     }
 
+    /// Mean hot→warm spill latency in milliseconds (0 when no spills).
+    pub fn mean_spill_ms(&self) -> f64 {
+        if self.spills > 0 {
+            self.spill_secs / self.spills as f64 * 1e3
+        } else {
+            0.0
+        }
+    }
+
+    /// Mean warm→hot prefetch latency in milliseconds (0 when none).
+    pub fn mean_prefetch_ms(&self) -> f64 {
+        if self.prefetches > 0 {
+            self.prefetch_secs / self.prefetches as f64 * 1e3
+        } else {
+            0.0
+        }
+    }
+
     pub fn report(&self) -> String {
         format!(
-            "requests={} rejected={} canceled={} failed={} tokens={} ttft_ms(mean)={:.2} \
-             queue_wait_ms(mean)={:.2} prefill_ms(mean)={:.2} decode_ms(mean)={:.3} \
-             decode_ms(p99)={:.3} decode_tok_s={:.1} peak_kv_mb={:.2} \
+            "requests={} rejected={} canceled={} failed={} deferred={} tokens={} \
+             ttft_ms(mean)={:.2} queue_wait_ms(mean)={:.2} prefill_ms(mean)={:.2} \
+             decode_ms(mean)={:.3} decode_ms(p99)={:.3} decode_tok_s={:.1} peak_kv_mb={:.2} \
+             hot_kv_mb(peak)={:.2} warm_kv_mb(peak)={:.2} spills={} prefetches={} \
+             spilled_mb={:.2} prefetched_mb={:.2} \
+             spill_ms(mean)={:.3} prefetch_ms(mean)={:.3} \
              throughput_tok_s={:.1} admission_rounds={} decode_steps={}",
             self.requests_finished,
             self.requests_rejected,
             self.requests_canceled,
             self.requests_failed,
+            self.requests_deferred,
             self.tokens_generated,
             self.mean_ttft_ms(),
             self.mean_queue_wait_ms(),
@@ -125,6 +200,14 @@ impl Metrics {
             self.p99_decode_ms(),
             self.decode_tok_per_sec(),
             self.peak_kv_bytes as f64 / 1e6,
+            self.peak_hot_kv_bytes as f64 / 1e6,
+            self.peak_warm_kv_bytes as f64 / 1e6,
+            self.spills,
+            self.prefetches,
+            self.spilled_bytes as f64 / 1e6,
+            self.prefetched_bytes as f64 / 1e6,
+            self.mean_spill_ms(),
+            self.mean_prefetch_ms(),
             self.throughput_tok_per_sec(),
             self.admission_rounds,
             self.decode_steps,
@@ -158,6 +241,31 @@ mod tests {
         assert!((m.mean_prefill_ms() - 200.0).abs() < 1e-9);
         // mean per-token decode latency is 100 ms -> 10 tok/s
         assert!((m.decode_tok_per_sec() - 10.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn tier_accounting() {
+        let mut m = Metrics::new();
+        m.observe_hot(100);
+        m.observe_hot(40);
+        m.observe_warm(30);
+        m.observe_warm(10);
+        assert_eq!(m.hot_kv_bytes, 40);
+        assert_eq!(m.peak_hot_kv_bytes, 100);
+        assert_eq!(m.warm_kv_bytes, 10);
+        assert_eq!(m.peak_warm_kv_bytes, 30);
+        m.observe_spill(64, 0.002);
+        m.observe_spill(32, 0.004);
+        m.observe_prefetch(64, 0.001);
+        m.observe_deferral();
+        assert_eq!(m.spills, 2);
+        assert_eq!(m.spilled_bytes, 96);
+        assert_eq!(m.prefetches, 1);
+        assert_eq!(m.prefetched_bytes, 64);
+        assert_eq!(m.requests_deferred, 1);
+        assert!((m.mean_spill_ms() - 3.0).abs() < 1e-9);
+        assert!((m.mean_prefetch_ms() - 1.0).abs() < 1e-9);
+        assert!(m.report().contains("spills=2"));
     }
 
     #[test]

@@ -18,6 +18,29 @@
 //! without starving decodes — the standard continuous-batching compromise).
 //! One request id, assigned by the batcher at `submit`, names the request
 //! end-to-end: queue entry, session, and `GenerateResult`.
+//!
+//! ## KV tiering
+//!
+//! With `tiering` on (the default), `kv_mem_limit` bounds only the *hot*
+//! tier. The scheduler owns a [`TierManager`] and drives both transitions
+//! of the residency state machine:
+//!
+//! * **Spill** — when admission would defer a request for memory, idle
+//!   active sessions' lowest-LAVa-weight layers (smallest per-layer budget
+//!   from Algorithm 2) are dehydrated to Q8 warm blocks first, so the
+//!   request is admitted instead of deferred.
+//! * **Prefetch** — before a session's decode step, its spilled layers are
+//!   rehydrated into hot stores (spilling victims from sessions whose next
+//!   decode is farthest away when that would overshoot the limit). The
+//!   engine therefore only ever sees hot caches.
+//!
+//! The hot-tier bound holds whenever `kv_mem_limit` covers any single
+//! session's retained bytes plus its decode growth
+//! (`max_new_tokens * n_layers * n_kv_heads * d_head * 8`): a decoding
+//! session must be fully resident, so only *other* sessions are spill
+//! victims. This is the same per-session headroom the admission contract
+//! already assumed before tiering (decode growth was never part of
+//! `projected_bytes`).
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -26,7 +49,9 @@ use anyhow::Result;
 
 use super::batcher::{Batcher, QueuedRequest};
 use super::engine::{Engine, FinishStatus, GenerateRequest, GenerateResult};
+use super::metrics::Metrics;
 use super::session::Session;
+use crate::kvcache::tier::{Residency, TierManager};
 use crate::model::backend::ModelBackend;
 
 #[derive(Debug, Clone)]
@@ -43,6 +68,11 @@ pub struct SchedulerOptions {
     /// Backpressure: refuse new submissions once the oldest queued request
     /// has waited longer than this (None = accept until memory runs out).
     pub max_queue_wait_secs: Option<f64>,
+    /// Hot/warm KV tiering: under memory pressure, spill idle sessions'
+    /// lowest-weight layers to Q8 warm blocks instead of deferring
+    /// admission, and prefetch them back before decode. With this off,
+    /// `kv_mem_limit` reverts to the old defer-or-reject behavior.
+    pub tiering: bool,
 }
 
 impl Default for SchedulerOptions {
@@ -53,6 +83,7 @@ impl Default for SchedulerOptions {
             prefill_every: 4,
             max_prefill_batch: 4,
             max_queue_wait_secs: None,
+            tiering: true,
         }
     }
 }
@@ -98,6 +129,8 @@ pub struct Scheduler<B: ModelBackend> {
     pub engine: Engine<B>,
     pub queue: Batcher,
     pub opts: SchedulerOptions,
+    /// Hot/warm residency manager (owns the Q8 warm blocks).
+    pub tier: TierManager,
     active: VecDeque<Session>,
     finished: Vec<(u64, GenerateResult)>,
     tick: usize,
@@ -120,6 +153,7 @@ impl<B: ModelBackend> Scheduler<B> {
             engine,
             queue,
             opts,
+            tier: TierManager::new(),
             active: VecDeque::new(),
             finished: Vec::new(),
             tick: 0,
@@ -199,7 +233,9 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     /// Bytes a request's compressed caches hold after prefill (its budget).
-    fn retained_bytes(&self, prompt_len: usize) -> usize {
+    /// Public so benches/tests can calibrate `kv_mem_limit` from the same
+    /// accounting admission uses instead of re-deriving the formulas.
+    pub fn retained_bytes(&self, prompt_len: usize) -> usize {
         let cfg = self.engine.config();
         let budget_entries =
             self.engine.opts.budget_per_head * cfg.n_kv_heads * cfg.n_layers;
@@ -213,8 +249,9 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     /// Peak bytes a request needs while prefilling: retained caches plus one
-    /// uncompressed layer.
-    fn projected_bytes(&self, prompt_len: usize) -> usize {
+    /// uncompressed layer. Public for the same calibration reason as
+    /// [`Scheduler::retained_bytes`].
+    pub fn projected_bytes(&self, prompt_len: usize) -> usize {
         self.retained_bytes(prompt_len) + self.transient_bytes(prompt_len)
     }
 
@@ -264,26 +301,47 @@ impl<B: ModelBackend> Scheduler<B> {
         // The batch prefills sequentially, so at any instant memory holds the
         // retained caches of everything admitted so far plus ONE transient
         // uncompressed layer — peak-check each request, then accumulate only
-        // its retained bytes.
+        // its retained bytes. With tiering, "memory" means hot-tier bytes:
+        // spilling idle layers lowers `projected` and rescues the admission.
         let mut projected = self.live_kv_bytes();
         for q in batch {
             let len = q.request.prompt.len();
             let peak = self.projected_bytes(len);
             match self.opts.kv_mem_limit {
-                // a request that can never fit must not spin in the queue
+                // a request that can never fit even with every other session
+                // fully spilled must not spin in the queue
                 Some(limit) if peak > limit => {
                     let reason = format!(
                         "projected KV bytes {peak} exceed kv_mem_limit {limit}: rejected"
                     );
                     self.park_queued(q, FinishStatus::Rejected, reason);
                 }
-                // once one request defers, defer the rest of the batch too:
-                // a younger request must not overtake an older one that was
-                // only short on memory (FIFO fairness)
-                Some(limit) if !deferred.is_empty() || projected + peak > limit => {
-                    deferred.push(q)
+                Some(limit) => {
+                    let mut over = (projected + peak).saturating_sub(limit);
+                    if over > 0 && self.opts.tiering && deferred.is_empty() {
+                        // spill-aware deferral: dehydrate idle sessions'
+                        // lowest-weight layers before giving up the slot —
+                        // but only when spilling can actually cover the
+                        // shortfall, else a futile full spill would be
+                        // prefetched right back next decode round (churn)
+                        if self.live_kv_bytes() >= over {
+                            let freed = self.spill_active_until(over);
+                            projected = projected.saturating_sub(freed);
+                            over = (projected + peak).saturating_sub(limit);
+                        }
+                    }
+                    // once one request defers, defer the rest of the batch
+                    // too: a younger request must not overtake an older one
+                    // that was only short on memory (FIFO fairness)
+                    if over > 0 || !deferred.is_empty() {
+                        self.engine.metrics.observe_deferral();
+                        deferred.push(q);
+                    } else {
+                        projected += self.retained_bytes(len);
+                        admitted.push(q);
+                    }
                 }
-                _ => {
+                None => {
                     projected += self.retained_bytes(len);
                     admitted.push(q);
                 }
@@ -331,22 +389,39 @@ impl<B: ModelBackend> Scheduler<B> {
                     self.park_queued(q, FinishStatus::Failed, format!("prefill failed: {e:#}"));
                 }
             }
+            let hot = self.live_kv_bytes();
+            self.engine.metrics.observe_hot(hot);
         }
         Ok(done)
     }
 
     /// One round-robin decode step per active session. A decode error kills
-    /// only that session (retired as `Failed`); the rest keep serving.
+    /// only that session (retired as `Failed`); the rest keep serving. With
+    /// tiering on, each session is made fully hot-resident (prefetch, with
+    /// victim spills) before its step — the engine never sees warm layers.
     pub fn decode_round(&mut self) -> usize {
         let mut stepped: usize = 0;
-        let mut still_active = VecDeque::new();
+        let mut still_active: VecDeque<Session> = VecDeque::new();
         while let Some(mut sess) = self.active.pop_front() {
+            if self.opts.tiering {
+                self.make_resident(&mut sess, &mut still_active);
+            }
             match self.engine.decode_step(&mut sess) {
                 Ok(_) => {
                     stepped += 1;
                     if sess.is_done() {
                         self.retire(sess, FinishStatus::Completed, None);
                     } else {
+                        // per-step gauge fidelity only matters when a limit
+                        // is being enforced; the unlimited path settles for
+                        // the end-of-tick observation (skips an O(S·L) scan
+                        // per step)
+                        if self.opts.tiering && self.opts.kv_mem_limit.is_some() {
+                            let hot = sess.kv_bytes()
+                                + deque_kv_bytes(&self.active)
+                                + deque_kv_bytes(&still_active);
+                            self.engine.metrics.observe_hot(hot);
+                        }
                         still_active.push_back(sess);
                     }
                 }
@@ -358,6 +433,74 @@ impl<B: ModelBackend> Scheduler<B> {
         self.active = still_active;
         self.engine.metrics.decode_steps += stepped as u64;
         stepped
+    }
+
+    /// Prefetch `sess`'s spilled layers, first spilling other sessions'
+    /// layers when hot bytes would overshoot the limit. Victims are taken
+    /// from the sessions whose next decode step is farthest away: the back
+    /// of `decoded` (already stepped this round), then the back of the
+    /// not-yet-stepped queue.
+    fn make_resident(&mut self, sess: &mut Session, decoded: &mut VecDeque<Session>) {
+        let needed = self.tier.pending_hot_bytes(sess.id);
+        if let Some(limit) = self.opts.kv_mem_limit {
+            let others = deque_kv_bytes(&self.active) + deque_kv_bytes(decoded);
+            let hot_now = sess.kv_bytes() + others;
+            // reserve headroom for the entries this decode step will append
+            // (one per head per layer), so the post-step hot size still
+            // respects the limit
+            let growth: usize =
+                sess.caches.iter().map(|c| c.n_kv_heads() * c.d_head() * 2 * 4).sum();
+            let over = (hot_now + needed + growth).saturating_sub(limit);
+            if over > 0 {
+                let freed = spill_from_deque(
+                    &mut self.tier,
+                    &mut self.engine.metrics,
+                    decoded,
+                    sess.id,
+                    over,
+                );
+                if freed < over {
+                    spill_from_deque(
+                        &mut self.tier,
+                        &mut self.engine.metrics,
+                        &mut self.active,
+                        sess.id,
+                        over - freed,
+                    );
+                }
+                // If victims could not cover `over` (every other session is
+                // already fully warm), we still proceed: the decoding session
+                // must be resident, and its own footprint was admission-
+                // checked against the limit. The observe_hot below records
+                // the true value, so any overshoot shows in peak_hot.
+            }
+        }
+        if needed == 0 {
+            return;
+        }
+        // one observe_prefetch per layer, mirroring per-layer observe_spill,
+        // so the spill/prefetch counters and latencies share units
+        for l in self.tier.spilled_layers(sess.id) {
+            let t0 = std::time::Instant::now();
+            if let Some(hot) = self.tier.prefetch(sess.id, l) {
+                let restored = hot.live_bytes();
+                sess.caches[l] = hot;
+                sess.residency[l] = Residency::Hot;
+                self.engine.metrics.observe_prefetch(restored, t0.elapsed().as_secs_f64());
+            }
+        }
+        self.engine.metrics.observe_warm(self.tier.warm_bytes());
+        let hot = sess.kv_bytes() + deque_kv_bytes(&self.active) + deque_kv_bytes(decoded);
+        self.engine.metrics.observe_hot(hot);
+    }
+
+    /// Spill layers from active sessions (back of the queue first — their
+    /// next decode is farthest away) until `need` hot bytes are freed or
+    /// nothing spillable remains. Returns the bytes actually freed.
+    fn spill_active_until(&mut self, need: usize) -> usize {
+        // no session is mid-decode during admission, so every active
+        // session is an eligible victim (protect an id no session carries)
+        spill_from_deque(&mut self.tier, &mut self.engine.metrics, &mut self.active, u64::MAX, need)
     }
 
     /// One scheduler tick: admit+prefill a batch when due, then advance every
@@ -374,6 +517,8 @@ impl<B: ModelBackend> Scheduler<B> {
             worked |= self.prefill_batch(batch)? > 0;
         }
         worked |= self.decode_round() > 0;
+        let hot = self.live_kv_bytes();
+        self.engine.metrics.observe_hot(hot);
         // a tick that only rejected requests still made progress
         worked |= self.finished.len() > finished_before;
         Ok(worked)
@@ -402,6 +547,9 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     fn retire(&mut self, sess: Session, status: FinishStatus, error: Option<String>) {
+        // a leaving session's warm blocks are dead weight — release them
+        self.tier.drop_session(sess.id);
+        self.engine.metrics.observe_warm(self.tier.warm_bytes());
         match status {
             FinishStatus::Completed => self.engine.metrics.finish_request(
                 sess.prefill_secs,
@@ -439,6 +587,65 @@ impl<B: ModelBackend> Scheduler<B> {
     pub fn take_finished(&mut self) -> Vec<(u64, GenerateResult)> {
         std::mem::take(&mut self.finished)
     }
+}
+
+/// Hot live bytes across a deque of sessions.
+fn deque_kv_bytes(sessions: &VecDeque<Session>) -> usize {
+    sessions.iter().map(|s| s.kv_bytes()).sum()
+}
+
+/// Spill hot layers from `sessions` (iterated back to front) until `need`
+/// bytes are freed, skipping the protected session. Within one victim
+/// session, lowest-LAVa-weight layers (smallest Algorithm 2 budget) go
+/// first. Free functions over disjoint scheduler fields keep the borrow
+/// checker happy while a popped session is in flight.
+fn spill_from_deque(
+    tier: &mut TierManager,
+    metrics: &mut Metrics,
+    sessions: &mut VecDeque<Session>,
+    protect: u64,
+    need: usize,
+) -> usize {
+    let mut freed = 0;
+    for sess in sessions.iter_mut().rev() {
+        if freed >= need {
+            break;
+        }
+        if sess.id == protect {
+            continue;
+        }
+        freed += spill_session_layers(tier, metrics, sess, need - freed);
+    }
+    freed
+}
+
+/// Spill one session's hot layers, lowest-budget first, until `need` bytes
+/// are freed or the session is fully warm. Returns the bytes freed.
+fn spill_session_layers(
+    tier: &mut TierManager,
+    metrics: &mut Metrics,
+    sess: &mut Session,
+    need: usize,
+) -> usize {
+    let mut freed = 0;
+    let mut order: Vec<usize> = (0..sess.caches.len()).collect();
+    order.sort_by_key(|&l| sess.budgets.get(l).copied().unwrap_or(usize::MAX));
+    for l in order {
+        if freed >= need {
+            break;
+        }
+        if sess.residency[l] == Residency::Hot && sess.caches[l].total_entries() > 0 {
+            let t0 = std::time::Instant::now();
+            let bytes = tier.spill(sess.id, l, &mut sess.caches[l]);
+            sess.residency[l] = Residency::Warm;
+            metrics.observe_spill(bytes, t0.elapsed().as_secs_f64());
+            freed += bytes;
+        }
+    }
+    if freed > 0 {
+        metrics.observe_warm(tier.warm_bytes());
+    }
+    freed
 }
 
 #[cfg(test)]
@@ -503,6 +710,48 @@ mod tests {
         for (_, r) in &done {
             assert_eq!(r.status, FinishStatus::Completed, "deferral must not reject");
         }
+    }
+
+    #[test]
+    fn tiering_spills_under_pressure_and_completes_all() {
+        // ~2 sessions' peak fits; the rest must be rescued by spilling idle
+        // sessions' layers to the warm tier instead of deferring forever
+        let limit = 210_000;
+        let mut s = sched(Some(limit));
+        for _ in 0..4 {
+            s.submit(req(200, 6)).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4);
+        for (_, r) in &done {
+            assert_eq!(r.status, FinishStatus::Completed, "{:?}", r.error);
+        }
+        let m = &s.engine.metrics;
+        assert!(m.spills > 0, "memory pressure must trigger spills");
+        assert!(m.prefetches > 0, "spilled sessions must prefetch before decode");
+        assert!(
+            m.peak_hot_kv_bytes <= limit,
+            "hot tier exceeded the limit: {} > {limit}",
+            m.peak_hot_kv_bytes
+        );
+        assert!(m.peak_warm_kv_bytes > 0);
+        assert_eq!(s.tier.warm_bytes(), 0, "retired sessions must leave no warm residue");
+        assert_eq!(m.warm_kv_bytes, 0);
+    }
+
+    #[test]
+    fn tiering_off_reverts_to_deferral() {
+        let mut s = sched(Some(210_000));
+        s.opts.tiering = false;
+        for _ in 0..4 {
+            s.submit(req(200, 6)).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4, "deferred requests must still finish");
+        let m = &s.engine.metrics;
+        assert_eq!(m.spills, 0, "tiering off must never spill");
+        assert_eq!(m.prefetches, 0);
+        assert!(m.requests_deferred > 0, "the old defer path must engage");
     }
 
     #[test]

@@ -124,6 +124,19 @@ impl<B: ModelBackend> Server<B> {
             ("peak_kv_mb", Json::num(m.peak_kv_bytes as f64 / 1e6)),
             ("admission_rounds", Json::num(m.admission_rounds as f64)),
             ("decode_steps", Json::num(m.decode_steps as f64)),
+            // per-tier state: hot is what kv_mem_limit bounds; warm holds
+            // Q8-spilled layer caches
+            ("deferred", Json::num(m.requests_deferred as f64)),
+            ("hot_kv_mb", Json::num(m.hot_kv_bytes as f64 / 1e6)),
+            ("peak_hot_kv_mb", Json::num(m.peak_hot_kv_bytes as f64 / 1e6)),
+            ("warm_kv_mb", Json::num(m.warm_kv_bytes as f64 / 1e6)),
+            ("peak_warm_kv_mb", Json::num(m.peak_warm_kv_bytes as f64 / 1e6)),
+            ("spills", Json::num(m.spills as f64)),
+            ("prefetches", Json::num(m.prefetches as f64)),
+            ("spilled_mb", Json::num(m.spilled_bytes as f64 / 1e6)),
+            ("prefetched_mb", Json::num(m.prefetched_bytes as f64 / 1e6)),
+            ("spill_ms_mean", Json::num(m.mean_spill_ms())),
+            ("prefetch_ms_mean", Json::num(m.mean_prefetch_ms())),
             ("report", Json::str(m.report())),
         ])
     }
@@ -373,6 +386,11 @@ mod tests {
         let m = jm.get("metrics").unwrap();
         assert_eq!(m.get("requests").unwrap().as_usize().unwrap(), 3);
         assert!(m.get("ttft_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
+        // per-tier keys are always present (zero without memory pressure)
+        assert_eq!(m.get("spills").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(m.get("prefetches").unwrap().as_usize().unwrap(), 0);
+        assert!(m.get("peak_hot_kv_mb").unwrap().as_f64().unwrap() > 0.0);
+        assert_eq!(m.get("warm_kv_mb").unwrap().as_f64().unwrap(), 0.0);
 
         writeln!(c, "{{\"cmd\": \"shutdown\"}}").unwrap();
         let mut line2 = String::new();

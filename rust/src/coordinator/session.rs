@@ -1,6 +1,7 @@
 //! Per-request serving state.
 
-use crate::kvcache::LayerCache;
+use crate::kvcache::tier::Residency;
+use crate::kvcache::HotStore;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
@@ -16,9 +17,17 @@ pub struct Session {
     pub prompt: Vec<i32>,
     pub max_new_tokens: usize,
     pub phase: Phase,
-    /// One cache per layer (created during prefill).
-    pub caches: Vec<LayerCache>,
+    /// One cache per layer (created during prefill). A spilled layer's slot
+    /// holds an empty zero-capacity store; the real data lives in the tier
+    /// manager's warm blocks until prefetch swaps it back in.
+    pub caches: Vec<HotStore>,
+    /// Per-layer residency, maintained by the scheduler's tier transitions;
+    /// the engine asserts all-Hot at the decode boundary.
+    pub residency: Vec<Residency>,
     /// Per-layer entry budgets decided at prefill (Algorithm 2 output).
+    /// Doubles as the layer weight for spill ordering: LAVa's entropy
+    /// allocation gives low-weight layers small budgets, so lowest-budget
+    /// layers spill first.
     pub budgets: Vec<usize>,
     pub generated: Vec<i32>,
     /// Absolute position of the next token to decode.
@@ -37,6 +46,7 @@ impl Session {
             max_new_tokens,
             phase: Phase::Queued,
             caches: Vec::new(),
+            residency: Vec::new(),
             budgets: Vec::new(),
             generated: Vec::new(),
             next_pos: 0,
@@ -46,9 +56,15 @@ impl Session {
         }
     }
 
-    /// Live KV bytes across all layers.
+    /// Live *hot* KV bytes across all layers (spilled layers hold an empty
+    /// hot store, so they contribute zero — their bytes are warm-tier).
     pub fn kv_bytes(&self) -> usize {
         self.caches.iter().map(|c| c.live_bytes()).sum()
+    }
+
+    /// True when every layer is hot-resident (decodable by the engine).
+    pub fn is_fully_hot(&self) -> bool {
+        self.residency.iter().all(|r| *r == Residency::Hot)
     }
 
     pub fn total_entries(&self) -> usize {
@@ -78,5 +94,15 @@ mod tests {
         let s = Session::new(2, vec![1], 1);
         assert_eq!(s.kv_bytes(), 0);
         assert_eq!(s.total_entries(), 0);
+    }
+
+    #[test]
+    fn residency_tracking() {
+        let mut s = Session::new(3, vec![1, 2], 1);
+        assert!(s.is_fully_hot(), "no layers yet is trivially hot");
+        s.residency = vec![Residency::Hot, Residency::Warm];
+        assert!(!s.is_fully_hot());
+        s.residency[1] = Residency::Hot;
+        assert!(s.is_fully_hot());
     }
 }

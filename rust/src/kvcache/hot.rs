@@ -1,0 +1,509 @@
+//! Hot tier: per-layer, per-kv-head ragged caches over fixed-capacity padded
+//! f32 buffers — the exact layout `layer_decode_{M}` consumes, so handing a
+//! hot cache to the decode path costs zero copies.
+//!
+//! The K/V/valid buffers live inside [`Tensor`]s so [`HotStore::decode_tensors`]
+//! can hand out *borrowed views*: steady-state decode does no full-buffer
+//! clone per step (it used to clone K, V, and valid on every decode call).
+//!
+//! Each entry carries its original token position (RoPE phases are baked
+//! into cached keys, but analysis/debug and recency-based policies need
+//! positions) and its eviction score (Algorithm 2 recompresses lower layers
+//! *using the same scores* with shrinking budgets).
+
+use crate::runtime::Tensor;
+
+use super::layout::SlotLayout;
+use super::KvTierStore;
+
+#[derive(Debug, Clone)]
+pub struct HotStore {
+    layout: SlotLayout,
+    /// [Hk, M, dh] row-major
+    k: Tensor,
+    v: Tensor,
+    /// [Hk, M] 0.0/1.0
+    valid: Tensor,
+    /// [Hk, M] original positions (-1 for empty)
+    positions: Vec<i32>,
+    /// [Hk, M] eviction scores of live entries (0 for empty)
+    scores: Vec<f32>,
+}
+
+impl HotStore {
+    pub fn new(n_kv_heads: usize, d_head: usize, capacity: usize) -> HotStore {
+        HotStore {
+            layout: SlotLayout::new(n_kv_heads, d_head, capacity),
+            k: Tensor::zeros(&[n_kv_heads, capacity, d_head]),
+            v: Tensor::zeros(&[n_kv_heads, capacity, d_head]),
+            valid: Tensor::zeros(&[n_kv_heads, capacity]),
+            positions: vec![-1; n_kv_heads * capacity],
+            scores: vec![0.0; n_kv_heads * capacity],
+        }
+    }
+
+    pub fn n_kv_heads(&self) -> usize {
+        self.layout.n_kv_heads()
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.layout.d_head()
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.layout.capacity()
+    }
+
+    pub fn head_len(&self, h: usize) -> usize {
+        self.layout.head_len(h)
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.layout.total_entries()
+    }
+
+    /// Live KV bytes (K+V f32), the quantity the paper's Fig. 3 tracks.
+    pub fn live_bytes(&self) -> usize {
+        self.layout.live_bytes()
+    }
+
+    /// Allocated bytes (padded buffers).
+    pub fn allocated_bytes(&self) -> usize {
+        (self.k.len() + self.v.len()) * 4
+    }
+
+    fn kbuf(&self) -> &[f32] {
+        self.k.as_f32().expect("hot K buffer is f32")
+    }
+
+    fn vbuf(&self) -> &[f32] {
+        self.v.as_f32().expect("hot V buffer is f32")
+    }
+
+    pub fn key(&self, h: usize, i: usize) -> &[f32] {
+        let s = self.layout.slot(h, i);
+        &self.kbuf()[s..s + self.layout.d_head()]
+    }
+
+    pub fn value(&self, h: usize, i: usize) -> &[f32] {
+        let s = self.layout.slot(h, i);
+        &self.vbuf()[s..s + self.layout.d_head()]
+    }
+
+    pub fn position(&self, h: usize, i: usize) -> i32 {
+        self.positions[self.layout.flat(h, i)]
+    }
+
+    pub fn score(&self, h: usize, i: usize) -> f32 {
+        self.scores[self.layout.flat(h, i)]
+    }
+
+    pub fn set_score(&mut self, h: usize, i: usize, s: f32) {
+        let at = self.layout.flat(h, i);
+        self.scores[at] = s;
+    }
+
+    /// Scores of live entries for one head.
+    pub fn head_scores(&self, h: usize) -> &[f32] {
+        let start = self.layout.flat(h, 0);
+        &self.scores[start..start + self.layout.head_len(h)]
+    }
+
+    /// Ingest a prefill cache: gather `keep[h]` (sorted original indices
+    /// into the [0, length) token axis) from k/v tensors [Hk, N, dh],
+    /// recording per-entry `scores[h]` (aligned with keep lists).
+    pub fn load_from_prefill(
+        &mut self,
+        k_full: &Tensor,
+        v_full: &Tensor,
+        keep: &[Vec<usize>],
+        entry_scores: &[Vec<f32>],
+    ) {
+        assert_eq!(keep.len(), self.layout.n_kv_heads());
+        let n = k_full.shape[1];
+        let dh = self.layout.d_head();
+        let cap = self.layout.capacity();
+        let kf = k_full.as_f32().expect("k tensor");
+        let vf = v_full.as_f32().expect("v tensor");
+        let k = self.k.as_f32_mut().expect("hot K buffer is f32");
+        let v = self.v.as_f32_mut().expect("hot V buffer is f32");
+        let valid = self.valid.as_f32_mut().expect("hot valid buffer is f32");
+        for h in 0..self.layout.n_kv_heads() {
+            assert!(keep[h].len() <= cap, "keep exceeds capacity");
+            assert_eq!(keep[h].len(), entry_scores[h].len());
+            for (dst, (&src, &sc)) in keep[h].iter().zip(&entry_scores[h]).enumerate() {
+                let from = (h * n + src) * dh;
+                let to = self.layout.slot(h, dst);
+                k[to..to + dh].copy_from_slice(&kf[from..from + dh]);
+                v[to..to + dh].copy_from_slice(&vf[from..from + dh]);
+                valid[self.layout.flat(h, dst)] = 1.0;
+                self.positions[self.layout.flat(h, dst)] = src as i32;
+                self.scores[self.layout.flat(h, dst)] = sc;
+            }
+            self.layout.set_head_len(h, keep[h].len());
+            // zero the tail (fresh cache is already zero, but re-loading must clear)
+            for i in keep[h].len()..cap {
+                valid[self.layout.flat(h, i)] = 0.0;
+                self.positions[self.layout.flat(h, i)] = -1;
+                self.scores[self.layout.flat(h, i)] = 0.0;
+            }
+        }
+    }
+
+    /// Algorithm 2 recompression: keep only `keep[h]` (sorted indices into
+    /// the *current compact slots* of head h); compact in place.
+    pub fn re_evict(&mut self, keep: &[Vec<usize>]) {
+        assert_eq!(keep.len(), self.layout.n_kv_heads());
+        let dh = self.layout.d_head();
+        let k = self.k.as_f32_mut().expect("hot K buffer is f32");
+        let v = self.v.as_f32_mut().expect("hot V buffer is f32");
+        let valid = self.valid.as_f32_mut().expect("hot valid buffer is f32");
+        for h in 0..self.layout.n_kv_heads() {
+            debug_assert!(keep[h].windows(2).all(|w| w[0] < w[1]), "keep must be sorted");
+            for (dst, &src) in keep[h].iter().enumerate() {
+                assert!(src < self.layout.head_len(h), "re_evict index out of range");
+                if dst != src {
+                    let from = self.layout.slot(h, src);
+                    let to = self.layout.slot(h, dst);
+                    // non-overlapping guaranteed because dst <= src
+                    k.copy_within(from..from + dh, to);
+                    v.copy_within(from..from + dh, to);
+                    self.positions[self.layout.flat(h, dst)] =
+                        self.positions[self.layout.flat(h, src)];
+                    self.scores[self.layout.flat(h, dst)] =
+                        self.scores[self.layout.flat(h, src)];
+                }
+            }
+            let new_len = keep[h].len();
+            for i in new_len..self.layout.head_len(h) {
+                valid[self.layout.flat(h, i)] = 0.0;
+                self.positions[self.layout.flat(h, i)] = -1;
+                self.scores[self.layout.flat(h, i)] = 0.0;
+                let s = self.layout.slot(h, i);
+                k[s..s + dh].fill(0.0);
+                v[s..s + dh].fill(0.0);
+            }
+            self.layout.set_head_len(h, new_len);
+        }
+    }
+
+    /// Append one decoded token's K/V (k_new, v_new: [Hk, dh]) at `pos`.
+    /// Returns false (and appends nothing) if any head is full.
+    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], pos: i32, score: f32) -> bool {
+        assert_eq!(k_new.len(), self.layout.n_kv_heads() * self.layout.d_head());
+        if self.layout.any_head_full() {
+            return false;
+        }
+        let dh = self.layout.d_head();
+        let k = self.k.as_f32_mut().expect("hot K buffer is f32");
+        let v = self.v.as_f32_mut().expect("hot V buffer is f32");
+        let valid = self.valid.as_f32_mut().expect("hot valid buffer is f32");
+        for h in 0..self.layout.n_kv_heads() {
+            let i = self.layout.head_len(h);
+            let to = self.layout.slot(h, i);
+            k[to..to + dh].copy_from_slice(&k_new[h * dh..(h + 1) * dh]);
+            v[to..to + dh].copy_from_slice(&v_new[h * dh..(h + 1) * dh]);
+            valid[self.layout.flat(h, i)] = 1.0;
+            self.positions[self.layout.flat(h, i)] = pos;
+            self.scores[self.layout.flat(h, i)] = score;
+            self.layout.set_head_len(h, i + 1);
+        }
+        true
+    }
+
+    /// Append one entry to head `h` only (warm-tier rehydration and tests).
+    /// The caller must preserve per-head position ordering.
+    pub fn push_entry(&mut self, h: usize, key: &[f32], value: &[f32], pos: i32, score: f32) {
+        let dh = self.layout.d_head();
+        assert_eq!(key.len(), dh);
+        assert_eq!(value.len(), dh);
+        let i = self.layout.head_len(h);
+        assert!(i < self.layout.capacity(), "push_entry on full head {h}");
+        let to = self.layout.slot(h, i);
+        let k = self.k.as_f32_mut().expect("hot K buffer is f32");
+        let v = self.v.as_f32_mut().expect("hot V buffer is f32");
+        let valid = self.valid.as_f32_mut().expect("hot valid buffer is f32");
+        k[to..to + dh].copy_from_slice(key);
+        v[to..to + dh].copy_from_slice(value);
+        valid[self.layout.flat(h, i)] = 1.0;
+        self.positions[self.layout.flat(h, i)] = pos;
+        self.scores[self.layout.flat(h, i)] = score;
+        self.layout.set_head_len(h, i + 1);
+    }
+
+    /// Remove exactly one entry from head `h` (by compact-slot index),
+    /// shifting only that head's suffix left by one slot. This is the
+    /// decode-eviction hot path: O(live entries of one head), not a full
+    /// per-head keep-list rebuild across every head.
+    pub fn remove_one(&mut self, h: usize, idx: usize) {
+        let len = self.layout.head_len(h);
+        assert!(idx < len);
+        let dh = self.layout.d_head();
+        let last = len - 1;
+        let k = self.k.as_f32_mut().expect("hot K buffer is f32");
+        let v = self.v.as_f32_mut().expect("hot V buffer is f32");
+        let valid = self.valid.as_f32_mut().expect("hot valid buffer is f32");
+        if idx < last {
+            // shift the suffix (idx+1..len) left by one slot; the head's
+            // slots are contiguous, so one copy_within per buffer suffices
+            let from = self.layout.slot(h, idx + 1);
+            let to = self.layout.slot(h, idx);
+            let end = self.layout.slot(h, len);
+            k.copy_within(from..end, to);
+            v.copy_within(from..end, to);
+            let ffrom = self.layout.flat(h, idx + 1);
+            let fto = self.layout.flat(h, idx);
+            let fend = self.layout.flat(h, len);
+            self.positions.copy_within(ffrom..fend, fto);
+            self.scores.copy_within(ffrom..fend, fto);
+        }
+        // clear the vacated last slot
+        let s = self.layout.slot(h, last);
+        k[s..s + dh].fill(0.0);
+        v[s..s + dh].fill(0.0);
+        valid[self.layout.flat(h, last)] = 0.0;
+        self.positions[self.layout.flat(h, last)] = -1;
+        self.scores[self.layout.flat(h, last)] = 0.0;
+        self.layout.set_head_len(h, last);
+    }
+
+    /// Decode-input tensors: K [Hk,M,dh], V [Hk,M,dh], valid [Hk,M] —
+    /// borrowed views of the live buffers; steady-state decode copies
+    /// nothing.
+    pub fn decode_tensors(&self) -> (&Tensor, &Tensor, &Tensor) {
+        (&self.k, &self.v, &self.valid)
+    }
+
+    /// Check the compact-prefix invariant (used by property tests).
+    pub fn check_invariants(&self) -> Result<(), String> {
+        let valid = self.valid.as_f32().expect("hot valid buffer is f32");
+        self.layout.check(valid, &self.positions)
+    }
+}
+
+impl KvTierStore for HotStore {
+    fn n_kv_heads(&self) -> usize {
+        self.layout.n_kv_heads()
+    }
+
+    fn d_head(&self) -> usize {
+        self.layout.d_head()
+    }
+
+    fn total_entries(&self) -> usize {
+        self.layout.total_entries()
+    }
+
+    /// Hot-tier residency cost: live K/V bytes (what `kv_mem_limit` bounds).
+    fn tier_bytes(&self) -> usize {
+        self.live_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn mk_prefill(hk: usize, n: usize, dh: usize, seed: u64) -> (Tensor, Tensor) {
+        let mut rng = Rng::new(seed);
+        let data = |rng: &mut Rng| -> Vec<f32> {
+            (0..hk * n * dh).map(|_| rng.normal() as f32).collect()
+        };
+        (
+            Tensor::f32(data(&mut rng), &[hk, n, dh]),
+            Tensor::f32(data(&mut rng), &[hk, n, dh]),
+        )
+    }
+
+    #[test]
+    fn load_and_layout() {
+        let (k, v) = mk_prefill(2, 10, 4, 0);
+        let mut c = HotStore::new(2, 4, 16);
+        let keep = vec![vec![1, 3, 7], vec![0, 9]];
+        let scores = vec![vec![0.3, 0.2, 0.9], vec![0.1, 0.5]];
+        c.load_from_prefill(&k, &v, &keep, &scores);
+        assert_eq!(c.head_len(0), 3);
+        assert_eq!(c.head_len(1), 2);
+        assert_eq!(c.total_entries(), 5);
+        c.check_invariants().unwrap();
+        // content: head 0 slot 1 == original token 3
+        let kf = k.as_f32().unwrap();
+        assert_eq!(c.key(0, 1), &kf[3 * 4..3 * 4 + 4]);
+        assert_eq!(c.position(0, 2), 7);
+        assert_eq!(c.score(1, 1), 0.5);
+    }
+
+    #[test]
+    fn re_evict_compacts() {
+        let (k, v) = mk_prefill(2, 12, 4, 1);
+        let mut c = HotStore::new(2, 4, 16);
+        let keep = vec![(0..12).collect::<Vec<_>>(), (0..12).collect()];
+        let scores = vec![vec![1.0; 12], vec![1.0; 12]];
+        c.load_from_prefill(&k, &v, &keep, &scores);
+        c.re_evict(&[vec![0, 5, 11], vec![2, 3]]);
+        assert_eq!(c.head_len(0), 3);
+        assert_eq!(c.head_len(1), 2);
+        c.check_invariants().unwrap();
+        assert_eq!(c.position(0, 1), 5);
+        assert_eq!(c.position(1, 0), 2);
+        let kf = k.as_f32().unwrap();
+        assert_eq!(c.key(0, 2), &kf[11 * 4..11 * 4 + 4]);
+    }
+
+    #[test]
+    fn append_and_overflow() {
+        let mut c = HotStore::new(2, 2, 3);
+        let k_new = vec![1.0, 2.0, 3.0, 4.0];
+        let v_new = vec![5.0, 6.0, 7.0, 8.0];
+        assert!(c.append(&k_new, &v_new, 0, 0.5));
+        assert!(c.append(&k_new, &v_new, 1, 0.5));
+        assert!(c.append(&k_new, &v_new, 2, 0.5));
+        assert!(!c.append(&k_new, &v_new, 3, 0.5), "must refuse when full");
+        assert_eq!(c.total_entries(), 6);
+        c.check_invariants().unwrap();
+        assert_eq!(c.key(1, 0), &[3.0, 4.0]);
+    }
+
+    #[test]
+    fn remove_one_keeps_others() {
+        let mut c = HotStore::new(1, 2, 8);
+        for p in 0..5 {
+            c.append(&[p as f32, 0.0], &[0.0, p as f32], p, p as f32);
+        }
+        c.remove_one(0, 2);
+        assert_eq!(c.head_len(0), 4);
+        assert_eq!(
+            (0..4).map(|i| c.position(0, i)).collect::<Vec<_>>(),
+            vec![0, 1, 3, 4]
+        );
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_one_touches_only_the_affected_head() {
+        let mut c = HotStore::new(2, 2, 8);
+        for p in 0..5 {
+            c.append(&[p as f32, 1.0, 10.0 + p as f32, 2.0], &[0.5; 4], p, p as f32);
+        }
+        let other_before: Vec<Vec<f32>> = (0..5).map(|i| c.key(1, i).to_vec()).collect();
+        c.remove_one(0, 0);
+        c.remove_one(0, 3); // former last entry now at index 3
+        assert_eq!(c.head_len(0), 3);
+        assert_eq!(c.head_len(1), 5, "other head's length untouched");
+        for (i, want) in other_before.iter().enumerate() {
+            assert_eq!(c.key(1, i), &want[..], "other head's data untouched");
+        }
+        assert_eq!(
+            (0..3).map(|i| c.position(0, i)).collect::<Vec<_>>(),
+            vec![1, 2, 3]
+        );
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn remove_one_last_entry() {
+        let mut c = HotStore::new(1, 2, 4);
+        c.append(&[1.0, 2.0], &[3.0, 4.0], 0, 0.1);
+        c.remove_one(0, 0);
+        assert_eq!(c.head_len(0), 0);
+        c.check_invariants().unwrap();
+        assert!(c.append(&[5.0, 6.0], &[7.0, 8.0], 1, 0.2));
+        assert_eq!(c.key(0, 0), &[5.0, 6.0]);
+    }
+
+    #[test]
+    fn push_entry_fills_one_head() {
+        let mut c = HotStore::new(2, 2, 4);
+        c.push_entry(0, &[1.0, 2.0], &[3.0, 4.0], 5, 0.7);
+        c.push_entry(0, &[5.0, 6.0], &[7.0, 8.0], 9, 0.9);
+        assert_eq!(c.head_len(0), 2);
+        assert_eq!(c.head_len(1), 0);
+        assert_eq!(c.position(0, 1), 9);
+        assert_eq!(c.value(0, 0), &[3.0, 4.0]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn decode_tensor_shapes() {
+        let mut c = HotStore::new(2, 4, 8);
+        c.append(&vec![0.5; 8], &vec![0.25; 8], 0, 1.0);
+        let (k, v, valid) = c.decode_tensors();
+        assert_eq!(k.shape, vec![2, 8, 4]);
+        assert_eq!(v.shape, vec![2, 8, 4]);
+        assert_eq!(valid.shape, vec![2, 8]);
+        assert_eq!(valid.as_f32().unwrap()[0], 1.0);
+        assert_eq!(valid.as_f32().unwrap()[1], 0.0);
+    }
+
+    #[test]
+    fn prop_random_op_sequences_keep_invariants() {
+        prop::check(60, |rng| {
+            let hk = 1 + rng.below(4);
+            let dh = 2 + rng.below(6);
+            let cap = 8 + rng.below(24);
+            let n = 4 + rng.below(cap - 2);
+            let (k, v) = mk_prefill(hk, n, dh, rng.next_u64());
+            let mut c = HotStore::new(hk, dh, cap);
+            // random initial keeps
+            let mut keeps = Vec::new();
+            let mut scs = Vec::new();
+            for _ in 0..hk {
+                let cnt = 1 + rng.below(n);
+                let idx = rng.sample_indices(n, cnt);
+                scs.push(idx.iter().map(|_| rng.f32()).collect::<Vec<_>>());
+                keeps.push(idx);
+            }
+            c.load_from_prefill(&k, &v, &keeps, &scs);
+            prop::assert_prop(c.check_invariants().is_ok(), "after load", &c.total_entries())?;
+
+            for step in 0..20 {
+                match rng.below(3) {
+                    0 => {
+                        // append if room
+                        let kn: Vec<f32> = (0..hk * dh).map(|_| rng.f32()).collect();
+                        let vn: Vec<f32> = (0..hk * dh).map(|_| rng.f32()).collect();
+                        let pos = (n + step) as i32;
+                        c.append(&kn, &vn, pos, rng.f32());
+                    }
+                    1 => {
+                        // random re-evict (subset per head)
+                        let mut keep = Vec::new();
+                        for h in 0..hk {
+                            let l = c.head_len(h);
+                            let cnt = if l == 0 { 0 } else { 1 + rng.below(l) };
+                            keep.push(if l == 0 {
+                                vec![]
+                            } else {
+                                rng.sample_indices(l, cnt)
+                            });
+                        }
+                        c.re_evict(&keep);
+                    }
+                    _ => {
+                        let h = rng.below(hk);
+                        if c.head_len(h) > 0 {
+                            let idx = rng.below(c.head_len(h));
+                            c.remove_one(h, idx);
+                        }
+                    }
+                }
+                if let Err(e) = c.check_invariants() {
+                    return Err(prop::CaseFailure { message: e });
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn memory_accounting() {
+        let mut c = HotStore::new(2, 4, 8);
+        assert_eq!(c.live_bytes(), 0);
+        c.append(&vec![0.0; 8], &vec![0.0; 8], 0, 0.0);
+        // 2 heads * 1 entry * 4 dh * 2 (K+V) * 4 bytes
+        assert_eq!(c.live_bytes(), 64);
+        assert_eq!(c.allocated_bytes(), 2 * 8 * 4 * 2 * 4);
+    }
+}

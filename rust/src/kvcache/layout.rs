@@ -1,0 +1,142 @@
+//! Slot arithmetic for the compact-prefix cache layout, shared by the hot
+//! and warm stores.
+//!
+//! Layout invariant ("compact prefix"): for every kv head `h`, slots
+//! `[0, head_len[h])` are live and slots `[head_len[h], capacity)` are empty.
+//! Heads may have different lengths — that is exactly how AdaKV/LAVa dynamic
+//! head budgets materialize. The hot store keeps this layout in padded
+//! buffers (what `layer_decode_{M}` consumes directly); the warm store keeps
+//! only the live prefix of each head, so both tiers agree on `head_len` and
+//! per-head entry order even though their physical representations differ.
+
+/// Dimensions + per-head occupancy of one layer cache. Owns no K/V data —
+/// the stores hold the buffers; this holds the addressing.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct SlotLayout {
+    n_kv_heads: usize,
+    d_head: usize,
+    capacity: usize,
+    head_len: Vec<usize>,
+}
+
+impl SlotLayout {
+    pub fn new(n_kv_heads: usize, d_head: usize, capacity: usize) -> SlotLayout {
+        SlotLayout { n_kv_heads, d_head, capacity, head_len: vec![0; n_kv_heads] }
+    }
+
+    pub fn n_kv_heads(&self) -> usize {
+        self.n_kv_heads
+    }
+
+    pub fn d_head(&self) -> usize {
+        self.d_head
+    }
+
+    pub fn capacity(&self) -> usize {
+        self.capacity
+    }
+
+    pub fn head_len(&self, h: usize) -> usize {
+        self.head_len[h]
+    }
+
+    pub fn set_head_len(&mut self, h: usize, len: usize) {
+        debug_assert!(len <= self.capacity);
+        self.head_len[h] = len;
+    }
+
+    pub fn head_lens(&self) -> &[usize] {
+        &self.head_len
+    }
+
+    pub fn total_entries(&self) -> usize {
+        self.head_len.iter().sum()
+    }
+
+    /// True if any head has no free slot left.
+    pub fn any_head_full(&self) -> bool {
+        self.head_len.iter().any(|&l| l >= self.capacity)
+    }
+
+    /// Offset of slot (h, i) into an [Hk, M, dh] row-major f32 buffer.
+    pub fn slot(&self, h: usize, i: usize) -> usize {
+        (h * self.capacity + i) * self.d_head
+    }
+
+    /// Offset of slot (h, i) into an [Hk, M] row-major scalar buffer.
+    pub fn flat(&self, h: usize, i: usize) -> usize {
+        h * self.capacity + i
+    }
+
+    /// Live KV bytes (K+V f32) this occupancy dehydrates to / rehydrates
+    /// from — the quantity the paper's Fig. 3 tracks and the hot-tier
+    /// memory limit is enforced against.
+    pub fn live_bytes(&self) -> usize {
+        self.total_entries() * self.d_head * 2 * 4
+    }
+
+    /// Check the compact-prefix invariant against the store's valid/position
+    /// buffers ([Hk, M], 0.0/1.0 and -1-for-empty respectively).
+    pub fn check(&self, valid: &[f32], positions: &[i32]) -> Result<(), String> {
+        for h in 0..self.n_kv_heads {
+            let l = self.head_len[h];
+            if l > self.capacity {
+                return Err(format!("head {h} len {l} > capacity"));
+            }
+            for i in 0..self.capacity {
+                let live = valid[self.flat(h, i)] > 0.5;
+                if (i < l) != live {
+                    return Err(format!("head {h} slot {i}: valid/len mismatch"));
+                }
+                if !live && positions[self.flat(h, i)] != -1 {
+                    return Err(format!("head {h} slot {i}: stale position"));
+                }
+            }
+            // positions strictly increasing among live slots (eviction keeps order)
+            for i in 1..l {
+                if positions[self.flat(h, i)] <= positions[self.flat(h, i - 1)] {
+                    return Err(format!("head {h}: positions not increasing at {i}"));
+                }
+            }
+        }
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn slot_arithmetic() {
+        let mut l = SlotLayout::new(2, 4, 8);
+        assert_eq!(l.slot(0, 0), 0);
+        assert_eq!(l.slot(0, 3), 12);
+        assert_eq!(l.slot(1, 0), 32);
+        assert_eq!(l.flat(1, 2), 10);
+        assert_eq!(l.total_entries(), 0);
+        l.set_head_len(0, 3);
+        l.set_head_len(1, 1);
+        assert_eq!(l.total_entries(), 4);
+        // 4 entries * 4 dh * 2 (K+V) * 4 bytes
+        assert_eq!(l.live_bytes(), 128);
+        assert!(!l.any_head_full());
+        l.set_head_len(1, 8);
+        assert!(l.any_head_full());
+    }
+
+    #[test]
+    fn check_catches_violations() {
+        let mut l = SlotLayout::new(1, 2, 4);
+        l.set_head_len(0, 2);
+        let ok_valid = vec![1.0, 1.0, 0.0, 0.0];
+        let ok_pos = vec![3, 7, -1, -1];
+        assert!(l.check(&ok_valid, &ok_pos).is_ok());
+        // valid bit past the prefix
+        assert!(l.check(&[1.0, 1.0, 1.0, 0.0], &ok_pos).is_err());
+        // stale position in an empty slot
+        assert!(l.check(&ok_valid, &[3, 7, 9, -1]).is_err());
+        // positions out of order
+        assert!(l.check(&ok_valid, &[7, 3, -1, -1]).is_err());
+    }
+}

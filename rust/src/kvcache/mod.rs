@@ -1,402 +1,68 @@
-//! KV cache manager: per-layer, per-kv-head ragged caches over fixed-capacity
-//! padded buffers (the layout `layer_decode_{M}` consumes directly).
+//! Tiered KV store: pluggable hot/warm storage for per-layer caches.
 //!
-//! Layout invariant ("compact prefix"): for every kv head `h`, slots
-//! `[0, head_len[h])` are live and slots `[head_len[h], capacity)` are zeroed
-//! with `valid == 0`. Eviction compacts in place; decode appends at
-//! `head_len[h]`. Heads may have different lengths — that is exactly how
-//! AdaKV/LAVa dynamic head budgets materialize.
+//! The monolithic `LayerCache` is split into four modules:
 //!
-//! Each entry carries its original token position (RoPE phases are baked
-//! into cached keys, but analysis/debug and recency-based policies need
-//! positions) and its eviction score (Algorithm 2 recompresses lower layers
-//! *using the same scores* with shrinking budgets).
+//! * [`layout`] — the slot/compact-prefix addressing both tiers agree on:
+//!   per-head lengths, slot arithmetic, and the layout invariant checker.
+//! * [`hot`] — [`HotStore`], the serving representation: fixed-capacity
+//!   padded f32 buffers in exactly the shape `layer_decode_{M}` consumes,
+//!   handed to the decode path as borrowed tensor views (zero copies).
+//! * [`warm`] — [`WarmBlock`], the spilled representation: the live compact
+//!   prefix only, Q8-quantized (scale-per-head blockwise) with a documented
+//!   round-trip tolerance ([`warm::q8_tolerance`]); positions, scores, and
+//!   head lengths survive exactly.
+//! * [`tier`] — [`TierManager`], which owns warm blocks and the per-session,
+//!   per-layer [`Residency`] state machine (Hot ⇄ Warm). The scheduler
+//!   drives spills (idle sessions' lowest-LAVa-weight layers first, when
+//!   projected hot bytes exceed `kv_mem_limit`) and prefetches (a session's
+//!   spilled layers rehydrate before its next decode round); the engine
+//!   only ever sees hot caches and asserts residency at the hot path
+//!   boundary.
+//!
+//! `kv_mem_limit` bounds the *hot* tier only: under memory pressure the
+//! scheduler spills instead of deferring, so far more sessions stay
+//! admitted. This is the structural seam for the later SSD tier and engine
+//! sharding (ROADMAP).
 
-use crate::runtime::Tensor;
+pub mod hot;
+pub mod layout;
+pub mod tier;
+pub mod warm;
 
-#[derive(Debug, Clone)]
-pub struct LayerCache {
-    pub n_kv_heads: usize,
-    pub d_head: usize,
-    pub capacity: usize,
-    /// [Hk, M, dh] row-major
-    k: Vec<f32>,
-    v: Vec<f32>,
-    /// [Hk, M] 0.0/1.0
-    valid: Vec<f32>,
-    /// [Hk, M] original positions (-1 for empty)
-    positions: Vec<i32>,
-    /// [Hk, M] eviction scores of live entries (0 for empty)
-    scores: Vec<f32>,
-    head_len: Vec<usize>,
-}
+pub use hot::HotStore;
+pub use layout::SlotLayout;
+pub use tier::{Residency, TierManager};
+pub use warm::{q8_tolerance, WarmBlock};
 
-impl LayerCache {
-    pub fn new(n_kv_heads: usize, d_head: usize, capacity: usize) -> LayerCache {
-        LayerCache {
-            n_kv_heads,
-            d_head,
-            capacity,
-            k: vec![0.0; n_kv_heads * capacity * d_head],
-            v: vec![0.0; n_kv_heads * capacity * d_head],
-            valid: vec![0.0; n_kv_heads * capacity],
-            positions: vec![-1; n_kv_heads * capacity],
-            scores: vec![0.0; n_kv_heads * capacity],
-            head_len: vec![0; n_kv_heads],
-        }
-    }
+/// Historical name of the hot store, kept so call sites and docs that speak
+/// "layer cache" keep compiling; new code should say [`HotStore`].
+pub type LayerCache = HotStore;
 
-    pub fn head_len(&self, h: usize) -> usize {
-        self.head_len[h]
-    }
-
-    pub fn total_entries(&self) -> usize {
-        self.head_len.iter().sum()
-    }
-
-    /// Live KV bytes (K+V f32), the quantity the paper's Fig. 3 tracks.
-    pub fn live_bytes(&self) -> usize {
-        self.total_entries() * self.d_head * 2 * 4
-    }
-
-    /// Allocated bytes (padded buffers).
-    pub fn allocated_bytes(&self) -> usize {
-        (self.k.len() + self.v.len()) * 4
-    }
-
-    fn slot(&self, h: usize, i: usize) -> usize {
-        (h * self.capacity + i) * self.d_head
-    }
-
-    pub fn key(&self, h: usize, i: usize) -> &[f32] {
-        let s = self.slot(h, i);
-        &self.k[s..s + self.d_head]
-    }
-
-    pub fn value(&self, h: usize, i: usize) -> &[f32] {
-        let s = self.slot(h, i);
-        &self.v[s..s + self.d_head]
-    }
-
-    pub fn position(&self, h: usize, i: usize) -> i32 {
-        self.positions[h * self.capacity + i]
-    }
-
-    pub fn score(&self, h: usize, i: usize) -> f32 {
-        self.scores[h * self.capacity + i]
-    }
-
-    pub fn set_score(&mut self, h: usize, i: usize, s: f32) {
-        self.scores[h * self.capacity + i] = s;
-    }
-
-    /// Scores of live entries for one head.
-    pub fn head_scores(&self, h: usize) -> &[f32] {
-        &self.scores[h * self.capacity..h * self.capacity + self.head_len[h]]
-    }
-
-    /// Ingest a prefill cache: gather `keep[h]` (sorted original indices
-    /// into the [0, length) token axis) from k/v tensors [Hk, N, dh],
-    /// recording per-entry `scores[h]` (aligned with keep lists).
-    pub fn load_from_prefill(
-        &mut self,
-        k_full: &Tensor,
-        v_full: &Tensor,
-        keep: &[Vec<usize>],
-        entry_scores: &[Vec<f32>],
-    ) {
-        assert_eq!(keep.len(), self.n_kv_heads);
-        let n = k_full.shape[1];
-        let dh = self.d_head;
-        let kf = k_full.as_f32().expect("k tensor");
-        let vf = v_full.as_f32().expect("v tensor");
-        for h in 0..self.n_kv_heads {
-            assert!(keep[h].len() <= self.capacity, "keep exceeds capacity");
-            assert_eq!(keep[h].len(), entry_scores[h].len());
-            for (dst, (&src, &sc)) in keep[h].iter().zip(&entry_scores[h]).enumerate() {
-                let from = (h * n + src) * dh;
-                let to = self.slot(h, dst);
-                self.k[to..to + dh].copy_from_slice(&kf[from..from + dh]);
-                self.v[to..to + dh].copy_from_slice(&vf[from..from + dh]);
-                self.valid[h * self.capacity + dst] = 1.0;
-                self.positions[h * self.capacity + dst] = src as i32;
-                self.scores[h * self.capacity + dst] = sc;
-            }
-            self.head_len[h] = keep[h].len();
-            // zero the tail (fresh cache is already zero, but re-loading must clear)
-            for i in keep[h].len()..self.capacity {
-                self.valid[h * self.capacity + i] = 0.0;
-                self.positions[h * self.capacity + i] = -1;
-                self.scores[h * self.capacity + i] = 0.0;
-            }
-        }
-    }
-
-    /// Algorithm 2 recompression: keep only `keep[h]` (sorted indices into
-    /// the *current compact slots* of head h); compact in place.
-    pub fn re_evict(&mut self, keep: &[Vec<usize>]) {
-        assert_eq!(keep.len(), self.n_kv_heads);
-        let dh = self.d_head;
-        for h in 0..self.n_kv_heads {
-            debug_assert!(keep[h].windows(2).all(|w| w[0] < w[1]), "keep must be sorted");
-            for (dst, &src) in keep[h].iter().enumerate() {
-                assert!(src < self.head_len[h], "re_evict index out of range");
-                if dst != src {
-                    let from = self.slot(h, src);
-                    let to = self.slot(h, dst);
-                    // non-overlapping guaranteed because dst <= src
-                    self.k.copy_within(from..from + dh, to);
-                    self.v.copy_within(from..from + dh, to);
-                    self.positions[h * self.capacity + dst] =
-                        self.positions[h * self.capacity + src];
-                    self.scores[h * self.capacity + dst] =
-                        self.scores[h * self.capacity + src];
-                }
-            }
-            let new_len = keep[h].len();
-            for i in new_len..self.head_len[h] {
-                self.valid[h * self.capacity + i] = 0.0;
-                self.positions[h * self.capacity + i] = -1;
-                self.scores[h * self.capacity + i] = 0.0;
-                let s = self.slot(h, i);
-                self.k[s..s + dh].fill(0.0);
-                self.v[s..s + dh].fill(0.0);
-            }
-            self.head_len[h] = new_len;
-        }
-    }
-
-    /// Append one decoded token's K/V (k_new, v_new: [Hk, dh]) at `pos`.
-    /// Returns false (and appends nothing) if any head is full.
-    pub fn append(&mut self, k_new: &[f32], v_new: &[f32], pos: i32, score: f32) -> bool {
-        assert_eq!(k_new.len(), self.n_kv_heads * self.d_head);
-        if self.head_len.iter().any(|&l| l >= self.capacity) {
-            return false;
-        }
-        let dh = self.d_head;
-        for h in 0..self.n_kv_heads {
-            let i = self.head_len[h];
-            let to = self.slot(h, i);
-            self.k[to..to + dh].copy_from_slice(&k_new[h * dh..(h + 1) * dh]);
-            self.v[to..to + dh].copy_from_slice(&v_new[h * dh..(h + 1) * dh]);
-            self.valid[h * self.capacity + i] = 1.0;
-            self.positions[h * self.capacity + i] = pos;
-            self.scores[h * self.capacity + i] = score;
-            self.head_len[h] += 1;
-        }
-        true
-    }
-
-    /// Remove exactly one entry from head `h` (by compact-slot index).
-    pub fn remove_one(&mut self, h: usize, idx: usize) {
-        assert!(idx < self.head_len[h]);
-        let keep: Vec<usize> = (0..self.head_len[h]).filter(|&i| i != idx).collect();
-        let mut all: Vec<Vec<usize>> = (0..self.n_kv_heads)
-            .map(|hh| (0..self.head_len[hh]).collect())
-            .collect();
-        all[h] = keep;
-        self.re_evict(&all);
-    }
-
-    /// Decode-input tensors: K [Hk,M,dh], V [Hk,M,dh], valid [Hk,M].
-    pub fn decode_tensors(&self) -> (Tensor, Tensor, Tensor) {
-        let shape_kv = [self.n_kv_heads, self.capacity, self.d_head];
-        (
-            Tensor::f32(self.k.clone(), &shape_kv),
-            Tensor::f32(self.v.clone(), &shape_kv),
-            Tensor::f32(self.valid.clone(), &[self.n_kv_heads, self.capacity]),
-        )
-    }
-
-    /// Check the compact-prefix invariant (used by property tests).
-    pub fn check_invariants(&self) -> Result<(), String> {
-        for h in 0..self.n_kv_heads {
-            let l = self.head_len[h];
-            if l > self.capacity {
-                return Err(format!("head {h} len {l} > capacity"));
-            }
-            for i in 0..self.capacity {
-                let live = self.valid[h * self.capacity + i] > 0.5;
-                if (i < l) != live {
-                    return Err(format!("head {h} slot {i}: valid/len mismatch"));
-                }
-                if !live && self.positions[h * self.capacity + i] != -1 {
-                    return Err(format!("head {h} slot {i}: stale position"));
-                }
-            }
-            // positions strictly increasing among live slots (eviction keeps order)
-            for i in 1..l {
-                if self.positions[h * self.capacity + i]
-                    <= self.positions[h * self.capacity + i - 1]
-                {
-                    return Err(format!("head {h}: positions not increasing at {i}"));
-                }
-            }
-        }
-        Ok(())
-    }
+/// Common surface of the tiered representations. `tier_bytes` is the cost
+/// of a store *in its own tier*: live f32 bytes for hot (what
+/// `kv_mem_limit` bounds), quantized block bytes for warm.
+pub trait KvTierStore {
+    fn n_kv_heads(&self) -> usize;
+    fn d_head(&self) -> usize;
+    fn total_entries(&self) -> usize;
+    fn tier_bytes(&self) -> usize;
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
-    use crate::util::prop;
-    use crate::util::rng::Rng;
-
-    fn mk_prefill(hk: usize, n: usize, dh: usize, seed: u64) -> (Tensor, Tensor) {
-        let mut rng = Rng::new(seed);
-        let data = |rng: &mut Rng| -> Vec<f32> {
-            (0..hk * n * dh).map(|_| rng.normal() as f32).collect()
-        };
-        (
-            Tensor::f32(data(&mut rng), &[hk, n, dh]),
-            Tensor::f32(data(&mut rng), &[hk, n, dh]),
-        )
-    }
 
     #[test]
-    fn load_and_layout() {
-        let (k, v) = mk_prefill(2, 10, 4, 0);
-        let mut c = LayerCache::new(2, 4, 16);
-        let keep = vec![vec![1, 3, 7], vec![0, 9]];
-        let scores = vec![vec![0.3, 0.2, 0.9], vec![0.1, 0.5]];
-        c.load_from_prefill(&k, &v, &keep, &scores);
-        assert_eq!(c.head_len(0), 3);
-        assert_eq!(c.head_len(1), 2);
-        assert_eq!(c.total_entries(), 5);
-        c.check_invariants().unwrap();
-        // content: head 0 slot 1 == original token 3
-        let kf = k.as_f32().unwrap();
-        assert_eq!(c.key(0, 1), &kf[(0 * 10 + 3) * 4..(0 * 10 + 3) * 4 + 4]);
-        assert_eq!(c.position(0, 2), 7);
-        assert_eq!(c.score(1, 1), 0.5);
-    }
-
-    #[test]
-    fn re_evict_compacts() {
-        let (k, v) = mk_prefill(2, 12, 4, 1);
-        let mut c = LayerCache::new(2, 4, 16);
-        let keep = vec![(0..12).collect::<Vec<_>>(), (0..12).collect()];
-        let scores = vec![vec![1.0; 12], vec![1.0; 12]];
-        c.load_from_prefill(&k, &v, &keep, &scores);
-        c.re_evict(&[vec![0, 5, 11], vec![2, 3]]);
-        assert_eq!(c.head_len(0), 3);
-        assert_eq!(c.head_len(1), 2);
-        c.check_invariants().unwrap();
-        assert_eq!(c.position(0, 1), 5);
-        assert_eq!(c.position(1, 0), 2);
-        let kf = k.as_f32().unwrap();
-        assert_eq!(c.key(0, 2), &kf[(0 * 12 + 11) * 4..(0 * 12 + 11) * 4 + 4]);
-    }
-
-    #[test]
-    fn append_and_overflow() {
-        let mut c = LayerCache::new(2, 2, 3);
-        let k_new = vec![1.0, 2.0, 3.0, 4.0];
-        let v_new = vec![5.0, 6.0, 7.0, 8.0];
-        assert!(c.append(&k_new, &v_new, 0, 0.5));
-        assert!(c.append(&k_new, &v_new, 1, 0.5));
-        assert!(c.append(&k_new, &v_new, 2, 0.5));
-        assert!(!c.append(&k_new, &v_new, 3, 0.5), "must refuse when full");
-        assert_eq!(c.total_entries(), 6);
-        c.check_invariants().unwrap();
-        assert_eq!(c.key(1, 0), &[3.0, 4.0]);
-    }
-
-    #[test]
-    fn remove_one_keeps_others() {
-        let mut c = LayerCache::new(1, 2, 8);
-        for p in 0..5 {
-            c.append(&[p as f32, 0.0], &[0.0, p as f32], p, p as f32);
-        }
-        c.remove_one(0, 2);
-        assert_eq!(c.head_len(0), 4);
-        assert_eq!(
-            (0..4).map(|i| c.position(0, i)).collect::<Vec<_>>(),
-            vec![0, 1, 3, 4]
-        );
-        c.check_invariants().unwrap();
-    }
-
-    #[test]
-    fn decode_tensor_shapes() {
-        let mut c = LayerCache::new(2, 4, 8);
-        c.append(&vec![0.5; 8], &vec![0.25; 8], 0, 1.0);
-        let (k, v, valid) = c.decode_tensors();
-        assert_eq!(k.shape, vec![2, 8, 4]);
-        assert_eq!(v.shape, vec![2, 8, 4]);
-        assert_eq!(valid.shape, vec![2, 8]);
-        assert_eq!(valid.as_f32().unwrap()[0], 1.0);
-        assert_eq!(valid.as_f32().unwrap()[1], 0.0);
-    }
-
-    #[test]
-    fn prop_random_op_sequences_keep_invariants() {
-        prop::check(60, |rng| {
-            let hk = 1 + rng.below(4);
-            let dh = 2 + rng.below(6);
-            let cap = 8 + rng.below(24);
-            let n = 4 + rng.below(cap - 2);
-            let (k, v) = mk_prefill(hk, n, dh, rng.next_u64());
-            let mut c = LayerCache::new(hk, dh, cap);
-            // random initial keeps
-            let mut keeps = Vec::new();
-            let mut scs = Vec::new();
-            for _ in 0..hk {
-                let cnt = 1 + rng.below(n);
-                let idx = rng.sample_indices(n, cnt);
-                scs.push(idx.iter().map(|_| rng.f32()).collect::<Vec<_>>());
-                keeps.push(idx);
-            }
-            c.load_from_prefill(&k, &v, &keeps, &scs);
-            prop::assert_prop(c.check_invariants().is_ok(), "after load", &c.head_len)?;
-
-            for step in 0..20 {
-                match rng.below(3) {
-                    0 => {
-                        // append if room
-                        let kn: Vec<f32> = (0..hk * dh).map(|_| rng.f32()).collect();
-                        let vn: Vec<f32> = (0..hk * dh).map(|_| rng.f32()).collect();
-                        let pos = (n + step) as i32;
-                        c.append(&kn, &vn, pos, rng.f32());
-                    }
-                    1 => {
-                        // random re-evict (subset per head)
-                        let mut keep = Vec::new();
-                        for h in 0..hk {
-                            let l = c.head_len(h);
-                            let cnt = if l == 0 { 0 } else { 1 + rng.below(l) };
-                            keep.push(if l == 0 {
-                                vec![]
-                            } else {
-                                rng.sample_indices(l, cnt)
-                            });
-                        }
-                        c.re_evict(&keep);
-                    }
-                    _ => {
-                        let h = rng.below(hk);
-                        if c.head_len(h) > 0 {
-                            let idx = rng.below(c.head_len(h));
-                            c.remove_one(h, idx);
-                        }
-                    }
-                }
-                if let Err(e) = c.check_invariants() {
-                    return Err(prop::CaseFailure { message: e });
-                }
-            }
-            Ok(())
-        });
-    }
-
-    #[test]
-    fn memory_accounting() {
-        let mut c = LayerCache::new(2, 4, 8);
-        assert_eq!(c.live_bytes(), 0);
-        c.append(&vec![0.0; 8], &vec![0.0; 8], 0, 0.0);
-        // 2 heads * 1 entry * 4 dh * 2 (K+V) * 4 bytes
-        assert_eq!(c.live_bytes(), 64);
-        assert_eq!(c.allocated_bytes(), 2 * 8 * 4 * 2 * 4);
+    fn tier_store_surface_is_consistent() {
+        let mut hot = HotStore::new(2, 4, 8);
+        hot.append(&[0.5; 8], &[0.25; 8], 0, 1.0);
+        let warm = WarmBlock::from_hot(&hot);
+        let (h, w): (&dyn KvTierStore, &dyn KvTierStore) = (&hot, &warm);
+        assert_eq!(h.n_kv_heads(), w.n_kv_heads());
+        assert_eq!(h.d_head(), w.d_head());
+        assert_eq!(h.total_entries(), w.total_entries());
+        assert_eq!(h.tier_bytes(), hot.live_bytes());
+        assert_eq!(w.tier_bytes(), warm.warm_bytes());
+        assert!(w.tier_bytes() < h.tier_bytes() * 2, "warm must not inflate");
     }
 }

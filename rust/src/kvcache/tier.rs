@@ -1,0 +1,199 @@
+//! Tier manager: per-session, per-layer residency between the hot and warm
+//! stores.
+//!
+//! ## Residency state machine
+//!
+//! Every (session, layer) cache is in exactly one of two states:
+//!
+//! ```text
+//!            spill (quantize to Q8, hot buffer replaced by empty)
+//!   Hot ───────────────────────────────────────────────────────▶ Warm
+//!    ▲                                                            │
+//!    └────────────────────────────────────────────────────────────┘
+//!            prefetch (dequantize into a fresh HotStore)
+//! ```
+//!
+//! * `Hot` — the layer lives in a [`HotStore`]; the engine may decode
+//!   against it. Its bytes count against `kv_mem_limit`.
+//! * `Warm` — the layer lives in a [`WarmBlock`] owned by this manager; the
+//!   engine must never see it. Its (smaller, Q8) bytes count against the
+//!   warm-tier accounting only.
+//!
+//! The scheduler drives all transitions: it spills idle sessions'
+//! lowest-LAVa-weight layers when projected hot bytes exceed the limit, and
+//! prefetches a session's spilled layers before handing it to the engine.
+//! The engine itself only ever sees hot caches (and asserts so at the hot
+//! path boundary). A retiring session's warm blocks are dropped here.
+
+use std::collections::HashMap;
+
+use super::hot::HotStore;
+use super::warm::WarmBlock;
+
+/// Which tier a (session, layer) cache currently lives in.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Residency {
+    Hot,
+    Warm,
+}
+
+/// Owns all warm blocks, keyed by (session id, layer).
+#[derive(Debug, Default)]
+pub struct TierManager {
+    warm: HashMap<(u64, usize), WarmBlock>,
+    warm_bytes: usize,
+}
+
+impl TierManager {
+    pub fn new() -> TierManager {
+        TierManager::default()
+    }
+
+    /// Current warm-tier bytes across all sessions.
+    pub fn warm_bytes(&self) -> usize {
+        self.warm_bytes
+    }
+
+    /// Number of spilled layers across all sessions.
+    pub fn spilled_count(&self) -> usize {
+        self.warm.len()
+    }
+
+    /// Layers of `session` currently in the warm tier, ascending.
+    pub fn spilled_layers(&self, session: u64) -> Vec<usize> {
+        let mut layers = Vec::new();
+        for (s, layer) in self.warm.keys() {
+            if *s == session {
+                layers.push(*layer);
+            }
+        }
+        layers.sort_unstable();
+        layers
+    }
+
+    /// Hot bytes that prefetching all of `session`'s spilled layers would
+    /// re-occupy (the scheduler's make-room target).
+    pub fn pending_hot_bytes(&self, session: u64) -> usize {
+        let mut bytes = 0;
+        for ((s, _), block) in &self.warm {
+            if *s == session {
+                bytes += block.hot_live_bytes();
+            }
+        }
+        bytes
+    }
+
+    /// Spill one layer: dehydrate `cache` into the warm tier and leave an
+    /// empty zero-capacity hot store behind (so the session's hot byte
+    /// accounting drops to zero for this layer). Returns the hot live bytes
+    /// freed.
+    pub fn spill(&mut self, session: u64, layer: usize, cache: &mut HotStore) -> usize {
+        debug_assert!(
+            !self.warm.contains_key(&(session, layer)),
+            "layer {layer} of session {session} spilled twice"
+        );
+        let block = WarmBlock::from_hot(cache);
+        let freed = cache.live_bytes();
+        self.warm_bytes += block.warm_bytes();
+        *cache = HotStore::new(cache.n_kv_heads(), cache.d_head(), 0);
+        self.warm.insert((session, layer), block);
+        freed
+    }
+
+    /// Prefetch one spilled layer back: rehydrate into a fresh hot store.
+    /// Returns `None` if the layer is not in the warm tier.
+    pub fn prefetch(&mut self, session: u64, layer: usize) -> Option<HotStore> {
+        let block = self.warm.remove(&(session, layer))?;
+        self.warm_bytes -= block.warm_bytes();
+        Some(block.to_hot())
+    }
+
+    /// Drop every warm block of a retiring/canceled session; returns the
+    /// warm bytes released.
+    pub fn drop_session(&mut self, session: u64) -> usize {
+        let mut keys = Vec::new();
+        for key in self.warm.keys() {
+            if key.0 == session {
+                keys.push(*key);
+            }
+        }
+        let mut released = 0;
+        for key in keys {
+            if let Some(block) = self.warm.remove(&key) {
+                released += block.warm_bytes();
+            }
+        }
+        self.warm_bytes -= released;
+        released
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn hot_with_entries(entries: usize) -> HotStore {
+        let mut c = HotStore::new(2, 4, entries + 4);
+        for p in 0..entries {
+            let x = p as f32;
+            c.append(&[x, -x, 1.0, 0.5, x, x, 2.0, -1.0], &[0.25; 8], p as i32, x);
+        }
+        c
+    }
+
+    #[test]
+    fn spill_empties_hot_and_prefetch_restores() {
+        let mut tm = TierManager::new();
+        let mut cache = hot_with_entries(6);
+        let bytes_before = cache.live_bytes();
+        let freed = tm.spill(9, 2, &mut cache);
+        assert_eq!(freed, bytes_before);
+        assert_eq!(cache.live_bytes(), 0, "hot side must be empty after spill");
+        assert_eq!(cache.capacity(), 0);
+        assert!(tm.warm_bytes() > 0);
+        assert_eq!(tm.spilled_layers(9), vec![2]);
+        assert_eq!(tm.pending_hot_bytes(9), bytes_before);
+
+        let back = tm.prefetch(9, 2).expect("layer was spilled");
+        assert_eq!(back.live_bytes(), bytes_before);
+        assert_eq!(back.head_len(0), 6);
+        back.check_invariants().unwrap();
+        assert_eq!(tm.warm_bytes(), 0);
+        assert!(tm.prefetch(9, 2).is_none(), "double prefetch must miss");
+    }
+
+    #[test]
+    fn drop_session_releases_only_that_session() {
+        let mut tm = TierManager::new();
+        let mut a0 = hot_with_entries(3);
+        let mut a1 = hot_with_entries(4);
+        let mut b0 = hot_with_entries(5);
+        tm.spill(1, 0, &mut a0);
+        tm.spill(1, 1, &mut a1);
+        tm.spill(2, 0, &mut b0);
+        assert_eq!(tm.spilled_count(), 3);
+        assert_eq!(tm.spilled_layers(1), vec![0, 1]);
+
+        let released = tm.drop_session(1);
+        assert!(released > 0);
+        assert_eq!(tm.spilled_count(), 1);
+        assert!(tm.spilled_layers(1).is_empty());
+        assert_eq!(tm.spilled_layers(2), vec![0]);
+        assert_eq!(tm.drop_session(999), 0, "unknown session is a no-op");
+    }
+
+    #[test]
+    fn warm_accounting_tracks_blocks() {
+        let mut tm = TierManager::new();
+        let mut c0 = hot_with_entries(8);
+        let mut c1 = hot_with_entries(2);
+        tm.spill(5, 0, &mut c0);
+        let after_one = tm.warm_bytes();
+        tm.spill(5, 1, &mut c1);
+        assert!(tm.warm_bytes() > after_one);
+        tm.prefetch(5, 1).unwrap();
+        assert_eq!(tm.warm_bytes(), after_one);
+        tm.drop_session(5);
+        assert_eq!(tm.warm_bytes(), 0);
+    }
+}

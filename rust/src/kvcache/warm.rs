@@ -1,0 +1,333 @@
+//! Warm tier: spilled layer caches as Q8-quantized host blocks.
+//!
+//! A [`WarmBlock`] is the dehydrated form of a [`HotStore`]: only the live
+//! compact prefix of each head is kept (no padding), K/V rows are quantized
+//! to symmetric int8 with one f32 scale per (head, entry) row — "scale-per-
+//! head blockwise", block = one entry's `d_head` values — while positions,
+//! scores, head lengths, and the original hot capacity are preserved
+//! exactly, so rehydration restores a hot cache the decode path can keep
+//! appending into.
+//!
+//! ## Round-trip tolerance contract
+//!
+//! For a quantization block with max-abs value `m`, every dehydrate →
+//! rehydrate round trip satisfies `|x - x'| <= q8_tolerance(m)` (scale =
+//! m/127, rounding error <= scale/2). Because the block max itself
+//! quantizes to ±127 exactly, the scale is a fixed point of the round trip:
+//! repeated spill/prefetch cycles of an unchanged layer do not accumulate
+//! additional error beyond the first trip.
+
+use super::hot::HotStore;
+use super::KvTierStore;
+
+/// Quantization levels of symmetric int8 (zero-point 0).
+pub const Q8_LEVELS: f32 = 127.0;
+
+/// Max absolute round-trip error for one quantization block whose max-abs
+/// input value is `block_max_abs` — the documented Q8 tolerance. The
+/// rounding bound is scale/2 = max/254; the extra relative term absorbs
+/// f32 arithmetic error in the quantize/dequantize pair itself.
+pub fn q8_tolerance(block_max_abs: f32) -> f32 {
+    block_max_abs / (2.0 * Q8_LEVELS) + block_max_abs * 1e-5 + 1e-6
+}
+
+/// Quantize one block (an entry's `d_head` row): scale + int8 codes.
+fn quantize_block(src: &[f32], out: &mut Vec<i8>) -> f32 {
+    let max = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+    if max == 0.0 {
+        out.resize(out.len() + src.len(), 0i8);
+        return 0.0;
+    }
+    let scale = max / Q8_LEVELS;
+    for &x in src {
+        let q = (x / scale).round().clamp(-Q8_LEVELS, Q8_LEVELS);
+        out.push(q as i8);
+    }
+    scale
+}
+
+/// One spilled layer cache. Entries are stored compactly in head order:
+/// head 0's `head_len[0]` entries, then head 1's, and so on.
+#[derive(Debug, Clone)]
+pub struct WarmBlock {
+    n_kv_heads: usize,
+    d_head: usize,
+    /// Hot capacity to restore on rehydration (decode headroom survives the
+    /// round trip).
+    capacity: usize,
+    head_len: Vec<usize>,
+    k_q: Vec<i8>,
+    v_q: Vec<i8>,
+    /// One scale per live entry row, K and V separately.
+    k_scales: Vec<f32>,
+    v_scales: Vec<f32>,
+    positions: Vec<i32>,
+    scores: Vec<f32>,
+    /// Hot live bytes this block rehydrates to (prefetch sizing).
+    hot_live_bytes: usize,
+}
+
+impl WarmBlock {
+    /// Dehydrate a hot cache into a Q8 warm block (the hot cache is not
+    /// modified; the tier manager owns the replace-with-empty step).
+    pub fn from_hot(hot: &HotStore) -> WarmBlock {
+        let hk = hot.n_kv_heads();
+        let dh = hot.d_head();
+        let total = hot.total_entries();
+        let mut block = WarmBlock {
+            n_kv_heads: hk,
+            d_head: dh,
+            capacity: hot.capacity(),
+            head_len: (0..hk).map(|h| hot.head_len(h)).collect(),
+            k_q: Vec::with_capacity(total * dh),
+            v_q: Vec::with_capacity(total * dh),
+            k_scales: Vec::with_capacity(total),
+            v_scales: Vec::with_capacity(total),
+            positions: Vec::with_capacity(total),
+            scores: Vec::with_capacity(total),
+            hot_live_bytes: hot.live_bytes(),
+        };
+        for h in 0..hk {
+            for i in 0..hot.head_len(h) {
+                block.k_scales.push(quantize_block(hot.key(h, i), &mut block.k_q));
+                block.v_scales.push(quantize_block(hot.value(h, i), &mut block.v_q));
+                block.positions.push(hot.position(h, i));
+                block.scores.push(hot.score(h, i));
+            }
+        }
+        block
+    }
+
+    /// Rehydrate into a hot cache with the original capacity, head lengths,
+    /// positions, and scores; K/V within the Q8 tolerance.
+    pub fn to_hot(&self) -> HotStore {
+        let dh = self.d_head;
+        let mut hot = HotStore::new(self.n_kv_heads, dh, self.capacity);
+        let mut krow = vec![0.0f32; dh];
+        let mut vrow = vec![0.0f32; dh];
+        let mut entry = 0usize;
+        for h in 0..self.n_kv_heads {
+            for _ in 0..self.head_len[h] {
+                let ks = self.k_scales[entry];
+                let vs = self.v_scales[entry];
+                for j in 0..dh {
+                    krow[j] = ks * self.k_q[entry * dh + j] as f32;
+                    vrow[j] = vs * self.v_q[entry * dh + j] as f32;
+                }
+                hot.push_entry(h, &krow, &vrow, self.positions[entry], self.scores[entry]);
+                entry += 1;
+            }
+        }
+        hot
+    }
+
+    /// Hot live bytes this block rehydrates to (what prefetch must fit
+    /// under the hot-tier limit).
+    pub fn hot_live_bytes(&self) -> usize {
+        self.hot_live_bytes
+    }
+
+    /// Warm-tier bytes this block occupies: int8 codes + f32 scales +
+    /// positions + scores + head lengths.
+    pub fn warm_bytes(&self) -> usize {
+        self.k_q.len()
+            + self.v_q.len()
+            + (self.k_scales.len() + self.v_scales.len() + self.scores.len()) * 4
+            + self.positions.len() * 4
+            + self.head_len.len() * 8
+    }
+}
+
+impl KvTierStore for WarmBlock {
+    fn n_kv_heads(&self) -> usize {
+        self.n_kv_heads
+    }
+
+    fn d_head(&self) -> usize {
+        self.d_head
+    }
+
+    fn total_entries(&self) -> usize {
+        self.head_len.iter().sum()
+    }
+
+    fn tier_bytes(&self) -> usize {
+        self.warm_bytes()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::runtime::Tensor;
+    use crate::util::prop;
+    use crate::util::rng::Rng;
+
+    fn random_hot(rng: &mut Rng) -> HotStore {
+        let hk = 1 + rng.below(4);
+        let dh = 2 + rng.below(6);
+        let cap = 8 + rng.below(24);
+        let n = 4 + rng.below(cap - 2);
+        let kdata: Vec<f32> = (0..hk * n * dh).map(|_| rng.normal() as f32).collect();
+        let vdata: Vec<f32> = (0..hk * n * dh).map(|_| rng.normal() as f32).collect();
+        let k = Tensor::f32(kdata, &[hk, n, dh]);
+        let v = Tensor::f32(vdata, &[hk, n, dh]);
+        let mut keeps = Vec::new();
+        let mut scs = Vec::new();
+        for _ in 0..hk {
+            let cnt = 1 + rng.below(n);
+            let idx = rng.sample_indices(n, cnt);
+            scs.push(idx.iter().map(|_| rng.f32()).collect::<Vec<_>>());
+            keeps.push(idx);
+        }
+        let mut c = HotStore::new(hk, dh, cap);
+        c.load_from_prefill(&k, &v, &keeps, &scs);
+
+        // random op sequence so round trips are exercised on post-eviction,
+        // post-append states, not just fresh prefill loads
+        for step in 0..12 {
+            match rng.below(3) {
+                0 => {
+                    let kn: Vec<f32> = (0..hk * dh).map(|_| rng.f32()).collect();
+                    let vn: Vec<f32> = (0..hk * dh).map(|_| rng.f32()).collect();
+                    c.append(&kn, &vn, (n + step) as i32, rng.f32());
+                }
+                1 => {
+                    let mut keep = Vec::new();
+                    for h in 0..hk {
+                        let l = c.head_len(h);
+                        keep.push(if l == 0 {
+                            vec![]
+                        } else {
+                            rng.sample_indices(l, 1 + rng.below(l))
+                        });
+                    }
+                    c.re_evict(&keep);
+                }
+                _ => {
+                    let h = rng.below(hk);
+                    if c.head_len(h) > 0 {
+                        let idx = rng.below(c.head_len(h));
+                        c.remove_one(h, idx);
+                    }
+                }
+            }
+        }
+        c
+    }
+
+    fn max_abs(xs: &[f32]) -> f32 {
+        xs.iter().fold(0.0f32, |m, &x| m.max(x.abs()))
+    }
+
+    #[test]
+    fn prop_spill_prefetch_round_trip() {
+        prop::check(60, |rng| {
+            let hot = random_hot(rng);
+            let block = WarmBlock::from_hot(&hot);
+            let back = block.to_hot();
+
+            prop::assert_prop(
+                back.check_invariants().is_ok(),
+                "rehydrated invariants",
+                &back.total_entries(),
+            )?;
+            prop::assert_prop(
+                back.capacity() == hot.capacity(),
+                "capacity preserved",
+                &(back.capacity(), hot.capacity()),
+            )?;
+            prop::assert_prop(
+                block.hot_live_bytes() == hot.live_bytes(),
+                "hot byte accounting",
+                &(block.hot_live_bytes(), hot.live_bytes()),
+            )?;
+            for h in 0..hot.n_kv_heads() {
+                prop::assert_prop(
+                    back.head_len(h) == hot.head_len(h),
+                    "head_len preserved",
+                    &(h, back.head_len(h), hot.head_len(h)),
+                )?;
+                for i in 0..hot.head_len(h) {
+                    let pos_ok = back.position(h, i) == hot.position(h, i);
+                    prop::assert_prop(pos_ok, "positions exact", &(h, i))?;
+                    let score_ok = back.score(h, i) == hot.score(h, i);
+                    prop::assert_prop(score_ok, "scores exact", &(h, i))?;
+                    let ktol = q8_tolerance(max_abs(hot.key(h, i)));
+                    let vtol = q8_tolerance(max_abs(hot.value(h, i)));
+                    for j in 0..hot.d_head() {
+                        let kd = (back.key(h, i)[j] - hot.key(h, i)[j]).abs();
+                        let vd = (back.value(h, i)[j] - hot.value(h, i)[j]).abs();
+                        prop::assert_prop(kd <= ktol, "K within Q8 tol", &(h, i, j, kd, ktol))?;
+                        prop::assert_prop(vd <= vtol, "V within Q8 tol", &(h, i, j, vd, vtol))?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn repeated_round_trips_do_not_drift() {
+        // quantizing an already-dequantized row reproduces the same codes
+        // (the block max is a fixed point), so only float-product noise —
+        // a few ulps, far below one quantization step — may remain
+        let mut rng = Rng::new(11);
+        let hot = random_hot(&mut rng);
+        let once = WarmBlock::from_hot(&hot).to_hot();
+        let twice = WarmBlock::from_hot(&once).to_hot();
+        for h in 0..hot.n_kv_heads() {
+            for i in 0..hot.head_len(h) {
+                for j in 0..hot.d_head() {
+                    let a = once.key(h, i)[j];
+                    let b = twice.key(h, i)[j];
+                    assert!((a - b).abs() <= a.abs() * 1e-5 + 1e-6, "K drift: {a} vs {b}");
+                    let a = once.value(h, i)[j];
+                    let b = twice.value(h, i)[j];
+                    assert!((a - b).abs() <= a.abs() * 1e-5 + 1e-6, "V drift: {a} vs {b}");
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn warm_is_smaller_than_hot() {
+        // model-shaped dims (d_head 16): per entry, Q8 stores 2*dh codes +
+        // 8 B scales + 8 B position/score vs 2*dh*4 B live f32 in hot
+        let mut rng = Rng::new(7);
+        let mut hot = HotStore::new(4, 16, 32);
+        for p in 0..20 {
+            let kn: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            let vn: Vec<f32> = (0..64).map(|_| rng.normal() as f32).collect();
+            hot.append(&kn, &vn, p, rng.f32());
+        }
+        let block = WarmBlock::from_hot(&hot);
+        assert!(
+            block.warm_bytes() < hot.live_bytes(),
+            "warm {} must beat hot live {}",
+            block.warm_bytes(),
+            hot.live_bytes()
+        );
+        assert!(block.warm_bytes() < hot.allocated_bytes());
+        assert_eq!(block.total_entries(), hot.total_entries());
+    }
+
+    #[test]
+    fn zero_block_is_exact() {
+        let mut hot = HotStore::new(1, 4, 4);
+        hot.push_entry(0, &[0.0; 4], &[0.0; 4], 0, 0.5);
+        let back = WarmBlock::from_hot(&hot).to_hot();
+        assert_eq!(back.key(0, 0), &[0.0; 4]);
+        assert_eq!(back.value(0, 0), &[0.0; 4]);
+    }
+
+    #[test]
+    fn rehydrated_cache_accepts_appends() {
+        let mut hot = HotStore::new(2, 2, 6);
+        hot.append(&[1.0, -2.0, 0.5, 3.0], &[0.1, 0.2, 0.3, 0.4], 0, 1.0);
+        let mut back = WarmBlock::from_hot(&hot).to_hot();
+        assert!(back.append(&[1.0; 4], &[2.0; 4], 1, 0.5), "capacity must survive");
+        assert_eq!(back.head_len(0), 2);
+        back.check_invariants().unwrap();
+    }
+}

@@ -9,7 +9,8 @@
 //! Crate map (see DESIGN.md for the full inventory):
 //! * [`runtime`] — PJRT client, artifact loading, host tensors
 //! * [`model`] — manifest + weights from `artifacts/`
-//! * [`kvcache`] — ragged per-head KV store with compaction
+//! * [`kvcache`] — tiered KV store: hot (padded f32) / warm (Q8 spill
+//!   blocks) with per-session, per-layer residency
 //! * [`compress`] — LAVa + all baseline eviction policies
 //! * [`coordinator`] — engine, batcher, scheduler, sessions, server
 //! * [`workloads`] — synthetic benchmark suite + scorers

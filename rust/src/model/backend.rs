@@ -16,7 +16,7 @@ use anyhow::{anyhow, Result};
 
 use super::{Manifest, ModelConfig, Weights};
 use crate::compress::LayerObs;
-use crate::kvcache::LayerCache;
+use crate::kvcache::HotStore;
 use crate::runtime::{Arg, Runtime, Tensor};
 use crate::util::rng::Rng;
 
@@ -47,11 +47,14 @@ pub trait ModelBackend {
 
     fn layer_prefill(&self, layer: usize, x: &Tensor, length: usize) -> Result<PrefillOut>;
 
+    /// Decode is a hot-tier-only operation: the cache handed in here is
+    /// always a resident [`HotStore`] (the tier manager prefetches warm
+    /// layers before the engine reaches this boundary).
     fn layer_decode(
         &self,
         layer: usize,
         x: &Tensor,
-        cache: &LayerCache,
+        cache: &HotStore,
         pos: usize,
     ) -> Result<DecodeOut>;
 
@@ -175,15 +178,16 @@ impl ModelBackend for PjrtBackend {
         &self,
         layer: usize,
         x: &Tensor,
-        cache: &LayerCache,
+        cache: &HotStore,
         pos: usize,
     ) -> Result<DecodeOut> {
-        let m = cache.capacity;
+        let m = cache.capacity();
         let name = format!("layer_decode_{m}");
+        // borrowed views: no K/V/valid buffer copies on the decode hot path
         let (k, v, valid) = cache.decode_tensors();
         let pos_t = Tensor::scalar_i32(pos as i32);
         let mut args: Vec<Arg> =
-            vec![Arg::Host(x), Arg::Host(&k), Arg::Host(&v), Arg::Host(&valid), Arg::Host(&pos_t)];
+            vec![Arg::Host(x), Arg::Host(k), Arg::Host(v), Arg::Host(valid), Arg::Host(&pos_t)];
         args.extend(self.layer_args(layer));
         let mut out = self.runtime.execute(&name, &args)?;
         if out.len() != 4 {
@@ -388,12 +392,12 @@ impl ModelBackend for MockBackend {
         &self,
         layer: usize,
         x: &Tensor,
-        cache: &LayerCache,
+        cache: &HotStore,
         pos: usize,
     ) -> Result<DecodeOut> {
         let cfg = &self.cfg;
         let (h, hk, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head);
-        let m = cache.capacity;
+        let m = cache.capacity();
         let l64 = layer as u64;
         let mut attn = vec![0.0f32; h * (m + 1)];
         for hh in 0..h {
@@ -466,7 +470,7 @@ mod tests {
     fn mock_decode_attends_to_hot() {
         let mut b = MockBackend::new(MockBackend::default_config());
         b.hot_positions = vec![5];
-        let mut cache = crate::kvcache::LayerCache::new(4, 16, 32);
+        let mut cache = crate::kvcache::HotStore::new(4, 16, 32);
         for p in 0..10 {
             cache.append(&vec![0.1; 64], &vec![0.1; 64], p, 0.5);
         }

@@ -1,0 +1,184 @@
+//! Tiered KV store acceptance suite.
+//!
+//! The contract (ISSUE 2): under a `kv_mem_limit` small enough that the
+//! seed scheduler defers at least half of a mixed workload, the tiered
+//! scheduler completes every request, hot-tier bytes never exceed the
+//! limit (asserted via metrics), and decode outputs match the untiered
+//! baseline within the documented Q8 tolerance — with the deterministic
+//! mock backend the decode logits are unchanged by Q8 K/V error, so
+//! "within tolerance" is asserted as exact token equality, while the K/V
+//! numeric tolerance itself is property-tested in `kvcache::warm`.
+
+use std::collections::BTreeMap;
+
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions, FinishStatus, GenerateRequest};
+use lava::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lava::model::backend::MockBackend;
+
+fn sched(limit: Option<usize>, tiering: bool) -> Scheduler<MockBackend> {
+    let mock = MockBackend::new(MockBackend::default_config());
+    let engine = Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+    Scheduler::new(
+        engine,
+        SchedulerOptions { kv_mem_limit: limit, tiering, ..Default::default() },
+    )
+}
+
+/// Mixed workload: three shape buckets (prompt lengths 100/200/400).
+fn mixed_workload() -> Vec<GenerateRequest> {
+    (0..8)
+        .map(|i| {
+            let n = match i % 3 {
+                0 => 100,
+                1 => 200,
+                _ => 400,
+            };
+            GenerateRequest {
+                prompt: (0..n).map(|t| ((t + i * 7) % 251) as i32).collect(),
+                max_new_tokens: 6,
+            }
+        })
+        .collect()
+}
+
+/// Tight enough that the seed scheduler defers most of the workload, big
+/// enough that the largest request's prefill peak still fits (so nothing
+/// is rejected outright): retained = 24*4*4 entries * 16 dh * 8 B = 49 KB,
+/// largest transient (len 400) = 2*4*400*16*4 B = 204.8 KB.
+const LIMIT: usize = 300_000;
+
+fn run(
+    s: &mut Scheduler<MockBackend>,
+) -> (BTreeMap<u64, Vec<i32>>, BTreeMap<u64, FinishStatus>) {
+    let mut tokens = BTreeMap::new();
+    let mut statuses = BTreeMap::new();
+    for req in mixed_workload() {
+        s.submit(req).unwrap();
+    }
+    for (id, r) in s.run_to_completion().unwrap() {
+        tokens.insert(id, r.tokens.clone());
+        statuses.insert(id, r.status);
+    }
+    (tokens, statuses)
+}
+
+#[test]
+fn tiered_completes_workload_the_seed_defers() {
+    // seed behavior (tiering off): everything eventually completes, but at
+    // least half the workload bounces off admission at least once
+    let mut seed = sched(Some(LIMIT), false);
+    let (_, seed_status) = run(&mut seed);
+    assert_eq!(seed_status.len(), 8);
+    assert!(
+        seed_status.values().all(|s| *s == FinishStatus::Completed),
+        "seed must defer, not reject, this workload"
+    );
+    assert!(
+        seed.engine.metrics.requests_deferred >= 4,
+        "limit must be tight enough to defer at least half the workload, got {} deferrals",
+        seed.engine.metrics.requests_deferred
+    );
+    assert_eq!(seed.engine.metrics.spills, 0);
+
+    // tiered: same limit, all requests complete, hot tier stays bounded
+    let mut tiered = sched(Some(LIMIT), true);
+    let (tiered_tokens, tiered_status) = run(&mut tiered);
+    assert_eq!(tiered_status.len(), 8);
+    for (id, status) in &tiered_status {
+        assert_eq!(
+            *status,
+            FinishStatus::Completed,
+            "tiered request {id} must complete"
+        );
+    }
+    let m = &tiered.engine.metrics;
+    assert!(
+        m.peak_hot_kv_bytes <= LIMIT,
+        "hot-tier bytes exceeded kv_mem_limit: {} > {LIMIT}",
+        m.peak_hot_kv_bytes
+    );
+    assert!(m.spills > 0, "pressure must move layers to the warm tier");
+    assert!(m.prefetches > 0, "spilled layers must come back before decode");
+    assert!(m.peak_warm_kv_bytes > 0);
+    assert!(
+        m.requests_deferred <= seed.engine.metrics.requests_deferred,
+        "spilling must absorb pressure the seed paid for in deferrals: {} vs {}",
+        m.requests_deferred,
+        seed.engine.metrics.requests_deferred
+    );
+
+    // decode outputs must match the untiered, unlimited baseline within the
+    // documented Q8 tolerance; the mock backend's logits are independent of
+    // the (quantization-perturbed) hidden state, so equality is exact here
+    let mut baseline = sched(None, false);
+    let (base_tokens, base_status) = run(&mut baseline);
+    assert!(base_status.values().all(|s| *s == FinishStatus::Completed));
+    assert_eq!(
+        tiered_tokens, base_tokens,
+        "tiered decode outputs diverged from the untiered baseline"
+    );
+}
+
+#[test]
+fn hot_tier_bounded_throughout_not_just_at_peaks() {
+    // drive tick-by-tick and check the live hot gauge after every tick
+    let mut s = sched(Some(LIMIT), true);
+    for req in mixed_workload() {
+        s.submit(req).unwrap();
+    }
+    let mut ticks = 0;
+    while (s.pending_count() > 0 || s.active_count() > 0) && ticks < 10_000 {
+        s.tick().unwrap();
+        ticks += 1;
+        assert!(
+            s.engine.metrics.hot_kv_bytes <= LIMIT,
+            "tick {ticks}: hot gauge {} over limit {LIMIT}",
+            s.engine.metrics.hot_kv_bytes
+        );
+    }
+    assert!(ticks < 10_000, "scheduler failed to drain");
+    assert_eq!(s.tier.warm_bytes(), 0, "drained scheduler must hold no warm blocks");
+    assert_eq!(s.engine.metrics.requests_finished, 8);
+}
+
+#[test]
+fn cancel_mid_flight_releases_warm_blocks() {
+    let mut s = sched(Some(LIMIT), true);
+    let mut ids = Vec::new();
+    for req in mixed_workload() {
+        ids.push(s.submit(req).unwrap());
+    }
+    // run until something has spilled, then cancel every in-flight request
+    let mut ticks = 0;
+    while s.engine.metrics.spills == 0 && ticks < 10_000 {
+        s.tick().unwrap();
+        ticks += 1;
+    }
+    assert!(s.engine.metrics.spills > 0, "workload must generate spills");
+    for id in &ids {
+        s.cancel(*id);
+    }
+    assert_eq!(s.active_count(), 0);
+    assert_eq!(
+        s.tier.warm_bytes(),
+        0,
+        "canceled sessions must not leak warm blocks"
+    );
+    let done = s.run_to_completion().unwrap();
+    assert_eq!(done.len(), 8, "every id must resolve");
+}
+
+#[test]
+fn tiering_without_limit_is_inert() {
+    let mut s = sched(None, true);
+    for req in mixed_workload() {
+        s.submit(req).unwrap();
+    }
+    let done = s.run_to_completion().unwrap();
+    assert_eq!(done.len(), 8);
+    let m = &s.engine.metrics;
+    assert_eq!(m.spills, 0, "no limit, no pressure, no spills");
+    assert_eq!(m.prefetches, 0);
+    assert_eq!(m.requests_deferred, 0);
+}
