@@ -140,6 +140,16 @@ def build(out_dir, skip_existing=True):
             ["x", "k_cache", "v_cache", "valid", "pos"] + [k for k, _ in lw],
             ["x_out", "k_new", "v_new", "attn"],
         )
+        for b in ARTIFACTS.decode_batch_sizes:
+            add(
+                f"layer_decode_batched_{m}x{b}",
+                M.layer_decode_batched,
+                [sds((b, d)), sds((b, hk, m, dh)), sds((b, hk, m, dh)),
+                 sds((b, hk, m)), sds((b,), I32)] + lw_sds,
+                ["x", "k_cache", "v_cache", "valid", "pos"]
+                + [k for k, _ in lw],
+                ["x_out", "k_new", "v_new", "attn"],
+            )
     add(
         "logits",
         M.logits,

@@ -50,6 +50,13 @@ class ArtifactConfig:
     decode_buckets: List[int] = field(
         default_factory=lambda: [128, 256, 512, 1024, 2048, 4096]
     )
+    # Batch sizes B lowered as layer_decode_batched_{M}x{B}: one dispatch
+    # advances B same-capacity-bucket sessions. The rust scheduler chunks a
+    # decode group greedily onto the largest fitting B and serves any
+    # remainder with the per-session layer_decode_{M} artifacts.
+    decode_batch_sizes: List[int] = field(
+        default_factory=lambda: [2, 4, 8]
+    )
     pool_kernel: int = 7           # maxpool smoothing width (paper App. D)
 
 

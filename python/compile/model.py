@@ -9,6 +9,9 @@ Entrypoints (each AOT-lowered to HLO text by aot.py, one per shape bucket):
   lava_score_ep(win_attn, V, length)          -> scores[Hk, N]   (fused path)
   layer_decode(x[1,d], K[Hk,M,dh], V, valid, pos, <layer w>)
                                               -> x_out, k_new, v_new, attn
+  layer_decode_batched(x[B,d], K[B,Hk,M,dh], V, valid, pos[B], <layer w>)
+                                              -> x_out, k_new, v_new, attn
+                                                 (B packed sessions, one call)
   logits(x[1,d], ln_f, unembed)               -> p[vocab]
 
 Weights are *runtime inputs*, so one compiled `layer_prefill` executable
@@ -163,6 +166,29 @@ def layer_decode(x, k_cache, v_cache, valid, pos, ln1, wq, wk, wv, wo, ln2, w1, 
     x = x + o @ wo
     x_out = _ffn(x, lw)
     return x_out, k[:, 0], v[:, 0], attn
+
+
+def layer_decode_batched(x, k_cache, v_cache, valid, pos,
+                         ln1, wq, wk, wv, wo, ln2, w1, w2):
+    """One transformer layer for a decode step over B packed sessions.
+
+    vmap of layer_decode over the leading batch axis, with the layer weights
+    broadcast: each session's math is exactly the single-session entrypoint,
+    so the batched artifact is bit-compatible with looping layer_decode_{M}.
+
+    Args:
+      x:       [B, d];  k_cache, v_cache: [B, Hk, M, dh];  valid: [B, Hk, M];
+      pos:     [B] int32 per-session absolute positions.
+
+    Returns:
+      x_out [B, d];  k_new, v_new [B, Hk, dh];  attn [B, H, M+1].
+    """
+    def one(xi, ki, vi, vali, pi):
+        return layer_decode(xi[None, :], ki, vi, vali, pi[None],
+                            ln1, wq, wk, wv, wo, ln2, w1, w2)
+
+    x_out, k_new, v_new, attn = jax.vmap(one)(x, k_cache, v_cache, valid, pos)
+    return x_out[:, 0], k_new, v_new, attn
 
 
 def logits(x, ln_f, unembed):

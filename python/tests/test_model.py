@@ -122,6 +122,50 @@ def test_decode_step_matches_prefill(params):
         assert float(jnp.abs(attn[:, n:m]).max()) == 0.0
 
 
+def test_layer_decode_batched_matches_serial(params):
+    """The batched decode entrypoint == looping layer_decode per session."""
+    rng = np.random.default_rng(3)
+    b, n, m = 3, 40, 64
+    li = 1
+    xs, ks, vs, valids, poss = [], [], [], [], []
+    for s in range(b):
+        ids = jnp.array(rng.integers(0, 256, size=n + s), jnp.int32)
+        layers, _ = M.reference_prefill(params, ids)
+        k_cache = jnp.zeros((CFG.n_kv_heads, m, CFG.d_head))
+        v_cache = jnp.zeros_like(k_cache)
+        valid = np.zeros((CFG.n_kv_heads, m), np.float32)
+        ln = n + s
+        k_cache = k_cache.at[:, :ln].set(layers[li]["k"])
+        v_cache = v_cache.at[:, :ln].set(layers[li]["v"])
+        valid[:, :ln] = 1.0
+        xs.append(M.embed(ids[-1:], params["tok_emb"])[0])
+        ks.append(k_cache)
+        vs.append(v_cache)
+        valids.append(jnp.array(valid))
+        poss.append(ln)
+
+    bx = jnp.stack(xs)
+    bk = jnp.stack(ks)
+    bv = jnp.stack(vs)
+    bvalid = jnp.stack(valids)
+    bpos = jnp.array(poss, jnp.int32)
+    x_out, k_new, v_new, attn = M.layer_decode_batched(
+        bx, bk, bv, bvalid, bpos, *lw_args(params, li)
+    )
+    assert x_out.shape == (b, CFG.d_model)
+    assert k_new.shape == (b, CFG.n_kv_heads, CFG.d_head)
+    assert attn.shape == (b, CFG.n_heads, m + 1)
+    for s in range(b):
+        ref = M.layer_decode(
+            bx[s][None, :], bk[s], bv[s], bvalid[s],
+            jnp.array([poss[s]], jnp.int32), *lw_args(params, li)
+        )
+        np.testing.assert_allclose(x_out[s], ref[0][0], atol=1e-6)
+        np.testing.assert_allclose(k_new[s], ref[1], atol=1e-6)
+        np.testing.assert_allclose(v_new[s], ref[2], atol=1e-6)
+        np.testing.assert_allclose(attn[s], ref[3], atol=1e-6)
+
+
 def test_decode_eviction_mask_equals_compaction(params):
     """Masking out slots == physically removing them (scatter vs compact)."""
     rng = np.random.default_rng(5)

@@ -16,6 +16,12 @@
 //! prefetch before decode), reporting wall time, deferrals, spill/prefetch
 //! counts, and peak hot-tier bytes.
 //!
+//! Part 4 — batched decode: 1/4/8 same-bucket sessions decoding
+//! concurrently with capacity-bucket grouping off (one `layer_decode`
+//! dispatch per session per layer, the old path) vs on (one
+//! `layer_decode_batched` dispatch per group per layer), reporting wall
+//! time, decode tok/s, batch occupancy, and total backend dispatches.
+//!
 //!   cargo bench --bench serving [-- --pjrt] [-- --ctx 512] [-- --requests 24]
 //!
 //! `--smoke` runs every mock-backend section with tiny iteration counts so
@@ -193,6 +199,63 @@ fn run_tiering_bench(ctx: usize, n_requests: usize, reps: usize) {
     }
 }
 
+/// Part 4: N same-bucket sessions decoding concurrently, capacity-bucket
+/// grouping off vs on. The same prompt is submitted N times so every
+/// session provably shares one capacity signature (content does not change
+/// decode cost on the mock backend).
+fn run_batched_decode_bench(ctx: usize, max_new: usize, reps: usize) {
+    for &nsess in &[1usize, 4, 8] {
+        for (label, batched) in [("batch-off", false), ("batch-on", true)] {
+            let mut walls = Vec::new();
+            let mut last_report = String::new();
+            for _ in 0..reps {
+                let mock = MockBackend::new(MockBackend::default_config());
+                let engine =
+                    Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+                let mut sched = Scheduler::new(
+                    engine,
+                    SchedulerOptions {
+                        max_active: 8,
+                        max_prefill_batch: 8,
+                        prefill_every: 2,
+                        batched_decode: batched,
+                        ..Default::default()
+                    },
+                );
+                let mut rng = Rng::new(11);
+                let inst = workloads::needle_qa(&mut rng, ctx, 4);
+                let t0 = std::time::Instant::now();
+                for _ in 0..nsess {
+                    sched
+                        .submit(GenerateRequest {
+                            prompt: inst.prompt.clone(),
+                            max_new_tokens: max_new,
+                        })
+                        .unwrap();
+                }
+                let done = sched.run_to_completion().unwrap();
+                walls.push(t0.elapsed().as_secs_f64());
+                assert_eq!(done.len(), nsess);
+                let m = &sched.engine.metrics;
+                last_report = format!(
+                    "decode_tok_s={:.1} occupancy={:.2} dispatches={}",
+                    m.decode_tok_per_sec(),
+                    m.batch_occupancy(),
+                    m.decode_dispatches_total(),
+                );
+            }
+            let mean_wall: f64 = walls.iter().sum::<f64>() / walls.len() as f64;
+            println!(
+                "{:<40} {:>10.2} ms wall ({} sessions) | {}",
+                format!("batched-decode/{label}/B{nsess}/ctx{ctx}"),
+                mean_wall * 1e3,
+                nsess,
+                last_report
+            );
+        }
+    }
+}
+
 fn main() {
     let args = Args::parse_env();
     let smoke = args.bool("smoke");
@@ -220,6 +283,8 @@ fn main() {
         run_scheduler_bench(ctx, n_requests, reps);
         println!("-- tiering: memory pressure, hot/warm spill off vs on --");
         run_tiering_bench(ctx, n_requests, reps);
+        println!("-- batched decode: same-bucket grouping off vs on --");
+        run_batched_decode_bench(ctx, if smoke { 8 } else { 64 }, reps);
         println!("(mock backend; pass -- --pjrt for the real model)");
     }
     println!("serving OK");

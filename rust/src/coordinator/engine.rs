@@ -1,5 +1,6 @@
 //! The serving engine: layer-wise prefill with cascading compression
-//! (Algorithm 2) + the decode loop, generic over the model backend.
+//! (Algorithm 2) + the serial and batched decode paths, generic over the
+//! model backend.
 //!
 //! Prefill of an n-token prompt, with total cache budget 𝔹:
 //!   1. embed host-side, pick the shape bucket;
@@ -14,6 +15,27 @@
 //!
 //! Peak memory therefore never exceeds (retained caches) + (one
 //! uncompressed layer), which is exactly the property Fig. 3 measures.
+//!
+//! ## Decode: gather → one dispatch per layer → scatter
+//!
+//! [`Engine::decode_step_batch`] advances B sessions sharing a capacity
+//! bucket (equal [`Session::capacity_signature`]) by one token each:
+//!
+//!   1. **gather** — embed each session's last token host-side and pack the
+//!      rows into one [B, d] residual-stream tensor;
+//!   2. **dispatch** — per layer, issue a single
+//!      `layer_decode_batched_{M}x{B}` call over the packed input and a
+//!      zero-copy [`crate::kvcache::BatchDecodeView`] of the B caches
+//!      (L dispatches per round instead of B·L);
+//!   3. **scatter** — split the per-session attention rows back out and run
+//!      each cache's score update / append / decode-eviction independently
+//!      (LAVa's layer-level scores keep per-session eviction state
+//!      independent, so batching the forward pass changes nothing else).
+//!
+//! [`Engine::decode_step`] is the serial form (one session, one
+//! `layer_decode_{M}` per layer). Both paths share the same scatter helper
+//! and must stay *bit-identical* per session — `tests/batched_decode.rs`
+//! enforces it for every decode-evicting and static policy.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -109,15 +131,20 @@ impl<B: ModelBackend> Engine<B> {
         self.opts.budget_per_head * cfg.n_kv_heads * cfg.n_layers
     }
 
+    /// Session with an engine-issued id (standalone `generate`/bench use).
+    /// Delegates to [`Engine::new_session_with_id`] so there is exactly one
+    /// construction path.
     pub fn new_session(&mut self, req: &GenerateRequest) -> Session {
-        self.next_id += 1;
-        Session::new(self.next_id, req.prompt.clone(), req.max_new_tokens)
+        self.new_session_with_id(self.next_id + 1, req)
     }
 
     /// Session with a caller-supplied id: the scheduler threads the id the
     /// batcher handed out at submission all the way to the result, so one id
-    /// names the request end-to-end.
-    pub fn new_session_with_id(&self, id: u64, req: &GenerateRequest) -> Session {
+    /// names the request end-to-end. The engine's own counter advances past
+    /// every id it sees here, so a later `new_session` can never silently
+    /// reuse a batcher-issued id.
+    pub fn new_session_with_id(&mut self, id: u64, req: &GenerateRequest) -> Session {
+        self.next_id = self.next_id.max(id);
         Session::new(id, req.prompt.clone(), req.max_new_tokens)
     }
 
@@ -275,22 +302,11 @@ impl<B: ModelBackend> Engine<B> {
         let emb = self.backend.embed(&[tok], 1)?;
         let mut x = Tensor::f32(emb.as_f32()?[..d].to_vec(), &[1, d]);
 
-        let per_head_budget = self.opts.budget_per_head;
         for l in 0..cfg.n_layers {
             let out = self.backend.layer_decode(l, &x, &sess.caches[l], pos)?;
             let cache = &mut sess.caches[l];
-
-            if self.opts.policy.decode_evict && !self.opts.policy.full_cache {
-                update_decode_scores(cache, &out.attn, &cfg, self.opts.policy.score);
-            }
-
-            if !cache.append(&out.k_new, &out.v_new, pos as i32, decode_entry_score(&self.opts.policy)) {
-                bail!("layer {l} cache overflow at pos {pos}");
-            }
-
-            if self.opts.policy.decode_evict && !self.opts.policy.full_cache {
-                evict_decode_overflow(cache, per_head_budget, pos, cfg.window);
-            }
+            self.scatter_decode_out(cache, &out.attn, &out.k_new, &out.v_new, pos, l)?;
+            self.metrics.observe_decode_dispatches(sess.caches[l].capacity(), 1);
             x = out.x_out;
         }
 
@@ -298,13 +314,129 @@ impl<B: ModelBackend> Engine<B> {
         let next = argmax(&logits);
         sess.generated.push(next);
         sess.next_pos += 1;
-        let live: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
-        self.metrics.observe_kv(live);
+        self.metrics.observe_kv(sess.kv_bytes());
+        self.metrics.observe_decode_batch(1);
         sess.decode_secs += t0.elapsed().as_secs_f64();
         if sess.is_done() {
             sess.phase = Phase::Finished;
         }
         Ok(next)
+    }
+
+    /// One decode step for B sessions sharing a capacity bucket: gather the
+    /// last tokens into one [B, d] input, issue a single
+    /// `layer_decode_batched` dispatch per layer, then scatter each
+    /// session's attention row back into its own score update / append /
+    /// eviction. Produces tokens, scores, and cache contents bit-identical
+    /// to looping [`Engine::decode_step`] over the same sessions.
+    ///
+    /// Fails as a unit: an error leaves the batch partially advanced, so
+    /// callers must treat the whole group as failed (the scheduler retires
+    /// every member), exactly as a serial decode error fails its session.
+    pub fn decode_step_batch(&mut self, sessions: &mut [Session]) -> Result<Vec<i32>> {
+        if sessions.is_empty() {
+            return Ok(vec![]);
+        }
+        let sig = sessions[0].capacity_signature();
+        for sess in sessions.iter() {
+            if !sess.is_fully_hot() {
+                bail!(
+                    "decode_step_batch on session {} with non-resident layers \
+                     (prefetch before decode)",
+                    sess.id
+                );
+            }
+            if !sess.matches_capacity_signature(&sig) {
+                bail!("decode_step_batch: session {} is in a different capacity bucket", sess.id);
+            }
+        }
+        let t0 = std::time::Instant::now();
+        let cfg = self.backend.config().clone();
+        let b = sessions.len();
+        let d = cfg.d_model;
+
+        // gather: one packed residual-stream input for the whole batch
+        let mut xs = vec![0.0f32; b * d];
+        let mut positions = Vec::with_capacity(b);
+        for (i, sess) in sessions.iter().enumerate() {
+            let tok = *sess.generated.last().ok_or_else(|| anyhow!("decode before prefill"))?;
+            let emb = self.backend.embed(&[tok], 1)?;
+            xs[i * d..(i + 1) * d].copy_from_slice(&emb.as_f32()?[..d]);
+            positions.push(sess.next_pos);
+        }
+        let mut x = Tensor::f32(xs, &[b, d]);
+
+        for l in 0..cfg.n_layers {
+            // one dispatch per (layer, capacity bucket) for the whole group
+            let out = {
+                let caches: Vec<&HotStore> = sessions.iter().map(|s| &s.caches[l]).collect();
+                self.backend.layer_decode_batched(l, &x, &caches, &positions)?
+            };
+            self.metrics.observe_decode_dispatches(sig[l], out.dispatches as u64);
+            // scatter: per-session cache maintenance stays independent
+            for (i, sess) in sessions.iter_mut().enumerate() {
+                let cache = &mut sess.caches[l];
+                self.scatter_decode_out(
+                    cache,
+                    &out.attn[i],
+                    &out.k_new[i],
+                    &out.v_new[i],
+                    positions[i],
+                    l,
+                )?;
+            }
+            x = out.x_out;
+        }
+
+        // per-session logits + bookkeeping (same order as the serial loop)
+        let xf = x.as_f32()?;
+        let mut next_tokens = Vec::with_capacity(b);
+        for (i, sess) in sessions.iter_mut().enumerate() {
+            let xi = Tensor::f32(xf[i * d..(i + 1) * d].to_vec(), &[1, d]);
+            let logits = self.backend.logits(&xi)?;
+            let next = argmax(&logits);
+            sess.generated.push(next);
+            sess.next_pos += 1;
+            self.metrics.observe_kv(sess.kv_bytes());
+            if sess.is_done() {
+                sess.phase = Phase::Finished;
+            }
+            next_tokens.push(next);
+        }
+        self.metrics.observe_decode_batch(b);
+        let per_session_secs = t0.elapsed().as_secs_f64() / b as f64;
+        for sess in sessions.iter_mut() {
+            sess.decode_secs += per_session_secs;
+        }
+        Ok(next_tokens)
+    }
+
+    /// Scatter one session's layer-decode outputs back into its cache:
+    /// decode-time score maintenance, append, and over-budget eviction.
+    /// Shared verbatim by [`Engine::decode_step`] and
+    /// [`Engine::decode_step_batch`] so the two paths stay bit-identical.
+    fn scatter_decode_out(
+        &self,
+        cache: &mut HotStore,
+        attn: &Tensor,
+        k_new: &[f32],
+        v_new: &[f32],
+        pos: usize,
+        layer: usize,
+    ) -> Result<()> {
+        let policy = &self.opts.policy;
+        let cfg = self.backend.config();
+        let maintain = policy.decode_evict && !policy.full_cache;
+        if maintain {
+            update_decode_scores(cache, attn, cfg, policy.score);
+        }
+        if !cache.append(k_new, v_new, pos as i32, decode_entry_score(policy)) {
+            bail!("layer {layer} cache overflow at pos {pos}");
+        }
+        if maintain {
+            evict_decode_overflow(cache, self.opts.budget_per_head, pos, cfg.window);
+        }
+        Ok(())
     }
 
     /// Convenience: full generate loop for one request.
@@ -398,45 +530,61 @@ fn update_decode_scores(
     let a = attn.as_f32().expect("attn");
     let group = cfg.group_size();
     for kv in 0..cfg.n_kv_heads {
-        for i in 0..cache.head_len(kv) {
+        // fully pinned heads (full-cache loads, recompression windows) have
+        // nothing to maintain — skip the per-entry group reduction outright
+        if cache.head_scores(kv).iter().all(|&s| s == f32::MAX) {
+            continue;
+        }
+        let len = cache.head_len(kv);
+        for i in 0..len {
+            let s = cache.score(kv, i);
+            if s == f32::MAX {
+                continue; // pinned entry: its score is never replaced
+            }
             // mean over the q-heads of this group
             let mut mass = 0.0;
             for g in 0..group {
                 mass += a[(kv * group + g) * m1 + i];
             }
             mass /= group as f32;
-            let s = cache.score(kv, i);
             let new = match kind {
-                ScoreKind::Tova => mass,          // replace with last-token attention
-                _ => s + mass,                    // H2O: accumulate
+                ScoreKind::Tova => mass, // replace with last-token attention
+                _ => s + mass,           // H2O: accumulate
             };
-            if s != f32::MAX {
-                cache.set_score(kv, i, new);
-            }
+            cache.set_score(kv, i, new);
         }
     }
 }
 
-/// Evict the lowest-scored non-recent entry per over-budget head.
+/// Evict the lowest-scored non-recent entries of each over-budget head,
+/// with all of a head's victims selected in one pass (the old form rescanned
+/// the entire head per victim inside a `while` loop — O(len²) when decode
+/// pushes a head far over budget, e.g. right after a budget shrink).
 fn evict_decode_overflow(cache: &mut HotStore, per_head_budget: usize, pos: usize, window: usize) {
     let hk = cache.n_kv_heads();
     for h in 0..hk {
-        while cache.head_len(h) > per_head_budget {
-            let mut victim: Option<(usize, f32)> = None;
-            for i in 0..cache.head_len(h) {
+        let len = cache.head_len(h);
+        let over = len.saturating_sub(per_head_budget);
+        if over == 0 {
+            continue;
+        }
+        // candidates: entries outside the protected recent window
+        let mut candidates: Vec<(f32, usize)> = (0..len)
+            .filter(|&i| {
                 let p = cache.position(h, i).max(0) as usize;
-                if pos.saturating_sub(p) <= window {
-                    continue; // protected recent window
-                }
-                let s = cache.score(h, i);
-                if victim.map(|(_, vs)| s < vs).unwrap_or(true) {
-                    victim = Some((i, s));
-                }
-            }
-            match victim {
-                Some((i, _)) => cache.remove_one(h, i),
-                None => break, // everything is recent; let it ride
-            }
+                pos.saturating_sub(p) > window
+            })
+            .map(|i| (cache.score(h, i), i))
+            .collect();
+        // lowest score first, ties broken by slot order — the same victims
+        // the old scan-per-victim selection produced
+        candidates.sort_by(|a, b| a.0.total_cmp(&b.0).then(a.1.cmp(&b.1)));
+        candidates.truncate(over);
+        // remove back-to-front so earlier slot indices stay valid
+        let mut victims: Vec<usize> = candidates.into_iter().map(|(_, i)| i).collect();
+        victims.sort_unstable_by(|a, b| b.cmp(a));
+        for i in victims {
+            cache.remove_one(h, i);
         }
     }
 }
@@ -582,6 +730,74 @@ mod tests {
         assert!(err.is_err(), "engine must refuse spilled (warm) layers");
         sess.residency[0] = Residency::Hot;
         e.decode_step(&mut sess).unwrap();
+    }
+
+    #[test]
+    fn session_ids_never_collide_with_caller_supplied_ids() {
+        let mut e = engine("lava", 24);
+        let req = GenerateRequest { prompt: prompt(100), max_new_tokens: 1 };
+        let a = e.new_session(&req);
+        assert_eq!(a.id, 1);
+        // a batcher-style caller hands out id 7; the engine counter must
+        // advance past it instead of re-issuing 2..=7 later
+        let b = e.new_session_with_id(7, &req);
+        assert_eq!(b.id, 7);
+        let c = e.new_session(&req);
+        assert_eq!(c.id, 8);
+    }
+
+    #[test]
+    fn decode_step_batch_rejects_mixed_buckets_and_warm_layers() {
+        let mut e = engine("lava", 24);
+        let mk = |e: &mut Engine<MockBackend>, n: usize| {
+            let req = GenerateRequest { prompt: prompt(n), max_new_tokens: 4 };
+            let mut s = e.new_session(&req);
+            e.prefill(&mut s).unwrap();
+            s
+        };
+        let s1 = mk(&mut e, 100);
+        let mut s2 = mk(&mut e, 100);
+        // force a different capacity signature on s2
+        s2.caches[0] = crate::kvcache::HotStore::new(4, 16, 4096);
+        let mut pair = [s1, s2];
+        assert!(e.decode_step_batch(&mut pair).is_err(), "mixed buckets must bail");
+
+        let s3 = mk(&mut e, 100);
+        let mut s4 = mk(&mut e, 100);
+        s4.residency[0] = Residency::Warm;
+        let mut pair = [s3, s4];
+        assert!(e.decode_step_batch(&mut pair).is_err(), "warm layers must bail");
+
+        let mut empty: [Session; 0] = [];
+        assert_eq!(e.decode_step_batch(&mut empty).unwrap(), vec![]);
+    }
+
+    #[test]
+    fn decode_step_batch_matches_serial_tokens() {
+        let mut serial = engine("h2o", 24);
+        let mut batched = engine("h2o", 24);
+        let reqs: Vec<GenerateRequest> = (0..3)
+            .map(|i| GenerateRequest {
+                prompt: (0..100).map(|t| ((t * (i + 3)) % 251) as i32).collect(),
+                max_new_tokens: 6,
+            })
+            .collect();
+        let mut ss: Vec<Session> = reqs.iter().map(|r| serial.new_session(r)).collect();
+        let mut bs: Vec<Session> = reqs.iter().map(|r| batched.new_session(r)).collect();
+        for (a, b) in ss.iter_mut().zip(bs.iter_mut()) {
+            serial.prefill(a).unwrap();
+            batched.prefill(b).unwrap();
+        }
+        for _ in 0..5 {
+            let serial_toks: Vec<i32> =
+                ss.iter_mut().map(|s| serial.decode_step(s).unwrap()).collect();
+            let batch_toks = batched.decode_step_batch(&mut bs).unwrap();
+            assert_eq!(serial_toks, batch_toks);
+        }
+        // dispatch accounting: 5 rounds × 4 layers, one dispatch per layer
+        assert_eq!(batched.metrics.decode_dispatches_total(), 20);
+        assert_eq!(serial.metrics.decode_dispatches_total(), 60);
+        assert!((batched.metrics.batch_occupancy() - 3.0).abs() < 1e-9);
     }
 
     #[test]

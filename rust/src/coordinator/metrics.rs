@@ -2,6 +2,7 @@
 //! Fig. 3) reports — decode latency and peak KV memory — plus the usual
 //! serving counters.
 
+use std::collections::BTreeMap;
 use std::time::Instant;
 
 use crate::util::stats;
@@ -26,6 +27,16 @@ pub struct Metrics {
     /// Scheduler step counters.
     pub admission_rounds: u64,
     pub decode_steps: u64,
+    /// Decode executions: one per `decode_step` call and one per
+    /// `decode_step_batch` group (a serial step is a batch of 1), plus the
+    /// sessions they covered. occupancy = sessions / batches.
+    pub decode_batches: u64,
+    pub decode_batch_sessions: u64,
+    /// Backend decode dispatches per capacity bucket M: one entry per
+    /// `layer_decode{,_batched}` call, keyed by the cache capacity it ran
+    /// at. With batching, a round of S same-bucket sessions adds L here
+    /// instead of S·L.
+    pub decode_dispatches: BTreeMap<usize, u64>,
     /// Admission deferral events (a queued request bounced for memory and
     /// requeued; one event per request per admission round).
     pub requests_deferred: u64,
@@ -109,6 +120,35 @@ impl Metrics {
         self.requests_deferred += 1;
     }
 
+    /// Record one decode execution covering `sessions` sessions (1 = the
+    /// serial path; >= 2 = one batched `decode_step_batch` group).
+    pub fn observe_decode_batch(&mut self, sessions: usize) {
+        self.decode_batches += 1;
+        self.decode_batch_sessions += sessions as u64;
+    }
+
+    /// Record `n` backend decode dispatches at capacity bucket `m` (n > 1
+    /// when a backend chunked one batched call onto several lowered
+    /// executables — the gauge counts real launches, not API calls).
+    pub fn observe_decode_dispatches(&mut self, m: usize, n: u64) {
+        *self.decode_dispatches.entry(m).or_insert(0) += n;
+    }
+
+    /// Mean sessions advanced per decode execution (1.0 = fully serial;
+    /// higher means the scheduler is amortizing dispatches across a batch).
+    pub fn batch_occupancy(&self) -> f64 {
+        if self.decode_batches > 0 {
+            self.decode_batch_sessions as f64 / self.decode_batches as f64
+        } else {
+            0.0
+        }
+    }
+
+    /// Total backend decode dispatches across all capacity buckets.
+    pub fn decode_dispatches_total(&self) -> u64 {
+        self.decode_dispatches.values().sum()
+    }
+
     pub fn finish_request(&mut self, prefill_secs: f64, decode_secs: f64, tokens: usize) {
         self.requests_finished += 1;
         self.tokens_generated += tokens as u64;
@@ -186,7 +226,8 @@ impl Metrics {
              hot_kv_mb(peak)={:.2} warm_kv_mb(peak)={:.2} spills={} prefetches={} \
              spilled_mb={:.2} prefetched_mb={:.2} \
              spill_ms(mean)={:.3} prefetch_ms(mean)={:.3} \
-             throughput_tok_s={:.1} admission_rounds={} decode_steps={}",
+             throughput_tok_s={:.1} admission_rounds={} decode_steps={} \
+             decode_batches={} batch_occupancy={:.2} decode_dispatches={}",
             self.requests_finished,
             self.requests_rejected,
             self.requests_canceled,
@@ -211,6 +252,9 @@ impl Metrics {
             self.throughput_tok_per_sec(),
             self.admission_rounds,
             self.decode_steps,
+            self.decode_batches,
+            self.batch_occupancy(),
+            self.decode_dispatches_total(),
         )
     }
 }
@@ -266,6 +310,25 @@ mod tests {
         assert!((m.mean_spill_ms() - 3.0).abs() < 1e-9);
         assert!((m.mean_prefetch_ms() - 1.0).abs() < 1e-9);
         assert!(m.report().contains("spills=2"));
+    }
+
+    #[test]
+    fn batch_accounting() {
+        let mut m = Metrics::new();
+        assert_eq!(m.batch_occupancy(), 0.0);
+        m.observe_decode_batch(4);
+        m.observe_decode_batch(1);
+        m.observe_decode_batch(1);
+        assert_eq!(m.decode_batches, 3);
+        assert_eq!(m.decode_batch_sessions, 6);
+        assert!((m.batch_occupancy() - 2.0).abs() < 1e-9);
+        m.observe_decode_dispatches(128, 1);
+        m.observe_decode_dispatches(128, 1);
+        m.observe_decode_dispatches(256, 1);
+        assert_eq!(m.decode_dispatches.get(&128), Some(&2));
+        assert_eq!(m.decode_dispatches.get(&256), Some(&1));
+        assert_eq!(m.decode_dispatches_total(), 3);
+        assert!(m.report().contains("batch_occupancy=2.00"));
     }
 
     #[test]

@@ -1,13 +1,36 @@
 //! L3 coordinator: the serving side of the paper.
 //!
 //! * [`engine`] — layer-wise prefill with cascading compression
-//!   (Algorithm 2), the decode loop, and per-policy budget handling.
+//!   (Algorithm 2), the serial + batched decode paths, and per-policy
+//!   budget handling.
 //! * [`session`] — per-request state: token ids, per-layer caches, metrics.
 //! * [`scheduler`] — continuous-batching scheduler: admission control by
-//!   KV-memory budget, prefill/decode interleaving, fairness.
+//!   KV-memory budget, prefill/decode interleaving, fairness, hot/warm
+//!   tiering, and capacity-bucket decode grouping.
 //! * [`batcher`] — request queue + grouping by shape bucket.
 //! * [`server`] — JSON-lines TCP front-end over the engine.
-//! * [`metrics`] — latency/memory counters (the quantities Fig. 3 plots).
+//! * [`metrics`] — latency/memory counters (the quantities Fig. 3 plots),
+//!   plus serving gauges: tier traffic, batch occupancy, per-bucket decode
+//!   dispatches.
+//!
+//! ## Batched decode data flow
+//!
+//! Each `decode_round` advances every active session by one token with as
+//! few backend dispatches as the active set allows:
+//!
+//! 1. **group** — fully-hot sessions sharing a capacity signature (equal
+//!    per-layer cache capacities) are packed into bucket groups; sessions
+//!    with spilled layers are prefetched and stepped on the serial path so
+//!    they never block a group.
+//! 2. **gather** — per group, the engine embeds each member's last token
+//!    host-side into one [B, d] residual-stream tensor.
+//! 3. **dispatch** — per layer, one `layer_decode_batched_{M}x{B}` call
+//!    executes over a zero-copy packed view of the B caches: L dispatches
+//!    per group per round instead of B·L.
+//! 4. **scatter** — each session's attention row feeds its own cache
+//!    maintenance (score update, append, decode eviction) independently;
+//!    LAVa's layer-level scoring keeps eviction state per-session, so the
+//!    batched and serial paths are bit-identical per session.
 
 pub mod batcher;
 pub mod engine;

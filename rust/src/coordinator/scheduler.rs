@@ -11,8 +11,14 @@
 //!     rejected with an explicit error result (no livelock).
 //!   * [`Scheduler::prefill_batch`] — run Algorithm 2 prefill for each
 //!     admitted request, recording queue-wait and TTFT per request.
-//!   * [`Scheduler::decode_round`] — one round-robin decode step across all
-//!     active sessions.
+//!   * [`Scheduler::decode_round`] — one decode step per active session,
+//!     advanced group-wise: fully-hot sessions sharing a capacity bucket
+//!     (equal `Session::capacity_signature`) are packed into one
+//!     `Engine::decode_step_batch` call — a single backend dispatch per
+//!     (layer, bucket) per round instead of one per session per layer.
+//!     Tier prefetch happens on the serial arm before any grouping, so a
+//!     spilled session falls back to the old per-session path instead of
+//!     blocking its group.
 //!
 //! Prefill admission is attempted every `prefill_every` ticks (bounds TTFT
 //! without starving decodes — the standard continuous-batching compromise).
@@ -73,6 +79,11 @@ pub struct SchedulerOptions {
     /// admission, and prefetch them back before decode. With this off,
     /// `kv_mem_limit` reverts to the old defer-or-reject behavior.
     pub tiering: bool,
+    /// Batched decode: group fully-hot active sessions by capacity bucket
+    /// and advance each group with one `layer_decode_batched` dispatch per
+    /// layer. Off reverts to one dispatch per session per layer (kept for
+    /// the bench comparison and as an escape hatch).
+    pub batched_decode: bool,
 }
 
 impl Default for SchedulerOptions {
@@ -84,6 +95,7 @@ impl Default for SchedulerOptions {
             max_prefill_batch: 4,
             max_queue_wait_secs: None,
             tiering: true,
+            batched_decode: true,
         }
     }
 }
@@ -395,44 +407,170 @@ impl<B: ModelBackend> Scheduler<B> {
         Ok(done)
     }
 
-    /// One round-robin decode step per active session. A decode error kills
-    /// only that session (retired as `Failed`); the rest keep serving. With
-    /// tiering on, each session is made fully hot-resident (prefetch, with
-    /// victim spills) before its step — the engine never sees warm layers.
+    /// One decode step per active session, advanced group-wise. Each round
+    /// packs the fully-hot active set into capacity-bucket groups and steps
+    /// every group through one `decode_step_batch` call (one backend
+    /// dispatch per layer per group); sessions that need a tier prefetch
+    /// take the old serial path instead, so a spilled session never blocks
+    /// its bucket group. A decode error kills only the failing execution
+    /// unit — the session on the serial path, the whole group on the
+    /// batched path (its caches are partially advanced) — and the rest keep
+    /// serving. With tiering on, the engine still never sees warm layers:
+    /// batch groups contain only fully-hot sessions and the serial arm
+    /// prefetches (with victim spills) before stepping.
     pub fn decode_round(&mut self) -> usize {
         let mut stepped: usize = 0;
         let mut still_active: VecDeque<Session> = VecDeque::new();
-        while let Some(mut sess) = self.active.pop_front() {
-            if self.opts.tiering {
-                self.make_resident(&mut sess, &mut still_active);
-            }
-            match self.engine.decode_step(&mut sess) {
-                Ok(_) => {
-                    stepped += 1;
-                    if sess.is_done() {
-                        self.retire(sess, FinishStatus::Completed, None);
+        while let Some(sess) = self.active.pop_front() {
+            if self.opts.batched_decode && sess.is_fully_hot() {
+                // gather this session's capacity-bucket group from the rest
+                // of the round's queue (fully-hot members only — a spilled
+                // session stays behind for the serial arm)
+                let sig = sess.capacity_signature();
+                let mut group = vec![sess];
+                let mut rest = VecDeque::with_capacity(self.active.len());
+                while let Some(s) = self.active.pop_front() {
+                    if s.is_fully_hot() && s.matches_capacity_signature(&sig) {
+                        group.push(s);
                     } else {
-                        // per-step gauge fidelity only matters when a limit
-                        // is being enforced; the unlimited path settles for
-                        // the end-of-tick observation (skips an O(S·L) scan
-                        // per step)
-                        if self.opts.tiering && self.opts.kv_mem_limit.is_some() {
-                            let hot = sess.kv_bytes()
-                                + deque_kv_bytes(&self.active)
-                                + deque_kv_bytes(&still_active);
-                            self.engine.metrics.observe_hot(hot);
-                        }
-                        still_active.push_back(sess);
+                        rest.push_back(s);
                     }
                 }
-                Err(e) => {
-                    self.retire(sess, FinishStatus::Failed, Some(format!("decode failed: {e:#}")));
+                self.active = rest;
+                let fits = !self.opts.tiering
+                    || self.reserve_group_headroom(&group, &mut still_active);
+                if fits {
+                    stepped += self.step_group(group, &mut still_active);
+                } else {
+                    // The group alone busts the hot limit even with every
+                    // outside victim spilled: step it per-session instead —
+                    // the serial path can spill already-stepped members
+                    // between steps, which a whole-group dispatch cannot.
+                    // Members wait their turn inside `self.active` so victim
+                    // selection and the hot gauge keep seeing their bytes.
+                    let n = group.len();
+                    for sess in group.into_iter().rev() {
+                        self.active.push_front(sess);
+                    }
+                    for _ in 0..n {
+                        let sess = self.active.pop_front().expect("group member just queued");
+                        stepped += self.step_serial(sess, &mut still_active);
+                    }
                 }
+            } else {
+                stepped += self.step_serial(sess, &mut still_active);
             }
         }
         self.active = still_active;
         self.engine.metrics.decode_steps += stepped as u64;
         stepped
+    }
+
+    /// Advance one session by one token on the serial path: tier prefetch
+    /// (with victim spills + growth headroom) and a per-session
+    /// `decode_step`. Returns 1 on success, 0 when the session failed.
+    fn step_serial(&mut self, mut sess: Session, still_active: &mut VecDeque<Session>) -> usize {
+        if self.opts.tiering {
+            self.make_resident(&mut sess, still_active);
+        }
+        match self.engine.decode_step(&mut sess) {
+            Ok(_) => {
+                if sess.is_done() {
+                    self.retire(sess, FinishStatus::Completed, None);
+                } else {
+                    // per-step gauge fidelity only matters when a limit is
+                    // being enforced; the unlimited path settles for the
+                    // end-of-tick observation (skips an O(S·L) scan per step)
+                    if self.opts.tiering && self.opts.kv_mem_limit.is_some() {
+                        let hot = sess.kv_bytes()
+                            + deque_kv_bytes(&self.active)
+                            + deque_kv_bytes(still_active);
+                        self.engine.metrics.observe_hot(hot);
+                    }
+                    still_active.push_back(sess);
+                }
+                1
+            }
+            Err(e) => {
+                self.retire(sess, FinishStatus::Failed, Some(format!("decode failed: {e:#}")));
+                0
+            }
+        }
+    }
+
+    /// Advance one capacity-bucket group by one token each via the batched
+    /// engine path; returns how many sessions stepped. On error the whole
+    /// group retires as `Failed` (the batch is its failure domain — caches
+    /// may be partially advanced).
+    fn step_group(
+        &mut self,
+        mut group: Vec<Session>,
+        still_active: &mut VecDeque<Session>,
+    ) -> usize {
+        match self.engine.decode_step_batch(&mut group) {
+            Ok(_) => {
+                let stepped = group.len();
+                if self.opts.tiering && self.opts.kv_mem_limit.is_some() {
+                    let hot = group.iter().map(|s| s.kv_bytes()).sum::<usize>()
+                        + deque_kv_bytes(&self.active)
+                        + deque_kv_bytes(still_active);
+                    self.engine.metrics.observe_hot(hot);
+                }
+                for sess in group {
+                    if sess.is_done() {
+                        self.retire(sess, FinishStatus::Completed, None);
+                    } else {
+                        still_active.push_back(sess);
+                    }
+                }
+                stepped
+            }
+            Err(e) => {
+                let msg = format!("batched decode failed: {e:#}");
+                for sess in group {
+                    self.retire(sess, FinishStatus::Failed, Some(msg.clone()));
+                }
+                0
+            }
+        }
+    }
+
+    /// Reserve one-step append headroom for a fully-hot batch group under a
+    /// hot-tier limit, spilling victims from sessions outside the group
+    /// (already-stepped sessions first — their next decode is farthest
+    /// away). Returns false when even a full outside spill cannot make the
+    /// whole group's step fit — the caller then steps the group serially,
+    /// which can also spill already-stepped *members* between steps (the
+    /// same bound [`Scheduler::make_resident`] maintains). A spilled victim
+    /// simply routes through the serial arm when its turn comes.
+    fn reserve_group_headroom(
+        &mut self,
+        group: &[Session],
+        decoded: &mut VecDeque<Session>,
+    ) -> bool {
+        let Some(limit) = self.opts.kv_mem_limit else { return true };
+        let group_bytes: usize = group.iter().map(|s| s.kv_bytes()).sum();
+        let growth: usize =
+            group.iter().flat_map(|s| s.caches.iter()).map(|c| c.step_growth_bytes()).sum();
+        let hot_now = group_bytes + deque_kv_bytes(&self.active) + deque_kv_bytes(decoded);
+        let mut over = (hot_now + growth).saturating_sub(limit);
+        if over == 0 {
+            return true;
+        }
+        let freed =
+            spill_from_deque(&mut self.tier, &mut self.engine.metrics, decoded, u64::MAX, over);
+        over = over.saturating_sub(freed);
+        if over > 0 {
+            let freed = spill_from_deque(
+                &mut self.tier,
+                &mut self.engine.metrics,
+                &mut self.active,
+                u64::MAX,
+                over,
+            );
+            over = over.saturating_sub(freed);
+        }
+        over == 0
     }
 
     /// Prefetch `sess`'s spilled layers, first spilling other sessions'
@@ -448,8 +586,7 @@ impl<B: ModelBackend> Scheduler<B> {
             // reserve headroom for the entries this decode step will append
             // (one per head per layer), so the post-step hot size still
             // respects the limit
-            let growth: usize =
-                sess.caches.iter().map(|c| c.n_kv_heads() * c.d_head() * 2 * 4).sum();
+            let growth: usize = sess.caches.iter().map(|c| c.step_growth_bytes()).sum();
             let over = (hot_now + needed + growth).saturating_sub(limit);
             if over > 0 {
                 let freed = spill_from_deque(
@@ -752,6 +889,68 @@ mod tests {
         assert_eq!(m.spills, 0, "tiering off must never spill");
         assert_eq!(m.prefetches, 0);
         assert!(m.requests_deferred > 0, "the old defer path must engage");
+    }
+
+    #[test]
+    fn decode_round_issues_one_dispatch_per_layer_for_a_bucket_group() {
+        let mut s = sched(None);
+        for _ in 0..4 {
+            s.submit(req(100, 8)).unwrap();
+        }
+        let batch = s.admit();
+        s.prefill_batch(batch).unwrap();
+        assert_eq!(s.active_count(), 4);
+        let before = s.engine.metrics.decode_dispatches_total();
+        let stepped = s.decode_round();
+        assert_eq!(stepped, 4);
+        let n_layers = s.engine.config().n_layers as u64;
+        assert_eq!(
+            s.engine.metrics.decode_dispatches_total() - before,
+            n_layers,
+            "4 same-bucket sessions must cost one dispatch per layer, not per session"
+        );
+        assert!((s.engine.metrics.batch_occupancy() - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_decode_off_dispatches_per_session() {
+        let mut s = sched(None);
+        s.opts.batched_decode = false;
+        for _ in 0..4 {
+            s.submit(req(100, 8)).unwrap();
+        }
+        let batch = s.admit();
+        s.prefill_batch(batch).unwrap();
+        let before = s.engine.metrics.decode_dispatches_total();
+        s.decode_round();
+        let n_layers = s.engine.config().n_layers as u64;
+        assert_eq!(s.engine.metrics.decode_dispatches_total() - before, 4 * n_layers);
+        assert!((s.engine.metrics.batch_occupancy() - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn batched_and_serial_rounds_produce_identical_results() {
+        let run = |batched: bool| {
+            let mut s = sched(None);
+            s.opts.batched_decode = batched;
+            for i in 0..5 {
+                // mixed buckets: three short, two long
+                let n = if i % 2 == 0 { 100 } else { 300 };
+                s.submit(req(n, 6)).unwrap();
+            }
+            let mut done = s.run_to_completion().unwrap();
+            done.sort_by_key(|(id, _)| *id);
+            done
+        };
+        let serial = run(false);
+        let batched = run(true);
+        assert_eq!(serial.len(), batched.len());
+        for ((ids, rs), (idb, rb)) in serial.iter().zip(&batched) {
+            assert_eq!(ids, idb);
+            assert_eq!(rs.tokens, rb.tokens, "id {ids}: tokens must be bit-identical");
+            assert_eq!(rs.status, rb.status);
+            assert_eq!(rs.kv_bytes_after_prefill, rb.kv_bytes_after_prefill);
+        }
     }
 
     #[test]

@@ -124,6 +124,20 @@ impl<B: ModelBackend> Server<B> {
             ("peak_kv_mb", Json::num(m.peak_kv_bytes as f64 / 1e6)),
             ("admission_rounds", Json::num(m.admission_rounds as f64)),
             ("decode_steps", Json::num(m.decode_steps as f64)),
+            // batched decode execution: groups run, mean sessions per group,
+            // and backend dispatch counts keyed by capacity bucket
+            ("decode_batches", Json::num(m.decode_batches as f64)),
+            ("batch_occupancy", Json::num(m.batch_occupancy())),
+            ("decode_dispatches_total", Json::num(m.decode_dispatches_total() as f64)),
+            (
+                "decode_dispatches",
+                Json::Obj(
+                    m.decode_dispatches
+                        .iter()
+                        .map(|(bucket, n)| (bucket.to_string(), Json::num(*n as f64)))
+                        .collect(),
+                ),
+            ),
             // per-tier state: hot is what kv_mem_limit bounds; warm holds
             // Q8-spilled layer caches
             ("deferred", Json::num(m.requests_deferred as f64)),
@@ -378,19 +392,38 @@ mod tests {
         assert_eq!(arr[0].get("tokens").unwrap().as_arr().unwrap().len(), 1);
         assert_eq!(arr[1].get("tokens").unwrap().as_arr().unwrap().len(), 2);
 
+        // a same-bucket batch that decodes together exercises the grouped
+        // decode path end-to-end (occupancy > 1 in the metrics below)
+        writeln!(
+            c,
+            "[{{\"prompt\": [{p}], \"max_new_tokens\": 4}}, {{\"prompt\": [{p}], \"max_new_tokens\": 4}}]",
+            p = prompt.join(",")
+        )
+        .unwrap();
+        let mut line_g = String::new();
+        reader.read_line(&mut line_g).unwrap();
+        let jg = Json::parse(line_g.trim()).unwrap();
+        assert_eq!(jg.as_arr().unwrap().len(), 2);
+
         // structured metrics reply
         writeln!(c, "{{\"cmd\": \"metrics\"}}").unwrap();
         let mut line_m = String::new();
         reader.read_line(&mut line_m).unwrap();
         let jm = Json::parse(line_m.trim()).unwrap();
         let m = jm.get("metrics").unwrap();
-        assert_eq!(m.get("requests").unwrap().as_usize().unwrap(), 3);
+        assert_eq!(m.get("requests").unwrap().as_usize().unwrap(), 5);
         assert!(m.get("ttft_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
         // per-tier keys are always present (zero without memory pressure)
         assert_eq!(m.get("spills").unwrap().as_usize().unwrap(), 0);
         assert_eq!(m.get("prefetches").unwrap().as_usize().unwrap(), 0);
         assert!(m.get("peak_hot_kv_mb").unwrap().as_f64().unwrap() > 0.0);
         assert_eq!(m.get("warm_kv_mb").unwrap().as_f64().unwrap(), 0.0);
+        // batched decode gauges: the two-request batch line decodes as one
+        // bucket group, so occupancy lands in (1, 2] and per-bucket dispatch
+        // counts are populated
+        assert!(m.get("batch_occupancy").unwrap().as_f64().unwrap() > 1.0);
+        assert!(m.get("decode_dispatches_total").unwrap().as_f64().unwrap() > 0.0);
+        assert!(m.get("decode_dispatches").unwrap().as_obj().unwrap().len() == 1);
 
         writeln!(c, "{{\"cmd\": \"shutdown\"}}").unwrap();
         let mut line2 = String::new();

@@ -67,6 +67,19 @@ impl Session {
         self.residency.iter().all(|r| *r == Residency::Hot)
     }
 
+    /// Per-layer hot-cache capacities — the shape key batched decode groups
+    /// by: one `layer_decode_batched` dispatch at layer l serves only
+    /// sessions whose layer-l caches share a capacity bucket, for every l.
+    pub fn capacity_signature(&self) -> Vec<usize> {
+        self.caches.iter().map(|c| c.capacity()).collect()
+    }
+
+    /// Allocation-free signature comparison for the per-round grouping hot
+    /// path (also true only when the layer counts match).
+    pub fn matches_capacity_signature(&self, sig: &[usize]) -> bool {
+        self.caches.iter().map(|c| c.capacity()).eq(sig.iter().copied())
+    }
+
     pub fn total_entries(&self) -> usize {
         self.caches.iter().map(|c| c.total_entries()).sum()
     }
@@ -94,6 +107,18 @@ mod tests {
         let s = Session::new(2, vec![1], 1);
         assert_eq!(s.kv_bytes(), 0);
         assert_eq!(s.total_entries(), 0);
+    }
+
+    #[test]
+    fn capacity_signature_tracks_layers() {
+        let mut s = Session::new(4, vec![1, 2], 1);
+        assert!(s.capacity_signature().is_empty());
+        s.caches.push(HotStore::new(2, 4, 128));
+        s.caches.push(HotStore::new(2, 4, 256));
+        assert_eq!(s.capacity_signature(), vec![128, 256]);
+        assert!(s.matches_capacity_signature(&[128, 256]));
+        assert!(!s.matches_capacity_signature(&[128]));
+        assert!(!s.matches_capacity_signature(&[128, 512]));
     }
 
     #[test]

@@ -5,6 +5,9 @@
 //! The K/V/valid buffers live inside [`Tensor`]s so [`HotStore::decode_tensors`]
 //! can hand out *borrowed views*: steady-state decode does no full-buffer
 //! clone per step (it used to clone K, V, and valid on every decode call).
+//! [`HotStore::batch_decode_tensors`] extends the same zero-copy contract to
+//! batched decode: B same-capacity caches packed as one logical [B, …]
+//! [`BatchDecodeView`] for a single `layer_decode_batched_{M}x{B}` dispatch.
 //!
 //! Each entry carries its original token position (RoPE phases are baked
 //! into cached keys, but analysis/debug and recency-based policies need
@@ -70,6 +73,13 @@ impl HotStore {
     /// Allocated bytes (padded buffers).
     pub fn allocated_bytes(&self) -> usize {
         (self.k.len() + self.v.len()) * 4
+    }
+
+    /// Hot bytes one decoded token appends to this cache (K+V f32 across
+    /// all kv heads) — the per-layer growth the scheduler reserves headroom
+    /// for before a decode step.
+    pub fn step_growth_bytes(&self) -> usize {
+        self.layout.n_kv_heads() * self.layout.d_head() * 2 * 4
     }
 
     fn kbuf(&self) -> &[f32] {
@@ -274,10 +284,85 @@ impl HotStore {
         (&self.k, &self.v, &self.valid)
     }
 
+    /// Pack B same-shape caches into one logical [B, …] batched decode view.
+    /// The view *borrows* every cache's K/V/valid buffers (no copies); a
+    /// backend that needs physically contiguous [B, …] staging buffers (the
+    /// PJRT upload boundary) materializes them from the view with
+    /// [`BatchDecodeView::pack_k`] and friends. Panics if the caches disagree
+    /// on heads, head dim, or capacity — callers group by capacity bucket
+    /// before packing.
+    pub fn batch_decode_tensors<'a>(caches: &[&'a HotStore]) -> BatchDecodeView<'a> {
+        assert!(!caches.is_empty(), "batch_decode_tensors needs at least one cache");
+        let (hk, dh, cap) = (caches[0].n_kv_heads(), caches[0].d_head(), caches[0].capacity());
+        let mut k = Vec::with_capacity(caches.len());
+        let mut v = Vec::with_capacity(caches.len());
+        let mut valid = Vec::with_capacity(caches.len());
+        for c in caches {
+            assert_eq!(c.n_kv_heads(), hk, "batched caches must share n_kv_heads");
+            assert_eq!(c.d_head(), dh, "batched caches must share d_head");
+            assert_eq!(c.capacity(), cap, "batched caches must share capacity");
+            let (ck, cv, cvalid) = c.decode_tensors();
+            k.push(ck);
+            v.push(cv);
+            valid.push(cvalid);
+        }
+        BatchDecodeView { k, v, valid, n_kv_heads: hk, d_head: dh, capacity: cap }
+    }
+
     /// Check the compact-prefix invariant (used by property tests).
     pub fn check_invariants(&self) -> Result<(), String> {
         let valid = self.valid.as_f32().expect("hot valid buffer is f32");
         self.layout.check(valid, &self.positions)
+    }
+}
+
+/// Borrowed, batch-packed decode input: B same-shape caches presented as one
+/// logical K [B, Hk, M, dh] / V [B, Hk, M, dh] / valid [B, Hk, M]. Each entry
+/// is a borrow of the owning [`HotStore`]'s live buffer, so building the view
+/// costs nothing per decode step; only backends that must hand the runtime a
+/// single contiguous buffer (PJRT upload) pay one gather via `pack_*`.
+pub struct BatchDecodeView<'a> {
+    /// Per-session K tensors, each [Hk, M, dh].
+    pub k: Vec<&'a Tensor>,
+    /// Per-session V tensors, each [Hk, M, dh].
+    pub v: Vec<&'a Tensor>,
+    /// Per-session valid tensors, each [Hk, M].
+    pub valid: Vec<&'a Tensor>,
+    pub n_kv_heads: usize,
+    pub d_head: usize,
+    pub capacity: usize,
+}
+
+impl BatchDecodeView<'_> {
+    pub fn batch_size(&self) -> usize {
+        self.k.len()
+    }
+
+    fn pack(parts: &[&Tensor], shape: &[usize]) -> Tensor {
+        let per: usize = shape[1..].iter().product();
+        let mut out = Vec::with_capacity(shape[0] * per);
+        for t in parts {
+            out.extend_from_slice(t.as_f32().expect("hot buffers are f32"));
+        }
+        Tensor::f32(out, shape)
+    }
+
+    /// Materialize the contiguous K staging tensor [B, Hk, M, dh].
+    pub fn pack_k(&self) -> Tensor {
+        let (b, hk, m, dh) = (self.batch_size(), self.n_kv_heads, self.capacity, self.d_head);
+        Self::pack(&self.k, &[b, hk, m, dh])
+    }
+
+    /// Materialize the contiguous V staging tensor [B, Hk, M, dh].
+    pub fn pack_v(&self) -> Tensor {
+        let (b, hk, m, dh) = (self.batch_size(), self.n_kv_heads, self.capacity, self.d_head);
+        Self::pack(&self.v, &[b, hk, m, dh])
+    }
+
+    /// Materialize the contiguous valid staging tensor [B, Hk, M].
+    pub fn pack_valid(&self) -> Tensor {
+        let (b, hk, m) = (self.batch_size(), self.n_kv_heads, self.capacity);
+        Self::pack(&self.valid, &[b, hk, m])
     }
 }
 
@@ -498,12 +583,47 @@ mod tests {
     }
 
     #[test]
+    fn batch_view_borrows_and_packs() {
+        let mut a = HotStore::new(2, 4, 8);
+        let mut b = HotStore::new(2, 4, 8);
+        a.append(&vec![1.0; 8], &vec![2.0; 8], 0, 0.5);
+        b.append(&vec![3.0; 8], &vec![4.0; 8], 0, 0.5);
+        b.append(&vec![5.0; 8], &vec![6.0; 8], 1, 0.5);
+        let view = HotStore::batch_decode_tensors(&[&a, &b]);
+        assert_eq!(view.batch_size(), 2);
+        assert_eq!(view.capacity, 8);
+        // entries borrow the live buffers: view.k[0] is a's K tensor
+        let (ak, _, _) = a.decode_tensors();
+        assert!(std::ptr::eq(view.k[0], ak), "view must borrow, not copy");
+        let k = view.pack_k();
+        assert_eq!(k.shape, vec![2, 2, 8, 4]);
+        let kf = k.as_f32().unwrap();
+        assert_eq!(kf[0], 1.0, "session 0 head 0 slot 0");
+        assert_eq!(kf[2 * 8 * 4], 3.0, "session 1 head 0 slot 0");
+        let valid = view.pack_valid();
+        assert_eq!(valid.shape, vec![2, 2, 8]);
+        let vf = valid.as_f32().unwrap();
+        assert_eq!(&vf[0..2], &[1.0, 0.0], "session 0 head 0 occupancy");
+        assert_eq!(&vf[16..19], &[1.0, 1.0, 0.0], "session 1 head 0 occupancy");
+        assert_eq!(view.pack_v().shape, vec![2, 2, 8, 4]);
+    }
+
+    #[test]
+    #[should_panic(expected = "share capacity")]
+    fn batch_view_rejects_mixed_capacity() {
+        let a = HotStore::new(2, 4, 8);
+        let b = HotStore::new(2, 4, 16);
+        HotStore::batch_decode_tensors(&[&a, &b]);
+    }
+
+    #[test]
     fn memory_accounting() {
         let mut c = HotStore::new(2, 4, 8);
         assert_eq!(c.live_bytes(), 0);
         c.append(&vec![0.0; 8], &vec![0.0; 8], 0, 0.0);
         // 2 heads * 1 entry * 4 dh * 2 (K+V) * 4 bytes
         assert_eq!(c.live_bytes(), 64);
+        assert_eq!(c.step_growth_bytes(), 64, "one decode step appends one entry per head");
         assert_eq!(c.allocated_bytes(), 2 * 8 * 4 * 2 * 4);
     }
 }

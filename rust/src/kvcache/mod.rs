@@ -29,7 +29,7 @@ pub mod layout;
 pub mod tier;
 pub mod warm;
 
-pub use hot::HotStore;
+pub use hot::{BatchDecodeView, HotStore};
 pub use layout::SlotLayout;
 pub use tier::{Residency, TierManager};
 pub use warm::{q8_tolerance, WarmBlock};

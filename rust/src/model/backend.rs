@@ -11,6 +11,12 @@
 //! Token embedding is a row lookup; the engine does it host-side from the
 //! `tok_emb` weights (cheaper than a PJRT call), so `embed_{N}` artifacts
 //! exist only for parity tests.
+//!
+//! Decode has two entrypoints: `layer_decode` (one session) and
+//! `layer_decode_batched` (B sessions sharing a capacity bucket, one
+//! dispatch). The batched form must be bit-identical to looping the serial
+//! form — the engine treats the two paths as interchangeable and the
+//! `batched_decode` equivalence suite enforces it per backend.
 
 use anyhow::{anyhow, Result};
 
@@ -37,6 +43,24 @@ pub struct DecodeOut {
     pub attn: Tensor,
 }
 
+/// Output of one layer's decode step over a batch of B sessions sharing one
+/// capacity bucket. The residual stream stays packed ([B, d] in, [B, d] out);
+/// per-session K/V/attn come back unpacked because the engine scatters them
+/// into B independent caches anyway.
+pub struct DecodeBatchOut {
+    pub x_out: Tensor, // [B, d]
+    /// Per-session new K rows, each [Hk*dh].
+    pub k_new: Vec<Vec<f32>>,
+    pub v_new: Vec<Vec<f32>>,
+    /// Per-session attention [H, M+1]; column M is the new token.
+    pub attn: Vec<Tensor>,
+    /// How many real backend executions served this call: 1 for a fully
+    /// vectorized implementation, B for the per-session fallback, in
+    /// between when a PJRT batch is chunked onto the lowered artifact
+    /// sizes. Feeds the per-bucket dispatch gauge truthfully.
+    pub dispatches: usize,
+}
+
 pub trait ModelBackend {
     fn config(&self) -> &ModelConfig;
     fn prefill_buckets(&self) -> &[usize];
@@ -57,6 +81,52 @@ pub trait ModelBackend {
         cache: &HotStore,
         pos: usize,
     ) -> Result<DecodeOut>;
+
+    /// One layer's decode step for B sessions sharing a capacity bucket:
+    /// `xs` is the packed [B, d] residual stream, `caches[i]` / `positions[i]`
+    /// belong to session i. Implementations must be bit-identical to calling
+    /// [`ModelBackend::layer_decode`] per session — the engine's batched and
+    /// serial decode paths are interchangeable, and the equivalence suite
+    /// holds every backend to it. This default does exactly that loop;
+    /// backends with a real batched dispatch override it.
+    fn layer_decode_batched(
+        &self,
+        layer: usize,
+        xs: &Tensor,
+        caches: &[&HotStore],
+        positions: &[usize],
+    ) -> Result<DecodeBatchOut> {
+        let b = caches.len();
+        if xs.shape != [b, self.config().d_model] || positions.len() != b {
+            return Err(anyhow!(
+                "layer_decode_batched: xs {:?} / {} caches / {} positions disagree",
+                xs.shape,
+                b,
+                positions.len()
+            ));
+        }
+        let d = self.config().d_model;
+        let xf = xs.as_f32()?;
+        let mut x_out = vec![0.0f32; b * d];
+        let mut k_new = Vec::with_capacity(b);
+        let mut v_new = Vec::with_capacity(b);
+        let mut attn = Vec::with_capacity(b);
+        for i in 0..b {
+            let xi = Tensor::f32(xf[i * d..(i + 1) * d].to_vec(), &[1, d]);
+            let out = self.layer_decode(layer, &xi, caches[i], positions[i])?;
+            x_out[i * d..(i + 1) * d].copy_from_slice(&out.x_out.as_f32()?[..d]);
+            k_new.push(out.k_new);
+            v_new.push(out.v_new);
+            attn.push(out.attn);
+        }
+        Ok(DecodeBatchOut {
+            x_out: Tensor::f32(x_out, &[b, d]),
+            k_new,
+            v_new,
+            attn,
+            dispatches: b,
+        })
+    }
 
     fn logits(&self, x: &Tensor) -> Result<Vec<f32>>;
 
@@ -79,6 +149,9 @@ pub struct PjrtBackend {
     cfg: ModelConfig,
     buckets_prefill: Vec<usize>,
     buckets_decode: Vec<usize>,
+    /// Batch sizes B with a lowered `layer_decode_batched_{M}x{B}` artifact
+    /// (ascending; empty on pre-batching artifact sets).
+    buckets_decode_batch: Vec<usize>,
     weights_host: Weights,
     // device-resident weights
     layer_bufs: Vec<Vec<xla::PjRtBuffer>>,
@@ -108,6 +181,7 @@ impl PjrtBackend {
             cfg: manifest.model.clone(),
             buckets_prefill: manifest.buckets.prefill.clone(),
             buckets_decode: manifest.buckets.decode.clone(),
+            buckets_decode_batch: manifest.buckets.decode_batch.clone(),
             weights_host: weights,
             layer_bufs,
             ln_f_buf,
@@ -200,6 +274,70 @@ impl ModelBackend for PjrtBackend {
         Ok(DecodeOut { x_out, k_new, v_new, attn })
     }
 
+    /// Batched decode through the `layer_decode_batched_{M}x{B}` artifacts:
+    /// the batch is chunked greedily onto the largest lowered batch size that
+    /// fits, and any remainder (or a pre-batching artifact set) falls back to
+    /// per-session `layer_decode_{M}` calls.
+    fn layer_decode_batched(
+        &self,
+        layer: usize,
+        xs: &Tensor,
+        caches: &[&HotStore],
+        positions: &[usize],
+    ) -> Result<DecodeBatchOut> {
+        let b = caches.len();
+        let d = self.cfg.d_model;
+        if b == 0 || xs.shape != [b, d] || positions.len() != b {
+            return Err(anyhow!(
+                "layer_decode_batched: xs {:?} / {} caches / {} positions disagree",
+                xs.shape,
+                b,
+                positions.len()
+            ));
+        }
+        let m = caches[0].capacity();
+        if caches.iter().any(|c| c.capacity() != m) {
+            return Err(anyhow!("layer_decode_batched: caches must share one capacity bucket"));
+        }
+        let xf = xs.as_f32()?;
+        let mut x_out = vec![0.0f32; b * d];
+        let mut k_new = Vec::with_capacity(b);
+        let mut v_new = Vec::with_capacity(b);
+        let mut attn = Vec::with_capacity(b);
+        let mut dispatches = 0;
+        let mut i = 0;
+        while i < b {
+            let step = match self.batched_artifact_size(m, b - i) {
+                Some(bb) => {
+                    let xc = Tensor::f32(xf[i * d..(i + bb) * d].to_vec(), &[bb, d]);
+                    let out = self.decode_batched_exec(
+                        layer,
+                        &xc,
+                        &caches[i..i + bb],
+                        &positions[i..i + bb],
+                    )?;
+                    x_out[i * d..(i + bb) * d].copy_from_slice(&out.x_out.as_f32()?[..bb * d]);
+                    k_new.extend(out.k_new);
+                    v_new.extend(out.v_new);
+                    attn.extend(out.attn);
+                    bb
+                }
+                None => {
+                    let xi = Tensor::f32(xf[i * d..(i + 1) * d].to_vec(), &[1, d]);
+                    let out = self.layer_decode(layer, &xi, caches[i], positions[i])?;
+                    x_out[i * d..(i + 1) * d].copy_from_slice(&out.x_out.as_f32()?[..d]);
+                    k_new.push(out.k_new);
+                    v_new.push(out.v_new);
+                    attn.push(out.attn);
+                    1
+                }
+            };
+            dispatches += 1;
+            i += step;
+        }
+        Ok(DecodeBatchOut { x_out: Tensor::f32(x_out, &[b, d]), k_new, v_new, attn, dispatches })
+    }
+
     fn logits(&self, x: &Tensor) -> Result<Vec<f32>> {
         let out = self.runtime.execute(
             "logits",
@@ -230,6 +368,63 @@ impl ModelBackend for PjrtBackend {
 }
 
 impl PjrtBackend {
+    /// Largest lowered decode batch size usable for `rest` more sessions at
+    /// capacity bucket `m` (None when no batched artifact applies).
+    fn batched_artifact_size(&self, m: usize, rest: usize) -> Option<usize> {
+        self.buckets_decode_batch
+            .iter()
+            .rev()
+            .copied()
+            .find(|&bb| {
+                bb > 1
+                    && bb <= rest
+                    && self.runtime.has_artifact(&format!("layer_decode_batched_{m}x{bb}"))
+            })
+    }
+
+    /// One `layer_decode_batched_{M}x{B}` dispatch over exactly B sessions.
+    fn decode_batched_exec(
+        &self,
+        layer: usize,
+        xs: &Tensor,
+        caches: &[&HotStore],
+        positions: &[usize],
+    ) -> Result<DecodeBatchOut> {
+        let bb = caches.len();
+        let m = caches[0].capacity();
+        let name = format!("layer_decode_batched_{m}x{bb}");
+        let view = HotStore::batch_decode_tensors(caches);
+        // the one gather on this path: the runtime needs contiguous [B, …]
+        // buffers at the upload boundary (same cost class as the upload)
+        let k = view.pack_k();
+        let v = view.pack_v();
+        let valid = view.pack_valid();
+        let pos_t = Tensor::i32(positions.iter().map(|&p| p as i32).collect(), &[bb]);
+        let mut args: Vec<Arg> =
+            vec![Arg::Host(xs), Arg::Host(&k), Arg::Host(&v), Arg::Host(&valid), Arg::Host(&pos_t)];
+        args.extend(self.layer_args(layer));
+        let mut out = self.runtime.execute(&name, &args)?;
+        if out.len() != 4 {
+            return Err(anyhow!("{name}: expected 4 outputs, got {}", out.len()));
+        }
+        let attn_all = out.pop().unwrap().into_f32()?; // [B, H, M+1]
+        let v_new_all = out.pop().unwrap().into_f32()?; // [B, Hk, dh]
+        let k_new_all = out.pop().unwrap().into_f32()?;
+        let x_out = out.pop().unwrap();
+        let h = self.cfg.n_heads;
+        let hkdh = self.cfg.n_kv_heads * self.cfg.d_head;
+        let m1 = m + 1;
+        let mut k_new = Vec::with_capacity(bb);
+        let mut v_new = Vec::with_capacity(bb);
+        let mut attn = Vec::with_capacity(bb);
+        for i in 0..bb {
+            k_new.push(k_new_all[i * hkdh..(i + 1) * hkdh].to_vec());
+            v_new.push(v_new_all[i * hkdh..(i + 1) * hkdh].to_vec());
+            attn.push(Tensor::f32(attn_all[i * h * m1..(i + 1) * h * m1].to_vec(), &[h, m1]));
+        }
+        Ok(DecodeBatchOut { x_out, k_new, v_new, attn, dispatches: 1 })
+    }
+
     /// Fused LAVa scoring through the L1 Pallas kernel artifact.
     pub fn lava_score_artifact(
         &self,
@@ -300,6 +495,49 @@ impl MockBackend {
     fn h01(&self, a: u64, b: u64, c: u64) -> f32 {
         let mut r = Rng::new(self.seed ^ a.wrapping_mul(0x9E37).wrapping_add(b) ^ (c << 32));
         r.f32()
+    }
+
+    /// Core decode math for one session: attention row [H*(M+1)] plus the new
+    /// K/V rows. Shared by the serial and batched entrypoints so the two are
+    /// bit-identical by construction.
+    fn decode_core(
+        &self,
+        layer: usize,
+        cache: &HotStore,
+        pos: usize,
+    ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        let cfg = &self.cfg;
+        let (h, hk, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head);
+        let m = cache.capacity();
+        let l64 = layer as u64;
+        let mut attn = vec![0.0f32; h * (m + 1)];
+        for hh in 0..h {
+            let kv = hh / (h / hk);
+            let live = cache.head_len(kv);
+            let mut sum = 0.0f32;
+            for i in 0..live {
+                let p = cache.position(kv, i).max(0) as usize;
+                let mut a = 0.05 + self.h01(l64 + hh as u64, p as u64, 7);
+                if pos.saturating_sub(p) < 8 {
+                    a += 1.0;
+                }
+                if self.hot_positions.contains(&p) {
+                    a += 6.0;
+                }
+                attn[hh * (m + 1) + i] = a;
+                sum += a;
+            }
+            attn[hh * (m + 1) + m] = 1.0; // self
+            sum += 1.0;
+            for i in 0..=m {
+                attn[hh * (m + 1) + i] /= sum;
+            }
+        }
+        let k_new: Vec<f32> =
+            (0..hk * dh).map(|i| self.h01(l64 * 91, (pos * 64 + i) as u64, 8) - 0.5).collect();
+        let v_new: Vec<f32> =
+            (0..hk * dh).map(|i| self.h01(l64 * 93, (pos * 64 + i) as u64, 9) - 0.5).collect();
+        (attn, k_new, v_new)
     }
 }
 
@@ -395,43 +633,51 @@ impl ModelBackend for MockBackend {
         cache: &HotStore,
         pos: usize,
     ) -> Result<DecodeOut> {
-        let cfg = &self.cfg;
-        let (h, hk, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head);
+        let h = self.cfg.n_heads;
         let m = cache.capacity();
-        let l64 = layer as u64;
-        let mut attn = vec![0.0f32; h * (m + 1)];
-        for hh in 0..h {
-            let kv = hh / (h / hk);
-            let live = cache.head_len(kv);
-            let mut sum = 0.0f32;
-            for i in 0..live {
-                let p = cache.position(kv, i).max(0) as usize;
-                let mut a = 0.05 + self.h01(l64 + hh as u64, p as u64, 7);
-                if pos.saturating_sub(p) < 8 {
-                    a += 1.0;
-                }
-                if self.hot_positions.contains(&p) {
-                    a += 6.0;
-                }
-                attn[hh * (m + 1) + i] = a;
-                sum += a;
-            }
-            attn[hh * (m + 1) + m] = 1.0; // self
-            sum += 1.0;
-            for i in 0..=m {
-                attn[hh * (m + 1) + i] /= sum;
-            }
-        }
-        let k_new: Vec<f32> =
-            (0..hk * dh).map(|i| self.h01(l64 * 91, (pos * 64 + i) as u64, 8) - 0.5).collect();
-        let v_new: Vec<f32> =
-            (0..hk * dh).map(|i| self.h01(l64 * 93, (pos * 64 + i) as u64, 9) - 0.5).collect();
+        let (attn, k_new, v_new) = self.decode_core(layer, cache, pos);
         Ok(DecodeOut {
             x_out: x.clone(),
             k_new,
             v_new,
             attn: Tensor::f32(attn, &[h, m + 1]),
         })
+    }
+
+    /// Vectorized batched decode: one pass over the batch with a single
+    /// packed residual-stream clone, instead of B per-session [1, d] slices
+    /// and clones per layer.
+    fn layer_decode_batched(
+        &self,
+        layer: usize,
+        xs: &Tensor,
+        caches: &[&HotStore],
+        positions: &[usize],
+    ) -> Result<DecodeBatchOut> {
+        let b = caches.len();
+        if b == 0 || xs.shape != [b, self.cfg.d_model] || positions.len() != b {
+            return Err(anyhow!(
+                "layer_decode_batched: xs {:?} / {} caches / {} positions disagree",
+                xs.shape,
+                b,
+                positions.len()
+            ));
+        }
+        let h = self.cfg.n_heads;
+        let m = caches[0].capacity();
+        if caches.iter().any(|c| c.capacity() != m) {
+            return Err(anyhow!("layer_decode_batched: caches must share one capacity bucket"));
+        }
+        let mut k_new = Vec::with_capacity(b);
+        let mut v_new = Vec::with_capacity(b);
+        let mut attn = Vec::with_capacity(b);
+        for (cache, &pos) in caches.iter().zip(positions) {
+            let (a, k, v) = self.decode_core(layer, cache, pos);
+            attn.push(Tensor::f32(a, &[h, m + 1]));
+            k_new.push(k);
+            v_new.push(v);
+        }
+        Ok(DecodeBatchOut { x_out: xs.clone(), k_new, v_new, attn, dispatches: 1 })
     }
 
     fn logits(&self, _x: &Tensor) -> Result<Vec<f32>> {
@@ -464,6 +710,44 @@ mod tests {
         let hot = win[10];
         let cold = win[30];
         assert!(hot > cold);
+    }
+
+    #[test]
+    fn mock_batched_decode_matches_serial() {
+        let mut b = MockBackend::new(MockBackend::default_config());
+        b.hot_positions = vec![3];
+        b.seed = 11;
+        let d = b.cfg.d_model;
+        // two caches with different contents, same capacity bucket
+        let mut c0 = crate::kvcache::HotStore::new(4, 16, 32);
+        let mut c1 = crate::kvcache::HotStore::new(4, 16, 32);
+        for p in 0..9 {
+            c0.append(&vec![0.1; 64], &vec![0.1; 64], p, 0.5);
+        }
+        for p in 0..5 {
+            c1.append(&vec![0.2; 64], &vec![0.2; 64], p, 0.5);
+        }
+        let xs: Vec<f32> = (0..2 * d).map(|i| i as f32 * 0.01).collect();
+        let xst = Tensor::f32(xs.clone(), &[2, d]);
+        let batched = b.layer_decode_batched(1, &xst, &[&c0, &c1], &[9, 5]).unwrap();
+        assert_eq!(batched.dispatches, 1, "the mock path is fully vectorized");
+        for (i, (cache, pos)) in [(&c0, 9usize), (&c1, 5usize)].iter().enumerate() {
+            let xi = Tensor::f32(xs[i * d..(i + 1) * d].to_vec(), &[1, d]);
+            let serial = b.layer_decode(1, &xi, cache, *pos).unwrap();
+            assert_eq!(batched.attn[i], serial.attn, "session {i} attn");
+            assert_eq!(batched.k_new[i], serial.k_new, "session {i} k_new");
+            assert_eq!(batched.v_new[i], serial.v_new, "session {i} v_new");
+            assert_eq!(
+                &batched.x_out.as_f32().unwrap()[i * d..(i + 1) * d],
+                &serial.x_out.as_f32().unwrap()[..d],
+                "session {i} x_out row"
+            );
+        }
+        // shape/arity/capacity mismatches are rejected, not panicked on
+        assert!(b.layer_decode_batched(1, &xst, &[&c0], &[9]).is_err());
+        assert!(b.layer_decode_batched(1, &xst, &[&c0, &c1], &[9]).is_err());
+        let c2 = crate::kvcache::HotStore::new(4, 16, 64);
+        assert!(b.layer_decode_batched(1, &xst, &[&c0, &c2], &[9, 5]).is_err());
     }
 
     #[test]

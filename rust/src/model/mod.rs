@@ -48,6 +48,10 @@ impl ModelConfig {
 pub struct BucketConfig {
     pub prefill: Vec<usize>,
     pub decode: Vec<usize>,
+    /// Batch sizes B lowered as `layer_decode_batched_{M}x{B}` artifacts,
+    /// ascending. Empty for artifact sets predating batched decode — the
+    /// backend then falls back to per-session dispatches.
+    pub decode_batch: Vec<usize>,
     pub pool_kernel: usize,
 }
 
@@ -102,6 +106,11 @@ impl Manifest {
                 .unwrap_or_default(),
             decode: j
                 .path("artifacts.decode_buckets")
+                .and_then(|v| v.as_arr())
+                .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
+                .unwrap_or_default(),
+            decode_batch: j
+                .path("artifacts.decode_batch_sizes")
                 .and_then(|v| v.as_arr())
                 .map(|a| a.iter().filter_map(|x| x.as_usize()).collect())
                 .unwrap_or_default(),
@@ -214,7 +223,7 @@ mod tests {
                     "bos_id": 256, "sep_id": 257, "query_id": 258,
                     "pad_id": 259, "group_size": 2},
           "artifacts": {"prefill_buckets": [16, 32], "decode_buckets": [32],
-                        "pool_kernel": 7},
+                        "decode_batch_sizes": [2, 4], "pool_kernel": 7},
           "layer_weight_order": ["ln1", "wq"],
           "weights": [
             {"name": "tok_emb", "file": "weights/tok_emb.bin", "shape": [4, 2]},
@@ -255,6 +264,7 @@ mod tests {
         assert_eq!(m.model.n_layers, 2);
         assert_eq!(m.model.group_size(), 2);
         assert_eq!(m.buckets.prefill, vec![16, 32]);
+        assert_eq!(m.buckets.decode_batch, vec![2, 4]);
         let w = Weights::load(&m).unwrap();
         assert_eq!(w.layers.len(), 2);
         assert_eq!(w.layers[0].len(), 2);
