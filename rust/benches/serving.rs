@@ -22,6 +22,13 @@
 //! `layer_decode_batched` dispatch per group per layer), reporting wall
 //! time, decode tok/s, batch occupancy, and total backend dispatches.
 //!
+//! Part 5 — engine sharding: the same memory-pressured mixed workload (so
+//! spill/prefetch overlap is exercised) swept over worker-pool widths
+//! 1/2/4, reporting wall time, decode tok/s, and worker utilization. In
+//! `--smoke` mode the sweep also writes machine-readable
+//! `BENCH_serving.json` (CI uploads it as an artifact, so a perf
+//! trajectory exists across commits).
+//!
 //!   cargo bench --bench serving [-- --pjrt] [-- --ctx 512] [-- --requests 24]
 //!
 //! `--smoke` runs every mock-backend section with tiny iteration counts so
@@ -33,6 +40,7 @@ use lava::coordinator::engine::{Engine, EngineOptions, GenerateRequest};
 use lava::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use lava::model::backend::{MockBackend, ModelBackend, PjrtBackend};
 use lava::util::cli::Args;
+use lava::util::json::{self, Json};
 use lava::util::rng::Rng;
 use lava::workloads;
 
@@ -256,6 +264,104 @@ fn run_batched_decode_bench(ctx: usize, max_new: usize, reps: usize) {
     }
 }
 
+/// Part 5: worker-count sweep. The mixed workload runs under the same
+/// tiering-pressure limit as Part 3, so the sweep exercises exactly the
+/// overlap the sharded engine is for: bucket groups decoding on the pool
+/// while the tier thread rehydrates next-round sessions. Emits
+/// `BENCH_serving.json` in smoke mode.
+fn run_worker_sweep(ctx: usize, n_requests: usize, reps: usize, smoke: bool) {
+    let limit = {
+        let probe = tiering_sched(false, None);
+        let max_len = mixed_workload(ctx, n_requests)
+            .iter()
+            .map(|r| r.prompt.len())
+            .max()
+            .unwrap_or(ctx);
+        probe.projected_bytes(max_len) + probe.retained_bytes(max_len)
+    };
+    let mut rows: Vec<Json> = Vec::new();
+    for &workers in &[1usize, 2, 4] {
+        let mut walls = Vec::new();
+        let mut tok_s_sum = 0.0;
+        let mut util_sum = 0.0;
+        // spill/prefetch decisions are deterministic per workload, so the
+        // last rep's counters equal every rep's
+        let mut spills = 0u64;
+        let mut prefetches = 0u64;
+        for _ in 0..reps {
+            let mock = MockBackend::new(MockBackend::default_config());
+            let engine =
+                Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+            let mut sched = Scheduler::new(
+                engine,
+                SchedulerOptions {
+                    kv_mem_limit: Some(limit),
+                    max_active: 8,
+                    prefill_every: 2,
+                    max_prefill_batch: 4,
+                    workers,
+                    ..Default::default()
+                },
+            );
+            let reqs = mixed_workload(ctx, n_requests);
+            let t0 = std::time::Instant::now();
+            for req in reqs {
+                sched.submit(req).unwrap();
+            }
+            let done = sched.run_to_completion().unwrap();
+            walls.push(t0.elapsed().as_secs_f64());
+            assert_eq!(done.len(), n_requests);
+            let m = &sched.engine.metrics;
+            assert!(
+                m.peak_hot_kv_bytes <= limit,
+                "hot tier exceeded the limit: {} > {limit}",
+                m.peak_hot_kv_bytes
+            );
+            tok_s_sum += m.decode_tok_per_sec();
+            util_sum += m.worker_utilization();
+            spills = m.spills;
+            prefetches = m.prefetches;
+        }
+        let mean_wall: f64 = walls.iter().sum::<f64>() / walls.len() as f64;
+        let decode_tok_s = tok_s_sum / reps as f64;
+        let utilization = util_sum / reps as f64;
+        println!(
+            "{:<40} {:>10.2} ms wall ({} reqs, limit {:.2} MB) | decode_tok_s={:.1} \
+             worker_util={:.2} spills={} prefetches={}",
+            format!("sharding/workers-{workers}/ctx{ctx}"),
+            mean_wall * 1e3,
+            n_requests,
+            limit as f64 / 1e6,
+            decode_tok_s,
+            utilization,
+            spills,
+            prefetches,
+        );
+        rows.push(Json::obj(vec![
+            ("workers", Json::num(workers as f64)),
+            ("wall_ms", Json::num(mean_wall * 1e3)),
+            ("decode_tok_s", Json::num(decode_tok_s)),
+            ("worker_utilization", Json::num(utilization)),
+            ("spills", Json::num(spills as f64)),
+            ("prefetches", Json::num(prefetches as f64)),
+        ]));
+    }
+    if smoke {
+        let doc = Json::obj(vec![
+            ("bench", Json::str("serving")),
+            ("mode", Json::str("smoke")),
+            ("ctx", Json::num(ctx as f64)),
+            ("requests", Json::num(n_requests as f64)),
+            ("kv_mem_limit", Json::num(limit as f64)),
+            ("worker_sweep", Json::Arr(rows)),
+        ]);
+        let path = "BENCH_serving.json";
+        std::fs::write(path, json::to_string(&doc) + "\n")
+            .unwrap_or_else(|e| panic!("write {path}: {e}"));
+        println!("wrote {path}");
+    }
+}
+
 fn main() {
     let args = Args::parse_env();
     let smoke = args.bool("smoke");
@@ -285,6 +391,8 @@ fn main() {
         run_tiering_bench(ctx, n_requests, reps);
         println!("-- batched decode: same-bucket grouping off vs on --");
         run_batched_decode_bench(ctx, if smoke { 8 } else { 64 }, reps);
+        println!("-- engine sharding: worker-count sweep, prefetch overlap on --");
+        run_worker_sweep(ctx, n_requests, reps, smoke);
         println!("(mock backend; pass -- --pjrt for the real model)");
     }
     println!("serving OK");

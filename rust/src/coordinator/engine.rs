@@ -18,8 +18,9 @@
 //!
 //! ## Decode: gather → one dispatch per layer → scatter
 //!
-//! [`Engine::decode_step_batch`] advances B sessions sharing a capacity
-//! bucket (equal [`Session::capacity_signature`]) by one token each:
+//! [`EngineWorker::decode_step_batch`] advances B sessions sharing a
+//! capacity bucket (equal [`Session::capacity_signature`]) by one token
+//! each:
 //!
 //!   1. **gather** — embed each session's last token host-side and pack the
 //!      rows into one [B, d] residual-stream tensor;
@@ -32,10 +33,25 @@
 //!      (LAVa's layer-level scores keep per-session eviction state
 //!      independent, so batching the forward pass changes nothing else).
 //!
-//! [`Engine::decode_step`] is the serial form (one session, one
+//! [`EngineWorker::decode_step`] is the serial form (one session, one
 //! `layer_decode_{M}` per layer). Both paths share the same scatter helper
 //! and must stay *bit-identical* per session — `tests/batched_decode.rs`
 //! enforces it for every decode-evicting and static policy.
+//!
+//! ## Engine front vs. engine workers
+//!
+//! [`Engine`] is the scheduler-facing front: it owns the backend, the
+//! options, the [`Metrics`] sink, and the session-id counter. All the
+//! *compute* — prefill, serial decode, batched decode — lives on
+//! [`EngineWorker`], a `Copy` view (`&backend`, `&options`) that needs only
+//! `&self`, so N workers can run different capacity-bucket groups (or
+//! different prefills) concurrently against one shared backend
+//! ([`crate::model::backend::ModelBackend`] is `Send + Sync`). A worker
+//! returns a [`StepReport`]/[`PrefillReport`] of everything it observed;
+//! the serving thread merges reports into [`Metrics`] in plan order, so
+//! metric totals are independent of worker interleaving. The `&mut self`
+//! methods on [`Engine`] are the single-threaded composition of the two
+//! (compute + absorb), kept as the canonical serial path.
 
 use anyhow::{anyhow, bail, Result};
 
@@ -110,6 +126,53 @@ pub struct GenerateResult {
     pub budgets: Vec<usize>,
 }
 
+/// Everything one worker-side decode step observed, merged into [`Metrics`]
+/// on the serving thread (via [`Engine::absorb_step`]) so workers never
+/// contend on the metrics sink.
+#[derive(Debug, Clone)]
+pub struct StepReport {
+    /// Next token per session, in batch order.
+    pub tokens: Vec<i32>,
+    /// Backend decode dispatches as (capacity bucket, count), one entry per
+    /// layer, in layer order.
+    pub dispatches: Vec<(usize, u64)>,
+    /// Per-session hot KV bytes after the step, in batch order.
+    pub kv_after: Vec<usize>,
+    /// Sessions this execution covered (1 = the serial path).
+    pub sessions: usize,
+}
+
+/// What one worker-side prefill observed (merged by [`Engine::absorb_prefill`]).
+#[derive(Debug, Clone)]
+pub struct PrefillReport {
+    /// First generated token.
+    pub token: i32,
+    /// Peak transient bytes: retained caches + one uncompressed layer.
+    pub peak_transient: usize,
+    /// Live KV bytes after compression settled.
+    pub live_after: usize,
+}
+
+/// Shareable, `Copy` compute view of the engine: backend + options, no
+/// metrics, no id counter. Everything here takes `&self`, so the worker
+/// pool can run many of these concurrently over disjoint sessions. Each
+/// method returns a report for the serving thread to merge.
+pub struct EngineWorker<'a, B: ModelBackend> {
+    pub backend: &'a B,
+    pub opts: &'a EngineOptions,
+}
+
+// manual impls: deriving would demand `B: Clone`/`B: Copy`, but the worker
+// only holds references, which are Copy for any `B`
+#[allow(clippy::expl_impl_clone_on_copy)]
+impl<B: ModelBackend> Clone for EngineWorker<'_, B> {
+    fn clone(&self) -> Self {
+        *self
+    }
+}
+
+impl<B: ModelBackend> Copy for EngineWorker<'_, B> {}
+
 pub struct Engine<B: ModelBackend> {
     pub backend: B,
     pub opts: EngineOptions,
@@ -126,9 +189,9 @@ impl<B: ModelBackend> Engine<B> {
         self.backend.config()
     }
 
-    fn total_budget(&self) -> usize {
-        let cfg = self.backend.config();
-        self.opts.budget_per_head * cfg.n_kv_heads * cfg.n_layers
+    /// The shareable compute view this engine's workers run on.
+    pub fn worker(&self) -> EngineWorker<'_, B> {
+        EngineWorker { backend: &self.backend, opts: &self.opts }
     }
 
     /// Session with an engine-issued id (standalone `generate`/bench use).
@@ -146,6 +209,99 @@ impl<B: ModelBackend> Engine<B> {
     pub fn new_session_with_id(&mut self, id: u64, req: &GenerateRequest) -> Session {
         self.next_id = self.next_id.max(id);
         Session::new(id, req.prompt.clone(), req.max_new_tokens)
+    }
+
+    /// Merge one worker decode report into the metrics sink. Totals are
+    /// identical to the old inline observation: dispatch counts add, peaks
+    /// max, and the live gauge lands on the last session of the report.
+    pub fn absorb_step(&mut self, report: &StepReport) {
+        for &(m, n) in &report.dispatches {
+            self.metrics.observe_decode_dispatches(m, n);
+        }
+        for &kv in &report.kv_after {
+            self.metrics.observe_kv(kv);
+        }
+        self.metrics.observe_decode_batch(report.sessions);
+    }
+
+    /// Merge one worker prefill report into the metrics sink.
+    pub fn absorb_prefill(&mut self, report: &PrefillReport) {
+        self.metrics.observe_transient(report.peak_transient);
+        self.metrics.observe_kv(report.live_after);
+    }
+
+    /// Run prefill under the configured policy (Algorithms 1 + 2).
+    pub fn prefill(&mut self, sess: &mut Session) -> Result<i32> {
+        let report = self.worker().prefill(sess)?;
+        self.absorb_prefill(&report);
+        Ok(report.token)
+    }
+
+    /// One decode step: feed the last generated token, produce the next.
+    /// Residency boundary: the engine only ever sees hot caches — a session
+    /// with warm layers must be prefetched by the tier manager first.
+    pub fn decode_step(&mut self, sess: &mut Session) -> Result<i32> {
+        let report = self.worker().decode_step(sess)?;
+        self.absorb_step(&report);
+        Ok(report.tokens[0])
+    }
+
+    /// One decode step for B sessions sharing a capacity bucket; see
+    /// [`EngineWorker::decode_step_batch`]. Produces tokens, scores, and
+    /// cache contents bit-identical to looping [`Engine::decode_step`].
+    ///
+    /// Fails as a unit: an error leaves the batch partially advanced, so
+    /// callers must treat the whole group as failed (the scheduler retires
+    /// every member), exactly as a serial decode error fails its session.
+    pub fn decode_step_batch(&mut self, sessions: &mut [Session]) -> Result<Vec<i32>> {
+        if sessions.is_empty() {
+            return Ok(vec![]);
+        }
+        let report = self.worker().decode_step_batch(sessions)?;
+        self.absorb_step(&report);
+        Ok(report.tokens)
+    }
+
+    /// Convenience: full generate loop for one request.
+    pub fn generate(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
+        let mut sess = self.new_session(req);
+        self.prefill(&mut sess)?;
+        let kv_after = sess.kv_bytes();
+        while !sess.is_done() {
+            self.decode_step(&mut sess)?;
+        }
+        self.metrics
+            .finish_request(sess.prefill_secs, sess.decode_secs, sess.generated.len());
+        Ok(GenerateResult {
+            id: sess.id,
+            status: FinishStatus::Completed,
+            error: None,
+            tokens: sess.generated.clone(),
+            prefill_secs: sess.prefill_secs,
+            decode_secs: sess.decode_secs,
+            kv_bytes_after_prefill: kv_after,
+            peak_kv_bytes: self.metrics.peak_kv_bytes,
+            budgets: sess.budgets.clone(),
+        })
+    }
+
+    /// Prefill-only entry used by benches that inspect caches/budgets.
+    pub fn prefill_only(&mut self, prompt: &[i32]) -> Result<(Session, i32)> {
+        let req = GenerateRequest { prompt: prompt.to_vec(), max_new_tokens: 1 };
+        let mut sess = self.new_session(&req);
+        let tok = self.prefill(&mut sess)?;
+        Ok((sess, tok))
+    }
+}
+
+impl<B: ModelBackend> EngineWorker<'_, B> {
+    pub fn config(&self) -> &ModelConfig {
+        self.backend.config()
+    }
+
+    fn total_budget(&self) -> usize {
+        let cfg = self.backend.config();
+        self.opts.budget_per_head * cfg.n_kv_heads * cfg.n_layers
     }
 
     /// Compute policy scores for one prefilled layer -> [Hk][length].
@@ -194,8 +350,9 @@ impl<B: ModelBackend> Engine<B> {
             .ok_or_else(|| anyhow!("no decode bucket >= {need}"))
     }
 
-    /// Run prefill under the configured policy (Algorithms 1 + 2).
-    pub fn prefill(&mut self, sess: &mut Session) -> Result<i32> {
+    /// Run prefill under the configured policy (Algorithms 1 + 2). Pure
+    /// compute: metrics observations come back in the report.
+    pub fn prefill(&self, sess: &mut Session) -> Result<PrefillReport> {
         let t0 = std::time::Instant::now();
         let cfg = self.backend.config().clone();
         let n = sess.prompt.len();
@@ -220,13 +377,14 @@ impl<B: ModelBackend> Engine<B> {
         };
         let mut weights: Vec<f64> = Vec::with_capacity(cfg.n_layers);
         let uncompressed_layer_bytes = 2 * cfg.n_kv_heads * n * cfg.d_head * 4;
+        let mut peak_transient = 0usize;
 
         for l in 0..cfg.n_layers {
             let out = self.backend.layer_prefill(l, &x, n)?;
 
             // transient peak: retained caches + this uncompressed layer
             let retained: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
-            self.metrics.observe_transient(retained + uncompressed_layer_bytes);
+            peak_transient = peak_transient.max(retained + uncompressed_layer_bytes);
 
             let keepset: KeepSet = if full {
                 KeepSet {
@@ -269,7 +427,6 @@ impl<B: ModelBackend> Engine<B> {
 
         sess.budgets = budgets;
         let live: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
-        self.metrics.observe_kv(live);
 
         // next-token logits from the prompt's last position
         let d = cfg.d_model;
@@ -281,13 +438,13 @@ impl<B: ModelBackend> Engine<B> {
         sess.next_pos = n;
         sess.phase = Phase::Decoding;
         sess.prefill_secs = t0.elapsed().as_secs_f64();
-        Ok(tok)
+        Ok(PrefillReport { token: tok, peak_transient, live_after: live })
     }
 
-    /// One decode step: feed the last generated token, produce the next.
-    /// Residency boundary: the engine only ever sees hot caches — a session
-    /// with warm layers must be prefetched by the tier manager first.
-    pub fn decode_step(&mut self, sess: &mut Session) -> Result<i32> {
+    /// One serial decode step: feed the last generated token, produce the
+    /// next. Residency boundary: workers only ever see hot caches — a
+    /// session with warm layers must be prefetched by the tier side first.
+    pub fn decode_step(&self, sess: &mut Session) -> Result<StepReport> {
         if !sess.is_fully_hot() {
             bail!(
                 "decode_step on session {} with non-resident layers (prefetch before decode)",
@@ -301,12 +458,13 @@ impl<B: ModelBackend> Engine<B> {
         let d = cfg.d_model;
         let emb = self.backend.embed(&[tok], 1)?;
         let mut x = Tensor::f32(emb.as_f32()?[..d].to_vec(), &[1, d]);
+        let mut dispatches = Vec::with_capacity(cfg.n_layers);
 
         for l in 0..cfg.n_layers {
             let out = self.backend.layer_decode(l, &x, &sess.caches[l], pos)?;
             let cache = &mut sess.caches[l];
             self.scatter_decode_out(cache, &out.attn, &out.k_new, &out.v_new, pos, l)?;
-            self.metrics.observe_decode_dispatches(sess.caches[l].capacity(), 1);
+            dispatches.push((sess.caches[l].capacity(), 1));
             x = out.x_out;
         }
 
@@ -314,13 +472,16 @@ impl<B: ModelBackend> Engine<B> {
         let next = argmax(&logits);
         sess.generated.push(next);
         sess.next_pos += 1;
-        self.metrics.observe_kv(sess.kv_bytes());
-        self.metrics.observe_decode_batch(1);
         sess.decode_secs += t0.elapsed().as_secs_f64();
         if sess.is_done() {
             sess.phase = Phase::Finished;
         }
-        Ok(next)
+        Ok(StepReport {
+            tokens: vec![next],
+            dispatches,
+            kv_after: vec![sess.kv_bytes()],
+            sessions: 1,
+        })
     }
 
     /// One decode step for B sessions sharing a capacity bucket: gather the
@@ -328,14 +489,15 @@ impl<B: ModelBackend> Engine<B> {
     /// `layer_decode_batched` dispatch per layer, then scatter each
     /// session's attention row back into its own score update / append /
     /// eviction. Produces tokens, scores, and cache contents bit-identical
-    /// to looping [`Engine::decode_step`] over the same sessions.
-    ///
-    /// Fails as a unit: an error leaves the batch partially advanced, so
-    /// callers must treat the whole group as failed (the scheduler retires
-    /// every member), exactly as a serial decode error fails its session.
-    pub fn decode_step_batch(&mut self, sessions: &mut [Session]) -> Result<Vec<i32>> {
+    /// to looping [`EngineWorker::decode_step`] over the same sessions.
+    pub fn decode_step_batch(&self, sessions: &mut [Session]) -> Result<StepReport> {
         if sessions.is_empty() {
-            return Ok(vec![]);
+            return Ok(StepReport {
+                tokens: vec![],
+                dispatches: vec![],
+                kv_after: vec![],
+                sessions: 0,
+            });
         }
         let sig = sessions[0].capacity_signature();
         for sess in sessions.iter() {
@@ -365,6 +527,7 @@ impl<B: ModelBackend> Engine<B> {
             positions.push(sess.next_pos);
         }
         let mut x = Tensor::f32(xs, &[b, d]);
+        let mut dispatches = Vec::with_capacity(cfg.n_layers);
 
         for l in 0..cfg.n_layers {
             // one dispatch per (layer, capacity bucket) for the whole group
@@ -372,7 +535,7 @@ impl<B: ModelBackend> Engine<B> {
                 let caches: Vec<&HotStore> = sessions.iter().map(|s| &s.caches[l]).collect();
                 self.backend.layer_decode_batched(l, &x, &caches, &positions)?
             };
-            self.metrics.observe_decode_dispatches(sig[l], out.dispatches as u64);
+            dispatches.push((sig[l], out.dispatches as u64));
             // scatter: per-session cache maintenance stays independent
             for (i, sess) in sessions.iter_mut().enumerate() {
                 let cache = &mut sess.caches[l];
@@ -391,30 +554,31 @@ impl<B: ModelBackend> Engine<B> {
         // per-session logits + bookkeeping (same order as the serial loop)
         let xf = x.as_f32()?;
         let mut next_tokens = Vec::with_capacity(b);
+        let mut kv_after = Vec::with_capacity(b);
         for (i, sess) in sessions.iter_mut().enumerate() {
             let xi = Tensor::f32(xf[i * d..(i + 1) * d].to_vec(), &[1, d]);
             let logits = self.backend.logits(&xi)?;
             let next = argmax(&logits);
             sess.generated.push(next);
             sess.next_pos += 1;
-            self.metrics.observe_kv(sess.kv_bytes());
+            kv_after.push(sess.kv_bytes());
             if sess.is_done() {
                 sess.phase = Phase::Finished;
             }
             next_tokens.push(next);
         }
-        self.metrics.observe_decode_batch(b);
         let per_session_secs = t0.elapsed().as_secs_f64() / b as f64;
         for sess in sessions.iter_mut() {
             sess.decode_secs += per_session_secs;
         }
-        Ok(next_tokens)
+        Ok(StepReport { tokens: next_tokens, dispatches, kv_after, sessions: b })
     }
 
     /// Scatter one session's layer-decode outputs back into its cache:
     /// decode-time score maintenance, append, and over-budget eviction.
-    /// Shared verbatim by [`Engine::decode_step`] and
-    /// [`Engine::decode_step_batch`] so the two paths stay bit-identical.
+    /// Shared verbatim by [`EngineWorker::decode_step`] and
+    /// [`EngineWorker::decode_step_batch`] so the two paths stay
+    /// bit-identical.
     fn scatter_decode_out(
         &self,
         cache: &mut HotStore,
@@ -437,37 +601,6 @@ impl<B: ModelBackend> Engine<B> {
             evict_decode_overflow(cache, self.opts.budget_per_head, pos, cfg.window);
         }
         Ok(())
-    }
-
-    /// Convenience: full generate loop for one request.
-    pub fn generate(&mut self, req: &GenerateRequest) -> Result<GenerateResult> {
-        let mut sess = self.new_session(req);
-        self.prefill(&mut sess)?;
-        let kv_after = sess.kv_bytes();
-        while !sess.is_done() {
-            self.decode_step(&mut sess)?;
-        }
-        self.metrics
-            .finish_request(sess.prefill_secs, sess.decode_secs, sess.generated.len());
-        Ok(GenerateResult {
-            id: sess.id,
-            status: FinishStatus::Completed,
-            error: None,
-            tokens: sess.generated.clone(),
-            prefill_secs: sess.prefill_secs,
-            decode_secs: sess.decode_secs,
-            kv_bytes_after_prefill: kv_after,
-            peak_kv_bytes: self.metrics.peak_kv_bytes,
-            budgets: sess.budgets.clone(),
-        })
-    }
-
-    /// Prefill-only entry used by benches that inspect caches/budgets.
-    pub fn prefill_only(&mut self, prompt: &[i32]) -> Result<(Session, i32)> {
-        let req = GenerateRequest { prompt: prompt.to_vec(), max_new_tokens: 1 };
-        let mut sess = self.new_session(&req);
-        let tok = self.prefill(&mut sess)?;
-        Ok((sess, tok))
     }
 }
 
@@ -798,6 +931,34 @@ mod tests {
         assert_eq!(batched.metrics.decode_dispatches_total(), 20);
         assert_eq!(serial.metrics.decode_dispatches_total(), 60);
         assert!((batched.metrics.batch_occupancy() - 3.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn worker_view_matches_engine_front() {
+        // the &self worker path must be the same math as the &mut engine
+        // path — same tokens, same dispatch totals reported for absorption
+        let mut via_engine = engine("lava", 24);
+        let mut via_worker = engine("lava", 24);
+        let req = GenerateRequest { prompt: prompt(120), max_new_tokens: 5 };
+        let mut a = via_engine.new_session(&req);
+        via_engine.prefill(&mut a).unwrap();
+        let mut b = via_worker.new_session(&req);
+        let pre = via_worker.worker().prefill(&mut b).unwrap();
+        via_worker.absorb_prefill(&pre);
+        assert_eq!(a.generated, b.generated, "prefill token");
+        for _ in 0..4 {
+            let t1 = via_engine.decode_step(&mut a).unwrap();
+            let report = via_worker.worker().decode_step(&mut b).unwrap();
+            via_worker.absorb_step(&report);
+            assert_eq!(vec![t1], report.tokens);
+        }
+        assert_eq!(a.generated, b.generated);
+        assert_eq!(
+            via_engine.metrics.decode_dispatches_total(),
+            via_worker.metrics.decode_dispatches_total()
+        );
+        assert_eq!(via_engine.metrics.peak_kv_bytes, via_worker.metrics.peak_kv_bytes);
+        assert_eq!(via_engine.metrics.decode_batches, via_worker.metrics.decode_batches);
     }
 
     #[test]

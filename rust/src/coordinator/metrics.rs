@@ -56,13 +56,36 @@ pub struct Metrics {
     pub warm_kv_bytes: usize,
     pub peak_warm_kv_bytes: usize,
     /// Tier transition counters: spills/prefetches, bytes moved (hot-side
-    /// accounting), and cumulative transition latency.
+    /// accounting), and cumulative transition latency. With the tier
+    /// thread, these latencies are the *serving-thread* cost per
+    /// transition: for a spill, taking the buffers + enqueueing; for a
+    /// prefetch, the blocking fetch wait (near zero on a staging hit). The
+    /// background quantize/dequantize time shows in `tier_busy_secs`.
     pub spills: u64,
     pub prefetches: u64,
     pub spilled_bytes: u64,
     pub prefetched_bytes: u64,
     pub spill_secs: f64,
     pub prefetch_secs: f64,
+    /// Worker-pool gauges: configured width, cumulative busy seconds per
+    /// worker slot, fan-out rounds, and cumulative fan-out wall seconds.
+    /// utilization = Σ busy / (width · wall).
+    pub workers: usize,
+    pub worker_busy_secs: Vec<f64>,
+    pub worker_rounds: u64,
+    pub worker_wall_secs: f64,
+    /// Tier-thread gauges, sampled at tick end: command-queue backlogs
+    /// (spill commands not yet quantized, prefetch-ahead hints not yet
+    /// staged), their observed combined peak, host-side f32 bytes parked in
+    /// the prefetch-ahead staging area (current + peak — real RAM on top of
+    /// hot and warm, never counted against `kv_mem_limit`), and the
+    /// thread's cumulative busy seconds.
+    pub tier_spill_queue_depth: usize,
+    pub tier_prefetch_queue_depth: usize,
+    pub tier_queue_depth_peak: usize,
+    pub tier_staged_bytes: usize,
+    pub peak_tier_staged_bytes: usize,
+    pub tier_busy_secs: f64,
     started: Option<Instant>,
 }
 
@@ -118,6 +141,48 @@ impl Metrics {
     /// Record one admission deferral event.
     pub fn observe_deferral(&mut self) {
         self.requests_deferred += 1;
+    }
+
+    /// Record one worker-pool fan-out: the pool width, each spawned
+    /// worker's busy seconds (may be fewer entries than `workers` when
+    /// there were fewer units), and the fan-out's wall seconds.
+    pub fn observe_worker_round(&mut self, workers: usize, busy_secs: &[f64], wall_secs: f64) {
+        self.workers = self.workers.max(workers);
+        if self.worker_busy_secs.len() < busy_secs.len() {
+            self.worker_busy_secs.resize(busy_secs.len(), 0.0);
+        }
+        for (slot, &b) in busy_secs.iter().enumerate() {
+            self.worker_busy_secs[slot] += b;
+        }
+        self.worker_rounds += 1;
+        self.worker_wall_secs += wall_secs;
+    }
+
+    /// Mean fraction of the pool kept busy during fan-outs (1.0 = every
+    /// worker busy for the whole round; low values mean units were too few
+    /// or too skewed to fill the pool).
+    pub fn worker_utilization(&self) -> f64 {
+        if self.workers == 0 || self.worker_wall_secs <= 0.0 {
+            return 0.0;
+        }
+        let busy: f64 = self.worker_busy_secs.iter().sum();
+        busy / (self.workers as f64 * self.worker_wall_secs)
+    }
+
+    /// Record a sample of the tier thread's queue/busy/staging gauges.
+    pub fn observe_tier_thread(
+        &mut self,
+        spill_q: usize,
+        prefetch_q: usize,
+        staged_bytes: usize,
+        busy_secs: f64,
+    ) {
+        self.tier_spill_queue_depth = spill_q;
+        self.tier_prefetch_queue_depth = prefetch_q;
+        self.tier_queue_depth_peak = self.tier_queue_depth_peak.max(spill_q + prefetch_q);
+        self.tier_staged_bytes = staged_bytes;
+        self.peak_tier_staged_bytes = self.peak_tier_staged_bytes.max(staged_bytes);
+        self.tier_busy_secs = busy_secs;
     }
 
     /// Record one decode execution covering `sessions` sessions (1 = the
@@ -219,6 +284,8 @@ impl Metrics {
     }
 
     pub fn report(&self) -> String {
+        let worker_busy: Vec<String> =
+            self.worker_busy_secs.iter().map(|b| format!("{:.3}", b * 1e3)).collect();
         format!(
             "requests={} rejected={} canceled={} failed={} deferred={} tokens={} \
              ttft_ms(mean)={:.2} queue_wait_ms(mean)={:.2} prefill_ms(mean)={:.2} \
@@ -227,7 +294,10 @@ impl Metrics {
              spilled_mb={:.2} prefetched_mb={:.2} \
              spill_ms(mean)={:.3} prefetch_ms(mean)={:.3} \
              throughput_tok_s={:.1} admission_rounds={} decode_steps={} \
-             decode_batches={} batch_occupancy={:.2} decode_dispatches={}",
+             decode_batches={} batch_occupancy={:.2} decode_dispatches={} \
+             workers={} worker_util={:.2} worker_busy_ms=[{}] \
+             tier_spill_q={} tier_prefetch_q={} tier_q_peak={} \
+             tier_staged_mb(peak)={:.2} tier_busy_ms={:.3}",
             self.requests_finished,
             self.requests_rejected,
             self.requests_canceled,
@@ -255,6 +325,14 @@ impl Metrics {
             self.decode_batches,
             self.batch_occupancy(),
             self.decode_dispatches_total(),
+            self.workers,
+            self.worker_utilization(),
+            worker_busy.join(","),
+            self.tier_spill_queue_depth,
+            self.tier_prefetch_queue_depth,
+            self.tier_queue_depth_peak,
+            self.peak_tier_staged_bytes as f64 / 1e6,
+            self.tier_busy_secs * 1e3,
         )
     }
 }
@@ -329,6 +407,34 @@ mod tests {
         assert_eq!(m.decode_dispatches.get(&256), Some(&1));
         assert_eq!(m.decode_dispatches_total(), 3);
         assert!(m.report().contains("batch_occupancy=2.00"));
+    }
+
+    #[test]
+    fn worker_and_tier_thread_gauges() {
+        let mut m = Metrics::new();
+        assert_eq!(m.worker_utilization(), 0.0, "no rounds yet");
+        // two rounds on a width-2 pool: one balanced, one with a single
+        // spawned worker (fewer units than width)
+        m.observe_worker_round(2, &[0.5, 0.5], 1.0);
+        m.observe_worker_round(2, &[1.0], 1.0);
+        assert_eq!(m.workers, 2);
+        assert_eq!(m.worker_rounds, 2);
+        assert_eq!(m.worker_busy_secs, vec![1.5, 0.5]);
+        // Σbusy = 2.0 over width 2 × wall 2.0 = 0.5
+        assert!((m.worker_utilization() - 0.5).abs() < 1e-9);
+
+        m.observe_tier_thread(3, 2, 4096, 0.25);
+        m.observe_tier_thread(1, 0, 1024, 0.5);
+        assert_eq!(m.tier_spill_queue_depth, 1);
+        assert_eq!(m.tier_prefetch_queue_depth, 0);
+        assert_eq!(m.tier_queue_depth_peak, 5, "peak holds the worst sample");
+        assert_eq!(m.tier_staged_bytes, 1024);
+        assert_eq!(m.peak_tier_staged_bytes, 4096, "staging peak holds the worst sample");
+        assert!((m.tier_busy_secs - 0.5).abs() < 1e-12);
+        let report = m.report();
+        assert!(report.contains("workers=2"));
+        assert!(report.contains("worker_util=0.50"));
+        assert!(report.contains("tier_q_peak=5"));
     }
 
     #[test]

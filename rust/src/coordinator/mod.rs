@@ -1,43 +1,76 @@
 //! L3 coordinator: the serving side of the paper.
 //!
-//! * [`engine`] — layer-wise prefill with cascading compression
-//!   (Algorithm 2), the serial + batched decode paths, and per-policy
-//!   budget handling.
+//! * [`engine`] — the engine front (`Engine`: backend + options + metrics +
+//!   session ids) and the shareable `EngineWorker` compute view: layer-wise
+//!   prefill with cascading compression (Algorithm 2), the serial + batched
+//!   decode paths, and per-policy budget handling.
+//! * [`pool`] — `WorkerPool`: ordered fan-out of planned round units over
+//!   scoped worker threads.
 //! * [`session`] — per-request state: token ids, per-layer caches, metrics.
 //! * [`scheduler`] — continuous-batching scheduler: admission control by
 //!   KV-memory budget, prefill/decode interleaving, fairness, hot/warm
-//!   tiering, and capacity-bucket decode grouping.
+//!   tiering, capacity-bucket decode grouping, and the round planner that
+//!   feeds the pool.
 //! * [`batcher`] — request queue + grouping by shape bucket.
 //! * [`server`] — JSON-lines TCP front-end over the engine.
 //! * [`metrics`] — latency/memory counters (the quantities Fig. 3 plots),
 //!   plus serving gauges: tier traffic, batch occupancy, per-bucket decode
-//!   dispatches.
+//!   dispatches, worker utilization, tier-thread queue depths.
 //!
-//! ## Batched decode data flow
+//! ## Scheduler → pool → worker data flow
 //!
-//! Each `decode_round` advances every active session by one token with as
-//! few backend dispatches as the active set allows:
+//! Each `decode_round` advances every active session by one token in two
+//! phases:
 //!
-//! 1. **group** — fully-hot sessions sharing a capacity signature (equal
-//!    per-layer cache capacities) are packed into bucket groups; sessions
-//!    with spilled layers are prefetched and stepped on the serial path so
-//!    they never block a group.
-//! 2. **gather** — per group, the engine embeds each member's last token
-//!    host-side into one [B, d] residual-stream tensor.
-//! 3. **dispatch** — per layer, one `layer_decode_batched_{M}x{B}` call
-//!    executes over a zero-copy packed view of the B caches: L dispatches
-//!    per group per round instead of B·L.
-//! 4. **scatter** — each session's attention row feeds its own cache
-//!    maintenance (score update, append, decode eviction) independently;
-//!    LAVa's layer-level scoring keeps eviction state per-session, so the
-//!    batched and serial paths are bit-identical per session.
+//! 1. **Plan** (serving thread; deterministic, worker-count independent) —
+//!    fully-hot sessions sharing a capacity signature (equal per-layer
+//!    cache capacities) are packed into bucket-group units; with
+//!    `batched_decode` off they become singleton units. Sessions with
+//!    spilled layers go to a *sequential arm* instead, and every spilled
+//!    layer gets a prefetch-ahead hint (see below). Under a hot-tier limit
+//!    the planner reserves one-step append headroom for the whole parallel
+//!    stage, spilling victims from the sequential arm (demoting units when
+//!    that cannot cover).
+//! 2. **Run** — the planned units fan out over the [`pool::WorkerPool`]:
+//!    each worker holds an `EngineWorker` (`&backend`, `&options`) and
+//!    advances its unit — gather last tokens → one
+//!    `layer_decode_batched_{M}x{B}` dispatch per layer → scatter into
+//!    per-session score update/append/eviction — returning a `StepReport`.
+//!    The serving thread merges reports *in plan order*, so tokens,
+//!    evictions, and metric totals are bit-identical at any worker count.
+//!    The sequential arm then steps in order: tier fetch (blocking only on
+//!    staging misses), per-session decode, victim spills as needed.
+//!
+//! ## Tier-thread handoff protocol
+//!
+//! The scheduler's `TierClient` keeps all residency bookkeeping and byte
+//! accounting synchronously on the serving thread — decisions never wait on
+//! I/O — while the Q8 quantize/dequantize runs on a background tier thread
+//! processing commands FIFO:
+//!
+//! * **spill** takes the hot buffers immediately (hot accounting drops at
+//!   the decision point) and enqueues the quantization;
+//! * **prefetch-ahead** hints dequantize into a staging map while decode
+//!   runs — issued at round planning for this round's sequential arm and at
+//!   round end for next round's spilled sessions (double buffering);
+//! * **fetch** is the only blocking call, right before a session's step,
+//!   and usually returns a staged store instantly;
+//! * **drop** releases a retired session's blocks and staged stores.
+//!
+//! FIFO processing makes the handoff race-free: a fetch enqueued after a
+//! spill of the same (session, layer) always observes the block.
 
 pub mod batcher;
 pub mod engine;
 pub mod metrics;
+pub mod pool;
 pub mod scheduler;
 pub mod server;
 pub mod session;
 
-pub use engine::{Engine, EngineOptions, FinishStatus, GenerateRequest, GenerateResult};
+pub use engine::{
+    Engine, EngineOptions, EngineWorker, FinishStatus, GenerateRequest, GenerateResult,
+    PrefillReport, StepReport,
+};
+pub use pool::WorkerPool;
 pub use scheduler::{Scheduler, SchedulerOptions, SubmitError};

@@ -1,7 +1,7 @@
-//! Continuous-batching scheduler.
+//! Continuous-batching scheduler over a sharded engine worker pool.
 //!
-//! Owns the engine + the request queue and interleaves work through three
-//! explicit steps, composed by [`Scheduler::tick`]:
+//! Owns the engine front + the request queue and interleaves work through
+//! three explicit steps, composed by [`Scheduler::tick`]:
 //!   * [`Scheduler::admit`] — pull a same-shape-bucket batch off the queue
 //!     (compile-warm buckets preferred) and apply admission control: a
 //!     request is admitted only if projected KV memory (existing live bytes
@@ -10,35 +10,52 @@
 //!     position with their original id; requests that can *never* fit are
 //!     rejected with an explicit error result (no livelock).
 //!   * [`Scheduler::prefill_batch`] — run Algorithm 2 prefill for each
-//!     admitted request, recording queue-wait and TTFT per request.
+//!     admitted request. With no hot-tier limit, the batch members fan out
+//!     across the worker pool (prefills are per-session independent); under
+//!     a limit they prefill sequentially, because admission's peak check
+//!     budgets exactly one transient uncompressed layer at a time.
 //!   * [`Scheduler::decode_round`] — one decode step per active session,
-//!     advanced group-wise: fully-hot sessions sharing a capacity bucket
-//!     (equal `Session::capacity_signature`) are packed into one
-//!     `Engine::decode_step_batch` call — a single backend dispatch per
-//!     (layer, bucket) per round instead of one per session per layer.
-//!     Tier prefetch happens on the serial arm before any grouping, so a
-//!     spilled session falls back to the old per-session path instead of
-//!     blocking its group.
+//!     in two stages. **Plan** (serving thread, worker-count independent):
+//!     fully-hot sessions are packed into capacity-bucket groups (equal
+//!     `Session::capacity_signature`; singleton units with `batched_decode`
+//!     off) and sessions needing tier I/O go to a sequential arm. **Run**:
+//!     the planned units fan out across the [`WorkerPool`] — different
+//!     bucket groups decode concurrently against the shared backend — then
+//!     the sequential arm steps in order with tier fetches. Because every
+//!     decision is made before the fan-out, results are bit-identical at
+//!     any worker count (`tests/sharded_decode.rs` enforces it).
 //!
 //! Prefill admission is attempted every `prefill_every` ticks (bounds TTFT
 //! without starving decodes — the standard continuous-batching compromise).
 //! One request id, assigned by the batcher at `submit`, names the request
 //! end-to-end: queue entry, session, and `GenerateResult`.
 //!
-//! ## KV tiering
+//! ## KV tiering and the tier thread
 //!
 //! With `tiering` on (the default), `kv_mem_limit` bounds only the *hot*
-//! tier. The scheduler owns a [`TierManager`] and drives both transitions
-//! of the residency state machine:
+//! tier. The scheduler owns a [`TierClient`] and drives both transitions of
+//! the residency state machine; the Q8 quantize/dequantize itself runs on
+//! the client's background tier thread, off the serving path:
 //!
 //! * **Spill** — when admission would defer a request for memory, idle
 //!   active sessions' lowest-LAVa-weight layers (smallest per-layer budget
-//!   from Algorithm 2) are dehydrated to Q8 warm blocks first, so the
-//!   request is admitted instead of deferred.
-//! * **Prefetch** — before a session's decode step, its spilled layers are
-//!   rehydrated into hot stores (spilling victims from sessions whose next
-//!   decode is farthest away when that would overshoot the limit). The
-//!   engine therefore only ever sees hot caches.
+//!   from Algorithm 2) are handed to the tier thread, so the request is
+//!   admitted instead of deferred. The serving thread only takes the
+//!   buffers; quantization overlaps subsequent decode work.
+//! * **Prefetch** — at round planning, every spilled layer of a
+//!   sequential-arm session gets a *prefetch-ahead* hint, so the tier
+//!   thread rehydrates it while the parallel stage decodes (and, for next
+//!   round's sessions, while this round finishes — double buffering). The
+//!   blocking fetch right before the session's step then mostly finds the
+//!   staged result. The engine still only ever sees hot caches.
+//!
+//! ## Incremental hot-byte accounting
+//!
+//! `kv_mem_limit` decisions read a single counter, maintained at every
+//! transition (prefill admit, decode append/evict via check-out/check-in
+//! around the engine step, spill, fetch, retire) instead of re-walking
+//! every session × layer per tick; `live_kv_bytes` debug-asserts the
+//! counter against the full walk at stable points.
 //!
 //! The hot-tier bound holds whenever `kv_mem_limit` covers any single
 //! session's retained bytes plus its decode growth
@@ -54,10 +71,11 @@ use std::fmt;
 use anyhow::Result;
 
 use super::batcher::{Batcher, QueuedRequest};
-use super::engine::{Engine, FinishStatus, GenerateRequest, GenerateResult};
+use super::engine::{Engine, FinishStatus, GenerateRequest, GenerateResult, PrefillReport};
 use super::metrics::Metrics;
+use super::pool::WorkerPool;
 use super::session::Session;
-use crate::kvcache::tier::{Residency, TierManager};
+use crate::kvcache::tier::{Residency, TierClient};
 use crate::model::backend::ModelBackend;
 
 #[derive(Debug, Clone)]
@@ -84,6 +102,29 @@ pub struct SchedulerOptions {
     /// layer. Off reverts to one dispatch per session per layer (kept for
     /// the bench comparison and as an escape hatch).
     pub batched_decode: bool,
+    /// Engine worker threads the decode/prefill fan-out may use (1 = fully
+    /// serial on the scheduling thread). Read at [`Scheduler::new`]. The
+    /// default honors `LAVA_WORKERS` (CI pins 1 to flush nondeterminism)
+    /// and otherwise uses min(cores, 4). Results are bit-identical at
+    /// every width — all decisions are planned before the fan-out — only
+    /// wall time changes.
+    pub workers: usize,
+}
+
+fn default_workers() -> usize {
+    let auto = crate::util::par::max_threads().min(4);
+    match std::env::var("LAVA_WORKERS") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(w) if w >= 1 => w,
+            // an unparsable or zero override must not silently serialize
+            // the pool: warn and keep the cores default
+            _ => {
+                eprintln!("[lava] ignoring invalid LAVA_WORKERS={v:?}; using {auto}");
+                auto
+            }
+        },
+        Err(_) => auto,
+    }
 }
 
 impl Default for SchedulerOptions {
@@ -96,6 +137,7 @@ impl Default for SchedulerOptions {
             max_queue_wait_secs: None,
             tiering: true,
             batched_decode: true,
+            workers: default_workers(),
         }
     }
 }
@@ -137,12 +179,40 @@ impl std::error::Error for SubmitError {}
 /// rounds before its bucket becomes the batch seed.
 const MAX_WARM_BYPASS_ROUNDS: usize = 4;
 
+/// One planned unit of a decode round, owned by exactly one worker during
+/// the fan-out.
+enum RoundUnit {
+    /// A capacity-bucket group advanced through the batched decode path.
+    Group(Vec<Session>),
+    /// A single session advanced through the serial decode path
+    /// (`batched_decode` off).
+    One(Session),
+}
+
+impl RoundUnit {
+    fn sessions(&self) -> &[Session] {
+        match self {
+            RoundUnit::Group(g) => g,
+            RoundUnit::One(s) => std::slice::from_ref(s),
+        }
+    }
+
+    fn into_sessions(self) -> Vec<Session> {
+        match self {
+            RoundUnit::Group(g) => g,
+            RoundUnit::One(s) => vec![s],
+        }
+    }
+}
+
 pub struct Scheduler<B: ModelBackend> {
     pub engine: Engine<B>,
     pub queue: Batcher,
     pub opts: SchedulerOptions,
-    /// Hot/warm residency manager (owns the Q8 warm blocks).
-    pub tier: TierManager,
+    /// Hot/warm residency client (bookkeeping here, Q8 work on its thread).
+    pub tier: TierClient,
+    /// Engine worker pool the decode/prefill fan-out runs on.
+    pub pool: WorkerPool,
     active: VecDeque<Session>,
     finished: Vec<(u64, GenerateResult)>,
     tick: usize,
@@ -156,22 +226,29 @@ pub struct Scheduler<B: ModelBackend> {
     /// freed memory goes to the oldest request, not younger warm-bucket
     /// arrivals (unbounded-TTFT starvation otherwise).
     head_memory_blocked: bool,
+    /// Incremental Σ hot KV bytes over all owned sessions, updated at every
+    /// transition (debug-asserted against the full walk in
+    /// [`Scheduler::live_kv_bytes`]).
+    hot_bytes: usize,
 }
 
 impl<B: ModelBackend> Scheduler<B> {
     pub fn new(engine: Engine<B>, opts: SchedulerOptions) -> Scheduler<B> {
         let queue = Batcher::new(engine.backend.prefill_buckets());
+        let pool = WorkerPool::new(opts.workers);
         Scheduler {
             engine,
             queue,
             opts,
-            tier: TierManager::new(),
+            tier: TierClient::spawn(),
+            pool,
             active: VecDeque::new(),
             finished: Vec::new(),
             tick: 0,
             warm_bucket: None,
             warm_bypass_streak: 0,
             head_memory_blocked: false,
+            hot_bytes: 0,
         }
     }
 
@@ -240,8 +317,16 @@ impl<B: ModelBackend> Scheduler<B> {
         self.queue.len()
     }
 
+    /// Current hot KV bytes: the incremental counter, debug-asserted
+    /// against the full session × layer walk it replaced. Call only at
+    /// stable points (every owned session back in `active`).
     fn live_kv_bytes(&self) -> usize {
-        self.active.iter().map(|s| s.kv_bytes()).sum()
+        debug_assert_eq!(
+            self.hot_bytes,
+            self.active.iter().map(|s| s.kv_bytes()).sum::<usize>(),
+            "incremental hot-bytes counter drifted from the session walk"
+        );
+        self.hot_bytes
     }
 
     /// Bytes a request's compressed caches hold after prefill (its budget).
@@ -310,11 +395,12 @@ impl<B: ModelBackend> Scheduler<B> {
 
         let mut admitted: Vec<QueuedRequest> = Vec::new();
         let mut deferred: Vec<QueuedRequest> = Vec::new();
-        // The batch prefills sequentially, so at any instant memory holds the
-        // retained caches of everything admitted so far plus ONE transient
-        // uncompressed layer — peak-check each request, then accumulate only
-        // its retained bytes. With tiering, "memory" means hot-tier bytes:
-        // spilling idle layers lowers `projected` and rescues the admission.
+        // The batch prefills with at most one transient uncompressed layer
+        // resident under a memory limit (the parallel prefill arm is gated
+        // on limit-free runs), so peak-check each request, then accumulate
+        // only its retained bytes. With tiering, "memory" means hot-tier
+        // bytes: spilling idle layers lowers `projected` and rescues the
+        // admission.
         let mut projected = self.live_kv_bytes();
         for q in batch {
             let len = q.request.prompt.len();
@@ -375,57 +461,113 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     /// Prefill every admitted request (they share a shape bucket, so after
-    /// the first the executable is compile-warm). A per-request prefill
-    /// failure parks that request with an error result instead of poisoning
-    /// the serving loop.
+    /// the first the executable is compile-warm). With no hot-tier limit,
+    /// the batch fans out across the worker pool — prefills are per-session
+    /// independent; under a limit it runs sequentially, because admission
+    /// budgets exactly one transient uncompressed layer at a time. A
+    /// per-request prefill failure parks that request with an error result
+    /// instead of poisoning the serving loop.
     pub fn prefill_batch(&mut self, batch: Vec<QueuedRequest>) -> Result<usize> {
+        if batch.is_empty() {
+            return Ok(0);
+        }
         let mut done = 0;
-        for q in batch {
-            self.warm_bucket = Some(q.bucket);
-            let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
-            let mut sess = self.engine.new_session_with_id(q.id, &q.request);
-            match self.engine.prefill(&mut sess) {
-                Ok(_) => {
-                    self.engine
-                        .metrics
-                        .observe_admission(wait_secs, wait_secs + sess.prefill_secs);
-                    done += 1;
-                    if sess.is_done() {
-                        self.retire(sess, FinishStatus::Completed, None);
-                    } else {
-                        self.active.push_back(sess);
-                    }
-                }
-                Err(e) => {
-                    drop(sess);
-                    self.park_queued(q, FinishStatus::Failed, format!("prefill failed: {e:#}"));
-                }
+        if batch.len() > 1 && self.pool.workers() > 1 && self.opts.kv_mem_limit.is_none() {
+            // fan out, then merge in submission order so metrics,
+            // retirement, and the active queue are identical to the
+            // sequential arm
+            let units: Vec<(QueuedRequest, f64, Session)> = batch
+                .into_iter()
+                .map(|q| {
+                    let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
+                    let sess = self.engine.new_session_with_id(q.id, &q.request);
+                    (q, wait_secs, sess)
+                })
+                .collect();
+            let worker = self.engine.worker();
+            let (results, stats) = self.pool.run(units, |(q, wait_secs, mut sess)| {
+                let res = worker.prefill(&mut sess);
+                (q, wait_secs, sess, res)
+            });
+            self.engine.metrics.observe_worker_round(
+                self.pool.workers(),
+                &stats.busy_secs,
+                stats.wall_secs,
+            );
+            for (q, wait_secs, sess, res) in results {
+                done += self.merge_prefill(q, wait_secs, sess, res);
             }
-            let hot = self.live_kv_bytes();
-            self.engine.metrics.observe_hot(hot);
+        } else {
+            for q in batch {
+                let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
+                let mut sess = self.engine.new_session_with_id(q.id, &q.request);
+                let res = self.engine.worker().prefill(&mut sess);
+                done += self.merge_prefill(q, wait_secs, sess, res);
+            }
         }
         Ok(done)
     }
 
-    /// One decode step per active session, advanced group-wise. Each round
-    /// packs the fully-hot active set into capacity-bucket groups and steps
-    /// every group through one `decode_step_batch` call (one backend
-    /// dispatch per layer per group); sessions that need a tier prefetch
-    /// take the old serial path instead, so a spilled session never blocks
-    /// its bucket group. A decode error kills only the failing execution
-    /// unit — the session on the serial path, the whole group on the
-    /// batched path (its caches are partially advanced) — and the rest keep
-    /// serving. With tiering on, the engine still never sees warm layers:
-    /// batch groups contain only fully-hot sessions and the serial arm
-    /// prefetches (with victim spills) before stepping.
+    /// Merge one prefilled request back into the scheduler: metrics,
+    /// hot-byte accounting, and retirement/activation. Shared by the
+    /// sequential and fanned-out prefill arms so the two cannot diverge.
+    /// Returns 1 when the prefill succeeded.
+    fn merge_prefill(
+        &mut self,
+        q: QueuedRequest,
+        wait_secs: f64,
+        sess: Session,
+        res: Result<PrefillReport>,
+    ) -> usize {
+        self.warm_bucket = Some(q.bucket);
+        let done = match res {
+            Ok(report) => {
+                self.engine.absorb_prefill(&report);
+                self.engine
+                    .metrics
+                    .observe_admission(wait_secs, wait_secs + sess.prefill_secs);
+                self.hot_bytes += sess.kv_bytes();
+                if sess.is_done() {
+                    self.retire(sess, FinishStatus::Completed, None);
+                } else {
+                    self.active.push_back(sess);
+                }
+                1
+            }
+            Err(e) => {
+                drop(sess);
+                self.park_queued(q, FinishStatus::Failed, format!("prefill failed: {e:#}"));
+                0
+            }
+        };
+        self.engine.metrics.observe_hot(self.hot_bytes);
+        done
+    }
+
+    /// One decode step per active session: plan bucket groups + the
+    /// sequential tiered arm on the serving thread, fan the plan out across
+    /// the worker pool, then step the tiered arm with tier fetches. A
+    /// decode error kills only its execution unit — the single session on a
+    /// `One` unit, the whole group on a `Group` (its caches are partially
+    /// advanced) — and the rest keep serving. With tiering on, the engine
+    /// still never sees warm layers: parallel units contain only fully-hot
+    /// sessions and the sequential arm fetches (with victim spills) before
+    /// stepping.
     pub fn decode_round(&mut self) -> usize {
-        let mut stepped: usize = 0;
-        let mut still_active: VecDeque<Session> = VecDeque::new();
+        if self.active.is_empty() {
+            return 0;
+        }
+        // ---- plan (worker-count independent, serving thread only)
+        let mut parallel: Vec<RoundUnit> = Vec::new();
+        let mut sequential: VecDeque<Session> = VecDeque::new();
         while let Some(sess) = self.active.pop_front() {
-            if self.opts.batched_decode && sess.is_fully_hot() {
+            if !sess.is_fully_hot() {
+                // tier I/O required: the sequential arm fetches before it
+                sequential.push_back(sess);
+            } else if self.opts.batched_decode {
                 // gather this session's capacity-bucket group from the rest
                 // of the round's queue (fully-hot members only — a spilled
-                // session stays behind for the serial arm)
+                // session stays behind for the sequential arm)
                 let sig = sess.capacity_signature();
                 let mut group = vec![sess];
                 let mut rest = VecDeque::with_capacity(self.active.len());
@@ -437,170 +579,213 @@ impl<B: ModelBackend> Scheduler<B> {
                     }
                 }
                 self.active = rest;
-                let fits = !self.opts.tiering
-                    || self.reserve_group_headroom(&group, &mut still_active);
-                if fits {
-                    stepped += self.step_group(group, &mut still_active);
-                } else {
-                    // The group alone busts the hot limit even with every
-                    // outside victim spilled: step it per-session instead —
-                    // the serial path can spill already-stepped members
-                    // between steps, which a whole-group dispatch cannot.
-                    // Members wait their turn inside `self.active` so victim
-                    // selection and the hot gauge keep seeing their bytes.
-                    let n = group.len();
-                    for sess in group.into_iter().rev() {
-                        self.active.push_front(sess);
-                    }
-                    for _ in 0..n {
-                        let sess = self.active.pop_front().expect("group member just queued");
-                        stepped += self.step_serial(sess, &mut still_active);
-                    }
-                }
+                parallel.push(RoundUnit::Group(group));
             } else {
-                stepped += self.step_serial(sess, &mut still_active);
+                parallel.push(RoundUnit::One(sess));
             }
         }
-        self.active = still_active;
+
+        if self.opts.tiering {
+            self.reserve_parallel_headroom(&mut parallel, &mut sequential);
+            // double buffering, half one: the tiered arm's spilled layers —
+            // including victims the headroom reservation just spilled —
+            // start rehydrating on the tier thread while the parallel stage
+            // below decodes. Hints come *after* the reservation so a layer
+            // spilled for headroom still gets staged before its fetch.
+            for sess in &sequential {
+                for l in self.tier.spilled_layers(sess.id) {
+                    self.tier.prefetch_ahead(sess.id, l);
+                }
+            }
+        }
+
+        // ---- parallel stage: bucket groups (and `One` units) fan out
+        let mut stepped: usize = 0;
+        let mut decoded: VecDeque<Session> = VecDeque::new();
+        if !parallel.is_empty() {
+            // check the stage's sessions out of the hot counter: their
+            // bytes change on the workers (append + decode eviction)
+            for unit in &parallel {
+                for s in unit.sessions() {
+                    self.hot_bytes -= s.kv_bytes();
+                }
+            }
+            let worker = self.engine.worker();
+            let (results, stats) = self.pool.run(parallel, |unit| match unit {
+                RoundUnit::Group(mut group) => {
+                    let res = worker.decode_step_batch(&mut group);
+                    (RoundUnit::Group(group), res)
+                }
+                RoundUnit::One(mut sess) => {
+                    let res = worker.decode_step(&mut sess);
+                    (RoundUnit::One(sess), res)
+                }
+            });
+            self.engine.metrics.observe_worker_round(
+                self.pool.workers(),
+                &stats.busy_secs,
+                stats.wall_secs,
+            );
+            for (unit, res) in results {
+                let sessions = unit.into_sessions();
+                match res {
+                    Ok(report) => {
+                        // check back in from the report's per-session sizes
+                        // — the worker already walked the caches
+                        self.hot_bytes += report.kv_after.iter().sum::<usize>();
+                        self.engine.absorb_step(&report);
+                        stepped += sessions.len();
+                        for sess in sessions {
+                            if sess.is_done() {
+                                self.retire(sess, FinishStatus::Completed, None);
+                            } else {
+                                decoded.push_back(sess);
+                            }
+                        }
+                    }
+                    Err(e) => {
+                        // the unit is its failure domain: a group's caches
+                        // may be partially advanced, so every member retires
+                        // (check in by walking — no report exists)
+                        let msg = format!("decode failed: {e:#}");
+                        for sess in sessions {
+                            self.hot_bytes += sess.kv_bytes();
+                            self.retire(sess, FinishStatus::Failed, Some(msg.clone()));
+                        }
+                    }
+                }
+            }
+            if self.opts.tiering && self.opts.kv_mem_limit.is_some() {
+                self.engine.metrics.observe_hot(self.hot_bytes);
+            }
+        }
+
+        // ---- sequential arm: tier fetches + per-session steps, in order
+        while let Some(mut sess) = sequential.pop_front() {
+            if self.opts.tiering {
+                self.make_resident(&mut sess, &mut decoded, &mut sequential);
+            }
+            self.hot_bytes -= sess.kv_bytes();
+            let res = self.engine.decode_step(&mut sess);
+            self.hot_bytes += sess.kv_bytes();
+            match res {
+                Ok(_) => {
+                    stepped += 1;
+                    if sess.is_done() {
+                        self.retire(sess, FinishStatus::Completed, None);
+                    } else {
+                        // per-step gauge fidelity only matters when a limit
+                        // is being enforced
+                        if self.opts.tiering && self.opts.kv_mem_limit.is_some() {
+                            self.engine.metrics.observe_hot(self.hot_bytes);
+                        }
+                        decoded.push_back(sess);
+                    }
+                }
+                Err(e) => {
+                    self.retire(sess, FinishStatus::Failed, Some(format!("decode failed: {e:#}")));
+                }
+            }
+        }
+
+        if self.opts.tiering {
+            // double buffering, half two: sessions leaving this round with
+            // spilled layers (this round's victims) start rehydrating now,
+            // so next round's fetches hit the staging area
+            for sess in &decoded {
+                for l in self.tier.spilled_layers(sess.id) {
+                    self.tier.prefetch_ahead(sess.id, l);
+                }
+            }
+        }
+
+        self.active = decoded;
         self.engine.metrics.decode_steps += stepped as u64;
         stepped
     }
 
-    /// Advance one session by one token on the serial path: tier prefetch
-    /// (with victim spills + growth headroom) and a per-session
-    /// `decode_step`. Returns 1 on success, 0 when the session failed.
-    fn step_serial(&mut self, mut sess: Session, still_active: &mut VecDeque<Session>) -> usize {
-        if self.opts.tiering {
-            self.make_resident(&mut sess, still_active);
-        }
-        match self.engine.decode_step(&mut sess) {
-            Ok(_) => {
-                if sess.is_done() {
-                    self.retire(sess, FinishStatus::Completed, None);
-                } else {
-                    // per-step gauge fidelity only matters when a limit is
-                    // being enforced; the unlimited path settles for the
-                    // end-of-tick observation (skips an O(S·L) scan per step)
-                    if self.opts.tiering && self.opts.kv_mem_limit.is_some() {
-                        let hot = sess.kv_bytes()
-                            + deque_kv_bytes(&self.active)
-                            + deque_kv_bytes(still_active);
-                        self.engine.metrics.observe_hot(hot);
-                    }
-                    still_active.push_back(sess);
-                }
-                1
+    /// Reserve one-step append headroom for every parallel unit under a
+    /// hot-tier limit, spilling victims from the sequential arm (back of
+    /// the queue first — their steps are farthest away, and they rehydrate
+    /// through their own `make_resident`). When even a full spill of the
+    /// sequential arm cannot cover the stage's growth, the last-planned
+    /// unit is demoted to the sequential arm — its members then step with
+    /// per-session victim spills between steps, the bound
+    /// [`Scheduler::make_resident`] maintains — and the check repeats.
+    fn reserve_parallel_headroom(
+        &mut self,
+        parallel: &mut Vec<RoundUnit>,
+        sequential: &mut VecDeque<Session>,
+    ) {
+        let Some(limit) = self.opts.kv_mem_limit else { return };
+        loop {
+            let growth: usize = parallel
+                .iter()
+                .flat_map(|u| u.sessions().iter())
+                .map(|s| s.step_growth_bytes())
+                .sum();
+            let mut over = (self.hot_bytes + growth).saturating_sub(limit);
+            if over > 0 {
+                let freed = spill_from_sessions(
+                    &mut self.tier,
+                    &mut self.engine.metrics,
+                    &mut self.hot_bytes,
+                    sequential.make_contiguous(),
+                    u64::MAX,
+                    over,
+                );
+                over = over.saturating_sub(freed);
             }
-            Err(e) => {
-                self.retire(sess, FinishStatus::Failed, Some(format!("decode failed: {e:#}")));
-                0
+            if over == 0 {
+                return;
+            }
+            match parallel.pop() {
+                Some(unit) => {
+                    // demoted members step before the already-planned
+                    // sequential sessions, mirroring the old per-session
+                    // fallback order
+                    for sess in unit.into_sessions().into_iter().rev() {
+                        sequential.push_front(sess);
+                    }
+                }
+                None => return,
             }
         }
     }
 
-    /// Advance one capacity-bucket group by one token each via the batched
-    /// engine path; returns how many sessions stepped. On error the whole
-    /// group retires as `Failed` (the batch is its failure domain — caches
-    /// may be partially advanced).
-    fn step_group(
+    /// Fetch `sess`'s spilled layers back to hot, first spilling other
+    /// sessions' layers when hot bytes would overshoot the limit. Victims
+    /// are taken from the sessions whose next decode step is farthest away:
+    /// the back of `decoded` (already stepped this round), then the back of
+    /// the not-yet-stepped sequential arm.
+    fn make_resident(
         &mut self,
-        mut group: Vec<Session>,
-        still_active: &mut VecDeque<Session>,
-    ) -> usize {
-        match self.engine.decode_step_batch(&mut group) {
-            Ok(_) => {
-                let stepped = group.len();
-                if self.opts.tiering && self.opts.kv_mem_limit.is_some() {
-                    let hot = group.iter().map(|s| s.kv_bytes()).sum::<usize>()
-                        + deque_kv_bytes(&self.active)
-                        + deque_kv_bytes(still_active);
-                    self.engine.metrics.observe_hot(hot);
-                }
-                for sess in group {
-                    if sess.is_done() {
-                        self.retire(sess, FinishStatus::Completed, None);
-                    } else {
-                        still_active.push_back(sess);
-                    }
-                }
-                stepped
-            }
-            Err(e) => {
-                let msg = format!("batched decode failed: {e:#}");
-                for sess in group {
-                    self.retire(sess, FinishStatus::Failed, Some(msg.clone()));
-                }
-                0
-            }
-        }
-    }
-
-    /// Reserve one-step append headroom for a fully-hot batch group under a
-    /// hot-tier limit, spilling victims from sessions outside the group
-    /// (already-stepped sessions first — their next decode is farthest
-    /// away). Returns false when even a full outside spill cannot make the
-    /// whole group's step fit — the caller then steps the group serially,
-    /// which can also spill already-stepped *members* between steps (the
-    /// same bound [`Scheduler::make_resident`] maintains). A spilled victim
-    /// simply routes through the serial arm when its turn comes.
-    fn reserve_group_headroom(
-        &mut self,
-        group: &[Session],
+        sess: &mut Session,
         decoded: &mut VecDeque<Session>,
-    ) -> bool {
-        let Some(limit) = self.opts.kv_mem_limit else { return true };
-        let group_bytes: usize = group.iter().map(|s| s.kv_bytes()).sum();
-        let growth: usize =
-            group.iter().flat_map(|s| s.caches.iter()).map(|c| c.step_growth_bytes()).sum();
-        let hot_now = group_bytes + deque_kv_bytes(&self.active) + deque_kv_bytes(decoded);
-        let mut over = (hot_now + growth).saturating_sub(limit);
-        if over == 0 {
-            return true;
-        }
-        let freed =
-            spill_from_deque(&mut self.tier, &mut self.engine.metrics, decoded, u64::MAX, over);
-        over = over.saturating_sub(freed);
-        if over > 0 {
-            let freed = spill_from_deque(
-                &mut self.tier,
-                &mut self.engine.metrics,
-                &mut self.active,
-                u64::MAX,
-                over,
-            );
-            over = over.saturating_sub(freed);
-        }
-        over == 0
-    }
-
-    /// Prefetch `sess`'s spilled layers, first spilling other sessions'
-    /// layers when hot bytes would overshoot the limit. Victims are taken
-    /// from the sessions whose next decode step is farthest away: the back
-    /// of `decoded` (already stepped this round), then the back of the
-    /// not-yet-stepped queue.
-    fn make_resident(&mut self, sess: &mut Session, decoded: &mut VecDeque<Session>) {
+        upcoming: &mut VecDeque<Session>,
+    ) {
         let needed = self.tier.pending_hot_bytes(sess.id);
         if let Some(limit) = self.opts.kv_mem_limit {
-            let others = deque_kv_bytes(&self.active) + deque_kv_bytes(decoded);
-            let hot_now = sess.kv_bytes() + others;
             // reserve headroom for the entries this decode step will append
             // (one per head per layer), so the post-step hot size still
             // respects the limit
-            let growth: usize = sess.caches.iter().map(|c| c.step_growth_bytes()).sum();
-            let over = (hot_now + needed + growth).saturating_sub(limit);
+            let growth = sess.step_growth_bytes();
+            let over = (self.hot_bytes + needed + growth).saturating_sub(limit);
             if over > 0 {
-                let freed = spill_from_deque(
+                let freed = spill_from_sessions(
                     &mut self.tier,
                     &mut self.engine.metrics,
-                    decoded,
+                    &mut self.hot_bytes,
+                    decoded.make_contiguous(),
                     sess.id,
                     over,
                 );
                 if freed < over {
-                    spill_from_deque(
+                    spill_from_sessions(
                         &mut self.tier,
                         &mut self.engine.metrics,
-                        &mut self.active,
+                        &mut self.hot_bytes,
+                        upcoming.make_contiguous(),
                         sess.id,
                         over - freed,
                     );
@@ -616,19 +801,21 @@ impl<B: ModelBackend> Scheduler<B> {
             return;
         }
         // one observe_prefetch per layer, mirroring per-layer observe_spill,
-        // so the spill/prefetch counters and latencies share units
+        // so the spill/prefetch counters and latencies share units; the
+        // latency is the *blocking* time the serving thread paid — near
+        // zero when the prefetch-ahead staging already rehydrated the layer
         for l in self.tier.spilled_layers(sess.id) {
             let t0 = std::time::Instant::now();
-            if let Some(hot) = self.tier.prefetch(sess.id, l) {
+            if let Some(hot) = self.tier.fetch(sess.id, l) {
                 let restored = hot.live_bytes();
                 sess.caches[l] = hot;
                 sess.residency[l] = Residency::Hot;
+                self.hot_bytes += restored;
                 self.engine.metrics.observe_prefetch(restored, t0.elapsed().as_secs_f64());
             }
         }
         self.engine.metrics.observe_warm(self.tier.warm_bytes());
-        let hot = sess.kv_bytes() + deque_kv_bytes(&self.active) + deque_kv_bytes(decoded);
-        self.engine.metrics.observe_hot(hot);
+        self.engine.metrics.observe_hot(self.hot_bytes);
     }
 
     /// Spill layers from active sessions (back of the queue first — their
@@ -637,7 +824,14 @@ impl<B: ModelBackend> Scheduler<B> {
     fn spill_active_until(&mut self, need: usize) -> usize {
         // no session is mid-decode during admission, so every active
         // session is an eligible victim (protect an id no session carries)
-        spill_from_deque(&mut self.tier, &mut self.engine.metrics, &mut self.active, u64::MAX, need)
+        spill_from_sessions(
+            &mut self.tier,
+            &mut self.engine.metrics,
+            &mut self.hot_bytes,
+            self.active.make_contiguous(),
+            u64::MAX,
+            need,
+        )
     }
 
     /// One scheduler tick: admit+prefill a batch when due, then advance every
@@ -654,8 +848,14 @@ impl<B: ModelBackend> Scheduler<B> {
             worked |= self.prefill_batch(batch)? > 0;
         }
         worked |= self.decode_round() > 0;
-        let hot = self.live_kv_bytes();
-        self.engine.metrics.observe_hot(hot);
+        self.engine.metrics.observe_hot(self.live_kv_bytes());
+        let snap = self.tier.thread_snapshot();
+        self.engine.metrics.observe_tier_thread(
+            snap.spill_queue_depth,
+            snap.prefetch_queue_depth,
+            snap.staged_bytes,
+            snap.busy_secs,
+        );
         // a tick that only rejected requests still made progress
         worked |= self.finished.len() > finished_before;
         Ok(worked)
@@ -684,7 +884,8 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     fn retire(&mut self, sess: Session, status: FinishStatus, error: Option<String>) {
-        // a leaving session's warm blocks are dead weight — release them
+        // the leaving session's bytes exit both tiers' accounting
+        self.hot_bytes -= sess.kv_bytes();
         self.tier.drop_session(sess.id);
         self.engine.metrics.observe_warm(self.tier.warm_bytes());
         match status {
@@ -726,20 +927,16 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 }
 
-/// Hot live bytes across a deque of sessions.
-fn deque_kv_bytes(sessions: &VecDeque<Session>) -> usize {
-    sessions.iter().map(|s| s.kv_bytes()).sum()
-}
-
 /// Spill hot layers from `sessions` (iterated back to front) until `need`
 /// bytes are freed, skipping the protected session. Within one victim
 /// session, lowest-LAVa-weight layers (smallest Algorithm 2 budget) go
 /// first. Free functions over disjoint scheduler fields keep the borrow
-/// checker happy while a popped session is in flight.
-fn spill_from_deque(
-    tier: &mut TierManager,
+/// checker happy while the round's sessions live outside `active`.
+fn spill_from_sessions(
+    tier: &mut TierClient,
     metrics: &mut Metrics,
-    sessions: &mut VecDeque<Session>,
+    hot_bytes: &mut usize,
+    sessions: &mut [Session],
     protect: u64,
     need: usize,
 ) -> usize {
@@ -751,16 +948,19 @@ fn spill_from_deque(
         if sess.id == protect {
             continue;
         }
-        freed += spill_session_layers(tier, metrics, sess, need - freed);
+        freed += spill_session_layers(tier, metrics, hot_bytes, sess, need - freed);
     }
     freed
 }
 
 /// Spill one session's hot layers, lowest-budget first, until `need` bytes
-/// are freed or the session is fully warm. Returns the bytes freed.
+/// are freed or the session is fully warm. Returns the bytes freed. The
+/// spill latency recorded here is the serving-thread cost only (take the
+/// buffers + enqueue); the Q8 quantization runs on the tier thread.
 fn spill_session_layers(
-    tier: &mut TierManager,
+    tier: &mut TierClient,
     metrics: &mut Metrics,
+    hot_bytes: &mut usize,
     sess: &mut Session,
     need: usize,
 ) -> usize {
@@ -775,6 +975,7 @@ fn spill_session_layers(
             let t0 = std::time::Instant::now();
             let bytes = tier.spill(sess.id, l, &mut sess.caches[l]);
             sess.residency[l] = Residency::Warm;
+            *hot_bytes -= bytes;
             metrics.observe_spill(bytes, t0.elapsed().as_secs_f64());
             freed += bytes;
         }
@@ -797,6 +998,16 @@ mod tests {
         let engine =
             Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
         Scheduler::new(engine, SchedulerOptions { kv_mem_limit: limit, ..Default::default() })
+    }
+
+    fn sched_with_workers(limit: Option<usize>, workers: usize) -> Scheduler<MockBackend> {
+        let mock = MockBackend::new(MockBackend::default_config());
+        let engine =
+            Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+        Scheduler::new(
+            engine,
+            SchedulerOptions { kv_mem_limit: limit, workers, ..Default::default() },
+        )
     }
 
     fn req(n: usize, out: usize) -> GenerateRequest {
@@ -954,6 +1165,51 @@ mod tests {
     }
 
     #[test]
+    fn worker_width_does_not_change_results() {
+        // the inline smoke version of tests/sharded_decode.rs: same mixed
+        // workload, widths 1 vs 3, identical outputs
+        let run = |workers: usize| {
+            let mut s = sched_with_workers(None, workers);
+            for i in 0..6 {
+                let n = if i % 2 == 0 { 100 } else { 300 };
+                s.submit(req(n, 6)).unwrap();
+            }
+            let mut done = s.run_to_completion().unwrap();
+            done.sort_by_key(|(id, _)| *id);
+            done
+        };
+        let one = run(1);
+        let three = run(3);
+        assert_eq!(one.len(), three.len());
+        for ((ida, ra), (idb, rb)) in one.iter().zip(&three) {
+            assert_eq!(ida, idb);
+            assert_eq!(ra.tokens, rb.tokens, "id {ida}: tokens must be bit-identical");
+            assert_eq!(ra.kv_bytes_after_prefill, rb.kv_bytes_after_prefill);
+        }
+    }
+
+    #[test]
+    fn worker_and_tier_gauges_populate() {
+        let mut s = sched_with_workers(Some(210_000), 2);
+        for _ in 0..4 {
+            s.submit(req(200, 6)).unwrap();
+        }
+        s.run_to_completion().unwrap();
+        let m = &s.engine.metrics;
+        assert!(m.worker_rounds > 0, "fan-out rounds must be recorded");
+        assert_eq!(m.workers, 2);
+        assert!(m.worker_utilization() >= 0.0);
+        assert!(!m.worker_busy_secs.is_empty());
+        assert!(m.spills > 0, "workload must exercise the tier thread");
+        // after a sync barrier the tier thread has drained its queues
+        s.tier.sync();
+        let snap = s.tier.thread_snapshot();
+        assert_eq!(snap.spill_queue_depth, 0);
+        assert_eq!(snap.prefetch_queue_depth, 0);
+        assert!(snap.busy_secs >= 0.0);
+    }
+
+    #[test]
     fn rejects_oversized() {
         let mut s = sched(None);
         assert!(matches!(
@@ -975,6 +1231,28 @@ mod tests {
         assert_eq!(s.pending_count(), 0);
         let done = s.run_to_completion().unwrap();
         assert_eq!(done.len(), 4);
+    }
+
+    #[test]
+    fn parallel_prefill_matches_sequential() {
+        // same admitted batch, workers 1 vs 4: identical sessions + results
+        let run = |workers: usize| {
+            let mut s = sched_with_workers(None, workers);
+            for _ in 0..4 {
+                s.submit(req(100, 4)).unwrap();
+            }
+            let mut done = s.run_to_completion().unwrap();
+            done.sort_by_key(|(id, _)| *id);
+            done
+        };
+        let seq = run(1);
+        let par = run(4);
+        for ((ida, ra), (idb, rb)) in seq.iter().zip(&par) {
+            assert_eq!(ida, idb);
+            assert_eq!(ra.tokens, rb.tokens);
+            assert_eq!(ra.kv_bytes_after_prefill, rb.kv_bytes_after_prefill);
+            assert_eq!(ra.budgets, rb.budgets);
+        }
     }
 
     #[test]

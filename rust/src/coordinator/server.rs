@@ -13,9 +13,10 @@
 //!   control:  {"cmd": "metrics"} | {"cmd": "cancel", "id": n}
 //!             | {"cmd": "shutdown"}
 //!
-//! The engine is single-threaded (one CPU core, one PJRT client); the server
-//! accepts connections on the caller's thread and serves line-by-line —
-//! concurrency across requests happens in the scheduler, not across sockets.
+//! The server accepts connections on the caller's thread and serves
+//! line-by-line — concurrency across requests happens in the scheduler
+//! (whose decode/prefill work fans out over the engine worker pool and
+//! whose tier I/O runs on a background thread), not across sockets.
 //! Because each line is driven to completion before the next is read,
 //! `cancel` over this transport only ever sees already-finished ids (it
 //! replies {"ok": false}); it is wired for embedders driving the scheduler
@@ -151,6 +152,23 @@ impl<B: ModelBackend> Server<B> {
             ("prefetched_mb", Json::num(m.prefetched_bytes as f64 / 1e6)),
             ("spill_ms_mean", Json::num(m.mean_spill_ms())),
             ("prefetch_ms_mean", Json::num(m.mean_prefetch_ms())),
+            // worker pool: width, per-worker cumulative busy time, and the
+            // mean fraction of the pool kept busy during fan-outs
+            ("workers", Json::num(m.workers as f64)),
+            ("worker_utilization", Json::num(m.worker_utilization())),
+            ("worker_rounds", Json::num(m.worker_rounds as f64)),
+            (
+                "worker_busy_secs",
+                Json::Arr(m.worker_busy_secs.iter().map(|&b| Json::num(b)).collect()),
+            ),
+            // tier thread: command-queue backlogs (sampled at tick end),
+            // their observed peak, and background quantize/dequantize time
+            ("tier_spill_queue_depth", Json::num(m.tier_spill_queue_depth as f64)),
+            ("tier_prefetch_queue_depth", Json::num(m.tier_prefetch_queue_depth as f64)),
+            ("tier_queue_depth_peak", Json::num(m.tier_queue_depth_peak as f64)),
+            ("tier_staged_mb", Json::num(m.tier_staged_bytes as f64 / 1e6)),
+            ("peak_tier_staged_mb", Json::num(m.peak_tier_staged_bytes as f64 / 1e6)),
+            ("tier_busy_ms", Json::num(m.tier_busy_secs * 1e3)),
             ("report", Json::str(m.report())),
         ])
     }
@@ -424,6 +442,12 @@ mod tests {
         assert!(m.get("batch_occupancy").unwrap().as_f64().unwrap() > 1.0);
         assert!(m.get("decode_dispatches_total").unwrap().as_f64().unwrap() > 0.0);
         assert!(m.get("decode_dispatches").unwrap().as_obj().unwrap().len() == 1);
+        // worker-pool + tier-thread gauges are always present
+        assert!(m.get("workers").unwrap().as_f64().unwrap() >= 1.0);
+        assert!(m.get("worker_utilization").unwrap().as_f64().unwrap() >= 0.0);
+        assert_eq!(m.get("tier_spill_queue_depth").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(m.get("tier_prefetch_queue_depth").unwrap().as_usize().unwrap(), 0);
+        assert!(m.get("tier_busy_ms").unwrap().as_f64().unwrap() >= 0.0);
 
         writeln!(c, "{{\"cmd\": \"shutdown\"}}").unwrap();
         let mut line2 = String::new();

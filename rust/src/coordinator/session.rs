@@ -62,6 +62,13 @@ impl Session {
         self.caches.iter().map(|c| c.live_bytes()).sum()
     }
 
+    /// Hot bytes one decode step appends across all layers (one K+V entry
+    /// per kv head per layer) — the headroom the scheduler reserves before
+    /// letting this session step under a hot-tier limit.
+    pub fn step_growth_bytes(&self) -> usize {
+        self.caches.iter().map(|c| c.step_growth_bytes()).sum()
+    }
+
     /// True when every layer is hot-resident (decodable by the engine).
     pub fn is_fully_hot(&self) -> bool {
         self.residency.iter().all(|r| *r == Residency::Hot)

@@ -277,6 +277,15 @@ impl HotStore {
         self.layout.set_head_len(h, last);
     }
 
+    /// Hand the full store to the spill path, leaving an empty
+    /// zero-capacity store behind: the session's hot byte accounting drops
+    /// to zero for this layer immediately, while the Q8 quantization of the
+    /// taken buffers happens off the serving thread.
+    pub fn take_for_spill(&mut self) -> HotStore {
+        let (hk, dh) = (self.n_kv_heads(), self.d_head());
+        std::mem::replace(self, HotStore::new(hk, dh, 0))
+    }
+
     /// Decode-input tensors: K [Hk,M,dh], V [Hk,M,dh], valid [Hk,M] —
     /// borrowed views of the live buffers; steady-state decode copies
     /// nothing.
@@ -507,6 +516,20 @@ mod tests {
         assert_eq!(c.head_len(1), 0);
         assert_eq!(c.position(0, 1), 9);
         assert_eq!(c.value(0, 0), &[3.0, 4.0]);
+        c.check_invariants().unwrap();
+    }
+
+    #[test]
+    fn take_for_spill_leaves_empty_store() {
+        let mut c = HotStore::new(2, 4, 8);
+        c.append(&[1.0; 8], &[2.0; 8], 0, 0.5);
+        let taken = c.take_for_spill();
+        assert_eq!(taken.total_entries(), 2);
+        assert_eq!(taken.capacity(), 8);
+        assert_eq!(c.live_bytes(), 0, "left-behind store holds nothing");
+        assert_eq!(c.capacity(), 0);
+        assert_eq!(c.n_kv_heads(), 2);
+        assert_eq!(c.d_head(), 4);
         c.check_invariants().unwrap();
     }
 

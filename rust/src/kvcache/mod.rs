@@ -11,18 +11,21 @@
 //!   prefix only, Q8-quantized (scale-per-head blockwise) with a documented
 //!   round-trip tolerance ([`warm::q8_tolerance`]); positions, scores, and
 //!   head lengths survive exactly.
-//! * [`tier`] — [`TierManager`], which owns warm blocks and the per-session,
-//!   per-layer [`Residency`] state machine (Hot ⇄ Warm). The scheduler
-//!   drives spills (idle sessions' lowest-LAVa-weight layers first, when
-//!   projected hot bytes exceed `kv_mem_limit`) and prefetches (a session's
-//!   spilled layers rehydrate before its next decode round); the engine
-//!   only ever sees hot caches and asserts residency at the hot path
-//!   boundary.
+//! * [`tier`] — the tier side, split in two: [`TierClient`] (serving-thread
+//!   handle owning the per-session, per-layer [`Residency`] bookkeeping and
+//!   exact byte accounting, so every scheduling decision is synchronous and
+//!   deterministic) and a background tier thread owning a [`TierManager`]
+//!   (the warm blocks) that does the Q8 quantize/dequantize off the serving
+//!   path, with a prefetch-ahead staging area for double-buffered
+//!   rehydration. The scheduler drives spills (idle sessions'
+//!   lowest-LAVa-weight layers first, when projected hot bytes exceed
+//!   `kv_mem_limit`) and fetches (a session's spilled layers rehydrate
+//!   before its next decode round); the engine only ever sees hot caches
+//!   and asserts residency at the hot path boundary.
 //!
 //! `kv_mem_limit` bounds the *hot* tier only: under memory pressure the
 //! scheduler spills instead of deferring, so far more sessions stay
-//! admitted. This is the structural seam for the later SSD tier and engine
-//! sharding (ROADMAP).
+//! admitted. This is the structural seam for the later SSD tier (ROADMAP).
 
 pub mod hot;
 pub mod layout;
@@ -31,8 +34,8 @@ pub mod warm;
 
 pub use hot::{BatchDecodeView, HotStore};
 pub use layout::SlotLayout;
-pub use tier::{Residency, TierManager};
-pub use warm::{q8_tolerance, WarmBlock};
+pub use tier::{Residency, TierClient, TierManager, TierThreadSnapshot};
+pub use warm::{projected_warm_bytes, q8_tolerance, WarmBlock};
 
 /// Historical name of the hot store, kept so call sites and docs that speak
 /// "layer cache" keep compiling; new code should say [`HotStore`].

@@ -1,5 +1,5 @@
-//! Tier manager: per-session, per-layer residency between the hot and warm
-//! stores.
+//! Tier management: per-session, per-layer residency between the hot and
+//! warm stores, with the Q8 quantize/dequantize work on a background thread.
 //!
 //! ## Residency state machine
 //!
@@ -15,20 +15,55 @@
 //!
 //! * `Hot` — the layer lives in a [`HotStore`]; the engine may decode
 //!   against it. Its bytes count against `kv_mem_limit`.
-//! * `Warm` — the layer lives in a [`WarmBlock`] owned by this manager; the
-//!   engine must never see it. Its (smaller, Q8) bytes count against the
-//!   warm-tier accounting only.
+//! * `Warm` — the layer lives in a [`WarmBlock`] owned by the tier side;
+//!   the engine must never see it. Its (smaller, Q8) bytes count against
+//!   the warm-tier accounting only.
 //!
-//! The scheduler drives all transitions: it spills idle sessions'
-//! lowest-LAVa-weight layers when projected hot bytes exceed the limit, and
-//! prefetches a session's spilled layers before handing it to the engine.
-//! The engine itself only ever sees hot caches (and asserts so at the hot
-//! path boundary). A retiring session's warm blocks are dropped here.
+//! ## Two halves: client and thread
+//!
+//! [`TierClient`] lives on the serving thread and owns the *decisions and
+//! accounting*: which (session, layer) pairs are warm, their exact hot and
+//! warm byte sizes (warm sizes are projected from the cache shape via
+//! [`super::warm::projected_warm_bytes`], which equals the real block size),
+//! and the residency bookkeeping the scheduler's spill/prefetch policy
+//! reads. Every client query is answered synchronously from this local
+//! state, so scheduling decisions are deterministic — independent of what
+//! the background thread has gotten around to.
+//!
+//! The *data movement* — Q8 quantization on spill, dequantization on
+//! prefetch — runs on a dedicated tier thread owning a [`TierManager`].
+//! The handoff protocol:
+//!
+//! * **Spill** — the client takes the hot buffers
+//!   ([`HotStore::take_for_spill`]), charges the projected warm bytes, and
+//!   enqueues the store; the thread quantizes it into a warm block later.
+//! * **Prefetch-ahead** — a hint: the thread dequantizes the block into a
+//!   *staging* map but the layer stays Warm to the client; issued by the
+//!   scheduler for next-round sessions so rehydration overlaps decode
+//!   (double buffering). Staged stores are host-side f32 duplicates of
+//!   warm blocks — bounded by the hinted sessions' pending hot bytes and
+//!   surfaced via the `staged_bytes` gauge; they never count against the
+//!   hot-tier limit, which models serving memory.
+//! * **Fetch** — the blocking transition Warm→Hot: the client sends a
+//!   reply channel; the thread answers with the staged store (hit: the
+//!   dequantization already happened under the previous round's decode) or
+//!   dequantizes on the spot (miss). Commands are processed FIFO, so a
+//!   fetch always observes the spill that preceded it.
+//! * **Drop** — retire/cancel: releases the session's warm blocks and any
+//!   staged stores.
+//!
+//! [`TierManager`] remains the synchronous storage core (the thread's state;
+//! also usable directly by tests and single-threaded embedders).
 
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
+use std::thread::JoinHandle;
+use std::time::Instant;
 
 use super::hot::HotStore;
-use super::warm::WarmBlock;
+use super::warm::{projected_warm_bytes, WarmBlock};
 
 /// Which tier a (session, layer) cache currently lives in.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -128,6 +163,286 @@ impl TierManager {
     }
 }
 
+// ------------------------------------------------------------ tier thread
+
+/// Commands the serving thread hands to the tier thread. FIFO processing is
+/// the consistency contract: a `Fetch` enqueued after a `Spill` of the same
+/// (session, layer) always finds the block.
+enum TierCmd {
+    Spill { session: u64, layer: usize, hot: HotStore },
+    PrefetchAhead { session: u64, layer: usize },
+    Fetch { session: u64, layer: usize, reply: Sender<Option<HotStore>> },
+    Drop { session: u64 },
+    Sync { reply: Sender<()> },
+    Shutdown,
+}
+
+/// Gauges shared between the client and the tier thread. Queue depths are
+/// incremented by the client at enqueue and decremented by the thread after
+/// processing, so a sampled value is the true backlog at that instant.
+#[derive(Debug, Default)]
+pub struct TierThreadStats {
+    spill_queue: AtomicUsize,
+    prefetch_queue: AtomicUsize,
+    /// f32 bytes held in the prefetch-ahead staging area. Staged stores are
+    /// *host-side duplicates* on top of warm blocks — they are not hot-tier
+    /// bytes (the limit models serving memory) but they are real RAM,
+    /// bounded by the pending hot bytes of the hinted sessions, so they get
+    /// their own gauge instead of hiding.
+    staged_bytes: AtomicUsize,
+    busy_nanos: AtomicU64,
+}
+
+/// One sampled view of the tier thread's gauges.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TierThreadSnapshot {
+    /// Spills enqueued but not yet quantized.
+    pub spill_queue_depth: usize,
+    /// Prefetch-ahead hints enqueued but not yet staged.
+    pub prefetch_queue_depth: usize,
+    /// Host-side f32 bytes currently parked in the staging area.
+    pub staged_bytes: usize,
+    /// Cumulative seconds the tier thread spent quantizing/dequantizing.
+    pub busy_secs: f64,
+}
+
+fn run_tier_thread(rx: Receiver<TierCmd>, stats: Arc<TierThreadStats>) {
+    let mut mgr = TierManager::new();
+    // completed prefetch-aheads, waiting for the blocking fetch
+    let mut staged: HashMap<(u64, usize), HotStore> = HashMap::new();
+    while let Ok(cmd) = rx.recv() {
+        let t0 = Instant::now();
+        match cmd {
+            TierCmd::Spill { session, layer, mut hot } => {
+                mgr.spill(session, layer, &mut hot);
+                stats.spill_queue.fetch_sub(1, Ordering::SeqCst);
+            }
+            TierCmd::PrefetchAhead { session, layer } => {
+                if !staged.contains_key(&(session, layer)) {
+                    if let Some(hot) = mgr.prefetch(session, layer) {
+                        stats.staged_bytes.fetch_add(hot.live_bytes(), Ordering::SeqCst);
+                        staged.insert((session, layer), hot);
+                    }
+                }
+                stats.prefetch_queue.fetch_sub(1, Ordering::SeqCst);
+            }
+            TierCmd::Fetch { session, layer, reply } => {
+                // staging hit: the dequantization already ran under the
+                // previous decode; miss: pay it now, same result either way
+                let hot = match staged.remove(&(session, layer)) {
+                    Some(hot) => {
+                        stats.staged_bytes.fetch_sub(hot.live_bytes(), Ordering::SeqCst);
+                        Some(hot)
+                    }
+                    None => mgr.prefetch(session, layer),
+                };
+                let _ = reply.send(hot);
+            }
+            TierCmd::Drop { session } => {
+                mgr.drop_session(session);
+                staged.retain(|key, hot| {
+                    if key.0 == session {
+                        stats.staged_bytes.fetch_sub(hot.live_bytes(), Ordering::SeqCst);
+                        false
+                    } else {
+                        true
+                    }
+                });
+            }
+            TierCmd::Sync { reply } => {
+                let _ = reply.send(());
+            }
+            TierCmd::Shutdown => break,
+        }
+        stats
+            .busy_nanos
+            .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::SeqCst);
+    }
+}
+
+/// Client-side byte accounting for one spilled layer.
+#[derive(Debug, Clone, Copy)]
+struct SpilledInfo {
+    /// Hot live bytes the layer rehydrates to.
+    hot_bytes: usize,
+    /// Warm bytes the quantized block occupies (projected; exact).
+    warm_bytes: usize,
+}
+
+/// Serving-thread handle to the tier: synchronous residency bookkeeping +
+/// asynchronous data movement. Drop-in successor of the scheduler-owned
+/// [`TierManager`]: same query surface (`warm_bytes`, `spilled_layers`,
+/// `pending_hot_bytes`, ...), but `spill` only *takes* the buffers (the
+/// quantization runs on the tier thread) and `fetch` blocks only when the
+/// prefetch-ahead staging missed.
+pub struct TierClient {
+    tx: Sender<TierCmd>,
+    thread: Option<JoinHandle<()>>,
+    stats: Arc<TierThreadStats>,
+    spilled: HashMap<(u64, usize), SpilledInfo>,
+    warm_bytes: usize,
+}
+
+impl Default for TierClient {
+    fn default() -> Self {
+        TierClient::spawn()
+    }
+}
+
+impl TierClient {
+    /// Start the background tier thread and the client bookkeeping.
+    pub fn spawn() -> TierClient {
+        let (tx, rx) = channel();
+        let stats = Arc::new(TierThreadStats::default());
+        let thread_stats = Arc::clone(&stats);
+        let thread = std::thread::Builder::new()
+            .name("lava-tier".to_string())
+            .spawn(move || run_tier_thread(rx, thread_stats))
+            .expect("spawn tier thread");
+        TierClient {
+            tx,
+            thread: Some(thread),
+            stats,
+            spilled: HashMap::new(),
+            warm_bytes: 0,
+        }
+    }
+
+    /// Current warm-tier bytes across all sessions (client accounting; the
+    /// projection equals the quantized block sizes exactly).
+    pub fn warm_bytes(&self) -> usize {
+        self.warm_bytes
+    }
+
+    /// Number of spilled layers across all sessions.
+    pub fn spilled_count(&self) -> usize {
+        self.spilled.len()
+    }
+
+    /// Layers of `session` currently in the warm tier, ascending.
+    pub fn spilled_layers(&self, session: u64) -> Vec<usize> {
+        let mut layers = Vec::new();
+        for key in self.spilled.keys() {
+            if key.0 == session {
+                layers.push(key.1);
+            }
+        }
+        layers.sort_unstable();
+        layers
+    }
+
+    /// Hot bytes that fetching all of `session`'s spilled layers would
+    /// re-occupy (the scheduler's make-room target).
+    pub fn pending_hot_bytes(&self, session: u64) -> usize {
+        let mut bytes = 0;
+        for (key, info) in &self.spilled {
+            if key.0 == session {
+                bytes += info.hot_bytes;
+            }
+        }
+        bytes
+    }
+
+    /// Spill one layer: take the hot buffers (the cache is left empty, so
+    /// the session's hot accounting drops immediately) and enqueue the Q8
+    /// quantization on the tier thread. Returns the hot live bytes freed.
+    pub fn spill(&mut self, session: u64, layer: usize, cache: &mut HotStore) -> usize {
+        debug_assert!(
+            !self.spilled.contains_key(&(session, layer)),
+            "layer {layer} of session {session} spilled twice"
+        );
+        let freed = cache.live_bytes();
+        let hot = cache.take_for_spill();
+        let warm = projected_warm_bytes(hot.total_entries(), hot.d_head(), hot.n_kv_heads());
+        self.spilled.insert((session, layer), SpilledInfo { hot_bytes: freed, warm_bytes: warm });
+        self.warm_bytes += warm;
+        self.stats.spill_queue.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(TierCmd::Spill { session, layer, hot })
+            .expect("tier thread alive");
+        freed
+    }
+
+    /// Double-buffering hint: start dequantizing a spilled layer into the
+    /// tier thread's staging area. The layer stays Warm to all client
+    /// queries — only [`TierClient::fetch`] transitions it — so issuing (or
+    /// skipping) hints never changes a scheduling decision, only how long
+    /// the eventual fetch blocks. No-op for layers that are not spilled.
+    pub fn prefetch_ahead(&self, session: u64, layer: usize) {
+        if !self.spilled.contains_key(&(session, layer)) {
+            return;
+        }
+        self.stats.prefetch_queue.fetch_add(1, Ordering::SeqCst);
+        self.tx
+            .send(TierCmd::PrefetchAhead { session, layer })
+            .expect("tier thread alive");
+    }
+
+    /// Blocking Warm→Hot transition: returns the rehydrated store (staged
+    /// by a prior [`TierClient::prefetch_ahead`], or dequantized now).
+    /// `None` if the layer is not spilled.
+    pub fn fetch(&mut self, session: u64, layer: usize) -> Option<HotStore> {
+        let info = self.spilled.remove(&(session, layer))?;
+        self.warm_bytes -= info.warm_bytes;
+        let (reply_tx, reply_rx) = channel();
+        self.tx
+            .send(TierCmd::Fetch { session, layer, reply: reply_tx })
+            .expect("tier thread alive");
+        let hot = reply_rx.recv().expect("tier thread alive");
+        debug_assert!(hot.is_some(), "tracked spilled layer missing on the tier thread");
+        hot
+    }
+
+    /// Drop every warm block of a retiring/canceled session (including any
+    /// staged prefetches); returns the warm bytes released.
+    pub fn drop_session(&mut self, session: u64) -> usize {
+        let mut released = 0;
+        self.spilled.retain(|(s, _), info| {
+            if *s == session {
+                released += info.warm_bytes;
+                false
+            } else {
+                true
+            }
+        });
+        self.warm_bytes -= released;
+        if released > 0 {
+            self.tx
+                .send(TierCmd::Drop { session })
+                .expect("tier thread alive");
+        }
+        released
+    }
+
+    /// Round-trip barrier: returns once the tier thread has drained every
+    /// command enqueued before this call.
+    pub fn sync(&self) {
+        let (reply_tx, reply_rx) = channel();
+        self.tx.send(TierCmd::Sync { reply: reply_tx }).expect("tier thread alive");
+        reply_rx.recv().expect("tier thread alive");
+    }
+
+    /// Sample the tier thread's queue/busy gauges.
+    pub fn thread_snapshot(&self) -> TierThreadSnapshot {
+        TierThreadSnapshot {
+            spill_queue_depth: self.stats.spill_queue.load(Ordering::SeqCst),
+            prefetch_queue_depth: self.stats.prefetch_queue.load(Ordering::SeqCst),
+            staged_bytes: self.stats.staged_bytes.load(Ordering::SeqCst),
+            busy_secs: self.stats.busy_nanos.load(Ordering::SeqCst) as f64 * 1e-9,
+        }
+    }
+}
+
+impl Drop for TierClient {
+    fn drop(&mut self) {
+        // a dead thread already drained the channel; ignore the send error
+        let _ = self.tx.send(TierCmd::Shutdown);
+        if let Some(handle) = self.thread.take() {
+            let _ = handle.join();
+        }
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -195,5 +510,103 @@ mod tests {
         assert_eq!(tm.warm_bytes(), after_one);
         tm.drop_session(5);
         assert_eq!(tm.warm_bytes(), 0);
+    }
+
+    #[test]
+    fn client_round_trip_matches_manager() {
+        // the threaded client must hand back exactly what the synchronous
+        // manager would: same Q8 round trip, same accounting
+        let mut mgr = TierManager::new();
+        let mut via_mgr = hot_with_entries(6);
+        mgr.spill(1, 0, &mut via_mgr);
+        let want = mgr.prefetch(1, 0).unwrap();
+
+        let mut client = TierClient::spawn();
+        let mut cache = hot_with_entries(6);
+        let bytes_before = cache.live_bytes();
+        let freed = client.spill(1, 0, &mut cache);
+        assert_eq!(freed, bytes_before);
+        assert_eq!(cache.live_bytes(), 0);
+        assert_eq!(client.spilled_layers(1), vec![0]);
+        assert_eq!(client.pending_hot_bytes(1), bytes_before);
+        assert_eq!(client.warm_bytes(), mgr_warm_bytes_for(bytes_before, 6));
+
+        let back = client.fetch(1, 0).expect("spilled layer");
+        assert_eq!(back.head_len(0), want.head_len(0));
+        for h in 0..2 {
+            for i in 0..6 {
+                assert_eq!(back.key(h, i), want.key(h, i), "head {h} slot {i}");
+                assert_eq!(back.value(h, i), want.value(h, i));
+                assert_eq!(back.position(h, i), want.position(h, i));
+                assert_eq!(back.score(h, i).to_bits(), want.score(h, i).to_bits());
+            }
+        }
+        assert_eq!(client.warm_bytes(), 0);
+        assert_eq!(client.spilled_count(), 0);
+        assert!(client.fetch(1, 0).is_none(), "double fetch must miss");
+    }
+
+    fn mgr_warm_bytes_for(_hot_bytes: usize, entries: usize) -> usize {
+        // 2 heads × entries each; d_head 4
+        crate::kvcache::warm::projected_warm_bytes(entries * 2, 4, 2)
+    }
+
+    #[test]
+    fn prefetch_ahead_stages_without_changing_residency() {
+        let mut client = TierClient::spawn();
+        let mut cache = hot_with_entries(5);
+        client.spill(7, 3, &mut cache);
+        client.prefetch_ahead(7, 3);
+        client.sync();
+        // still warm to every client query: the hint is invisible to policy
+        assert_eq!(client.spilled_layers(7), vec![3]);
+        assert!(client.warm_bytes() > 0);
+        let snap = client.thread_snapshot();
+        assert_eq!(snap.spill_queue_depth, 0, "sync drains the queue");
+        assert_eq!(snap.prefetch_queue_depth, 0);
+        assert!(snap.staged_bytes > 0, "staged f32 duplicates must be visible");
+        // the staged store is what the fetch returns
+        let back = client.fetch(7, 3).expect("staged layer");
+        assert_eq!(back.head_len(0), 5);
+        back.check_invariants().unwrap();
+        assert_eq!(client.warm_bytes(), 0);
+        client.sync();
+        assert_eq!(client.thread_snapshot().staged_bytes, 0, "fetch empties the staging area");
+        // a hint for a non-spilled layer is a no-op
+        client.prefetch_ahead(7, 3);
+        client.sync();
+        assert_eq!(client.thread_snapshot().prefetch_queue_depth, 0);
+    }
+
+    #[test]
+    fn client_drop_session_releases_everything() {
+        let mut client = TierClient::spawn();
+        let mut a0 = hot_with_entries(3);
+        let mut a1 = hot_with_entries(4);
+        let mut b0 = hot_with_entries(5);
+        client.spill(1, 0, &mut a0);
+        client.spill(1, 1, &mut a1);
+        client.spill(2, 0, &mut b0);
+        client.prefetch_ahead(1, 1); // staged entries must be dropped too
+        let released = client.drop_session(1);
+        assert!(released > 0);
+        assert_eq!(client.spilled_count(), 1);
+        assert!(client.spilled_layers(1).is_empty());
+        client.sync();
+        assert!(client.fetch(1, 1).is_none(), "dropped layer must be gone");
+        assert_eq!(client.drop_session(999), 0, "unknown session is a no-op");
+        let last = client.drop_session(2);
+        assert!(last > 0);
+        assert_eq!(client.warm_bytes(), 0);
+    }
+
+    #[test]
+    fn thread_busy_time_accumulates() {
+        let mut client = TierClient::spawn();
+        let mut cache = hot_with_entries(16);
+        client.spill(1, 0, &mut cache);
+        client.fetch(1, 0).unwrap();
+        client.sync();
+        assert!(client.thread_snapshot().busy_secs > 0.0);
     }
 }

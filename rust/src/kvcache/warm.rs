@@ -95,6 +95,11 @@ impl WarmBlock {
                 block.scores.push(hot.score(h, i));
             }
         }
+        debug_assert_eq!(
+            block.warm_bytes(),
+            projected_warm_bytes(hot.total_entries(), dh, hk),
+            "projected_warm_bytes drifted from the real block layout"
+        );
         block
     }
 
@@ -136,6 +141,16 @@ impl WarmBlock {
             + self.positions.len() * 4
             + self.head_len.len() * 8
     }
+}
+
+/// Warm bytes a hot cache with this shape dehydrates to, computable without
+/// quantizing: per entry, 2·d_head int8 codes + two f32 scales + one f32
+/// score + one i32 position, plus 8 B of head-length metadata per kv head.
+/// The tier *client* charges this synchronously at the spill decision while
+/// the actual quantization runs on the tier thread; `WarmBlock::from_hot`
+/// debug-asserts the two agree.
+pub fn projected_warm_bytes(total_entries: usize, d_head: usize, n_kv_heads: usize) -> usize {
+    total_entries * (2 * d_head + 16) + n_kv_heads * 8
 }
 
 impl KvTierStore for WarmBlock {
@@ -310,6 +325,20 @@ mod tests {
         );
         assert!(block.warm_bytes() < hot.allocated_bytes());
         assert_eq!(block.total_entries(), hot.total_entries());
+    }
+
+    #[test]
+    fn projected_warm_bytes_matches_real_blocks() {
+        let mut rng = Rng::new(3);
+        for _ in 0..8 {
+            let hot = random_hot(&mut rng);
+            let block = WarmBlock::from_hot(&hot);
+            assert_eq!(
+                block.warm_bytes(),
+                projected_warm_bytes(hot.total_entries(), hot.d_head(), hot.n_kv_heads()),
+                "client-side projection must match the quantized block"
+            );
+        }
     }
 
     #[test]

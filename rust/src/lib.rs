@@ -12,7 +12,8 @@
 //! * [`kvcache`] — tiered KV store: hot (padded f32) / warm (Q8 spill
 //!   blocks) with per-session, per-layer residency
 //! * [`compress`] — LAVa + all baseline eviction policies
-//! * [`coordinator`] — engine, batcher, scheduler, sessions, server
+//! * [`coordinator`] — engine front + worker pool, batcher, scheduler,
+//!   sessions, server
 //! * [`workloads`] — synthetic benchmark suite + scorers
 //! * [`bench`] — measurement harness + table regeneration drivers
 //! * [`util`] — offline substrates (JSON, RNG, stats, CLI, prop-testing)

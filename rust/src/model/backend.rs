@@ -61,7 +61,12 @@ pub struct DecodeBatchOut {
     pub dispatches: usize,
 }
 
-pub trait ModelBackend {
+/// `Send + Sync` is part of the contract: every dispatch entry point takes
+/// `&self`, and the engine worker pool shares one backend across N scoped
+/// worker threads (per-bucket decode groups and prefill batch members run
+/// concurrently). The PJRT runtime serializes its executable cache behind
+/// mutexes; the mock backend is plain data.
+pub trait ModelBackend: Send + Sync {
     fn config(&self) -> &ModelConfig;
     fn prefill_buckets(&self) -> &[usize];
     fn decode_buckets(&self) -> &[usize];

@@ -1,23 +1,38 @@
-//! Scoped-thread fan-out for the scoring / recompression hot paths.
+//! Scoped-thread fan-out for the scoring / recompression / decode hot paths.
 //!
 //! rayon is not in the offline vendor set, so this is the minimal shape the
-//! engine needs: run a closure over a set of items on `std::thread::scope`
-//! workers, with round-robin sharding (each item is touched by exactly one
-//! worker, so `&mut` items are fine). Callers gate on a work-size threshold
-//! and fall back to a serial loop below it — thread spawn is ~tens of
-//! microseconds, which dwarfs small layers.
+//! engine and the worker pool need: run a closure over a set of items on
+//! `std::thread::scope` workers. Items are sharded in *contiguous chunks*
+//! (worker w takes one consecutive run of items), which keeps neighboring
+//! items — adjacent layers of one cache, adjacent sessions of one round —
+//! on the same core's cache instead of interleaving them round-robin across
+//! workers. Each item is touched by exactly one worker, so `&mut` items are
+//! fine. Callers gate on a work-size threshold and fall back to a serial
+//! loop below it — thread spawn is ~tens of microseconds, which dwarfs
+//! small layers; `scoped_map_timed` also short-circuits to a serial loop
+//! for one worker or one item.
 
 use std::num::NonZeroUsize;
+use std::time::Instant;
 
 /// Worker cap: one thread per available core.
 pub fn max_threads() -> usize {
     std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
 }
 
+/// Split `len` items into at most `workers` contiguous chunk lengths, the
+/// remainder spread over the leading chunks (chunk sizes differ by <= 1).
+fn chunk_lens(len: usize, workers: usize) -> Vec<usize> {
+    let workers = workers.min(len).max(1);
+    let base = len / workers;
+    let rem = len % workers;
+    (0..workers).map(|w| base + usize::from(w < rem)).collect()
+}
+
 /// Apply `f` to every item, fanning out across up to `max_threads()` scoped
-/// workers. Items are sharded round-robin; ordering of side effects across
-/// items is unspecified, so `f` must be independent per item (it is handed
-/// each item exactly once). Serial when one worker or one item.
+/// workers in contiguous chunks. Ordering of side effects across items is
+/// unspecified, so `f` must be independent per item (it is handed each item
+/// exactly once). Serial when one worker or one item.
 pub fn scoped_for_each<T, I, F>(items: I, f: F)
 where
     I: Iterator<Item = T>,
@@ -32,12 +47,11 @@ where
         }
         return;
     }
-    let mut shards: Vec<Vec<T>> = (0..workers).map(|_| Vec::new()).collect();
-    for (i, item) in items.into_iter().enumerate() {
-        shards[i % workers].push(item);
-    }
+    let lens = chunk_lens(items.len(), workers);
+    let mut items = items.into_iter();
     std::thread::scope(|s| {
-        for shard in shards {
+        for len in lens {
+            let shard: Vec<T> = items.by_ref().take(len).collect();
             let f = &f;
             s.spawn(move || {
                 for item in shard {
@@ -46,6 +60,63 @@ where
             });
         }
     });
+}
+
+/// Ordered map over scoped workers: `f` runs once per item, results come
+/// back **in item order** (chunking is contiguous, so concatenating the
+/// chunks' outputs restores the input order). Uses up to `max_threads()`
+/// workers; see [`scoped_map_timed`] for an explicit worker cap.
+pub fn scoped_map<T, R, F>(items: Vec<T>, f: F) -> Vec<R>
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    scoped_map_timed(items, f, max_threads()).0
+}
+
+/// [`scoped_map`] with an explicit worker cap, reporting each worker's busy
+/// seconds (index = worker slot, one entry per worker actually spawned) —
+/// the pool's utilization gauge. `max_workers` is honored even beyond
+/// `max_threads()` so a configured pool size behaves identically on any
+/// host. Serial (no spawns, one busy entry) for one worker or one item.
+pub fn scoped_map_timed<T, R, F>(items: Vec<T>, f: F, max_workers: usize) -> (Vec<R>, Vec<f64>)
+where
+    T: Send,
+    R: Send,
+    F: Fn(T) -> R + Sync,
+{
+    let workers = max_workers.min(items.len()).max(1);
+    if workers <= 1 {
+        let t0 = Instant::now();
+        let out: Vec<R> = items.into_iter().map(f).collect();
+        return (out, vec![t0.elapsed().as_secs_f64()]);
+    }
+    let lens = chunk_lens(items.len(), workers);
+    let mut items = items.into_iter();
+    let shards: Vec<Vec<T>> =
+        lens.into_iter().map(|len| items.by_ref().take(len).collect()).collect();
+    std::thread::scope(|s| {
+        let handles: Vec<_> = shards
+            .into_iter()
+            .map(|shard| {
+                let f = &f;
+                s.spawn(move || {
+                    let t0 = Instant::now();
+                    let out: Vec<R> = shard.into_iter().map(f).collect();
+                    (out, t0.elapsed().as_secs_f64())
+                })
+            })
+            .collect();
+        let mut results = Vec::new();
+        let mut busy = Vec::with_capacity(handles.len());
+        for h in handles {
+            let (out, secs) = h.join().expect("scoped_map worker panicked");
+            results.extend(out);
+            busy.push(secs);
+        }
+        (results, busy)
+    })
 }
 
 #[cfg(test)]
@@ -80,5 +151,54 @@ mod tests {
         let mut one = vec![0];
         scoped_for_each(one.iter_mut(), |x| *x = 7);
         assert_eq!(one[0], 7);
+    }
+
+    #[test]
+    fn chunking_is_contiguous_and_covers() {
+        assert_eq!(chunk_lens(10, 3), vec![4, 3, 3]);
+        assert_eq!(chunk_lens(3, 8), vec![1, 1, 1]);
+        assert_eq!(chunk_lens(8, 4), vec![2, 2, 2, 2]);
+        assert_eq!(chunk_lens(1, 1), vec![1]);
+        for (len, w) in [(17usize, 4usize), (5, 2), (100, 7)] {
+            assert_eq!(chunk_lens(len, w).iter().sum::<usize>(), len);
+        }
+    }
+
+    #[test]
+    fn map_preserves_order() {
+        for workers in [1usize, 2, 3, 8] {
+            let items: Vec<usize> = (0..37).collect();
+            let (out, busy) = scoped_map_timed(items, |i| i * 3, workers);
+            assert_eq!(out, (0..37).map(|i| i * 3).collect::<Vec<_>>(), "workers={workers}");
+            assert!(!busy.is_empty() && busy.len() <= workers.max(1));
+        }
+        let out = scoped_map((0..10usize).collect(), |i| i + 1);
+        assert_eq!(out, (1..=10).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn map_empty_and_single() {
+        let (out, busy) = scoped_map_timed(Vec::<usize>::new(), |i| i, 4);
+        assert!(out.is_empty());
+        assert_eq!(busy.len(), 1, "serial fallback still reports one slot");
+        let (out, _) = scoped_map_timed(vec![9usize], |i| i * 2, 4);
+        assert_eq!(out, vec![18]);
+    }
+
+    #[test]
+    fn map_moves_mutable_items_through() {
+        // the pool's usage shape: units are owned, mutated, and handed back
+        let units: Vec<Vec<usize>> = (0..6).map(|i| vec![i]).collect();
+        let (out, _) = scoped_map_timed(
+            units,
+            |mut u| {
+                u.push(u[0] * 10);
+                u
+            },
+            3,
+        );
+        for (i, u) in out.iter().enumerate() {
+            assert_eq!(u, &vec![i, i * 10]);
+        }
     }
 }

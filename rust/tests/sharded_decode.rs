@@ -1,0 +1,159 @@
+//! Worker-count equivalence suite (ISSUE 4).
+//!
+//! The scheduler plans every decode round (bucket groups, the sequential
+//! tiered arm, spill victims) on the serving thread before fanning units
+//! out over the worker pool, so the pool width must be *unobservable* in
+//! the results: for workers ∈ {1, 2, 4}, a mixed same+cross-bucket
+//! workload must produce bit-identical tokens, statuses, per-request KV
+//! sizes and budgets, and identical eviction/tier decision counters
+//! (decode steps, per-bucket dispatch counts, spills, prefetches,
+//! deferrals) — with tiering off and with tiering on under a limit tight
+//! enough that layers spill mid-run.
+
+use std::collections::BTreeMap;
+
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions, FinishStatus, GenerateRequest};
+use lava::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lava::model::backend::MockBackend;
+
+fn sched(workers: usize, limit: Option<usize>, policy: &str) -> Scheduler<MockBackend> {
+    let mut mock = MockBackend::new(MockBackend::default_config());
+    mock.hot_positions = vec![30, 31, 32];
+    mock.seed = 5;
+    let engine = Engine::new(mock, EngineOptions::new(Policy::by_name(policy).unwrap(), 24));
+    Scheduler::new(
+        engine,
+        SchedulerOptions {
+            kv_mem_limit: limit,
+            max_active: 8,
+            prefill_every: 2,
+            max_prefill_batch: 4,
+            workers,
+            ..Default::default()
+        },
+    )
+}
+
+/// Mixed workload: four prompts in one shape/capacity bucket (distinct
+/// contents, so caches and scores genuinely differ within a group) plus
+/// four longer prompts across other buckets.
+fn requests() -> Vec<GenerateRequest> {
+    let lens = [100usize, 104, 96, 100, 300, 280, 200, 200];
+    lens.iter()
+        .enumerate()
+        .map(|(i, &n)| GenerateRequest {
+            prompt: (0..n).map(|t| ((t * (i + 2) + i) % 251) as i32).collect(),
+            max_new_tokens: 6,
+        })
+        .collect()
+}
+
+/// One request's width-independent outcome.
+#[derive(Debug, PartialEq)]
+struct ResultRow {
+    id: u64,
+    status: FinishStatus,
+    tokens: Vec<i32>,
+    kv_after: usize,
+    budgets: Vec<usize>,
+}
+
+/// Everything about a run that must not depend on the pool width.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    results: Vec<ResultRow>,
+    decode_steps: u64,
+    decode_batches: u64,
+    decode_batch_sessions: u64,
+    dispatches: BTreeMap<usize, u64>,
+    spills: u64,
+    prefetches: u64,
+    deferred: u64,
+    finished: u64,
+}
+
+fn run(workers: usize, limit: Option<usize>, policy: &str) -> Fingerprint {
+    let mut s = sched(workers, limit, policy);
+    for req in requests() {
+        s.submit(req).unwrap();
+    }
+    let mut done = s.run_to_completion().unwrap();
+    done.sort_by_key(|(id, _)| *id);
+    let results = done
+        .into_iter()
+        .map(|(id, r)| ResultRow {
+            id,
+            status: r.status,
+            tokens: r.tokens,
+            kv_after: r.kv_bytes_after_prefill,
+            budgets: r.budgets,
+        })
+        .collect();
+    let m = &s.engine.metrics;
+    Fingerprint {
+        results,
+        decode_steps: m.decode_steps,
+        decode_batches: m.decode_batches,
+        decode_batch_sessions: m.decode_batch_sessions,
+        dispatches: m.decode_dispatches.clone(),
+        spills: m.spills,
+        prefetches: m.prefetches,
+        deferred: m.requests_deferred,
+        finished: m.requests_finished,
+    }
+}
+
+/// A kv_mem_limit tight enough that the workload must spill mid-run, big
+/// enough that the largest request still fits, derived from the
+/// scheduler's own projection accounting (stays calibrated if the
+/// formulas change).
+fn tight_limit(policy: &str) -> usize {
+    let probe = sched(1, None, policy);
+    let max_len = requests().iter().map(|r| r.prompt.len()).max().unwrap();
+    probe.projected_bytes(max_len) + probe.retained_bytes(max_len)
+}
+
+#[test]
+fn sharded_decode_is_bit_identical_without_tiering_pressure() {
+    for policy in ["lava", "h2o", "snapkv"] {
+        let base = run(1, None, policy);
+        assert_eq!(base.finished, 8, "{policy}: all requests complete");
+        assert_eq!(base.spills, 0, "{policy}: no limit, no spills");
+        for workers in [2usize, 4] {
+            let sharded = run(workers, None, policy);
+            assert_eq!(base, sharded, "{policy}: workers={workers} changed the results");
+        }
+    }
+}
+
+#[test]
+fn sharded_decode_is_bit_identical_with_spills_mid_run() {
+    let limit = tight_limit("lava");
+    let base = run(1, Some(limit), "lava");
+    assert_eq!(base.finished, 8, "all requests complete under pressure");
+    assert!(base.spills > 0, "limit {limit} must force spills mid-run");
+    assert!(base.prefetches > 0, "spilled layers must come back before decode");
+    for workers in [2usize, 4] {
+        let sharded = run(workers, Some(limit), "lava");
+        assert_eq!(
+            base, sharded,
+            "workers={workers}: tiering decisions or tokens diverged"
+        );
+    }
+}
+
+#[test]
+fn wide_pools_actually_fan_out() {
+    // sanity check that width > 1 really exercises the pool (otherwise the
+    // equivalence above would be vacuous)
+    let mut s = sched(4, None, "lava");
+    for req in requests() {
+        s.submit(req).unwrap();
+    }
+    s.run_to_completion().unwrap();
+    let m = &s.engine.metrics;
+    assert_eq!(m.workers, 4);
+    assert!(m.worker_rounds > 0, "decode rounds must go through the pool");
+    assert!(m.worker_busy_secs.iter().sum::<f64>() > 0.0);
+}
