@@ -24,20 +24,30 @@
 //!
 //! Part 5 — engine sharding: the same memory-pressured mixed workload (so
 //! spill/prefetch overlap is exercised) swept over worker-pool widths
-//! 1/2/4, reporting wall time, decode tok/s, and worker utilization. In
-//! `--smoke` mode the sweep also writes machine-readable
-//! `BENCH_serving.json` (CI uploads it as an artifact, so a perf
-//! trajectory exists across commits).
+//! 1/2/4, reporting wall time, decode tok/s, and worker utilization.
+//!
+//! Part 6 — serving loop: the mixed workload submitted over real TCP
+//! connections into the continuous serving loop (acceptor → command
+//! channel → serving thread), 1 vs 8 concurrent connections, reporting
+//! TTFT mean/p99, steady-state decode tok/s, and end-to-end throughput.
+//!
+//! In `--smoke` mode the worker sweep and the serving-loop sweep are
+//! written to machine-readable `BENCH_serving.json` (CI uploads it as an
+//! artifact, so a perf trajectory exists across commits).
 //!
 //!   cargo bench --bench serving [-- --pjrt] [-- --ctx 512] [-- --requests 24]
 //!
 //! `--smoke` runs every mock-backend section with tiny iteration counts so
 //! CI can compile-and-exercise the whole bench path in seconds.
 
+use std::io::{BufRead, BufReader, Write};
+use std::net::{TcpListener, TcpStream};
+
 use lava::bench::harness::bench_for;
 use lava::compress::Policy;
 use lava::coordinator::engine::{Engine, EngineOptions, GenerateRequest};
 use lava::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lava::coordinator::server::Server;
 use lava::model::backend::{MockBackend, ModelBackend, PjrtBackend};
 use lava::util::cli::Args;
 use lava::util::json::{self, Json};
@@ -267,9 +277,9 @@ fn run_batched_decode_bench(ctx: usize, max_new: usize, reps: usize) {
 /// Part 5: worker-count sweep. The mixed workload runs under the same
 /// tiering-pressure limit as Part 3, so the sweep exercises exactly the
 /// overlap the sharded engine is for: bucket groups decoding on the pool
-/// while the tier thread rehydrates next-round sessions. Emits
-/// `BENCH_serving.json` in smoke mode.
-fn run_worker_sweep(ctx: usize, n_requests: usize, reps: usize, smoke: bool) {
+/// while the tier thread rehydrates next-round sessions. Returns the
+/// per-width report rows plus the limit used, for `BENCH_serving.json`.
+fn run_worker_sweep(ctx: usize, n_requests: usize, reps: usize) -> (Vec<Json>, usize) {
     let limit = {
         let probe = tiering_sched(false, None);
         let max_len = mixed_workload(ctx, n_requests)
@@ -346,20 +356,110 @@ fn run_worker_sweep(ctx: usize, n_requests: usize, reps: usize, smoke: bool) {
             ("prefetches", Json::num(prefetches as f64)),
         ]));
     }
-    if smoke {
-        let doc = Json::obj(vec![
-            ("bench", Json::str("serving")),
-            ("mode", Json::str("smoke")),
-            ("ctx", Json::num(ctx as f64)),
-            ("requests", Json::num(n_requests as f64)),
-            ("kv_mem_limit", Json::num(limit as f64)),
-            ("worker_sweep", Json::Arr(rows)),
-        ]);
-        let path = "BENCH_serving.json";
-        std::fs::write(path, json::to_string(&doc) + "\n")
-            .unwrap_or_else(|e| panic!("write {path}: {e}"));
-        println!("wrote {path}");
+    (rows, limit)
+}
+
+/// Part 6: the serving loop under concurrent TCP connections. Each
+/// connection submits its share of the mixed workload request-by-request
+/// (send, await terminal reply) against one shared scheduler, so the sweep
+/// measures what concurrency buys end to end: admission batching across
+/// connections, decode grouping, and per-connection TTFT. Returns the
+/// per-connection-count report rows for `BENCH_serving.json`.
+fn run_serving_loop_bench(ctx: usize, n_requests: usize, max_new: usize) -> Vec<Json> {
+    let mut rows = Vec::new();
+    for &conns in &[1usize, 8] {
+        let mock = MockBackend::new(MockBackend::default_config());
+        let engine =
+            Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+        let srv = Server::with_options(
+            engine,
+            SchedulerOptions {
+                max_active: 8,
+                prefill_every: 2,
+                max_prefill_batch: 4,
+                ..Default::default()
+            },
+        );
+        let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+        let addr = listener.local_addr().unwrap();
+        let acceptor = std::thread::spawn(move || {
+            let _ = srv.serve_on(listener);
+        });
+        let per_conn = n_requests.div_ceil(conns);
+        let t0 = std::time::Instant::now();
+        let mut clients = Vec::new();
+        for c in 0..conns {
+            clients.push(std::thread::spawn(move || {
+                let mut sock = TcpStream::connect(addr).unwrap();
+                let mut reader = BufReader::new(sock.try_clone().unwrap());
+                let mut rng = Rng::new(100 + c as u64);
+                let mut tokens = 0usize;
+                for i in 0..per_conn {
+                    let scale = match i % 3 {
+                        0 => ctx / 4,
+                        1 => ctx / 2,
+                        _ => ctx,
+                    };
+                    let inst = workloads::needle_qa(&mut rng, scale.max(64), 4);
+                    let prompt: Vec<String> =
+                        inst.prompt.iter().map(|t| t.to_string()).collect();
+                    writeln!(
+                        sock,
+                        "{{\"prompt\": [{}], \"max_new_tokens\": {max_new}}}",
+                        prompt.join(",")
+                    )
+                    .unwrap();
+                    let mut line = String::new();
+                    reader.read_line(&mut line).unwrap();
+                    let v = Json::parse(line.trim()).unwrap();
+                    assert_eq!(v.get("status").unwrap().as_str(), Some("completed"));
+                    tokens += v.get("tokens").unwrap().as_arr().unwrap().len();
+                }
+                tokens
+            }));
+        }
+        let total_tokens: usize = clients.into_iter().map(|h| h.join().unwrap()).sum();
+        let wall = t0.elapsed().as_secs_f64();
+
+        // read the server-side latency metrics, then drain the loop
+        let mut ctrl = TcpStream::connect(addr).unwrap();
+        let mut creader = BufReader::new(ctrl.try_clone().unwrap());
+        writeln!(ctrl, "{{\"cmd\": \"metrics\"}}").unwrap();
+        let mut mline = String::new();
+        creader.read_line(&mut mline).unwrap();
+        let reply = Json::parse(mline.trim()).unwrap();
+        let m = reply.get("metrics").expect("metrics reply").clone();
+        writeln!(ctrl, "{{\"cmd\": \"shutdown\"}}").unwrap();
+        let mut sline = String::new();
+        creader.read_line(&mut sline).unwrap();
+        acceptor.join().unwrap();
+
+        let ttft_mean = m.get("ttft_ms_mean").unwrap().as_f64().unwrap();
+        let ttft_p99 = m.get("ttft_ms_p99").unwrap().as_f64().unwrap();
+        let decode_tok_s = m.get("decode_tok_s").unwrap().as_f64().unwrap();
+        let throughput = total_tokens as f64 / wall.max(1e-9);
+        println!(
+            "{:<40} {:>10.2} ms wall ({} reqs) | ttft_ms(mean)={:.3} ttft_ms(p99)={:.3} \
+             decode_tok_s={:.1} throughput_tok_s={:.1}",
+            format!("serving/conns-{conns}/ctx{ctx}"),
+            wall * 1e3,
+            conns * per_conn,
+            ttft_mean,
+            ttft_p99,
+            decode_tok_s,
+            throughput,
+        );
+        rows.push(Json::obj(vec![
+            ("connections", Json::num(conns as f64)),
+            ("requests", Json::num((conns * per_conn) as f64)),
+            ("wall_ms", Json::num(wall * 1e3)),
+            ("ttft_ms_mean", Json::num(ttft_mean)),
+            ("ttft_ms_p99", Json::num(ttft_p99)),
+            ("decode_tok_s", Json::num(decode_tok_s)),
+            ("throughput_tok_s", Json::num(throughput)),
+        ]));
     }
+    rows
 }
 
 fn main() {
@@ -392,7 +492,25 @@ fn main() {
         println!("-- batched decode: same-bucket grouping off vs on --");
         run_batched_decode_bench(ctx, if smoke { 8 } else { 64 }, reps);
         println!("-- engine sharding: worker-count sweep, prefetch overlap on --");
-        run_worker_sweep(ctx, n_requests, reps, smoke);
+        let (worker_rows, limit) = run_worker_sweep(ctx, n_requests, reps);
+        println!("-- serving loop: 1 vs 8 concurrent TCP connections --");
+        let serving_rows =
+            run_serving_loop_bench(ctx, n_requests, if smoke { 8 } else { 32 });
+        if smoke {
+            let doc = Json::obj(vec![
+                ("bench", Json::str("serving")),
+                ("mode", Json::str("smoke")),
+                ("ctx", Json::num(ctx as f64)),
+                ("requests", Json::num(n_requests as f64)),
+                ("kv_mem_limit", Json::num(limit as f64)),
+                ("worker_sweep", Json::Arr(worker_rows)),
+                ("serving_sweep", Json::Arr(serving_rows)),
+            ]);
+            let path = "BENCH_serving.json";
+            std::fs::write(path, json::to_string(&doc) + "\n")
+                .unwrap_or_else(|e| panic!("write {path}: {e}"));
+            println!("wrote {path}");
+        }
         println!("(mock backend; pass -- --pjrt for the real model)");
     }
     println!("serving OK");

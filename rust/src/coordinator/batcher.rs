@@ -115,6 +115,12 @@ impl Batcher {
         self.queue.insert(idx, q);
     }
 
+    /// Take every queued request, in FIFO order (shutdown: the serving loop
+    /// parks each one with a rejection result instead of admitting it).
+    pub fn drain(&mut self) -> Vec<QueuedRequest> {
+        std::mem::take(&mut self.queue).into_iter().collect()
+    }
+
     /// Remove a queued request by id (cancellation before admission).
     pub fn remove(&mut self, id: u64) -> Option<QueuedRequest> {
         let idx = self.queue.iter().position(|q| q.id == id)?;

@@ -7,7 +7,7 @@ use std::time::Instant;
 
 use crate::util::stats;
 
-#[derive(Debug, Default)]
+#[derive(Debug, Default, Clone)]
 pub struct Metrics {
     pub requests_finished: u64,
     /// Requests refused by admission control (can never fit / bad prompt).
@@ -17,6 +17,9 @@ pub struct Metrics {
     /// Requests that died to an engine error mid-flight.
     pub requests_failed: u64,
     pub tokens_generated: u64,
+    /// Tokens pushed to streaming subscribers as they were produced (one
+    /// per `{"id","token","index"}` line the serving loop emitted).
+    pub streamed_tokens: u64,
     pub prefill_secs: Vec<f64>,
     /// Per-token decode latencies (seconds).
     pub decode_secs: Vec<f64>,
@@ -87,6 +90,19 @@ pub struct Metrics {
     pub peak_tier_staged_bytes: usize,
     pub tier_busy_secs: f64,
     started: Option<Instant>,
+}
+
+/// Point-in-time copy of the serving metrics plus in-flight gauges, cheap
+/// to clone across the serving loop's command channel — a `metrics` request
+/// never borrows the scheduler for longer than the copy takes and never
+/// stops a decode round.
+#[derive(Debug, Default, Clone)]
+pub struct MetricsSnapshot {
+    pub metrics: Metrics,
+    /// Sessions currently decoding (admitted, not yet retired).
+    pub active_sessions: usize,
+    /// Requests waiting in the admission queue.
+    pub queued_requests: usize,
 }
 
 impl Metrics {
@@ -288,7 +304,7 @@ impl Metrics {
             self.worker_busy_secs.iter().map(|b| format!("{:.3}", b * 1e3)).collect();
         format!(
             "requests={} rejected={} canceled={} failed={} deferred={} tokens={} \
-             ttft_ms(mean)={:.2} queue_wait_ms(mean)={:.2} prefill_ms(mean)={:.2} \
+             streamed={} ttft_ms(mean)={:.2} queue_wait_ms(mean)={:.2} prefill_ms(mean)={:.2} \
              decode_ms(mean)={:.3} decode_ms(p99)={:.3} decode_tok_s={:.1} peak_kv_mb={:.2} \
              hot_kv_mb(peak)={:.2} warm_kv_mb(peak)={:.2} spills={} prefetches={} \
              spilled_mb={:.2} prefetched_mb={:.2} \
@@ -304,6 +320,7 @@ impl Metrics {
             self.requests_failed,
             self.requests_deferred,
             self.tokens_generated,
+            self.streamed_tokens,
             self.mean_ttft_ms(),
             self.mean_queue_wait_ms(),
             self.mean_prefill_ms(),

@@ -12,10 +12,41 @@
 //!   tiering, capacity-bucket decode grouping, and the round planner that
 //!   feeds the pool.
 //! * [`batcher`] — request queue + grouping by shape bucket.
-//! * [`server`] — JSON-lines TCP front-end over the engine.
+//! * [`serve_loop`] — the continuous serving loop: a dedicated thread owns
+//!   the scheduler, drains a submit-queue of commands, and drives one
+//!   [`scheduler::Scheduler::tick`] at a time, pushing per-token and
+//!   terminal events to subscriber sinks.
+//! * [`server`] — JSON-lines TCP front-end over the serving loop.
 //! * [`metrics`] — latency/memory counters (the quantities Fig. 3 plots),
 //!   plus serving gauges: tier traffic, batch occupancy, per-bucket decode
-//!   dispatches, worker utilization, tier-thread queue depths.
+//!   dispatches, worker utilization, tier-thread queue depths, in-flight
+//!   session/queue gauges, and streamed-token counts.
+//!
+//! ## Serving architecture: acceptor → command channel → serving thread → pool
+//!
+//! ```text
+//!  TCP clients ──► acceptor (Server::serve)
+//!                    │ one reader + one writer thread per connection
+//!                    ▼
+//!  ServeHandle ──► command channel ──► serving thread (serve_loop)
+//!   submit/cancel/metrics/shutdown        │ owns the Scheduler
+//!                                         │ tick(): admit → prefill →
+//!                                         ▼         decode round
+//!                                   WorkerPool fan-out + tier thread
+//! ```
+//!
+//! Connection readers parse protocol lines and submit into the shared loop
+//! through a cloneable [`serve_loop::ServeHandle`]; each request's events
+//! (per-token lines for `"stream": true` subscribers, then the terminal
+//! result) flow back to that connection's writer thread, so responses from
+//! many interleaved requests never corrupt each other mid-line. The
+//! serving thread alternates command handling with single scheduler ticks:
+//! cancels land at the next tick boundary (releasing hot + warm bytes),
+//! `metrics` replies with a [`metrics::MetricsSnapshot`] copy instead of
+//! stopping the world, and `shutdown` drains in-flight sessions while
+//! rejecting queued and new work. `Scheduler::run_to_completion` remains a
+//! thin loop over `tick()` for embedders and benches that drive the
+//! scheduler directly.
 //!
 //! ## Scheduler → pool → worker data flow
 //!
@@ -65,6 +96,7 @@ pub mod engine;
 pub mod metrics;
 pub mod pool;
 pub mod scheduler;
+pub mod serve_loop;
 pub mod server;
 pub mod session;
 
@@ -72,5 +104,7 @@ pub use engine::{
     Engine, EngineOptions, EngineWorker, FinishStatus, GenerateRequest, GenerateResult,
     PrefillReport, StepReport,
 };
+pub use metrics::MetricsSnapshot;
 pub use pool::WorkerPool;
-pub use scheduler::{Scheduler, SchedulerOptions, SubmitError};
+pub use scheduler::{Scheduler, SchedulerOptions, SubmitError, TickReport};
+pub use serve_loop::{Event, ServeHandle, SubmitItem};

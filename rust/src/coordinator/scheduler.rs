@@ -72,7 +72,7 @@ use anyhow::Result;
 
 use super::batcher::{Batcher, QueuedRequest};
 use super::engine::{Engine, FinishStatus, GenerateRequest, GenerateResult, PrefillReport};
-use super::metrics::Metrics;
+use super::metrics::{Metrics, MetricsSnapshot};
 use super::pool::WorkerPool;
 use super::session::Session;
 use crate::kvcache::tier::{Residency, TierClient};
@@ -151,6 +151,8 @@ pub enum SubmitError {
     OverMemoryLimit { projected: usize, limit: usize },
     /// Backpressure: the queue is already missing its wait SLO.
     QueueSaturated { oldest_wait_secs: f64 },
+    /// The serving loop is draining for shutdown and takes no new work.
+    ShuttingDown,
 }
 
 impl fmt::Display for SubmitError {
@@ -167,6 +169,9 @@ impl fmt::Display for SubmitError {
                 f,
                 "queue saturated: oldest request has waited {oldest_wait_secs:.3}s"
             ),
+            SubmitError::ShuttingDown => {
+                write!(f, "server shutting down: submissions are no longer accepted")
+            }
         }
     }
 }
@@ -205,6 +210,24 @@ impl RoundUnit {
     }
 }
 
+/// What one [`Scheduler::tick`] produced, for incremental drivers (the
+/// serving loop): every token generated this round tagged with its request
+/// id, and every request that reached a terminal state. Batch drivers can
+/// ignore it — [`Scheduler::run_to_completion`] accumulates the finished
+/// results across ticks itself.
+#[derive(Debug, Default)]
+pub struct TickReport {
+    /// True if the tick admitted, prefilled, decoded, or parked anything.
+    pub worked: bool,
+    /// `(request id, token)` pairs in the order the tokens were produced
+    /// this tick (prefill first tokens, then the decode round's).
+    pub tokens: Vec<(u64, i32)>,
+    /// Requests that reached a terminal result this tick, in completion
+    /// order — including results parked since the previous tick (e.g. a
+    /// cancel of a queued request).
+    pub finished: Vec<(u64, GenerateResult)>,
+}
+
 pub struct Scheduler<B: ModelBackend> {
     pub engine: Engine<B>,
     pub queue: Batcher,
@@ -215,6 +238,8 @@ pub struct Scheduler<B: ModelBackend> {
     pub pool: WorkerPool,
     active: VecDeque<Session>,
     finished: Vec<(u64, GenerateResult)>,
+    /// `(id, token)` pairs produced since the last tick drained them.
+    token_events: Vec<(u64, i32)>,
     tick: usize,
     /// Bucket of the most recent prefill: its executable is compile-warm,
     /// so admission prefers queued requests sharing it.
@@ -244,6 +269,7 @@ impl<B: ModelBackend> Scheduler<B> {
             pool,
             active: VecDeque::new(),
             finished: Vec::new(),
+            token_events: Vec::new(),
             tick: 0,
             warm_bucket: None,
             warm_bypass_streak: 0,
@@ -315,6 +341,11 @@ impl<B: ModelBackend> Scheduler<B> {
 
     pub fn pending_count(&self) -> usize {
         self.queue.len()
+    }
+
+    /// Ids of the currently active (decoding) sessions, in round order.
+    pub fn active_ids(&self) -> Vec<u64> {
+        self.active.iter().map(|s| s.id).collect()
     }
 
     /// Current hot KV bytes: the incremental counter, debug-asserted
@@ -526,6 +557,7 @@ impl<B: ModelBackend> Scheduler<B> {
                 self.engine
                     .metrics
                     .observe_admission(wait_secs, wait_secs + sess.prefill_secs);
+                self.token_events.push((sess.id, report.token));
                 self.hot_bytes += sess.kv_bytes();
                 if sess.is_done() {
                     self.retire(sess, FinishStatus::Completed, None);
@@ -635,6 +667,9 @@ impl<B: ModelBackend> Scheduler<B> {
                         self.hot_bytes += report.kv_after.iter().sum::<usize>();
                         self.engine.absorb_step(&report);
                         stepped += sessions.len();
+                        for (sess, tok) in sessions.iter().zip(&report.tokens) {
+                            self.token_events.push((sess.id, *tok));
+                        }
                         for sess in sessions {
                             if sess.is_done() {
                                 self.retire(sess, FinishStatus::Completed, None);
@@ -669,7 +704,8 @@ impl<B: ModelBackend> Scheduler<B> {
             let res = self.engine.decode_step(&mut sess);
             self.hot_bytes += sess.kv_bytes();
             match res {
-                Ok(_) => {
+                Ok(tok) => {
+                    self.token_events.push((sess.id, tok));
                     stepped += 1;
                     if sess.is_done() {
                         self.retire(sess, FinishStatus::Completed, None);
@@ -835,8 +871,11 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     /// One scheduler tick: admit+prefill a batch when due, then advance every
-    /// active session by one decode step. Returns true if any work was done.
-    pub fn tick(&mut self) -> Result<bool> {
+    /// active session by one decode step. Returns what the round produced —
+    /// newly generated `(id, token)` pairs and newly finished results — so
+    /// an incremental driver (the serving loop) can stream tokens and
+    /// dispatch terminal responses between rounds.
+    pub fn tick(&mut self) -> Result<TickReport> {
         self.tick += 1;
         let want_prefill = self.active.is_empty()
             || (self.tick % self.opts.prefill_every == 0 && !self.queue.is_empty());
@@ -858,7 +897,40 @@ impl<B: ModelBackend> Scheduler<B> {
         );
         // a tick that only rejected requests still made progress
         worked |= self.finished.len() > finished_before;
-        Ok(worked)
+        Ok(TickReport {
+            worked,
+            tokens: std::mem::take(&mut self.token_events),
+            finished: std::mem::take(&mut self.finished),
+        })
+    }
+
+    /// True while the scheduler still owns unfinished work (queued or
+    /// active requests) — the serving loop's "keep ticking" condition.
+    pub fn has_work(&self) -> bool {
+        !self.queue.is_empty() || !self.active.is_empty()
+    }
+
+    /// Shutdown path: park every queued (not yet admitted) request with a
+    /// rejection result carrying `reason`. Active sessions are untouched —
+    /// the serving loop keeps ticking them to completion (draining).
+    /// Returns how many requests were rejected.
+    pub fn drain_queue_rejecting(&mut self, reason: &str) -> usize {
+        let drained = self.queue.drain();
+        let n = drained.len();
+        for q in drained {
+            self.park_queued(q, FinishStatus::Rejected, reason.to_string());
+        }
+        n
+    }
+
+    /// Cheap point-in-time metrics copy plus in-flight gauges; never blocks
+    /// on or mutates scheduler state.
+    pub fn metrics_snapshot(&self) -> MetricsSnapshot {
+        MetricsSnapshot {
+            metrics: self.engine.metrics.clone(),
+            active_sessions: self.active.len(),
+            queued_requests: self.queue.len(),
+        }
     }
 
     /// Park a queued request with a terminal non-completed result.
@@ -884,10 +956,13 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     fn retire(&mut self, sess: Session, status: FinishStatus, error: Option<String>) {
-        // the leaving session's bytes exit both tiers' accounting
+        // the leaving session's bytes exit both tiers' accounting; refresh
+        // both gauges now so a cancel's release is visible in the very next
+        // metrics snapshot, without waiting for another tick
         self.hot_bytes -= sess.kv_bytes();
         self.tier.drop_session(sess.id);
         self.engine.metrics.observe_warm(self.tier.warm_bytes());
+        self.engine.metrics.observe_hot(self.hot_bytes);
         match status {
             FinishStatus::Completed => self.engine.metrics.finish_request(
                 sess.prefill_secs,
@@ -916,10 +991,14 @@ impl<B: ModelBackend> Scheduler<B> {
     /// pairs in completion order. Terminates even when some requests can
     /// never be admitted — those come back with `FinishStatus::Rejected`.
     pub fn run_to_completion(&mut self) -> Result<Vec<(u64, GenerateResult)>> {
-        while !self.queue.is_empty() || !self.active.is_empty() {
-            self.tick()?;
+        // results parked since the last tick (e.g. cancel-while-queued)
+        // come first; each tick then drains its own completions
+        let mut done = std::mem::take(&mut self.finished);
+        self.token_events.clear();
+        while self.has_work() {
+            done.extend(self.tick()?.finished);
         }
-        Ok(std::mem::take(&mut self.finished))
+        Ok(done)
     }
 
     pub fn take_finished(&mut self) -> Vec<(u64, GenerateResult)> {
@@ -1291,6 +1370,57 @@ mod tests {
         ));
         let done = s.run_to_completion().unwrap();
         assert_eq!(done.len(), 1);
+    }
+
+    #[test]
+    fn tick_report_streams_the_exact_final_token_sequence() {
+        let mut s = sched(None);
+        let id = s.submit(req(100, 5)).unwrap();
+        let mut streamed = Vec::new();
+        let mut done = Vec::new();
+        while s.has_work() {
+            let rep = s.tick().unwrap();
+            assert!(rep.worked);
+            streamed.extend(rep.tokens.iter().filter(|(i, _)| *i == id).map(|(_, t)| *t));
+            done.extend(rep.finished);
+        }
+        assert_eq!(done.len(), 1);
+        let r = &done[0].1;
+        assert_eq!(r.status, FinishStatus::Completed);
+        assert_eq!(streamed, r.tokens, "per-tick stream must equal the final result");
+    }
+
+    #[test]
+    fn drain_queue_rejecting_parks_queued_but_drains_active() {
+        let mut s = sched(None);
+        let a = s.submit(req(100, 6)).unwrap();
+        s.tick().unwrap(); // admits + prefills `a`
+        let b = s.submit(req(100, 6)).unwrap();
+        assert_eq!(s.drain_queue_rejecting("server shutting down"), 1);
+        assert_eq!(s.pending_count(), 0);
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        let ra = &done.iter().find(|(id, _)| *id == a).unwrap().1;
+        let rb = &done.iter().find(|(id, _)| *id == b).unwrap().1;
+        assert_eq!(ra.status, FinishStatus::Completed, "in-flight work must drain");
+        assert_eq!(ra.tokens.len(), 6);
+        assert_eq!(rb.status, FinishStatus::Rejected);
+        assert!(rb.error.as_deref().unwrap().contains("shutting down"));
+    }
+
+    #[test]
+    fn metrics_snapshot_is_cheap_and_carries_inflight_gauges() {
+        let mut s = sched(None);
+        s.submit(req(100, 8)).unwrap();
+        s.submit(req(400, 8)).unwrap();
+        s.tick().unwrap(); // admits the 128-bucket head; the 512 stays queued
+        let snap = s.metrics_snapshot();
+        assert_eq!(snap.active_sessions, 1);
+        assert_eq!(snap.queued_requests, 1);
+        s.run_to_completion().unwrap();
+        // the snapshot is an independent copy, not a live view
+        assert_eq!(snap.metrics.requests_finished, 0);
+        assert_eq!(s.engine.metrics.requests_finished, 2);
     }
 
     #[test]

@@ -1,0 +1,412 @@
+//! The continuous serving loop: one dedicated thread owns the scheduler
+//! and drives [`Scheduler::tick`] while draining a submit-queue of commands
+//! (submit / cancel / metrics / shutdown) from any number of front-end
+//! threads.
+//!
+//! Front ends talk to the loop through a cloneable [`ServeHandle`]; every
+//! command carries its own reply channel, so callers block only on their
+//! own request, never on each other or on a decode round. Each submitted
+//! request registers a subscriber sink that receives [`Event`]s:
+//!
+//! * `Event::Token` — one per generated token, in production order, for
+//!   subscribers that opted into streaming (`stream: true`); `index` is the
+//!   token's 0-based position in the request's output, so a client can
+//!   detect gaps or reassemble out-of-order transports.
+//! * `Event::Finished` — the terminal [`GenerateResult`]; always the last
+//!   event a subscriber sees, streaming or not.
+//!
+//! Because the loop interleaves command handling with single ticks, a
+//! `cancel` lands at the next tick boundary (mid-generation, releasing hot
+//! and warm bytes through the scheduler's retire path), and `metrics`
+//! returns a [`MetricsSnapshot`] copy without stopping the world. A
+//! `shutdown` flips the loop into *draining*: queued-but-unadmitted
+//! requests are parked with rejection results, in-flight sessions keep
+//! ticking to completion, new submissions are refused with
+//! [`SubmitError::ShuttingDown`], and the shutdown reply is sent only after
+//! the last session retires — so a front end can report "drained" truthfully.
+//!
+//! When the loop is idle (no queued or active work, not draining) it parks
+//! in a blocking `recv`, so an idle server burns no CPU. Dropping every
+//! `ServeHandle` ends the loop after remaining work drains.
+
+use std::collections::HashMap;
+use std::sync::mpsc::{channel, Receiver, Sender, TryRecvError};
+
+use super::engine::{GenerateRequest, GenerateResult};
+use super::metrics::MetricsSnapshot;
+use super::scheduler::{Scheduler, SubmitError, TickReport};
+use crate::model::backend::ModelBackend;
+
+/// One serving-loop event delivered to a request's subscriber sink.
+#[derive(Debug)]
+pub enum Event {
+    /// A newly produced token (sent to streaming subscribers only).
+    Token { id: u64, token: i32, index: usize },
+    /// The terminal result; always the subscriber's last event.
+    Finished { id: u64, result: GenerateResult },
+}
+
+/// Where a request's events go. Sinks run on the serving thread, so they
+/// must not block — send into a channel or another non-blocking queue.
+pub type EventSink = Box<dyn FnMut(Event) + Send>;
+
+/// One request of an atomic submission group: a batch line's requests are
+/// handed to the scheduler together, before the next tick, so same-bucket
+/// members can be admitted (and prefill/decode) as one group — exactly the
+/// grouping a batch driven through `run_to_completion` would get.
+pub struct SubmitItem {
+    pub req: GenerateRequest,
+    pub stream: bool,
+    pub sink: EventSink,
+}
+
+enum Command {
+    Submit { items: Vec<SubmitItem>, reply: Sender<Vec<Result<u64, SubmitError>>> },
+    Cancel { id: u64, reply: Sender<bool> },
+    Metrics { reply: Sender<MetricsSnapshot> },
+    Shutdown { reply: Sender<()> },
+}
+
+/// Cloneable front-end handle to the serving thread. Every method is safe
+/// to call from any thread; each blocks only on its own reply.
+#[derive(Clone)]
+pub struct ServeHandle {
+    tx: Sender<Command>,
+}
+
+impl ServeHandle {
+    /// Submit one atomic group of requests (one per batch-line entry); the
+    /// returned vector maps 1:1 to `items`. Each Ok holds the id the
+    /// request's terminal result will carry.
+    pub fn submit_many(&self, items: Vec<SubmitItem>) -> Vec<Result<u64, SubmitError>> {
+        let n = items.len();
+        let (reply_tx, reply_rx) = channel();
+        if self.tx.send(Command::Submit { items, reply: reply_tx }).is_err() {
+            return (0..n).map(|_| Err(SubmitError::ShuttingDown)).collect();
+        }
+        reply_rx
+            .recv()
+            .unwrap_or_else(|_| (0..n).map(|_| Err(SubmitError::ShuttingDown)).collect())
+    }
+
+    /// Submit a request with a custom event sink. Returns the request id
+    /// the terminal result will carry, or why the loop refused it.
+    pub fn submit(
+        &self,
+        req: GenerateRequest,
+        stream: bool,
+        sink: EventSink,
+    ) -> Result<u64, SubmitError> {
+        self.submit_many(vec![SubmitItem { req, stream, sink }])
+            .pop()
+            .unwrap_or(Err(SubmitError::ShuttingDown))
+    }
+
+    /// Submit with a channel sink: events arrive on the returned receiver
+    /// (ending with `Event::Finished`). The common embedder entry point.
+    pub fn submit_channel(
+        &self,
+        req: GenerateRequest,
+        stream: bool,
+    ) -> Result<(u64, Receiver<Event>), SubmitError> {
+        let (ev_tx, ev_rx) = channel();
+        let id = self.submit(
+            req,
+            stream,
+            Box::new(move |ev| {
+                // a hung-up subscriber must not poison the serving thread
+                let _ = ev_tx.send(ev);
+            }),
+        )?;
+        Ok((id, ev_rx))
+    }
+
+    /// Cancel a request by id, queued or mid-decode. True if the id was
+    /// live; the subscriber still gets its terminal (Canceled) event.
+    pub fn cancel(&self, id: u64) -> bool {
+        let (reply_tx, reply_rx) = channel();
+        if self.tx.send(Command::Cancel { id, reply: reply_tx }).is_err() {
+            return false;
+        }
+        reply_rx.recv().unwrap_or(false)
+    }
+
+    /// Snapshot the serving metrics without pausing decode. None only when
+    /// the serving thread is gone.
+    pub fn metrics(&self) -> Option<MetricsSnapshot> {
+        let (reply_tx, reply_rx) = channel();
+        self.tx.send(Command::Metrics { reply: reply_tx }).ok()?;
+        reply_rx.recv().ok()
+    }
+
+    /// Begin shutdown and block until in-flight sessions have drained:
+    /// queued requests are rejected, active sessions tick to completion,
+    /// new submissions are refused.
+    pub fn shutdown(&self) {
+        let (reply_tx, reply_rx) = channel();
+        if self.tx.send(Command::Shutdown { reply: reply_tx }).is_ok() {
+            let _ = reply_rx.recv();
+        }
+    }
+}
+
+/// Move `sched` onto a dedicated serving thread and return the handle front
+/// ends submit through. The thread exits after `shutdown` drains, or when
+/// every handle has been dropped and no work remains.
+pub fn spawn<B: ModelBackend + 'static>(sched: Scheduler<B>) -> ServeHandle {
+    let (tx, rx) = channel();
+    std::thread::Builder::new()
+        .name("lava-serve".to_string())
+        .spawn(move || serve_loop(sched, rx))
+        .expect("spawn serving thread");
+    ServeHandle { tx }
+}
+
+struct Subscriber {
+    sink: EventSink,
+    stream: bool,
+    /// Tokens seen for this request so far (== the next token's index).
+    emitted: usize,
+}
+
+fn serve_loop<B: ModelBackend>(mut sched: Scheduler<B>, rx: Receiver<Command>) {
+    let mut subs: HashMap<u64, Subscriber> = HashMap::new();
+    let mut draining = false;
+    let mut shutdown_replies: Vec<Sender<()>> = Vec::new();
+    'serve: loop {
+        // Idle and not draining: park until the next command (no busy wait).
+        if !sched.has_work() && !draining {
+            match rx.recv() {
+                Ok(cmd) => {
+                    handle_command(&mut sched, &mut subs, &mut draining, &mut shutdown_replies, cmd)
+                }
+                // every handle dropped, nothing left to do
+                Err(_) => break 'serve,
+            }
+        }
+        // Absorb whatever else is pending without blocking a decode round.
+        loop {
+            match rx.try_recv() {
+                Ok(cmd) => {
+                    handle_command(&mut sched, &mut subs, &mut draining, &mut shutdown_replies, cmd)
+                }
+                Err(TryRecvError::Empty) => break,
+                Err(TryRecvError::Disconnected) => {
+                    // keep ticking until in-flight work retires, then exit
+                    // through the idle recv above
+                    break;
+                }
+            }
+        }
+        if draining {
+            sched.drain_queue_rejecting("server shutting down: request rejected before admission");
+        }
+        if sched.has_work() {
+            match sched.tick() {
+                Ok(report) => dispatch(&mut sched, &mut subs, report),
+                Err(e) => {
+                    // Defensive: the scheduler parks engine errors as Failed
+                    // results, so a tick-level error means the loop itself
+                    // cannot make progress. Cancel in-flight work (each
+                    // subscriber still gets a terminal event) instead of
+                    // spinning or hanging clients.
+                    eprintln!("[lava] serving tick failed, canceling in-flight work: {e:#}");
+                    for id in sched.active_ids() {
+                        sched.cancel(id);
+                    }
+                    sched.drain_queue_rejecting(&format!("serving tick failed: {e:#}"));
+                }
+            }
+        }
+        // Results parked outside a tick (cancel-while-queued, shutdown
+        // rejections on an otherwise idle loop) still need delivering.
+        let parked = sched.take_finished();
+        if !parked.is_empty() {
+            let report = TickReport { worked: true, tokens: vec![], finished: parked };
+            dispatch(&mut sched, &mut subs, report);
+        }
+        if draining && !sched.has_work() {
+            for reply in shutdown_replies.drain(..) {
+                let _ = reply.send(());
+            }
+            break 'serve;
+        }
+    }
+}
+
+/// Deliver a tick's produce to subscribers: token events to streaming
+/// sinks (with their per-request index), terminal results to everyone.
+fn dispatch<B: ModelBackend>(
+    sched: &mut Scheduler<B>,
+    subs: &mut HashMap<u64, Subscriber>,
+    report: TickReport,
+) {
+    let mut streamed = 0u64;
+    for (id, token) in report.tokens {
+        if let Some(sub) = subs.get_mut(&id) {
+            if sub.stream {
+                let index = sub.emitted;
+                (sub.sink)(Event::Token { id, token, index });
+                streamed += 1;
+            }
+            sub.emitted += 1;
+        }
+    }
+    sched.engine.metrics.streamed_tokens += streamed;
+    for (id, result) in report.finished {
+        if let Some(mut sub) = subs.remove(&id) {
+            (sub.sink)(Event::Finished { id, result });
+        }
+    }
+}
+
+fn handle_command<B: ModelBackend>(
+    sched: &mut Scheduler<B>,
+    subs: &mut HashMap<u64, Subscriber>,
+    draining: &mut bool,
+    shutdown_replies: &mut Vec<Sender<()>>,
+    cmd: Command,
+) {
+    match cmd {
+        Command::Submit { items, reply } => {
+            let mut results = Vec::with_capacity(items.len());
+            for item in items {
+                if *draining {
+                    results.push(Err(SubmitError::ShuttingDown));
+                    continue;
+                }
+                match sched.submit(item.req) {
+                    Ok(id) => {
+                        subs.insert(
+                            id,
+                            Subscriber { sink: item.sink, stream: item.stream, emitted: 0 },
+                        );
+                        results.push(Ok(id));
+                    }
+                    Err(e) => results.push(Err(e)),
+                }
+            }
+            let _ = reply.send(results);
+        }
+        Command::Cancel { id, reply } => {
+            let _ = reply.send(sched.cancel(id));
+        }
+        Command::Metrics { reply } => {
+            let _ = reply.send(sched.metrics_snapshot());
+        }
+        Command::Shutdown { reply } => {
+            *draining = true;
+            shutdown_replies.push(reply);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::compress::Policy;
+    use crate::coordinator::engine::{Engine, EngineOptions, FinishStatus};
+    use crate::coordinator::scheduler::SchedulerOptions;
+    use crate::model::backend::MockBackend;
+
+    fn handle(opts: SchedulerOptions) -> ServeHandle {
+        let mock = MockBackend::new(MockBackend::default_config());
+        let engine =
+            Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+        spawn(Scheduler::new(engine, opts))
+    }
+
+    fn req(n: usize, out: usize) -> GenerateRequest {
+        GenerateRequest { prompt: (0..n).map(|i| (i % 251) as i32).collect(), max_new_tokens: out }
+    }
+
+    #[test]
+    fn streamed_tokens_match_terminal_result() {
+        let h = handle(SchedulerOptions::default());
+        let (id, rx) = h.submit_channel(req(100, 6), true).unwrap();
+        let mut streamed = Vec::new();
+        let mut result = None;
+        for ev in rx {
+            match ev {
+                Event::Token { id: eid, token, index } => {
+                    assert_eq!(eid, id);
+                    assert_eq!(index, streamed.len(), "indices must be gapless");
+                    streamed.push(token);
+                }
+                Event::Finished { id: eid, result: r } => {
+                    assert_eq!(eid, id);
+                    result = Some(r);
+                }
+            }
+        }
+        let r = result.expect("terminal event");
+        assert_eq!(r.status, FinishStatus::Completed);
+        assert_eq!(streamed, r.tokens, "stream must equal the final token list");
+        let snap = h.metrics().unwrap();
+        assert_eq!(snap.metrics.streamed_tokens, 6);
+        h.shutdown();
+    }
+
+    #[test]
+    fn non_streaming_subscriber_gets_only_the_terminal_event() {
+        let h = handle(SchedulerOptions::default());
+        let (_, rx) = h.submit_channel(req(100, 4), false).unwrap();
+        let events: Vec<Event> = rx.into_iter().collect();
+        assert_eq!(events.len(), 1);
+        assert!(matches!(&events[0], Event::Finished { result, .. }
+            if result.tokens.len() == 4));
+        h.shutdown();
+    }
+
+    #[test]
+    fn cancel_of_a_queued_request_delivers_a_terminal_event() {
+        // max_active 1: the second request waits in the queue while the
+        // first decodes, so the cancel hits the queued path
+        let h = handle(SchedulerOptions { max_active: 1, ..Default::default() });
+        let (_, rx_a) = h.submit_channel(req(100, 50), false).unwrap();
+        let (id_b, rx_b) = h.submit_channel(req(100, 50), false).unwrap();
+        assert!(h.cancel(id_b));
+        match rx_b.recv().expect("terminal event for the canceled request") {
+            Event::Finished { result, .. } => {
+                assert_eq!(result.status, FinishStatus::Canceled)
+            }
+            ev => panic!("unexpected event {ev:?}"),
+        }
+        assert!(!h.cancel(id_b), "double-cancel is a no-op");
+        drop(rx_a);
+        h.shutdown();
+    }
+
+    #[test]
+    fn shutdown_drains_active_and_rejects_queued_and_new() {
+        let h = handle(SchedulerOptions { max_active: 1, ..Default::default() });
+        // stream A so we can wait until it is provably mid-decode before
+        // shutting down (otherwise shutdown could race its admission)
+        let (_, rx_a) = h.submit_channel(req(100, 30), true).unwrap();
+        match rx_a.recv().unwrap() {
+            Event::Token { .. } => {}
+            ev => panic!("expected a token first, got {ev:?}"),
+        }
+        let (_, rx_b) = h.submit_channel(req(100, 30), false).unwrap();
+        h.shutdown();
+        // in-flight session drained to completion
+        let ra = match rx_a.into_iter().last().expect("terminal event") {
+            Event::Finished { result, .. } => result,
+            ev => panic!("unexpected event {ev:?}"),
+        };
+        assert_eq!(ra.status, FinishStatus::Completed);
+        assert_eq!(ra.tokens.len(), 30);
+        // queued-but-unadmitted request rejected with the shutdown reason
+        let rb = match rx_b.recv().unwrap() {
+            Event::Finished { result, .. } => result,
+            ev => panic!("unexpected event {ev:?}"),
+        };
+        assert_eq!(rb.status, FinishStatus::Rejected);
+        assert!(rb.error.as_deref().unwrap().contains("shutting down"));
+        // new submissions bounce off the dead loop
+        assert!(matches!(
+            h.submit_channel(req(100, 2), false),
+            Err(SubmitError::ShuttingDown)
+        ));
+    }
+}

@@ -1,11 +1,17 @@
-//! JSON-lines TCP front-end over the scheduler.
+//! JSON-lines TCP front-end over the continuous serving loop.
 //!
 //! Protocol (one JSON value per line):
 //!   request:  {"prompt": [int, ...], "max_new_tokens": int}
-//!             or {"text": "...", "max_new_tokens": int} (byte-level)
-//!   batch:    [request, request, ...] — submitted together, admitted by
-//!             shape bucket through the scheduler's batched prefill path;
+//!             or {"text": "...", "max_new_tokens": int} (byte-level);
+//!             add "stream": true to receive per-token lines
+//!   batch:    [request, request, ...] — submitted atomically, so
+//!             same-shape-bucket members prefill (and decode) as one group;
 //!             the reply is one JSON array of responses in submission order
+//!   token:    {"id": n, "token": int, "index": n} — one line per generated
+//!             token for requests that set "stream": true, in production
+//!             order ("index" is the token's 0-based position in the
+//!             output); the final response object still follows and
+//!             terminates the stream
 //!   response: {"id": n, "status": "completed"|"rejected"|"canceled"|
 //!              "failed", "tokens": [...], "text": "...", "prefill_ms": f,
 //!              "decode_ms": f, "kv_bytes": n} (plus "error" when not ok;
@@ -13,22 +19,44 @@
 //!   control:  {"cmd": "metrics"} | {"cmd": "cancel", "id": n}
 //!             | {"cmd": "shutdown"}
 //!
-//! The server accepts connections on the caller's thread and serves
-//! line-by-line — concurrency across requests happens in the scheduler
-//! (whose decode/prefill work fans out over the engine worker pool and
-//! whose tier I/O runs on a background thread), not across sockets.
-//! Because each line is driven to completion before the next is read,
-//! `cancel` over this transport only ever sees already-finished ids (it
-//! replies {"ok": false}); it is wired for embedders driving the scheduler
-//! directly and for the async front-end planned in ROADMAP "Open items".
+//! [`Server::serve`] is an acceptor: every connection gets a reader thread
+//! (parses lines, submits to the shared serving loop) and a writer thread
+//! (serializes token lines, responses, and command replies onto the
+//! socket), all feeding one scheduler owned by the serving-loop thread
+//! (see [`super::serve_loop`]). Consequences for clients:
+//!
+//! * **Connections progress concurrently.** A short request on one
+//!   connection completes while a long generation on another is still
+//!   decoding; requests from all connections share admission, batching,
+//!   and the memory budget.
+//! * **Responses on a pipelined connection are matched by id**, not by
+//!   line order: a later line's reply may arrive first. Batch replies stay
+//!   one array in submission order.
+//! * **`cancel` works mid-flight, from any connection.** The scheduler
+//!   cancels the session at the next tick boundary, releasing its hot and
+//!   warm bytes; the submitting connection still receives the terminal
+//!   (canceled, partial-output) response.
+//! * **`metrics` never stops the world** — it returns a snapshot copied
+//!   between ticks, with in-flight gauges (`active_sessions`,
+//!   `queued_requests`, `streamed_tokens`).
+//! * **`shutdown` drains.** In-flight sessions run to completion (their
+//!   responses are delivered), queued-but-unadmitted requests are
+//!   rejected, new submissions are refused; the `{"ok": true}` reply is
+//!   sent only after the drain finishes, then the acceptor exits.
 
+use std::collections::HashMap;
 use std::io::{BufRead, BufReader, Write};
-use std::net::{TcpListener, TcpStream};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use super::engine::{Engine, FinishStatus, GenerateRequest, GenerateResult};
+use super::metrics::MetricsSnapshot;
 use super::scheduler::{Scheduler, SchedulerOptions};
+use super::serve_loop::{self, Event, ServeHandle, SubmitItem};
 use crate::model::backend::ModelBackend;
 use crate::util::json::{self, Json};
 
@@ -47,21 +75,13 @@ impl<B: ModelBackend> Server<B> {
 
     /// Parse one request line. Exposed for tests.
     pub fn parse_request(&self, line: &str) -> Result<ParsedLine> {
-        let j = Json::parse(line)?;
-        if let Some(batch) = j.as_arr() {
-            let reqs: Result<Vec<GenerateRequest>> =
-                batch.iter().map(request_from_json).collect();
-            return Ok(ParsedLine::Batch(reqs?));
-        }
-        if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
-            let id = j.get("id").and_then(|v| v.as_usize()).map(|v| v as u64);
-            return Ok(ParsedLine::Command(cmd.to_string(), id));
-        }
-        Ok(ParsedLine::Request(request_from_json(&j)?))
+        parse_line(line)
     }
 
-    /// Serve one batch of requests through the scheduler and render one
-    /// response per request, in submission order. Exposed for tests.
+    /// Drive one batch of requests through the owned scheduler directly
+    /// (no serving thread) and render one response per request, in
+    /// submission order. The embedder/batch entry point; the TCP path
+    /// goes through [`Server::serve`] instead.
     pub fn handle_batch(&mut self, reqs: &[GenerateRequest]) -> Vec<Json> {
         // submission-order slot for every request: either an id to wait for
         // or an immediate submit-error response
@@ -69,12 +89,7 @@ impl<B: ModelBackend> Server<B> {
         for req in reqs {
             match self.sched.submit(req.clone()) {
                 Ok(id) => slots.push(Ok(id)),
-                // refused before an id was assigned -> "id": null
-                Err(e) => slots.push(Err(Json::obj(vec![
-                    ("id", Json::Null),
-                    ("status", Json::str("rejected")),
-                    ("error", Json::str(format!("{e}"))),
-                ]))),
+                Err(e) => slots.push(Err(submit_error_json(&e))),
             }
         }
         let (finished, engine_err) = match self.sched.run_to_completion() {
@@ -106,131 +121,34 @@ impl<B: ModelBackend> Server<B> {
             })
             .collect()
     }
+}
 
-    fn metrics_json(&self) -> Json {
-        let m = &self.sched.engine.metrics;
-        Json::obj(vec![
-            ("requests", Json::num(m.requests_finished as f64)),
-            ("rejected", Json::num(m.requests_rejected as f64)),
-            ("canceled", Json::num(m.requests_canceled as f64)),
-            ("failed", Json::num(m.requests_failed as f64)),
-            ("tokens", Json::num(m.tokens_generated as f64)),
-            ("ttft_ms_mean", Json::num(m.mean_ttft_ms())),
-            ("ttft_ms_p99", Json::num(m.p99_ttft_ms())),
-            ("queue_wait_ms_mean", Json::num(m.mean_queue_wait_ms())),
-            ("prefill_ms_mean", Json::num(m.mean_prefill_ms())),
-            ("decode_ms_mean", Json::num(m.mean_decode_ms())),
-            ("decode_ms_p99", Json::num(m.p99_decode_ms())),
-            ("decode_tok_s", Json::num(m.decode_tok_per_sec())),
-            ("peak_kv_mb", Json::num(m.peak_kv_bytes as f64 / 1e6)),
-            ("admission_rounds", Json::num(m.admission_rounds as f64)),
-            ("decode_steps", Json::num(m.decode_steps as f64)),
-            // batched decode execution: groups run, mean sessions per group,
-            // and backend dispatch counts keyed by capacity bucket
-            ("decode_batches", Json::num(m.decode_batches as f64)),
-            ("batch_occupancy", Json::num(m.batch_occupancy())),
-            ("decode_dispatches_total", Json::num(m.decode_dispatches_total() as f64)),
-            (
-                "decode_dispatches",
-                Json::Obj(
-                    m.decode_dispatches
-                        .iter()
-                        .map(|(bucket, n)| (bucket.to_string(), Json::num(*n as f64)))
-                        .collect(),
-                ),
-            ),
-            // per-tier state: hot is what kv_mem_limit bounds; warm holds
-            // Q8-spilled layer caches
-            ("deferred", Json::num(m.requests_deferred as f64)),
-            ("hot_kv_mb", Json::num(m.hot_kv_bytes as f64 / 1e6)),
-            ("peak_hot_kv_mb", Json::num(m.peak_hot_kv_bytes as f64 / 1e6)),
-            ("warm_kv_mb", Json::num(m.warm_kv_bytes as f64 / 1e6)),
-            ("peak_warm_kv_mb", Json::num(m.peak_warm_kv_bytes as f64 / 1e6)),
-            ("spills", Json::num(m.spills as f64)),
-            ("prefetches", Json::num(m.prefetches as f64)),
-            ("spilled_mb", Json::num(m.spilled_bytes as f64 / 1e6)),
-            ("prefetched_mb", Json::num(m.prefetched_bytes as f64 / 1e6)),
-            ("spill_ms_mean", Json::num(m.mean_spill_ms())),
-            ("prefetch_ms_mean", Json::num(m.mean_prefetch_ms())),
-            // worker pool: width, per-worker cumulative busy time, and the
-            // mean fraction of the pool kept busy during fan-outs
-            ("workers", Json::num(m.workers as f64)),
-            ("worker_utilization", Json::num(m.worker_utilization())),
-            ("worker_rounds", Json::num(m.worker_rounds as f64)),
-            (
-                "worker_busy_secs",
-                Json::Arr(m.worker_busy_secs.iter().map(|&b| Json::num(b)).collect()),
-            ),
-            // tier thread: command-queue backlogs (sampled at tick end),
-            // their observed peak, and background quantize/dequantize time
-            ("tier_spill_queue_depth", Json::num(m.tier_spill_queue_depth as f64)),
-            ("tier_prefetch_queue_depth", Json::num(m.tier_prefetch_queue_depth as f64)),
-            ("tier_queue_depth_peak", Json::num(m.tier_queue_depth_peak as f64)),
-            ("tier_staged_mb", Json::num(m.tier_staged_bytes as f64 / 1e6)),
-            ("peak_tier_staged_mb", Json::num(m.peak_tier_staged_bytes as f64 / 1e6)),
-            ("tier_busy_ms", Json::num(m.tier_busy_secs * 1e3)),
-            ("report", Json::str(m.report())),
-        ])
-    }
-
-    fn handle_conn(&mut self, stream: TcpStream) -> Result<bool> {
-        let mut writer = stream.try_clone()?;
-        let reader = BufReader::new(stream);
-        for line in reader.lines() {
-            let line = line?;
-            if line.trim().is_empty() {
-                continue;
-            }
-            let reply = match self.parse_request(&line) {
-                Ok(ParsedLine::Command(cmd, _)) if cmd == "shutdown" => {
-                    writeln!(
-                        writer,
-                        "{}",
-                        json::to_string(&Json::obj(vec![("ok", Json::Bool(true))]))
-                    )?;
-                    return Ok(true);
-                }
-                Ok(ParsedLine::Command(cmd, _)) if cmd == "metrics" => {
-                    json::to_string(&Json::obj(vec![("metrics", self.metrics_json())]))
-                }
-                Ok(ParsedLine::Command(cmd, id)) if cmd == "cancel" => match id {
-                    Some(id) => {
-                        let ok = self.sched.cancel(id);
-                        json::to_string(&Json::obj(vec![("ok", Json::Bool(ok))]))
-                    }
-                    None => json::to_string(&Json::obj(vec![(
-                        "error",
-                        Json::str("cancel needs an 'id'"),
-                    )])),
-                },
-                Ok(ParsedLine::Command(cmd, _)) => json::to_string(&Json::obj(vec![(
-                    "error",
-                    Json::str(format!("unknown cmd {cmd}")),
-                )])),
-                Ok(ParsedLine::Request(req)) => {
-                    let resps = self.handle_batch(std::slice::from_ref(&req));
-                    json::to_string(&resps[0])
-                }
-                Ok(ParsedLine::Batch(reqs)) => {
-                    json::to_string(&Json::Arr(self.handle_batch(&reqs)))
-                }
-                Err(e) => json::to_string(&Json::obj(vec![("error", Json::str(format!("{e:#}")))])),
-            };
-            writeln!(writer, "{reply}")?;
-        }
-        Ok(false)
-    }
-
-    /// Blocking accept loop; returns after a shutdown command.
-    pub fn serve(&mut self, addr: &str) -> Result<()> {
+impl<B: ModelBackend + 'static> Server<B> {
+    /// Bind `addr` and serve until a shutdown command drains the loop.
+    pub fn serve(self, addr: &str) -> Result<()> {
         let listener = TcpListener::bind(addr)?;
         eprintln!("[lava] serving on {addr}");
+        self.serve_on(listener)
+    }
+
+    /// Accept loop over an already-bound listener: moves the scheduler onto
+    /// the serving-loop thread, then spawns one reader/writer thread pair
+    /// per connection, all submitting into the shared loop.
+    pub fn serve_on(self, listener: TcpListener) -> Result<()> {
+        let local_addr = listener.local_addr()?;
+        let handle = serve_loop::spawn(self.sched);
+        let stop = Arc::new(AtomicBool::new(false));
         for stream in listener.incoming() {
+            if stop.load(Ordering::SeqCst) {
+                break;
+            }
             match stream {
                 Ok(s) => {
-                    if self.handle_conn(s)? {
-                        break;
-                    }
+                    let handle = handle.clone();
+                    let stop = Arc::clone(&stop);
+                    let _ = std::thread::Builder::new()
+                        .name("lava-conn".to_string())
+                        .spawn(move || conn_loop(s, handle, stop, local_addr));
                 }
                 Err(e) => eprintln!("[lava] accept error: {e}"),
             }
@@ -239,8 +157,327 @@ impl<B: ModelBackend> Server<B> {
     }
 }
 
-fn request_from_json(j: &Json) -> Result<GenerateRequest> {
+/// Per-connection reader: parse lines, submit requests (registering their
+/// reply slots with the writer), answer control commands. The paired
+/// writer thread owns the socket's write half so token lines, responses,
+/// and command replies never interleave mid-line.
+fn conn_loop(stream: TcpStream, handle: ServeHandle, stop: Arc<AtomicBool>, local: SocketAddr) {
+    let Ok(write_half) = stream.try_clone() else { return };
+    let (wtx, wrx) = channel::<ConnMsg>();
+    let writer = match std::thread::Builder::new()
+        .name("lava-conn-writer".to_string())
+        .spawn(move || writer_loop(write_half, wrx))
+    {
+        Ok(h) => h,
+        Err(e) => {
+            eprintln!("[lava] spawn writer: {e}");
+            return;
+        }
+    };
+    let reader = BufReader::new(stream);
+    for line in reader.lines() {
+        let Ok(line) = line else { break };
+        if line.trim().is_empty() {
+            continue;
+        }
+        match parse_line(&line) {
+            Ok(ParsedLine::Command(cmd, _)) if cmd == "shutdown" => {
+                // blocks until in-flight sessions drain (terminal responses
+                // have been dispatched to their connections' writers)
+                handle.shutdown();
+                let _ = wtx.send(ConnMsg::Raw(json::to_string(&Json::obj(vec![(
+                    "ok",
+                    Json::Bool(true),
+                )]))));
+                stop.store(true, Ordering::SeqCst);
+                // wake the acceptor so serve() observes the stop flag
+                let _ = TcpStream::connect(local);
+                break;
+            }
+            Ok(ParsedLine::Command(cmd, _)) if cmd == "metrics" => {
+                let reply = match handle.metrics() {
+                    Some(snap) => Json::obj(vec![("metrics", metrics_json(&snap))]),
+                    None => Json::obj(vec![("error", Json::str("server shutting down"))]),
+                };
+                let _ = wtx.send(ConnMsg::Raw(json::to_string(&reply)));
+            }
+            Ok(ParsedLine::Command(cmd, id)) if cmd == "cancel" => {
+                let reply = match id {
+                    Some(id) => Json::obj(vec![("ok", Json::Bool(handle.cancel(id)))]),
+                    None => Json::obj(vec![("error", Json::str("cancel needs an 'id'"))]),
+                };
+                let _ = wtx.send(ConnMsg::Raw(json::to_string(&reply)));
+            }
+            Ok(ParsedLine::Command(cmd, _)) => {
+                let _ = wtx.send(ConnMsg::Raw(json::to_string(&Json::obj(vec![(
+                    "error",
+                    Json::str(format!("unknown cmd {cmd}")),
+                )]))));
+            }
+            Ok(ParsedLine::Request(req, stream_tokens)) => {
+                let slots = submit_group(&handle, &wtx, vec![(req, stream_tokens)]);
+                let _ = wtx.send(ConnMsg::Group { slots, batch: false });
+            }
+            Ok(ParsedLine::Batch(reqs)) => {
+                let slots = submit_group(&handle, &wtx, reqs);
+                let _ = wtx.send(ConnMsg::Group { slots, batch: true });
+            }
+            Err(e) => {
+                let _ = wtx.send(ConnMsg::Raw(json::to_string(&Json::obj(vec![(
+                    "error",
+                    Json::str(format!("{e:#}")),
+                )]))));
+            }
+        }
+    }
+    let _ = wtx.send(ConnMsg::Close);
+    let _ = writer.join();
+}
+
+/// Submit one line's requests as an atomic group; each request's events
+/// flow to this connection's writer. Returns the reply slot per request:
+/// an id to await, or an immediate rejection response.
+fn submit_group(
+    handle: &ServeHandle,
+    wtx: &Sender<ConnMsg>,
+    reqs: Vec<(GenerateRequest, bool)>,
+) -> Vec<Slot> {
+    let items: Vec<SubmitItem> = reqs
+        .into_iter()
+        .map(|(req, stream)| {
+            let tx = wtx.clone();
+            SubmitItem {
+                req,
+                stream,
+                sink: Box::new(move |ev| {
+                    // the writer going away must not poison the serving loop
+                    let _ = tx.send(ConnMsg::Event(ev));
+                }),
+            }
+        })
+        .collect();
+    handle
+        .submit_many(items)
+        .into_iter()
+        .map(|res| match res {
+            Ok(id) => Slot::Wait(id),
+            Err(e) => Slot::Ready(submit_error_json(&e)),
+        })
+        .collect()
+}
+
+/// What the reader and the serving loop hand the writer thread.
+enum ConnMsg {
+    /// An immediate reply line (command replies, parse errors).
+    Raw(String),
+    /// One request line's pending reply slots, in submission order.
+    Group { slots: Vec<Slot>, batch: bool },
+    /// A serving-loop event for one of this connection's requests.
+    Event(Event),
+    /// Reader finished; flush and exit.
+    Close,
+}
+
+enum Slot {
+    Ready(Json),
+    Wait(u64),
+}
+
+struct PendingGroup {
+    slots: Vec<Slot>,
+    batch: bool,
+}
+
+impl PendingGroup {
+    fn waits_on(&self, id: u64) -> bool {
+        self.slots.iter().any(|s| matches!(s, Slot::Wait(w) if *w == id))
+    }
+
+    fn fill(&mut self, id: u64, json: Json) {
+        if let Some(i) =
+            self.slots.iter().position(|s| matches!(s, Slot::Wait(w) if *w == id))
+        {
+            self.slots[i] = Slot::Ready(json);
+        }
+    }
+
+    fn complete(&self) -> bool {
+        self.slots.iter().all(|s| matches!(s, Slot::Ready(_)))
+    }
+
+    /// One reply line: the bare response for a single request, an array in
+    /// submission order for a batch line.
+    fn render(self) -> Json {
+        let PendingGroup { slots, batch } = self;
+        let mut items: Vec<Json> = slots
+            .into_iter()
+            .map(|s| match s {
+                Slot::Ready(j) => j,
+                Slot::Wait(_) => Json::Null,
+            })
+            .collect();
+        if batch {
+            Json::Arr(items)
+        } else {
+            items.pop().unwrap_or(Json::Null)
+        }
+    }
+}
+
+/// Connection writer: the single owner of the socket's write half. Token
+/// events stream out immediately; terminal results fill their group's slot
+/// and the group is written once every slot is ready. Results that arrive
+/// before their group registration (the serving loop races the reader's
+/// Group message) wait in a stash.
+fn writer_loop(mut out: TcpStream, rx: Receiver<ConnMsg>) {
+    let mut pending: Vec<PendingGroup> = Vec::new();
+    let mut stash: HashMap<u64, Json> = HashMap::new();
+    for msg in rx {
+        let ok = match msg {
+            ConnMsg::Raw(line) => writeln!(out, "{line}").is_ok(),
+            ConnMsg::Group { mut slots, batch } => {
+                for slot in &mut slots {
+                    if let Slot::Wait(id) = slot {
+                        if let Some(j) = stash.remove(id) {
+                            *slot = Slot::Ready(j);
+                        }
+                    }
+                }
+                let group = PendingGroup { slots, batch };
+                if group.complete() {
+                    writeln!(out, "{}", json::to_string(&group.render())).is_ok()
+                } else {
+                    pending.push(group);
+                    true
+                }
+            }
+            ConnMsg::Event(Event::Token { id, token, index }) => writeln!(
+                out,
+                "{}",
+                json::to_string(&Json::obj(vec![
+                    ("id", Json::num(id as f64)),
+                    ("token", Json::num(token as f64)),
+                    ("index", Json::num(index as f64)),
+                ]))
+            )
+            .is_ok(),
+            ConnMsg::Event(Event::Finished { id, result }) => {
+                let rendered = result_to_json(&result);
+                match pending.iter().position(|g| g.waits_on(id)) {
+                    Some(gi) => {
+                        pending[gi].fill(id, rendered);
+                        if pending[gi].complete() {
+                            let group = pending.remove(gi);
+                            writeln!(out, "{}", json::to_string(&group.render())).is_ok()
+                        } else {
+                            true
+                        }
+                    }
+                    None => {
+                        stash.insert(id, rendered);
+                        true
+                    }
+                }
+            }
+            ConnMsg::Close => break,
+        };
+        if !ok {
+            break;
+        }
+    }
+}
+
+fn metrics_json(snap: &MetricsSnapshot) -> Json {
+    let m = &snap.metrics;
+    Json::obj(vec![
+        ("requests", Json::num(m.requests_finished as f64)),
+        ("rejected", Json::num(m.requests_rejected as f64)),
+        ("canceled", Json::num(m.requests_canceled as f64)),
+        ("failed", Json::num(m.requests_failed as f64)),
+        ("tokens", Json::num(m.tokens_generated as f64)),
+        // in-flight gauges: live state at snapshot time, plus tokens
+        // pushed to streaming subscribers so far
+        ("active_sessions", Json::num(snap.active_sessions as f64)),
+        ("queued_requests", Json::num(snap.queued_requests as f64)),
+        ("streamed_tokens", Json::num(m.streamed_tokens as f64)),
+        ("ttft_ms_mean", Json::num(m.mean_ttft_ms())),
+        ("ttft_ms_p99", Json::num(m.p99_ttft_ms())),
+        ("queue_wait_ms_mean", Json::num(m.mean_queue_wait_ms())),
+        ("prefill_ms_mean", Json::num(m.mean_prefill_ms())),
+        ("decode_ms_mean", Json::num(m.mean_decode_ms())),
+        ("decode_ms_p99", Json::num(m.p99_decode_ms())),
+        ("decode_tok_s", Json::num(m.decode_tok_per_sec())),
+        ("peak_kv_mb", Json::num(m.peak_kv_bytes as f64 / 1e6)),
+        ("admission_rounds", Json::num(m.admission_rounds as f64)),
+        ("decode_steps", Json::num(m.decode_steps as f64)),
+        // batched decode execution: groups run, mean sessions per group,
+        // and backend dispatch counts keyed by capacity bucket
+        ("decode_batches", Json::num(m.decode_batches as f64)),
+        ("batch_occupancy", Json::num(m.batch_occupancy())),
+        ("decode_dispatches_total", Json::num(m.decode_dispatches_total() as f64)),
+        (
+            "decode_dispatches",
+            Json::Obj(
+                m.decode_dispatches
+                    .iter()
+                    .map(|(bucket, n)| (bucket.to_string(), Json::num(*n as f64)))
+                    .collect(),
+            ),
+        ),
+        // per-tier state: hot is what kv_mem_limit bounds; warm holds
+        // Q8-spilled layer caches
+        ("deferred", Json::num(m.requests_deferred as f64)),
+        ("hot_kv_mb", Json::num(m.hot_kv_bytes as f64 / 1e6)),
+        ("peak_hot_kv_mb", Json::num(m.peak_hot_kv_bytes as f64 / 1e6)),
+        ("warm_kv_mb", Json::num(m.warm_kv_bytes as f64 / 1e6)),
+        ("peak_warm_kv_mb", Json::num(m.peak_warm_kv_bytes as f64 / 1e6)),
+        ("spills", Json::num(m.spills as f64)),
+        ("prefetches", Json::num(m.prefetches as f64)),
+        ("spilled_mb", Json::num(m.spilled_bytes as f64 / 1e6)),
+        ("prefetched_mb", Json::num(m.prefetched_bytes as f64 / 1e6)),
+        ("spill_ms_mean", Json::num(m.mean_spill_ms())),
+        ("prefetch_ms_mean", Json::num(m.mean_prefetch_ms())),
+        // worker pool: width, per-worker cumulative busy time, and the
+        // mean fraction of the pool kept busy during fan-outs
+        ("workers", Json::num(m.workers as f64)),
+        ("worker_utilization", Json::num(m.worker_utilization())),
+        ("worker_rounds", Json::num(m.worker_rounds as f64)),
+        (
+            "worker_busy_secs",
+            Json::Arr(m.worker_busy_secs.iter().map(|&b| Json::num(b)).collect()),
+        ),
+        // tier thread: command-queue backlogs (sampled at tick end),
+        // their observed peak, and background quantize/dequantize time
+        ("tier_spill_queue_depth", Json::num(m.tier_spill_queue_depth as f64)),
+        ("tier_prefetch_queue_depth", Json::num(m.tier_prefetch_queue_depth as f64)),
+        ("tier_queue_depth_peak", Json::num(m.tier_queue_depth_peak as f64)),
+        ("tier_staged_mb", Json::num(m.tier_staged_bytes as f64 / 1e6)),
+        ("peak_tier_staged_mb", Json::num(m.peak_tier_staged_bytes as f64 / 1e6)),
+        ("tier_busy_ms", Json::num(m.tier_busy_secs * 1e3)),
+        ("report", Json::str(m.report())),
+    ])
+}
+
+/// Parse one protocol line into a request (+ stream flag), a batch, or a
+/// control command.
+pub fn parse_line(line: &str) -> Result<ParsedLine> {
+    let j = Json::parse(line)?;
+    if let Some(batch) = j.as_arr() {
+        let reqs: Result<Vec<(GenerateRequest, bool)>> =
+            batch.iter().map(request_from_json).collect();
+        return Ok(ParsedLine::Batch(reqs?));
+    }
+    if let Some(cmd) = j.get("cmd").and_then(|c| c.as_str()) {
+        let id = j.get("id").and_then(|v| v.as_usize()).map(|v| v as u64);
+        return Ok(ParsedLine::Command(cmd.to_string(), id));
+    }
+    let (req, stream) = request_from_json(&j)?;
+    Ok(ParsedLine::Request(req, stream))
+}
+
+fn request_from_json(j: &Json) -> Result<(GenerateRequest, bool)> {
     let max_new = j.get("max_new_tokens").and_then(|v| v.as_usize()).unwrap_or(32);
+    let stream = j.get("stream").and_then(|v| v.as_bool()).unwrap_or(false);
     let prompt: Vec<i32> = if let Some(arr) = j.get("prompt").and_then(|v| v.as_arr()) {
         arr.iter().filter_map(|x| x.as_f64().map(|f| f as i32)).collect()
     } else if let Some(text) = j.get("text").and_then(|v| v.as_str()) {
@@ -248,7 +485,16 @@ fn request_from_json(j: &Json) -> Result<GenerateRequest> {
     } else {
         anyhow::bail!("request needs 'prompt' or 'text'");
     };
-    Ok(GenerateRequest { prompt, max_new_tokens: max_new })
+    Ok((GenerateRequest { prompt, max_new_tokens: max_new }, stream))
+}
+
+/// Response for a request refused before an id was assigned.
+fn submit_error_json(e: &impl std::fmt::Display) -> Json {
+    Json::obj(vec![
+        ("id", Json::Null),
+        ("status", Json::str("rejected")),
+        ("error", Json::str(format!("{e}"))),
+    ])
 }
 
 fn status_str(s: FinishStatus) -> &'static str {
@@ -283,8 +529,10 @@ fn result_to_json(r: &GenerateResult) -> Json {
 }
 
 pub enum ParsedLine {
-    Request(GenerateRequest),
-    Batch(Vec<GenerateRequest>),
+    /// A single request and whether it opted into per-token streaming.
+    Request(GenerateRequest, bool),
+    /// A batch line: requests with their stream flags, submission order.
+    Batch(Vec<(GenerateRequest, bool)>),
     Command(String, Option<u64>),
 }
 
@@ -307,16 +555,18 @@ mod tests {
     fn parses_prompt_and_text() {
         let s = server();
         match s.parse_request(r#"{"prompt": [1,2,3], "max_new_tokens": 5}"#).unwrap() {
-            ParsedLine::Request(r) => {
+            ParsedLine::Request(r, stream) => {
                 assert_eq!(r.prompt, vec![1, 2, 3]);
                 assert_eq!(r.max_new_tokens, 5);
+                assert!(!stream, "stream defaults to off");
             }
             _ => panic!(),
         }
-        match s.parse_request(r#"{"text": "AB"}"#).unwrap() {
-            ParsedLine::Request(r) => {
+        match s.parse_request(r#"{"text": "AB", "stream": true}"#).unwrap() {
+            ParsedLine::Request(r, stream) => {
                 assert_eq!(r.prompt, vec![65, 66]);
                 assert_eq!(r.max_new_tokens, 32);
+                assert!(stream);
             }
             _ => panic!(),
         }
@@ -332,10 +582,16 @@ mod tests {
             _ => panic!(),
         }
         match s
-            .parse_request(r#"[{"prompt": [1,2], "max_new_tokens": 2}, {"text": "A"}]"#)
+            .parse_request(
+                r#"[{"prompt": [1,2], "max_new_tokens": 2}, {"text": "A", "stream": true}]"#,
+            )
             .unwrap()
         {
-            ParsedLine::Batch(rs) => assert_eq!(rs.len(), 2),
+            ParsedLine::Batch(rs) => {
+                assert_eq!(rs.len(), 2);
+                assert!(!rs[0].1);
+                assert!(rs[1].1, "per-request stream flags in a batch");
+            }
             _ => panic!(),
         }
         assert!(s.parse_request(r#"{"nope": 1}"#).is_err());
@@ -365,25 +621,12 @@ mod tests {
 
     #[test]
     fn end_to_end_over_tcp() {
-        use std::io::{BufRead, BufReader, Write};
         let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
         let addr = listener.local_addr().unwrap();
-        drop(listener);
-        let addr_s = format!("{addr}");
         let handle = std::thread::spawn(move || {
-            let mut srv = server();
-            srv.serve(&addr_s).unwrap();
+            server().serve_on(listener).unwrap();
         });
-        // retry-connect until the server binds
-        let mut conn = None;
-        for _ in 0..100 {
-            if let Ok(c) = std::net::TcpStream::connect(addr) {
-                conn = Some(c);
-                break;
-            }
-            std::thread::sleep(std::time::Duration::from_millis(20));
-        }
-        let mut c = conn.expect("connect");
+        let mut c = std::net::TcpStream::connect(addr).unwrap();
         let prompt: Vec<String> = (0..64).map(|i| format!("{}", i % 250)).collect();
         writeln!(c, "{{\"prompt\": [{}], \"max_new_tokens\": 3}}", prompt.join(","))
             .unwrap();
@@ -423,14 +666,47 @@ mod tests {
         let jg = Json::parse(line_g.trim()).unwrap();
         assert_eq!(jg.as_arr().unwrap().len(), 2);
 
+        // a streamed request: one token line per generated token, indexed
+        // 0.., then the terminal response with the same tokens
+        writeln!(
+            c,
+            "{{\"prompt\": [{p}], \"max_new_tokens\": 3, \"stream\": true}}",
+            p = prompt.join(",")
+        )
+        .unwrap();
+        let mut streamed = Vec::new();
+        let terminal = loop {
+            let mut l = String::new();
+            reader.read_line(&mut l).unwrap();
+            let v = Json::parse(l.trim()).unwrap();
+            if v.get("status").is_some() {
+                break v;
+            }
+            assert_eq!(v.get("index").unwrap().as_usize().unwrap(), streamed.len());
+            streamed.push(v.get("token").unwrap().as_f64().unwrap() as i32);
+        };
+        let final_tokens: Vec<i32> = terminal
+            .get("tokens")
+            .unwrap()
+            .as_arr()
+            .unwrap()
+            .iter()
+            .map(|t| t.as_f64().unwrap() as i32)
+            .collect();
+        assert_eq!(streamed, final_tokens, "stream must equal the final token list");
+
         // structured metrics reply
         writeln!(c, "{{\"cmd\": \"metrics\"}}").unwrap();
         let mut line_m = String::new();
         reader.read_line(&mut line_m).unwrap();
         let jm = Json::parse(line_m.trim()).unwrap();
         let m = jm.get("metrics").unwrap();
-        assert_eq!(m.get("requests").unwrap().as_usize().unwrap(), 5);
+        assert_eq!(m.get("requests").unwrap().as_usize().unwrap(), 6);
         assert!(m.get("ttft_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
+        // in-flight gauges: everything retired by now, 3 tokens streamed
+        assert_eq!(m.get("active_sessions").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(m.get("queued_requests").unwrap().as_usize().unwrap(), 0);
+        assert_eq!(m.get("streamed_tokens").unwrap().as_usize().unwrap(), 3);
         // per-tier keys are always present (zero without memory pressure)
         assert_eq!(m.get("spills").unwrap().as_usize().unwrap(), 0);
         assert_eq!(m.get("prefetches").unwrap().as_usize().unwrap(), 0);
@@ -452,6 +728,8 @@ mod tests {
         writeln!(c, "{{\"cmd\": \"shutdown\"}}").unwrap();
         let mut line2 = String::new();
         reader.read_line(&mut line2).unwrap();
+        let js = Json::parse(line2.trim()).unwrap();
+        assert_eq!(js.get("ok").unwrap().as_bool(), Some(true));
         handle.join().unwrap();
     }
 }

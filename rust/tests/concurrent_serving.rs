@@ -1,0 +1,478 @@
+//! Concurrent serving acceptance suite (ISSUE 6): many TCP connections
+//! share one serving loop; connections make progress concurrently; every
+//! request gets exactly one terminal response; streamed token lines are
+//! bit-identical to the non-streamed (and direct-scheduler) outputs;
+//! cross-connection cancel releases hot and warm bytes; a flooded queue
+//! rejects with backpressure.
+
+use std::collections::BTreeMap;
+use std::io::{BufRead, BufReader, Write};
+use std::net::{SocketAddr, TcpListener, TcpStream};
+
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions, GenerateRequest};
+use lava::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lava::coordinator::server::Server;
+use lava::model::backend::MockBackend;
+use lava::util::json::Json;
+
+fn engine() -> Engine<MockBackend> {
+    let mock = MockBackend::new(MockBackend::default_config());
+    Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24))
+}
+
+/// Bind an ephemeral port, move the server onto its acceptor thread, and
+/// return the address clients should dial.
+fn spawn_server(opts: SchedulerOptions) -> SocketAddr {
+    let listener = TcpListener::bind("127.0.0.1:0").unwrap();
+    let addr = listener.local_addr().unwrap();
+    let srv = Server::with_options(engine(), opts);
+    std::thread::spawn(move || {
+        let _ = srv.serve_on(listener);
+    });
+    addr
+}
+
+struct Client {
+    reader: BufReader<TcpStream>,
+    sock: TcpStream,
+}
+
+impl Client {
+    fn connect(addr: SocketAddr) -> Client {
+        let sock = TcpStream::connect(addr).unwrap();
+        let reader = BufReader::new(sock.try_clone().unwrap());
+        Client { reader, sock }
+    }
+
+    fn send(&mut self, line: &str) {
+        writeln!(self.sock, "{line}").unwrap();
+    }
+
+    fn recv(&mut self) -> Json {
+        let mut line = String::new();
+        self.reader.read_line(&mut line).unwrap();
+        assert!(!line.is_empty(), "server closed the connection unexpectedly");
+        Json::parse(line.trim()).unwrap()
+    }
+
+    fn metrics(&mut self) -> Json {
+        self.send(r#"{"cmd": "metrics"}"#);
+        self.recv().get("metrics").expect("metrics reply").clone()
+    }
+}
+
+/// Deterministic request: prompt token t is `(t + offset) % 251`.
+fn req(len: usize, offset: usize, max_new: usize) -> GenerateRequest {
+    GenerateRequest {
+        prompt: (0..len).map(|t| ((t + offset) % 251) as i32).collect(),
+        max_new_tokens: max_new,
+    }
+}
+
+/// The same request as a protocol object (no surrounding line framing).
+fn req_obj(len: usize, offset: usize, max_new: usize, stream: bool) -> String {
+    let prompt: Vec<String> = (0..len).map(|t| ((t + offset) % 251).to_string()).collect();
+    format!(
+        "{{\"prompt\": [{}], \"max_new_tokens\": {max_new}, \"stream\": {stream}}}",
+        prompt.join(",")
+    )
+}
+
+fn tokens_of(v: &Json) -> Vec<i32> {
+    v.get("tokens")
+        .expect("terminal response with tokens")
+        .as_arr()
+        .unwrap()
+        .iter()
+        .map(|t| t.as_f64().unwrap() as i32)
+        .collect()
+}
+
+fn status_of(v: &Json) -> &str {
+    v.get("status").expect("terminal response with status").as_str().unwrap()
+}
+
+/// The serial seed path: the same request alone on a fresh scheduler,
+/// driven by `run_to_completion`. The deterministic mock backend makes this
+/// the ground truth any serving-loop schedule must reproduce exactly.
+fn serial_tokens(r: &GenerateRequest) -> Vec<i32> {
+    let mut s = Scheduler::new(engine(), SchedulerOptions::default());
+    s.submit(r.clone()).unwrap();
+    let done = s.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    done.into_iter().next().unwrap().1.tokens
+}
+
+#[test]
+fn short_request_completes_while_long_request_still_decodes() {
+    let addr = spawn_server(SchedulerOptions::default());
+
+    // connection A: a long streamed generation; the first token line both
+    // proves it is mid-decode and tells us its id
+    let mut a = Client::connect(addr);
+    a.send(&req_obj(64, 0, 500, true));
+    let first = a.recv();
+    assert!(first.get("token").is_some(), "streaming must start with a token line");
+    assert_eq!(first.get("index").unwrap().as_usize().unwrap(), 0);
+    let long_id = first.get("id").unwrap().as_usize().unwrap() as u64;
+
+    // connection B: a short request completes while A decodes
+    let mut b = Client::connect(addr);
+    b.send(&req_obj(64, 5, 2, false));
+    let short = b.recv();
+    assert_eq!(status_of(&short), "completed");
+    assert_eq!(tokens_of(&short).len(), 2);
+
+    // A is still in flight at a moment strictly after B finished: the two
+    // connections made progress concurrently
+    let m = b.metrics();
+    assert!(
+        m.get("active_sessions").unwrap().as_usize().unwrap() >= 1,
+        "the long request must still be decoding when the short one is done"
+    );
+
+    // cross-connection cancel: B cancels A's generation mid-flight, and
+    // A's stream still terminates with its (canceled) response
+    b.send(&format!("{{\"cmd\": \"cancel\", \"id\": {long_id}}}"));
+    assert_eq!(b.recv().get("ok").unwrap().as_bool(), Some(true));
+    let terminal = loop {
+        let v = a.recv();
+        if v.get("status").is_some() {
+            break v;
+        }
+    };
+    assert_eq!(status_of(&terminal), "canceled");
+}
+
+#[test]
+fn cancel_terminates_the_stream_with_a_partial_result() {
+    let addr = spawn_server(SchedulerOptions::default());
+    let mut a = Client::connect(addr);
+    a.send(&req_obj(64, 0, 500, true));
+    let first = a.recv();
+    let id = first.get("id").unwrap().as_usize().unwrap() as u64;
+
+    let mut b = Client::connect(addr);
+    b.send(&format!("{{\"cmd\": \"cancel\", \"id\": {id}}}"));
+    assert_eq!(b.recv().get("ok").unwrap().as_bool(), Some(true));
+
+    // A's stream ends with the canceled terminal carrying partial output
+    let terminal = loop {
+        let v = a.recv();
+        if v.get("status").is_some() {
+            break v;
+        }
+    };
+    assert_eq!(status_of(&terminal), "canceled");
+    let n = tokens_of(&terminal).len();
+    assert!((1..500).contains(&n), "partial output expected, got {n} tokens");
+
+    // the id is retired now, so a second cancel must report a miss
+    b.send(&format!("{{\"cmd\": \"cancel\", \"id\": {id}}}"));
+    assert_eq!(
+        b.recv().get("ok").unwrap().as_bool(),
+        Some(false),
+        "double-cancel of a finished id must report false"
+    );
+}
+
+#[test]
+fn cancel_from_second_connection_releases_hot_and_warm_bytes() {
+    // the tiering workload: tight enough to spill, eight long generations
+    let addr = spawn_server(SchedulerOptions {
+        kv_mem_limit: Some(300_000),
+        tiering: true,
+        ..Default::default()
+    });
+    let mut a = Client::connect(addr);
+    let reqs: Vec<String> = (0..8)
+        .map(|i| {
+            let n = match i % 3 {
+                0 => 100,
+                1 => 200,
+                _ => 400,
+            };
+            req_obj(n, i * 7, 200, false)
+        })
+        .collect();
+    a.send(&format!("[{}]", reqs.join(",")));
+
+    // second connection: wait for memory pressure to reach the warm tier
+    let mut b = Client::connect(addr);
+    let deadline = std::time::Instant::now() + std::time::Duration::from_secs(60);
+    loop {
+        let m = b.metrics();
+        if m.get("spills").unwrap().as_usize().unwrap() > 0 {
+            break;
+        }
+        assert!(std::time::Instant::now() < deadline, "workload never spilled");
+        std::thread::sleep(std::time::Duration::from_millis(2));
+    }
+
+    // a fresh server assigns ids 1..=8 to the batch in submission order;
+    // every one is still queued or decoding (200 tokens each), so every
+    // cancel must land
+    for id in 1..=8u64 {
+        b.send(&format!("{{\"cmd\": \"cancel\", \"id\": {id}}}"));
+        assert_eq!(
+            b.recv().get("ok").unwrap().as_bool(),
+            Some(true),
+            "request {id} must be live when canceled"
+        );
+    }
+
+    // A's batch reply arrives once all eight terminals exist: all canceled
+    let reply = a.recv();
+    let arr = reply.as_arr().expect("batch reply is an array");
+    assert_eq!(arr.len(), 8);
+    for r in arr {
+        assert_eq!(status_of(r), "canceled");
+    }
+
+    // both tiers fully released, nothing left in flight
+    let m = b.metrics();
+    assert_eq!(m.get("active_sessions").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(m.get("queued_requests").unwrap().as_usize().unwrap(), 0);
+    assert_eq!(m.get("canceled").unwrap().as_usize().unwrap(), 8);
+    assert_eq!(
+        m.get("warm_kv_mb").unwrap().as_f64().unwrap(),
+        0.0,
+        "canceled sessions must not leak warm blocks"
+    );
+    assert_eq!(
+        m.get("hot_kv_mb").unwrap().as_f64().unwrap(),
+        0.0,
+        "canceled sessions must not leak hot bytes"
+    );
+}
+
+#[test]
+fn streamed_tokens_bit_identical_to_non_streamed_and_serial() {
+    let addr = spawn_server(SchedulerOptions::default());
+    let mut c = Client::connect(addr);
+    let r = req(64, 3, 8);
+
+    c.send(&req_obj(64, 3, 8, false));
+    let plain = tokens_of(&c.recv());
+    assert_eq!(plain.len(), 8);
+
+    c.send(&req_obj(64, 3, 8, true));
+    let mut streamed = Vec::new();
+    let terminal = loop {
+        let v = c.recv();
+        if v.get("status").is_some() {
+            break v;
+        }
+        assert_eq!(v.get("index").unwrap().as_usize().unwrap(), streamed.len());
+        streamed.push(v.get("token").unwrap().as_f64().unwrap() as i32);
+    };
+    assert_eq!(status_of(&terminal), "completed");
+    assert_eq!(streamed, plain, "streamed tokens must be bit-identical to non-streamed");
+    assert_eq!(tokens_of(&terminal), plain);
+    assert_eq!(plain, serial_tokens(&r), "serving loop must reproduce the serial seed path");
+}
+
+#[test]
+fn interleaved_clients_each_request_exactly_one_terminal_reply() {
+    let addr = spawn_server(SchedulerOptions::default());
+    let mut clients = Vec::new();
+    for t in 0..4usize {
+        clients.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            let single = req(64, t, 3 + t);
+            let b1 = req(64, t + 11, 2);
+            let b2 = req(200, t + 23, 4);
+            let streaming = req(64, t + 37, 5);
+
+            // pipeline all three lines before reading anything, so this
+            // connection's replies interleave with its own token stream
+            c.send(&req_obj(64, t, 3 + t, false));
+            c.send(&format!(
+                "[{}, {}]",
+                req_obj(64, t + 11, 2, false),
+                req_obj(200, t + 23, 4, false)
+            ));
+            c.send(&req_obj(64, t + 37, 5, true));
+
+            let mut single_reply: Option<Json> = None;
+            let mut batch_reply: Option<Json> = None;
+            let mut stream_reply: Option<Json> = None;
+            let mut stream_id: Option<u64> = None;
+            let mut stream_tokens: Vec<i32> = Vec::new();
+            while single_reply.is_none() || batch_reply.is_none() || stream_reply.is_none() {
+                let v = c.recv();
+                if v.as_arr().is_some() {
+                    assert!(
+                        batch_reply.replace(v).is_none(),
+                        "the batch line must get exactly one reply"
+                    );
+                    continue;
+                }
+                if v.get("token").is_some() {
+                    let id = v.get("id").unwrap().as_usize().unwrap() as u64;
+                    if let Some(sid) = stream_id {
+                        assert_eq!(sid, id, "only the streaming request emits token lines");
+                    } else {
+                        stream_id = Some(id);
+                    }
+                    assert_eq!(v.get("index").unwrap().as_usize().unwrap(), stream_tokens.len());
+                    stream_tokens.push(v.get("token").unwrap().as_f64().unwrap() as i32);
+                    continue;
+                }
+                // a terminal response: the stream's (matched by id) or the
+                // single request's — each exactly once
+                let id = v.get("id").unwrap().as_usize().unwrap() as u64;
+                if stream_id == Some(id) {
+                    assert!(
+                        stream_reply.replace(v).is_none(),
+                        "the streaming request must get exactly one terminal"
+                    );
+                } else {
+                    assert!(
+                        single_reply.replace(v).is_none(),
+                        "the single request must get exactly one terminal"
+                    );
+                }
+            }
+
+            let sr = single_reply.unwrap();
+            assert_eq!(status_of(&sr), "completed");
+            assert_eq!(tokens_of(&sr), serial_tokens(&single));
+
+            let br = batch_reply.unwrap();
+            let arr = br.as_arr().unwrap();
+            assert_eq!(arr.len(), 2, "batch reply in submission order");
+            assert_eq!(status_of(&arr[0]), "completed");
+            assert_eq!(status_of(&arr[1]), "completed");
+            assert_eq!(tokens_of(&arr[0]), serial_tokens(&b1));
+            assert_eq!(tokens_of(&arr[1]), serial_tokens(&b2));
+
+            let tr = stream_reply.unwrap();
+            assert_eq!(status_of(&tr), "completed");
+            assert_eq!(stream_tokens, tokens_of(&tr));
+            assert_eq!(stream_tokens, serial_tokens(&streaming));
+
+            // a metrics round trip proves no stray reply is queued ahead
+            let m = c.metrics();
+            assert!(m.get("requests").unwrap().as_usize().unwrap() >= 4);
+        }));
+    }
+    for h in clients {
+        h.join().unwrap();
+    }
+}
+
+#[test]
+fn batch_line_replies_in_submission_order_across_buckets() {
+    let addr = spawn_server(SchedulerOptions::default());
+    let mut c = Client::connect(addr);
+    // mixed buckets with distinct output lengths: the reply array must map
+    // 1:1 onto submission order, not completion order
+    let reqs: Vec<GenerateRequest> =
+        (0..5).map(|i| req(if i % 2 == 0 { 64 } else { 300 }, i, i + 1)).collect();
+    let line: Vec<String> =
+        (0..5).map(|i| req_obj(if i % 2 == 0 { 64 } else { 300 }, i, i + 1, false)).collect();
+    c.send(&format!("[{}]", line.join(",")));
+    let reply = c.recv();
+    let arr = reply.as_arr().unwrap();
+    assert_eq!(arr.len(), 5);
+    let mut ids = Vec::new();
+    for (i, r) in arr.iter().enumerate() {
+        assert_eq!(status_of(r), "completed");
+        assert_eq!(tokens_of(r).len(), i + 1, "reply {i} out of submission order");
+        assert_eq!(tokens_of(r), serial_tokens(&reqs[i]));
+        ids.push(r.get("id").unwrap().as_usize().unwrap());
+    }
+    let unique: std::collections::BTreeSet<usize> = ids.iter().copied().collect();
+    assert_eq!(unique.len(), 5, "ids must be unique: {ids:?}");
+}
+
+#[test]
+fn flooded_queue_rejects_new_submissions_with_backpressure() {
+    // one session decodes at a time and admission happens only when the
+    // active set drains, so the flood keeps the queue non-empty for the
+    // whole test; the SLO is 50 ms
+    let addr = spawn_server(SchedulerOptions {
+        max_active: 1,
+        prefill_every: 1_000_000,
+        max_queue_wait_secs: Some(0.05),
+        ..Default::default()
+    });
+    let mut c = Client::connect(addr);
+    for i in 0..20 {
+        c.send(&req_obj(64, i, 2000, false));
+    }
+    std::thread::sleep(std::time::Duration::from_millis(120));
+
+    // by now the oldest queued request has waited well past the SLO; some
+    // of the flood may already have completed, so count as we scan
+    let mut completed = 0;
+    c.send(&req_obj(64, 99, 2, false));
+    let rejected = loop {
+        let v = c.recv();
+        match status_of(&v) {
+            "rejected" => break v,
+            "completed" => completed += 1,
+            s => panic!("unexpected terminal status {s}"),
+        }
+    };
+    assert_eq!(rejected.get("id"), Some(&Json::Null), "refused before an id was assigned");
+    assert!(
+        rejected.get("error").unwrap().as_str().unwrap().contains("queue saturated"),
+        "rejection must carry the backpressure reason"
+    );
+
+    // shutdown drains the one active request and rejects the queued flood;
+    // its reply comes after the drained/rejected terminals
+    c.send(r#"{"cmd": "shutdown"}"#);
+    let mut shutdown_rejected = 0;
+    loop {
+        let v = c.recv();
+        if let Some(ok) = v.get("ok").and_then(|o| o.as_bool()) {
+            assert!(ok);
+            break;
+        }
+        match status_of(&v) {
+            "completed" => completed += 1,
+            "rejected" => shutdown_rejected += 1,
+            s => panic!("unexpected terminal status {s}"),
+        }
+    }
+    assert!(completed >= 1, "in-flight work must drain, not be dropped");
+    assert!(shutdown_rejected >= 1, "queued work must be rejected on shutdown");
+    assert_eq!(completed + shutdown_rejected, 20, "every request resolves exactly once");
+}
+
+#[test]
+fn concurrent_results_match_the_serial_seed_path_exactly() {
+    // every request fired concurrently from 3 connections must produce the
+    // same tokens as the serial one-request-at-a-time path
+    let addr = spawn_server(SchedulerOptions::default());
+    let mut handles = Vec::new();
+    for t in 0..3usize {
+        handles.push(std::thread::spawn(move || {
+            let mut c = Client::connect(addr);
+            let mut got: BTreeMap<usize, Vec<i32>> = BTreeMap::new();
+            for i in 0..4usize {
+                let len = [64, 200, 300, 64][i];
+                c.send(&req_obj(len, t * 10 + i, 3 + i, false));
+                let v = c.recv();
+                assert_eq!(status_of(&v), "completed");
+                got.insert(i, tokens_of(&v));
+            }
+            (t, got)
+        }));
+    }
+    for h in handles {
+        let (t, got) = h.join().unwrap();
+        for (i, tokens) in got {
+            let len = [64, 200, 300, 64][i];
+            assert_eq!(
+                tokens,
+                serial_tokens(&req(len, t * 10 + i, 3 + i)),
+                "connection {t} request {i} diverged from the serial path"
+            );
+        }
+    }
+}

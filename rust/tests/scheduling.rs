@@ -106,8 +106,8 @@ fn warm_bucket_preference_cannot_starve_other_buckets() {
         if s.pending_count() < 3 {
             s.submit(req(100, 2)).unwrap();
         }
-        s.tick().unwrap();
-        if s.take_finished().iter().any(|(id, _)| *id == victim) {
+        let report = s.tick().unwrap();
+        if report.finished.iter().any(|(id, _)| *id == victim) {
             victim_done = true;
             break;
         }

@@ -150,9 +150,11 @@ fn cancel_mid_flight_releases_warm_blocks() {
         ids.push(s.submit(req).unwrap());
     }
     // run until something has spilled, then cancel every in-flight request
+    // (each tick drains its own completions, so collect as we go)
+    let mut done = Vec::new();
     let mut ticks = 0;
     while s.engine.metrics.spills == 0 && ticks < 10_000 {
-        s.tick().unwrap();
+        done.extend(s.tick().unwrap().finished);
         ticks += 1;
     }
     assert!(s.engine.metrics.spills > 0, "workload must generate spills");
@@ -165,7 +167,7 @@ fn cancel_mid_flight_releases_warm_blocks() {
         0,
         "canceled sessions must not leak warm blocks"
     );
-    let done = s.run_to_completion().unwrap();
+    done.extend(s.run_to_completion().unwrap());
     assert_eq!(done.len(), 8, "every id must resolve");
 }
 
