@@ -131,6 +131,20 @@ def build(out_dir, skip_existing=True):
             ["win_attn", "v", "length"],
             ["scores"],
         )
+        # chunked prefill: one chunk of C rows against carry-in K/V at
+        # observation width N, meta = (start, chunk_len, total_len)
+        for c in ARTIFACTS.prefill_chunk_sizes:
+            if c > n:
+                continue
+            add(
+                f"layer_prefill_chunked_{c}x{n}",
+                M.layer_prefill_chunked,
+                [sds((c, d)), sds((hk, n, dh)), sds((hk, n, dh)),
+                 sds((3,), I32)] + lw_sds,
+                ["x_chunk", "carry_k", "carry_v", "meta"]
+                + [k for k, _ in lw],
+                ["x_out", "k", "v", "win_attn", "acc_attn", "vnorm"],
+            )
     for m in ARTIFACTS.decode_buckets:
         add(
             f"layer_decode_{m}",

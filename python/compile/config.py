@@ -57,6 +57,15 @@ class ArtifactConfig:
     decode_batch_sizes: List[int] = field(
         default_factory=lambda: [2, 4, 8]
     )
+    # Chunk widths C lowered as layer_prefill_chunked_{C}x{N} for every
+    # prefill bucket N >= C: one prompt chunk (padded to C) attends over
+    # the K/V carried in from prior chunks at observation width N. The
+    # rust engine rounds its configured `prefill_chunk` up to one of
+    # these (tail chunks may land on a smaller one), falling back to the
+    # monolithic layer_prefill_{N} artifact when no pair fits.
+    prefill_chunk_sizes: List[int] = field(
+        default_factory=lambda: [128, 256]
+    )
     pool_kernel: int = 7           # maxpool smoothing width (paper App. D)
 
 

@@ -116,6 +116,97 @@ def layer_prefill(x, length, ln1, wq, wk, wv, wo, ln2, w1, w2, *, interpret=True
     return x_out, k, v, win_attn, acc_attn, vnorm
 
 
+def layer_prefill_chunked(x_chunk, carry_k, carry_v, meta,
+                          ln1, wq, wk, wv, wo, ln2, w1, w2):
+    """One transformer layer over one *chunk* of a prompt's prefill.
+
+    Chunked prefill splits a prompt into fixed-size chunks; each chunk
+    attends over the K/V carried in from prior chunks plus its own, so
+    accumulating every chunk's outputs reproduces `layer_prefill` at bucket
+    N exactly (the masks below are the monolithic ones, rewritten around
+    absolute positions).
+
+    Args:
+      x_chunk: [C, d] residual-stream rows for absolute positions
+               [start, start+C) (rows >= chunk_len are padding).
+      carry_k, carry_v: [Hk, N, dh] accumulated K/V (post-RoPE keys) from
+               prior chunks; rows >= start are unspecified and never read.
+      meta:    [3] int32 = (start, chunk_len, total_len).
+
+    Returns:
+      x_out    [C, d]      chunk rows of the layer output
+      k, v     [Hk, C, dh] the chunk's KV rows (keys post-RoPE)
+      win_attn [H, w, N]   window rows whose query position falls in this
+                           chunk (full normalized distributions; other rows
+                           exactly zero, so the rust side can accumulate
+                           panels additively)
+      acc_attn [H, N]      additive column-mass contribution of this
+                           chunk's valid query rows
+      vnorm    [Hk, N]     value L1 norms at this chunk's columns, 0 elsewhere
+    """
+    cfg = MODEL
+    lw = dict(ln1=ln1, wq=wq, wk=wk, wv=wv, wo=wo, ln2=ln2, w1=w1, w2=w2)
+    c = x_chunk.shape[0]
+    n = carry_k.shape[1]
+    start, chunk_len, total = meta[0], meta[1], meta[2]
+
+    h = rms_norm(x_chunk, ln1)
+    q = (h @ wq).reshape(c, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    k = (h @ wk).reshape(c, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    v = (h @ wv).reshape(c, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    pos = start + jnp.arange(c, dtype=jnp.int32)
+    q = rope(q, pos)
+    k = rope(k, pos)
+
+    # scatter the chunk's K/V over the carry at absolute positions — a
+    # gather + where, not dynamic_update_slice: start + C may run past N
+    # for a tail chunk and DUS would clamp the start index backwards
+    j = jnp.arange(n, dtype=jnp.int32)
+    use_chunk = (j >= start) & (j < start + chunk_len)
+    idx = jnp.clip(j - start, 0, c - 1)
+    k_full = jnp.where(use_chunk[None, :, None], k[:, idx, :], carry_k)
+    v_full = jnp.where(use_chunk[None, :, None], v[:, idx, :], carry_v)
+
+    g = cfg.group_size
+    kk = jnp.repeat(k_full, g, axis=0)                       # [H, N, dh]
+    vv = jnp.repeat(v_full, g, axis=0)
+
+    # same mask as the monolithic flash_attention (col <= row & col <
+    # length), with the query row index made absolute
+    scores = jnp.einsum("hqd,hkd->hqk", q, kk) / jnp.sqrt(
+        jnp.float32(cfg.d_head)
+    )                                                        # [H, C, N]
+    qpos = pos[None, :, None]
+    col = j[None, None, :]
+    mask = (col <= qpos) & (col < total)
+    scores = jnp.where(mask, scores, NEG_INF)
+    m = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(scores - m), 0.0)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)           # [H, C, N]
+
+    o = jnp.einsum("hqk,hkd->hqd", probs, vv)
+    attn_out = o.transpose(1, 0, 2).reshape(c, cfg.n_heads * cfg.d_head) @ wo
+    x_out = _ffn(x_chunk + attn_out, lw)
+
+    # H2O column mass: this chunk's valid query rows only (padding rows of a
+    # tail chunk fall outside [start, start+chunk_len) and contribute 0)
+    row_valid = jnp.arange(c)[None, :, None] < chunk_len
+    acc_attn = jnp.sum(jnp.where(row_valid, probs, 0.0), axis=1)
+
+    # window panel: row r belongs to query position total - w + r; rows this
+    # chunk owns carry its already-normalized probability row, others are 0
+    w = cfg.window
+    wpos = total - w + jnp.arange(w, dtype=jnp.int32)
+    owned = ((wpos >= start) & (wpos < start + chunk_len)).astype(jnp.float32)
+    widx = jnp.clip(wpos - start, 0, c - 1)
+    win_attn = probs[:, widx, :] * owned[None, :, None]      # [H, w, N]
+
+    vnorm_chunk = jnp.sum(jnp.abs(v), axis=-1)               # [Hk, C]
+    vnorm = jnp.where(use_chunk[None, :], vnorm_chunk[:, idx], 0.0)
+
+    return x_out, k, v, win_attn, acc_attn, vnorm
+
+
 def lava_score_ep(win_attn, v, length, *, interpret=True):
     """Fused LAVa scoring fast path (kernels/lava_score.py)."""
     return lava_score(

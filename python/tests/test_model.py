@@ -78,6 +78,93 @@ def test_prefill_matches_reference(params, ids):
         assert float(jnp.abs(got[li]["win_attn"][:, :, n:]).max()) == 0.0
 
 
+def run_prefill_chunked(params, ids, bucket, chunk, cbucket):
+    """Drive layer_prefill_chunked the way rust does: per layer, walk the
+    prompt in `chunk`-token steps (each padded to the `cbucket` artifact
+    width), scatter the returned K/V into the carry, and accumulate the
+    additive win/acc/vnorm panels."""
+    n = int(ids.shape[0])
+    padded = jnp.concatenate(
+        [ids, jnp.full((bucket - n,), CFG.pad_id, jnp.int32)]
+    )
+    x = M.embed(padded, params["tok_emb"])
+    outs = []
+    for li in range(CFG.n_layers):
+        carry_k = jnp.zeros((CFG.n_kv_heads, bucket, CFG.d_head))
+        carry_v = jnp.zeros_like(carry_k)
+        win = jnp.zeros((CFG.n_heads, CFG.window, bucket))
+        acc = jnp.zeros((CFG.n_heads, bucket))
+        vnorm = jnp.zeros((CFG.n_kv_heads, bucket))
+        x_next = x
+        start = 0
+        while start < n:
+            clen = min(chunk, n - start)
+            rows = x[start : start + cbucket]
+            if rows.shape[0] < cbucket:
+                rows = jnp.concatenate(
+                    [rows,
+                     jnp.zeros((cbucket - rows.shape[0], CFG.d_model))]
+                )
+            meta = jnp.array([start, clen, n], jnp.int32)
+            xo, k, v, winp, accp, vnp = M.layer_prefill_chunked(
+                rows, carry_k, carry_v, meta, *lw_args(params, li)
+            )
+            x_next = x_next.at[start : start + clen].set(xo[:clen])
+            carry_k = carry_k.at[:, start : start + clen].set(k[:, :clen])
+            carry_v = carry_v.at[:, start : start + clen].set(v[:, :clen])
+            win = win + winp
+            acc = acc + accp
+            vnorm = vnorm + vnp
+            start += clen
+        outs.append(dict(k=carry_k, v=carry_v, win_attn=win,
+                         acc_attn=acc, vnorm=vnorm, x=x_next))
+        x = x_next
+    return outs
+
+
+@pytest.mark.parametrize(
+    "chunk,cbucket",
+    [(64, 64), (48, 64), (17, 32), (100, 128)],
+    ids=["aligned", "misaligned", "tiny", "single-chunk"],
+)
+def test_chunked_prefill_matches_monolithic(params, ids, chunk, cbucket):
+    """Accumulated chunked prefill == the monolithic entrypoint, per layer.
+
+    This is the lowering-side half of the rust bit-identity contract: the
+    carry-in K/V + additive panel accumulation must reproduce the exact
+    quantities layer_prefill emits (summation order differs from the pallas
+    kernels' block order, hence float tolerances rather than equality)."""
+    n = int(ids.shape[0])
+    bucket = 128
+    mono = run_prefill_padded(params, ids, bucket)
+    got = run_prefill_chunked(params, ids, bucket, chunk, cbucket)
+    for li in range(CFG.n_layers):
+        np.testing.assert_allclose(
+            got[li]["k"][:, :n], mono[li]["k"][:, :n], atol=3e-5, rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            got[li]["v"][:, :n], mono[li]["v"][:, :n], atol=3e-5, rtol=1e-4
+        )
+        np.testing.assert_allclose(
+            got[li]["x"][:n], mono[li]["x"][:n], atol=3e-4, rtol=1e-3
+        )
+        np.testing.assert_allclose(
+            got[li]["win_attn"], mono[li]["win_attn"], atol=3e-5
+        )
+        np.testing.assert_allclose(
+            got[li]["acc_attn"][:, :n], mono[li]["acc_attn"][:, :n], atol=3e-4
+        )
+        np.testing.assert_allclose(
+            got[li]["vnorm"][:, :n], mono[li]["vnorm"][:, :n],
+            atol=3e-5, rtol=1e-4
+        )
+        # chunk-padding rows/columns must stay inert: the carry columns the
+        # prompt never reached, and every non-owned window row, are zero
+        assert float(jnp.abs(got[li]["win_attn"][:, :, n:]).max()) == 0.0
+        assert float(jnp.abs(got[li]["k"][:, n:]).max()) == 0.0
+        assert float(jnp.abs(got[li]["vnorm"][:, n:]).max()) == 0.0
+
+
 def test_logits_match_reference(params, ids):
     n = int(ids.shape[0])
     outs = run_prefill_padded(params, ids, 128)

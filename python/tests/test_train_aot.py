@@ -137,3 +137,8 @@ def test_buckets_are_compatible():
         assert n % 32 == 0 and n >= MODEL.window
     for m in ARTIFACTS.decode_buckets:
         assert m >= ARTIFACTS.prefill_buckets[0]
+    # rust names chunked artifacts layer_prefill_chunked_{C}x{N} with C =
+    # the prefill bucket a chunk rounds up to, so every lowered C must
+    # itself be a prefill bucket or the names can never match
+    for c in ARTIFACTS.prefill_chunk_sizes:
+        assert c in ARTIFACTS.prefill_buckets

@@ -48,6 +48,30 @@ fn main() {
         }
     }
 
+    // 1b. maxpool with per-call allocation vs reusable scratch — the
+    // score-path allocation the ScoreScratch refactor removed from every
+    // (q-head x layer) row; the pair's delta is the win per row
+    {
+        let mut rng = Rng::new(6);
+        let base: Vec<f32> = (0..4096).map(|_| rng.f32()).collect();
+        let mut row = base.clone();
+        let r = bench("score/maxpool_alloc/n4096", 3, 200, || {
+            row.copy_from_slice(&base);
+            score::maxpool_row(&mut row, 7);
+            std::hint::black_box(&row);
+        });
+        println!("{}", r.line());
+        results.push(r);
+        let mut scratch = Vec::new();
+        let r = bench("score/maxpool_scratch/n4096", 3, 200, || {
+            row.copy_from_slice(&base);
+            score::maxpool_row_scratch(&mut row, 7, &mut scratch);
+            std::hint::black_box(&row);
+        });
+        println!("{}", r.line());
+        results.push(r);
+    }
+
     // 2. top-B selection (Algorithm 1), flat vs fixed
     for n in [1024usize, 4096] {
         let mut rng = Rng::new(2);

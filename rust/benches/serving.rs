@@ -31,9 +31,17 @@
 //! channel → serving thread), 1 vs 8 concurrent connections, reporting
 //! TTFT mean/p99, steady-state decode tok/s, and end-to-end throughput.
 //!
-//! In `--smoke` mode the worker sweep and the serving-loop sweep are
-//! written to machine-readable `BENCH_serving.json` (CI uploads it as an
-//! artifact, so a perf trajectory exists across commits).
+//! Part 7 — chunked prefill: short sessions are mid-decode when a flood of
+//! long prompts arrives, monolithic prefill vs chunked+decode-interleaved
+//! (`prefill_chunk`/`prefill_chunk_budget`), reporting the decode sessions'
+//! inter-token gap (mean/p99/max — the head-of-line-blocking signal),
+//! long-prompt TTFT, prefill tok/s, peak KV bytes incl. the prefill
+//! transient, and the bucket-padding gauges.
+//!
+//! In `--smoke` mode the worker sweep, the serving-loop sweep, and the
+//! chunked-prefill sweep are written to machine-readable
+//! `BENCH_serving.json` (CI uploads it as an artifact, so a perf trajectory
+//! exists across commits).
 //!
 //!   cargo bench --bench serving [-- --pjrt] [-- --ctx 512] [-- --requests 24]
 //!
@@ -462,6 +470,141 @@ fn run_serving_loop_bench(ctx: usize, n_requests: usize, max_new: usize) -> Vec<
     rows
 }
 
+/// Part 7: chunked prefill vs monolithic under a long-prompt flood. Short
+/// sessions are already mid-decode when the long prompts arrive; per-tick
+/// `Instant` stamps on their token events measure how badly prefill stalls
+/// decode. The monolithic arm prefills each admitted long prompt to
+/// completion inside its admission tick (one huge inter-token gap for every
+/// decoder); the chunked arm advances at most `prefill_chunk_budget` prefill
+/// tokens per tick after the decode round, so the gap stays near the
+/// per-tick decode cost. Returns the two report rows for
+/// `BENCH_serving.json`.
+fn run_chunked_prefill_bench(ctx: usize, decode_new: usize) -> Vec<Json> {
+    use std::collections::{BTreeMap, BTreeSet};
+
+    let long_len = (ctx * 4).max(512);
+    let n_decode = 4usize;
+    let n_long = 4usize;
+    let mut rows = Vec::new();
+    let mut max_gaps: BTreeMap<&str, f64> = BTreeMap::new();
+    for (label, chunk, budget) in
+        [("monolithic", None, None), ("chunked", Some(64usize), Some(64usize))]
+    {
+        let mock = MockBackend::new(MockBackend::default_config());
+        let engine =
+            Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+        let mut sched = Scheduler::new(
+            engine,
+            SchedulerOptions {
+                max_active: 8,
+                prefill_every: 1,
+                max_prefill_batch: 4,
+                prefill_chunk: chunk,
+                prefill_chunk_budget: budget,
+                ..Default::default()
+            },
+        );
+        let mut rng = Rng::new(21);
+        for _ in 0..n_decode {
+            let inst = workloads::needle_qa(&mut rng, 64, 4);
+            sched
+                .submit(GenerateRequest { prompt: inst.prompt, max_new_tokens: decode_new })
+                .unwrap();
+        }
+        // run until every decode session is streaming, so the flood lands on
+        // a steady decode cadence
+        let mut last_token_at: BTreeMap<u64, std::time::Instant> = BTreeMap::new();
+        while last_token_at.len() < n_decode {
+            let rep = sched.tick().unwrap();
+            let now = std::time::Instant::now();
+            for (id, _) in &rep.tokens {
+                last_token_at.insert(*id, now);
+            }
+        }
+
+        // the flood: long prompts arrive while the short sessions decode
+        let flood_at = std::time::Instant::now();
+        let mut long_ids: BTreeSet<u64> = BTreeSet::new();
+        for _ in 0..n_long {
+            let inst = workloads::needle_qa(&mut rng, long_len, 4);
+            long_ids.insert(
+                sched
+                    .submit(GenerateRequest { prompt: inst.prompt, max_new_tokens: 4 })
+                    .unwrap(),
+            );
+        }
+        let mut gaps: Vec<f64> = Vec::new();
+        let mut long_ttft: BTreeMap<u64, f64> = BTreeMap::new();
+        let mut finished = 0usize;
+        while sched.has_work() {
+            let rep = sched.tick().unwrap();
+            let now = std::time::Instant::now();
+            for (id, _) in &rep.tokens {
+                if long_ids.contains(id) {
+                    long_ttft.entry(*id).or_insert_with(|| flood_at.elapsed().as_secs_f64());
+                } else if let Some(prev) = last_token_at.insert(*id, now) {
+                    gaps.push(now.duration_since(prev).as_secs_f64());
+                }
+            }
+            finished += rep.finished.len();
+        }
+        assert_eq!(finished, n_decode + n_long, "every request must complete");
+        assert_eq!(long_ttft.len(), n_long, "every long prompt must emit a first token");
+
+        gaps.sort_by(|a, b| a.total_cmp(b));
+        let gap_mean = gaps.iter().sum::<f64>() / gaps.len().max(1) as f64;
+        let gap_p99 = gaps[((gaps.len() - 1) as f64 * 0.99) as usize];
+        let gap_max = *gaps.last().unwrap();
+        max_gaps.insert(label, gap_max);
+        let ttft_mean =
+            long_ttft.values().sum::<f64>() / long_ttft.len().max(1) as f64;
+        let ttft_max = long_ttft.values().fold(0.0f64, |a, &b| a.max(b));
+        // prefill throughput: all long-prompt tokens were prefilled by the
+        // time the last long prompt produced its first token
+        let prefill_tok_s = (n_long * long_len) as f64 / ttft_max.max(1e-9);
+        let m = &sched.engine.metrics;
+        println!(
+            "{:<40} gap_ms(mean)={:.3} gap_ms(p99)={:.3} gap_ms(max)={:.3} | \
+             long_ttft_ms(mean)={:.2} long_ttft_ms(max)={:.2} prefill_tok_s={:.0} \
+             peak_kv_mb={:.2} padded_tok={} bucket_util={:.2}",
+            format!("chunked-prefill/{label}/long{long_len}"),
+            gap_mean * 1e3,
+            gap_p99 * 1e3,
+            gap_max * 1e3,
+            ttft_mean * 1e3,
+            ttft_max * 1e3,
+            prefill_tok_s,
+            m.peak_kv_bytes as f64 / 1e6,
+            m.prefill_padded_tokens,
+            m.prefill_bucket_utilization(),
+        );
+        rows.push(Json::obj(vec![
+            ("mode", Json::str(label)),
+            ("long_prompt_len", Json::num(long_len as f64)),
+            ("decode_gap_ms_mean", Json::num(gap_mean * 1e3)),
+            ("decode_gap_ms_p99", Json::num(gap_p99 * 1e3)),
+            ("decode_gap_ms_max", Json::num(gap_max * 1e3)),
+            ("long_ttft_ms_mean", Json::num(ttft_mean * 1e3)),
+            ("long_ttft_ms_max", Json::num(ttft_max * 1e3)),
+            ("prefill_tok_s", Json::num(prefill_tok_s)),
+            ("peak_kv_bytes", Json::num(m.peak_kv_bytes as f64)),
+            ("prefill_padded_tokens", Json::num(m.prefill_padded_tokens as f64)),
+            ("prefill_bucket_util", Json::num(m.prefill_bucket_utilization())),
+        ]));
+    }
+    // the point of the feature: the worst decode stall must shrink when
+    // prefill is chunked and interleaved (structurally: one 64-token chunk
+    // of layer work per tick vs four full prompts prefilled in one tick)
+    let (mono, chunked) = (max_gaps["monolithic"], max_gaps["chunked"]);
+    assert!(
+        chunked < mono,
+        "chunking must cut the worst decode stall: chunked {:.3} ms vs monolithic {:.3} ms",
+        chunked * 1e3,
+        mono * 1e3,
+    );
+    rows
+}
+
 fn main() {
     let args = Args::parse_env();
     let smoke = args.bool("smoke");
@@ -496,6 +639,8 @@ fn main() {
         println!("-- serving loop: 1 vs 8 concurrent TCP connections --");
         let serving_rows =
             run_serving_loop_bench(ctx, n_requests, if smoke { 8 } else { 32 });
+        println!("-- chunked prefill: long-prompt flood, monolithic vs interleaved --");
+        let chunked_rows = run_chunked_prefill_bench(ctx, if smoke { 64 } else { 160 });
         if smoke {
             let doc = Json::obj(vec![
                 ("bench", Json::str("serving")),
@@ -505,6 +650,7 @@ fn main() {
                 ("kv_mem_limit", Json::num(limit as f64)),
                 ("worker_sweep", Json::Arr(worker_rows)),
                 ("serving_sweep", Json::Arr(serving_rows)),
+                ("chunked_sweep", Json::Arr(chunked_rows)),
             ]);
             let path = "BENCH_serving.json";
             std::fs::write(path, json::to_string(&doc) + "\n")

@@ -11,14 +11,41 @@
 
 use super::{GroupReduce, LayerObs, ScoreKind};
 
-/// Same-padding max pool along a row.
+/// Reusable buffers for the per-head scoring pipeline. One scratch serves
+/// any number of [`kv_head_row`] calls sequentially: `row` holds the
+/// current q-head's base scores, `pool` the maxpool source copy. Scoring a
+/// layer used to allocate two fresh `Vec`s per q-head per call
+/// (`base_row`'s output and `maxpool_row`'s source snapshot); with the
+/// scratch the only per-row allocation left is the returned aggregate.
+#[derive(Debug, Default)]
+pub struct ScoreScratch {
+    row: Vec<f32>,
+    pool: Vec<f32>,
+}
+
+impl ScoreScratch {
+    pub fn new() -> ScoreScratch {
+        ScoreScratch::default()
+    }
+}
+
+/// Same-padding max pool along a row (allocating convenience wrapper over
+/// [`maxpool_row_scratch`]).
 pub fn maxpool_row(row: &mut [f32], kernel: usize) {
+    let mut src = Vec::new();
+    maxpool_row_scratch(row, kernel, &mut src);
+}
+
+/// Same-padding max pool along a row; `src` is a reusable scratch buffer
+/// that receives a copy of the input (grown on demand, never shrunk).
+pub fn maxpool_row_scratch(row: &mut [f32], kernel: usize, src: &mut Vec<f32>) {
     if kernel <= 1 || row.is_empty() {
         return;
     }
     let half = kernel / 2;
     let n = row.len();
-    let src = row.to_vec();
+    src.clear();
+    src.extend_from_slice(row);
     for i in 0..n {
         let lo = i.saturating_sub(half);
         let hi = (i + half + 1).min(n);
@@ -41,10 +68,18 @@ fn lava_vbar(obs: &LayerObs, kv: usize) -> f32 {
     vbar
 }
 
-/// Base scores for one q-head `hh` over [0, length). `vbar` is the
+/// Base scores for one q-head `hh` over [0, length), written into `out`
+/// (resized to `length`; previous contents discarded). `vbar` is the
 /// precomputed per-kv-head Lava scale (computed once per group, not per
 /// q-head); ignored by every other score kind.
-fn base_row(kind: ScoreKind, obs: &LayerObs, hh: usize, group: usize, vbar: f32) -> Vec<f32> {
+fn base_row_into(
+    kind: ScoreKind,
+    obs: &LayerObs,
+    hh: usize,
+    group: usize,
+    vbar: f32,
+    out: &mut Vec<f32>,
+) {
     let w = obs.window();
     let n = obs.bucket();
     let len = obs.length;
@@ -60,7 +95,8 @@ fn base_row(kind: ScoreKind, obs: &LayerObs, hh: usize, group: usize, vbar: f32)
         s / w as f32
     };
 
-    let mut out = vec![0.0f32; len];
+    out.clear();
+    out.resize(len, 0.0f32);
     match kind {
         ScoreKind::SnapKv => {
             for (i, o) in out.iter_mut().enumerate() {
@@ -109,12 +145,12 @@ fn base_row(kind: ScoreKind, obs: &LayerObs, hh: usize, group: usize, vbar: f32)
             }
         }
     }
-    out
 }
 
 /// One kv head's full pipeline: base scores for its q-head group ->
 /// maxpool smoothing (paper App. D; skipped for the position-based
 /// streaming score where it would be meaningless) -> GQA group reduce.
+/// `scratch` carries the reusable per-row buffers across calls.
 fn kv_head_row(
     kind: ScoreKind,
     reduce: GroupReduce,
@@ -122,6 +158,7 @@ fn kv_head_row(
     pool_kernel: usize,
     kv: usize,
     group: usize,
+    scratch: &mut ScoreScratch,
 ) -> Vec<f32> {
     let len = obs.length;
     let vbar = if kind == ScoreKind::Lava { lava_vbar(obs, kv) } else { 0.0 };
@@ -130,11 +167,11 @@ fn kv_head_row(
         GroupReduce::Max => vec![f32::NEG_INFINITY; len],
     };
     for g in 0..group {
-        let mut row = base_row(kind, obs, kv * group + g, group, vbar);
+        base_row_into(kind, obs, kv * group + g, group, vbar, &mut scratch.row);
         if !matches!(kind, ScoreKind::Streaming { .. }) {
-            maxpool_row(&mut row, pool_kernel);
+            maxpool_row_scratch(&mut scratch.row, pool_kernel, &mut scratch.pool);
         }
-        for (a, v) in agg.iter_mut().zip(&row) {
+        for (a, v) in agg.iter_mut().zip(&scratch.row) {
             match reduce {
                 GroupReduce::Mean => *a += v,
                 GroupReduce::Max => *a = a.max(*v),
@@ -166,12 +203,16 @@ pub fn kv_head_scores(
     let group = h / hk;
     let mut out: Vec<Vec<f32>> = vec![Vec::new(); hk];
     if hk > 1 && h * obs.length >= PAR_MIN_CELLS {
+        // one scratch per unit of work: heads run on different threads
         crate::util::par::scoped_for_each(out.iter_mut().enumerate(), |(kv, row)| {
-            *row = kv_head_row(kind, reduce, obs, pool_kernel, kv, group);
+            let mut scratch = ScoreScratch::new();
+            *row = kv_head_row(kind, reduce, obs, pool_kernel, kv, group, &mut scratch);
         });
     } else {
+        // serial arm: every head reuses the same buffers
+        let mut scratch = ScoreScratch::new();
         for (kv, row) in out.iter_mut().enumerate() {
-            *row = kv_head_row(kind, reduce, obs, pool_kernel, kv, group);
+            *row = kv_head_row(kind, reduce, obs, pool_kernel, kv, group, &mut scratch);
         }
     }
     out
@@ -236,6 +277,19 @@ pub(crate) mod tests {
     }
 
     #[test]
+    fn maxpool_scratch_reuse_across_lengths() {
+        let mut src = Vec::new();
+        let mut long = vec![0.0, 1.0, 0.0, 0.0, 5.0, 0.0];
+        maxpool_row_scratch(&mut long, 3, &mut src);
+        assert_eq!(long, vec![1.0, 1.0, 1.0, 5.0, 5.0, 5.0]);
+        // a shorter row through the same (larger) scratch must not see the
+        // previous call's tail values
+        let mut short = vec![2.0, 0.0];
+        maxpool_row_scratch(&mut short, 3, &mut src);
+        assert_eq!(short, vec![2.0, 2.0]);
+    }
+
+    #[test]
     fn all_kinds_rank_the_peak_high() {
         let peak = 17;
         let obs = synth_obs(4, 2, 8, 64, 50, peak, 0);
@@ -269,8 +323,9 @@ pub(crate) mod tests {
         for kind in [ScoreKind::Lava, ScoreKind::SnapKv, ScoreKind::H2o] {
             for reduce in [GroupReduce::Mean, GroupReduce::Max] {
                 let fanned = kv_head_scores(kind, reduce, &obs, 7);
+                let mut scratch = ScoreScratch::new();
                 for kv in 0..4 {
-                    let serial = kv_head_row(kind, reduce, &obs, 7, kv, 2);
+                    let serial = kv_head_row(kind, reduce, &obs, 7, kv, 2, &mut scratch);
                     assert_eq!(fanned[kv], serial, "{kind:?}/{reduce:?} head {kv}");
                 }
             }

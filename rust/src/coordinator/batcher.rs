@@ -25,17 +25,35 @@ pub struct Batcher {
     queue: VecDeque<QueuedRequest>,
     next_id: u64,
     buckets: Vec<usize>,
+    /// Accept prompts beyond the largest bucket — chunked prefill can
+    /// serve them; they batch under the largest bucket's id.
+    allow_oversize: bool,
 }
 
 impl Batcher {
     pub fn new(prefill_buckets: &[usize]) -> Batcher {
-        Batcher { queue: VecDeque::new(), next_id: 0, buckets: prefill_buckets.to_vec() }
+        Batcher {
+            queue: VecDeque::new(),
+            next_id: 0,
+            buckets: prefill_buckets.to_vec(),
+            allow_oversize: false,
+        }
+    }
+
+    /// Accept prompts beyond the largest bucket (the scheduler enables
+    /// this whenever chunked prefill is configured).
+    pub fn set_allow_oversize(&mut self, allow: bool) {
+        self.allow_oversize = allow;
     }
 
     /// Enqueue; returns the assigned request id, or None if the prompt
-    /// exceeds every bucket.
+    /// exceeds every bucket (and oversize admission is off).
     pub fn push(&mut self, request: GenerateRequest) -> Option<u64> {
-        let bucket = Runtime::pick_bucket(&self.buckets, request.prompt.len())?;
+        let bucket = match Runtime::pick_bucket(&self.buckets, request.prompt.len()) {
+            Some(b) => b,
+            None if self.allow_oversize => self.buckets.last().copied()?,
+            None => return None,
+        };
         self.next_id += 1;
         let id = self.next_id;
         self.queue.push_back(QueuedRequest {
@@ -156,6 +174,17 @@ mod tests {
         assert_eq!(id, 1);
         assert_eq!(b.queue[0].bucket, 128);
         assert!(b.push(req(4000)).is_none(), "oversized prompt rejected");
+    }
+
+    #[test]
+    fn oversize_allowed_lands_in_largest_bucket() {
+        let mut b = Batcher::new(&[128, 256, 512]);
+        b.set_allow_oversize(true);
+        let id = b.push(req(4000)).unwrap();
+        let q = b.remove(id).unwrap();
+        assert_eq!(q.bucket, 512, "oversize prompts batch under the largest bucket");
+        b.set_allow_oversize(false);
+        assert!(b.push(req(4000)).is_none(), "flag off restores the rejection");
     }
 
     #[test]

@@ -16,6 +16,38 @@
 //! Peak memory therefore never exceeds (retained caches) + (one
 //! uncompressed layer), which is exactly the property Fig. 3 measures.
 //!
+//! ## Chunked prefill: carry-in K/V, incremental observations
+//!
+//! The monolithic path above rounds the whole prompt up to one prefill
+//! bucket and holds the scheduler for its full duration. The chunked path
+//! ([`EngineWorker::begin_chunked_prefill`] /
+//! [`EngineWorker::advance_chunked_prefill`]) splits the same work into a
+//! resumable state machine ([`super::session::ChunkedPrefill`], phase
+//! `Prefilling { next_chunk }`) the scheduler can advance a few chunks at a
+//! time between decode rounds. The loop is layer-outer / chunk-inner:
+//!
+//!   1. each chunk embeds into a *tight* chunk bucket and dispatches
+//!      `layer_prefill_chunked` with the layer's **carry-in K/V** — the
+//!      `[Hk, n_obs, dh]` accumulation of all prior chunks' keys/values
+//!      (`n_obs` = the monolithic prefill bucket), which the backend
+//!      attends over (rows ≥ the chunk's start are never read);
+//!   2. the chunk's observation contributions accumulate additively:
+//!      window-attention rows land whole in the chunk owning their query
+//!      position, acc-attention/value-norm columns in the chunk owning the
+//!      position — so when the last chunk lands, `LayerObs` is
+//!      *bit-identical* to the monolithic `layer_prefill` output;
+//!   3. layer completion then runs the exact same code as the monolithic
+//!      path (`compress_prefilled_layer`: Algorithm 1 scoring, Eq. 7
+//!      entropy weights, the Algorithm 2 recompression cascade), yielding
+//!      identical tokens, budgets, and keep-sets at every chunk size.
+//!
+//! The carry K/V is the layer's uncompressed cache and stays O(prompt);
+//! what chunking buys is tight dispatch shapes (a 4 097-token prompt no
+//! longer pays for the 8 192 bucket on every layer), prompts longer than
+//! the largest prefill bucket (`n_obs` falls back to the exact prompt
+//! length), and — via the scheduler interleaving — decode rounds that are
+//! no longer head-of-line-blocked by long prompts.
+//!
 //! ## Decode: gather → one dispatch per layer → scatter
 //!
 //! [`EngineWorker::decode_step_batch`] advances B sessions sharing a
@@ -56,12 +88,12 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
-use super::session::{Phase, Session};
+use super::session::{ChunkedPrefill, Phase, Session};
 use crate::compress::select::{select_prefill, select_recompress, KeepSet};
 use crate::compress::{alloc, score, LayerAlloc, LayerObs, Policy, ScoreKind};
 use crate::kvcache::tier::Residency;
 use crate::kvcache::HotStore;
-use crate::model::backend::{ModelBackend, PrefillOut};
+use crate::model::backend::ModelBackend;
 use crate::model::ModelConfig;
 use crate::runtime::{Runtime, Tensor};
 
@@ -151,6 +183,11 @@ pub struct PrefillReport {
     pub peak_transient: usize,
     /// Live KV bytes after compression settled.
     pub live_after: usize,
+    /// One `(prefill bucket, valid tokens)` pair per backend prefill
+    /// dispatch (monolithic: L entries at the prompt bucket; chunked: one
+    /// per chunk per layer at the tight chunk bucket) — feeds the
+    /// bucket-waste gauges.
+    pub bucket_fills: Vec<(usize, usize)>,
 }
 
 /// Shareable, `Copy` compute view of the engine: backend + options, no
@@ -228,11 +265,26 @@ impl<B: ModelBackend> Engine<B> {
     pub fn absorb_prefill(&mut self, report: &PrefillReport) {
         self.metrics.observe_transient(report.peak_transient);
         self.metrics.observe_kv(report.live_after);
+        for &(bucket, valid) in &report.bucket_fills {
+            self.metrics.observe_prefill_fill(bucket, valid);
+        }
     }
 
     /// Run prefill under the configured policy (Algorithms 1 + 2).
     pub fn prefill(&mut self, sess: &mut Session) -> Result<i32> {
         let report = self.worker().prefill(sess)?;
+        self.absorb_prefill(&report);
+        Ok(report.token)
+    }
+
+    /// Chunked prefill driven to completion in one call (tests/bench use;
+    /// the scheduler drives `begin`/`advance` incrementally across ticks).
+    /// Bit-identical to [`Engine::prefill`] at every chunk size.
+    pub fn prefill_chunked(&mut self, sess: &mut Session, chunk: usize) -> Result<i32> {
+        self.worker().begin_chunked_prefill(sess, chunk)?;
+        let (_, report) = self.worker().advance_chunked_prefill(sess, None)?;
+        let report =
+            report.ok_or_else(|| anyhow!("unbounded advance must complete the prefill"))?;
         self.absorb_prefill(&report);
         Ok(report.token)
     }
@@ -305,16 +357,16 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     }
 
     /// Compute policy scores for one prefilled layer -> [Hk][length].
-    fn layer_scores(&self, out: &PrefillOut) -> Result<Vec<Vec<f32>>> {
+    /// Takes the observations + values directly so the monolithic and
+    /// chunked paths (which assemble them differently) share one scorer.
+    fn layer_scores(&self, obs: &LayerObs, v: &Tensor) -> Result<Vec<Vec<f32>>> {
         let p = &self.opts.policy;
         if p.score == ScoreKind::Lava && self.opts.use_fused_score {
-            if let Some(s) =
-                self.backend.fused_lava_score(&out.obs.win_attn, &out.v, out.obs.length)?
-            {
+            if let Some(s) = self.backend.fused_lava_score(&obs.win_attn, v, obs.length)? {
                 return Ok(s);
             }
         }
-        Ok(score::kv_head_scores(p.score, p.group_reduce, &out.obs, self.opts.pool_kernel))
+        Ok(score::kv_head_scores(p.score, p.group_reduce, obs, self.opts.pool_kernel))
     }
 
     /// Dynamic-allocation weight for one layer (LAVa Eq. 7 or CAKE Eq. 23).
@@ -350,6 +402,65 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             .ok_or_else(|| anyhow!("no decode bucket >= {need}"))
     }
 
+    /// Score + compress one fully-observed prefill layer: Algorithm 1 keep
+    /// selection, the dynamic budget resplit (Eq. 7 / CAKE), the cache load,
+    /// and the Algorithm 2 recompression cascade over earlier layers.
+    /// Shared verbatim by the monolithic and chunked prefill paths so the
+    /// two are bit-identical by construction.
+    #[allow(clippy::too_many_arguments)]
+    fn compress_prefilled_layer(
+        &self,
+        sess: &mut Session,
+        l: usize,
+        k: &Tensor,
+        v: &Tensor,
+        obs: &LayerObs,
+        n: usize,
+        budgets: &mut [usize],
+        weights: &mut Vec<f64>,
+        floor: usize,
+    ) -> Result<()> {
+        let cfg = self.backend.config();
+        let full = self.opts.policy.full_cache;
+        let dynamic = self.opts.policy.dynamic_layer();
+        let keepset: KeepSet = if full {
+            KeepSet {
+                keep: (0..cfg.n_kv_heads).map(|_| (0..n).collect()).collect(),
+                scores: (0..cfg.n_kv_heads).map(|_| vec![f32::MAX; n]).collect(),
+            }
+        } else {
+            let scores = self.layer_scores(obs, v)?;
+            if dynamic {
+                weights.push(self.layer_weight(&scores, obs));
+                let total = self.total_budget();
+                let split = alloc::proportional(weights, total, floor);
+                budgets[..=l].copy_from_slice(&split);
+            }
+            select_prefill(&scores, n, budgets[l], cfg.window, self.opts.policy.head_alloc)
+        };
+
+        let capacity = self.capacity_for(
+            if full { n * cfg.n_kv_heads } else { budgets[l] },
+            n,
+            sess.max_new_tokens,
+        )?;
+        let mut cache = HotStore::new(cfg.n_kv_heads, cfg.d_head, capacity);
+        cache.load_from_prefill(k, v, &keepset.keep, &keepset.scores);
+        sess.caches.push(cache);
+        sess.residency.push(Residency::Hot);
+
+        // Algorithm 2: recompress earlier layers to their shrunken budgets.
+        if dynamic {
+            recompress_earlier(
+                &mut sess.caches[..l],
+                budgets,
+                cfg.n_kv_heads,
+                self.opts.policy.head_alloc,
+            );
+        }
+        Ok(())
+    }
+
     /// Run prefill under the configured policy (Algorithms 1 + 2). Pure
     /// compute: metrics observations come back in the report.
     pub fn prefill(&self, sess: &mut Session) -> Result<PrefillReport> {
@@ -362,7 +473,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         }
         let bucket = Runtime::pick_bucket(self.backend.prefill_buckets(), n)
             .ok_or_else(|| anyhow!("prompt length {n} exceeds the largest prefill bucket"))?;
-        sess.phase = Phase::Prefilling;
+        sess.phase = Phase::Prefilling { next_chunk: 0 };
 
         let mut x = self.backend.embed(&sess.prompt, bucket)?;
         let floor = cfg.n_kv_heads * w;
@@ -378,6 +489,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         let mut weights: Vec<f64> = Vec::with_capacity(cfg.n_layers);
         let uncompressed_layer_bytes = 2 * cfg.n_kv_heads * n * cfg.d_head * 4;
         let mut peak_transient = 0usize;
+        let mut bucket_fills = Vec::with_capacity(cfg.n_layers);
 
         for l in 0..cfg.n_layers {
             let out = self.backend.layer_prefill(l, &x, n)?;
@@ -385,42 +497,19 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             // transient peak: retained caches + this uncompressed layer
             let retained: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
             peak_transient = peak_transient.max(retained + uncompressed_layer_bytes);
+            bucket_fills.push((bucket, n));
 
-            let keepset: KeepSet = if full {
-                KeepSet {
-                    keep: (0..cfg.n_kv_heads).map(|_| (0..n).collect()).collect(),
-                    scores: (0..cfg.n_kv_heads).map(|_| vec![f32::MAX; n]).collect(),
-                }
-            } else {
-                let scores = self.layer_scores(&out)?;
-                if dynamic {
-                    weights.push(self.layer_weight(&scores, &out.obs));
-                    let total = self.total_budget();
-                    let split = alloc::proportional(&weights, total, floor);
-                    budgets[..=l].copy_from_slice(&split);
-                }
-                select_prefill(&scores, n, budgets[l], w, self.opts.policy.head_alloc)
-            };
-
-            let capacity = self.capacity_for(
-                if full { n * cfg.n_kv_heads } else { budgets[l] },
+            self.compress_prefilled_layer(
+                sess,
+                l,
+                &out.k,
+                &out.v,
+                &out.obs,
                 n,
-                sess.max_new_tokens,
+                &mut budgets,
+                &mut weights,
+                floor,
             )?;
-            let mut cache = HotStore::new(cfg.n_kv_heads, cfg.d_head, capacity);
-            cache.load_from_prefill(&out.k, &out.v, &keepset.keep, &keepset.scores);
-            sess.caches.push(cache);
-            sess.residency.push(Residency::Hot);
-
-            // Algorithm 2: recompress earlier layers to their shrunken budgets.
-            if dynamic {
-                recompress_earlier(
-                    &mut sess.caches[..l],
-                    &budgets,
-                    cfg.n_kv_heads,
-                    self.opts.policy.head_alloc,
-                );
-            }
 
             x = out.x_out;
         }
@@ -438,7 +527,239 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         sess.next_pos = n;
         sess.phase = Phase::Decoding;
         sess.prefill_secs = t0.elapsed().as_secs_f64();
-        Ok(PrefillReport { token: tok, peak_transient, live_after: live })
+        Ok(PrefillReport { token: tok, peak_transient, live_after: live, bucket_fills })
+    }
+
+    /// Tight prefill bucket for one chunk of `chunk_len` tokens (falls back
+    /// to the exact length when even the smallest bucket is exceeded — only
+    /// possible with over-bucket chunk sizes).
+    fn chunk_bucket(&self, chunk_len: usize) -> usize {
+        Runtime::pick_bucket(self.backend.prefill_buckets(), chunk_len).unwrap_or(chunk_len)
+    }
+
+    /// Whether the backend can serve every chunk shape a chunked prefill of
+    /// this prompt would dispatch (the scheduler's per-chunk fallback: when
+    /// false, the prompt routes to the monolithic path instead).
+    pub fn chunked_prefill_supported(&self, prompt_len: usize, chunk: usize) -> bool {
+        if chunk == 0 || prompt_len == 0 {
+            return false;
+        }
+        let n_obs = Runtime::pick_bucket(self.backend.prefill_buckets(), prompt_len)
+            .unwrap_or(prompt_len);
+        // at most two distinct chunk shapes: the full chunk and the tail
+        let full = chunk.min(prompt_len);
+        let tail = prompt_len % chunk;
+        let mut shapes = vec![self.chunk_bucket(full)];
+        if tail != 0 && prompt_len > chunk {
+            shapes.push(self.chunk_bucket(tail));
+        }
+        shapes
+            .iter()
+            .all(|&cb| self.backend.supports_chunked_prefill(cb, n_obs))
+    }
+
+    /// Install the resumable chunked-prefill state machine on the session
+    /// (phase `Prefilling { next_chunk: 0 }`). The actual compute happens in
+    /// [`EngineWorker::advance_chunked_prefill`] calls.
+    pub fn begin_chunked_prefill(&self, sess: &mut Session, chunk: usize) -> Result<()> {
+        let t0 = std::time::Instant::now();
+        let cfg = self.backend.config();
+        let n = sess.prompt.len();
+        let w = cfg.window;
+        if n < w + 1 {
+            bail!("prompt length {n} must exceed the window {w}");
+        }
+        if chunk == 0 {
+            bail!("prefill chunk size must be >= 1");
+        }
+        let (h, hk, dh, d) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model);
+        // observation width: the monolithic bucket, or the exact prompt
+        // length for prompts beyond the largest bucket (servable only here)
+        let n_obs =
+            Runtime::pick_bucket(self.backend.prefill_buckets(), n).unwrap_or(n);
+        let x = self.backend.embed(&sess.prompt, n)?.into_f32()?;
+        let floor = hk * w;
+        let budgets = if self.opts.policy.full_cache {
+            vec![n * hk; cfg.n_layers]
+        } else if self.opts.policy.dynamic_layer() {
+            vec![0; cfg.n_layers]
+        } else {
+            self.static_budgets(floor)
+        };
+        sess.phase = Phase::Prefilling { next_chunk: 0 };
+        sess.prefill = Some(Box::new(ChunkedPrefill {
+            chunk,
+            n_obs,
+            n_chunks: n.div_ceil(chunk),
+            layer: 0,
+            chunk_idx: 0,
+            x,
+            x_next: vec![0.0; n * d],
+            carry_k: Tensor::zeros(&[hk, n_obs, dh]),
+            carry_v: Tensor::zeros(&[hk, n_obs, dh]),
+            win: vec![0.0; h * w * n_obs],
+            acc: vec![0.0; h * n_obs],
+            vnorm: vec![0.0; hk * n_obs],
+            weights: Vec::with_capacity(cfg.n_layers),
+            budgets,
+            peak_transient: 0,
+            bucket_fills: Vec::new(),
+            wait_secs: 0.0,
+            enqueued_at: sess.queued_at,
+        }));
+        sess.prefill_secs += t0.elapsed().as_secs_f64();
+        Ok(())
+    }
+
+    /// Advance a chunked prefill by up to `max_tokens` tokens of work (one
+    /// chunk through one layer = `chunk_len` tokens; the whole prefill is
+    /// `n_chunks * n_layers` dispatches). At least one chunk is dispatched
+    /// per call so progress is guaranteed even under a tiny budget; `None`
+    /// runs to completion. Returns the tokens actually advanced plus the
+    /// final [`PrefillReport`] once the prompt's first token exists.
+    pub fn advance_chunked_prefill(
+        &self,
+        sess: &mut Session,
+        max_tokens: Option<usize>,
+    ) -> Result<(usize, Option<PrefillReport>)> {
+        let t0 = std::time::Instant::now();
+        let cfg = self.backend.config().clone();
+        let (h, hk, w, dh, d) =
+            (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head, cfg.d_model);
+        let n = sess.prompt.len();
+        let floor = hk * w;
+        let uncompressed_layer_bytes = 2 * hk * n * dh * 4;
+        let mut st = sess
+            .prefill
+            .take()
+            .ok_or_else(|| anyhow!("advance_chunked_prefill before begin (session {})", sess.id))?;
+        let mut worked = 0usize;
+        let mut finished = false;
+
+        while st.layer < cfg.n_layers {
+            if let Some(budget) = max_tokens {
+                if worked >= budget {
+                    break;
+                }
+            }
+            let start = st.chunk_idx * st.chunk;
+            let chunk_len = st.chunk.min(n - start);
+            let c_bucket = self.chunk_bucket(chunk_len);
+            let mut xc = vec![0.0f32; c_bucket * d];
+            xc[..chunk_len * d].copy_from_slice(&st.x[start * d..(start + chunk_len) * d]);
+            let x_chunk = Tensor::f32(xc, &[c_bucket, d]);
+            let out = self.backend.layer_prefill_chunked(
+                st.layer,
+                &x_chunk,
+                &st.carry_k,
+                &st.carry_v,
+                start,
+                chunk_len,
+                n,
+            )?;
+
+            // scatter the chunk's K/V rows into the carry
+            {
+                let cb = out.k.shape[1];
+                let kc = out.k.as_f32()?;
+                let vc = out.v.as_f32()?;
+                let ck = st.carry_k.as_f32_mut()?;
+                let cv = st.carry_v.as_f32_mut()?;
+                for kv in 0..hk {
+                    let dst = (kv * st.n_obs + start) * dh;
+                    let src = kv * cb * dh;
+                    ck[dst..dst + chunk_len * dh]
+                        .copy_from_slice(&kc[src..src + chunk_len * dh]);
+                    cv[dst..dst + chunk_len * dh]
+                        .copy_from_slice(&vc[src..src + chunk_len * dh]);
+                }
+            }
+            // accumulate observations: owned window rows land whole,
+            // acc/vnorm contributions add (zero outside the chunk's columns)
+            for (r, row) in &out.win_rows {
+                for hh in 0..h {
+                    st.win[(hh * w + r) * st.n_obs..(hh * w + r + 1) * st.n_obs]
+                        .copy_from_slice(&row[hh * st.n_obs..(hh + 1) * st.n_obs]);
+                }
+            }
+            for (dst, src) in st.acc.iter_mut().zip(&out.acc) {
+                *dst += src;
+            }
+            for (dst, src) in st.vnorm.iter_mut().zip(&out.vnorm) {
+                *dst += src;
+            }
+            let xo = out.x_out.as_f32()?;
+            st.x_next[start * d..(start + chunk_len) * d].copy_from_slice(&xo[..chunk_len * d]);
+            st.bucket_fills.push((c_bucket, chunk_len));
+            worked += chunk_len;
+            st.chunk_idx += 1;
+
+            if st.chunk_idx == st.n_chunks {
+                // layer complete: transient peak exactly as the monolithic
+                // path observes it (retained earlier layers + this carry)
+                let retained: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
+                st.peak_transient = st.peak_transient.max(retained + uncompressed_layer_bytes);
+                let l = st.layer;
+                let obs = LayerObs {
+                    win_attn: Tensor::f32(std::mem::take(&mut st.win), &[h, w, st.n_obs]),
+                    acc_attn: Tensor::f32(std::mem::take(&mut st.acc), &[h, st.n_obs]),
+                    vnorm: Tensor::f32(std::mem::take(&mut st.vnorm), &[hk, st.n_obs]),
+                    length: n,
+                };
+                let mut budgets = std::mem::take(&mut st.budgets);
+                let mut weights = std::mem::take(&mut st.weights);
+                self.compress_prefilled_layer(
+                    sess,
+                    l,
+                    &st.carry_k,
+                    &st.carry_v,
+                    &obs,
+                    n,
+                    &mut budgets,
+                    &mut weights,
+                    floor,
+                )?;
+                st.budgets = budgets;
+                st.weights = weights;
+                st.layer += 1;
+                st.chunk_idx = 0;
+                std::mem::swap(&mut st.x, &mut st.x_next);
+                if st.layer < cfg.n_layers {
+                    // fresh accumulators; the carry needs no reset — the
+                    // next layer rewrites every row before it is readable
+                    st.win = vec![0.0; h * w * st.n_obs];
+                    st.acc = vec![0.0; h * st.n_obs];
+                    st.vnorm = vec![0.0; hk * st.n_obs];
+                } else {
+                    finished = true;
+                    break;
+                }
+            }
+        }
+
+        if !finished {
+            sess.phase = Phase::Prefilling { next_chunk: st.chunk_idx };
+            sess.prefill = Some(st);
+            sess.prefill_secs += t0.elapsed().as_secs_f64();
+            return Ok((worked, None));
+        }
+
+        sess.budgets = std::mem::take(&mut st.budgets);
+        let live: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
+        let x_last = Tensor::f32(st.x[(n - 1) * d..n * d].to_vec(), &[1, d]);
+        let logits = self.backend.logits(&x_last)?;
+        let tok = argmax(&logits);
+        sess.generated.push(tok);
+        sess.next_pos = n;
+        sess.phase = Phase::Decoding;
+        sess.prefill_secs += t0.elapsed().as_secs_f64();
+        let report = PrefillReport {
+            token: tok,
+            peak_transient: st.peak_transient,
+            live_after: live,
+            bucket_fills: std::mem::take(&mut st.bucket_fills),
+        };
+        Ok((worked, Some(report)))
     }
 
     /// One serial decode step: feed the last generated token, produce the
@@ -965,6 +1286,117 @@ mod tests {
     fn short_prompt_rejected() {
         let mut e = engine("lava", 32);
         assert!(e.prefill_only(&prompt(8)).is_err());
+        let mut e = engine("lava", 32);
+        let req = GenerateRequest { prompt: prompt(8), max_new_tokens: 1 };
+        let mut s = e.new_session(&req);
+        assert!(e.worker().begin_chunked_prefill(&mut s, 64).is_err());
+    }
+
+    /// Per-layer cache fingerprint: (capacity, per-head kept (position,
+    /// score) pairs) — the keep-set identity the chunked path must preserve.
+    fn cache_fingerprint(sess: &Session) -> Vec<(usize, Vec<Vec<(i32, f32)>>)> {
+        sess.caches
+            .iter()
+            .map(|c| {
+                let heads = (0..c.n_kv_heads())
+                    .map(|h| (0..c.head_len(h)).map(|i| (c.position(h, i), c.score(h, i))).collect())
+                    .collect();
+                (c.capacity(), heads)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn chunked_prefill_is_bit_identical_to_monolithic() {
+        for name in ["lava", "h2o", "snapkv", "full"] {
+            let mut mono = engine(name, 24);
+            let req = GenerateRequest { prompt: prompt(200), max_new_tokens: 6 };
+            let mut ms = mono.new_session(&req);
+            mono.prefill(&mut ms).unwrap();
+            // 256 = one chunk (>= prompt), 96 = misaligned tail, 17 = tiny
+            for chunk in [256usize, 96, 17] {
+                let mut e = engine(name, 24);
+                let mut s = e.new_session(&req);
+                e.prefill_chunked(&mut s, chunk).unwrap();
+                assert!(s.prefill.is_none(), "state machine must be torn down");
+                assert_eq!(s.generated, ms.generated, "{name}/{chunk}: first token");
+                assert_eq!(s.budgets, ms.budgets, "{name}/{chunk}: budgets");
+                assert_eq!(
+                    cache_fingerprint(&s),
+                    cache_fingerprint(&ms),
+                    "{name}/{chunk}: keep-sets"
+                );
+                // and decode stays in lockstep on the compressed caches
+                for _ in 0..5 {
+                    let a = mono.decode_step(&mut ms).unwrap();
+                    let b = e.decode_step(&mut s).unwrap();
+                    assert_eq!(a, b, "{name}/{chunk}: decode token");
+                }
+                // rewind the monolithic session for the next chunk size
+                let mut fresh = mono.new_session(&req);
+                mono.prefill(&mut fresh).unwrap();
+                ms = fresh;
+            }
+        }
+    }
+
+    #[test]
+    fn chunked_prefill_advances_incrementally_under_budget() {
+        let mut e = engine("lava", 24);
+        let req = GenerateRequest { prompt: prompt(150), max_new_tokens: 2 };
+        let mut s = e.new_session(&req);
+        let w = e.worker();
+        w.begin_chunked_prefill(&mut s, 32).unwrap();
+        assert_eq!(s.phase, Phase::Prefilling { next_chunk: 0 });
+        let mut advances = 0;
+        let report = loop {
+            let (tokens, report) = w.advance_chunked_prefill(&mut s, Some(64)).unwrap();
+            advances += 1;
+            assert!(tokens > 0, "every advance makes progress");
+            assert!(tokens <= 64, "budget respected (one-chunk overshoot only)");
+            if let Some(r) = report {
+                break r;
+            }
+            assert!(matches!(s.phase, Phase::Prefilling { .. }));
+        };
+        // 150 tokens × 4 layers = 600 token-dispatches at ≤ 64/advance
+        assert!(advances >= 600 / 64, "prefill spanned multiple advances: {advances}");
+        assert_eq!(s.phase, Phase::Decoding);
+        assert_eq!(report.bucket_fills.len(), 5 * 4, "5 chunks × 4 layers");
+        // the mock's smallest prefill bucket is 128, so every 32-token
+        // chunk dispatches at bucket 128 with <= 32 valid rows
+        assert!(report.bucket_fills.iter().all(|&(b, v)| b == 128 && v <= 32));
+
+        // identical to the monolithic run
+        let mut mono = engine("lava", 24);
+        let mut ms = mono.new_session(&req);
+        let mr = mono.worker().prefill(&mut ms).unwrap();
+        assert_eq!(report.token, mr.token);
+        assert_eq!(report.peak_transient, mr.peak_transient);
+        assert_eq!(report.live_after, mr.live_after);
+        assert_eq!(s.budgets, ms.budgets);
+    }
+
+    #[test]
+    fn chunked_prefill_serves_over_bucket_prompts() {
+        let mut mock = MockBackend::new(MockBackend::default_config());
+        mock.hot_positions = vec![40, 41, 42];
+        mock.buckets_prefill = vec![64, 128, 256];
+        let mut e = Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+        let req = GenerateRequest { prompt: prompt(600), max_new_tokens: 4 };
+        // monolithic: rejected (no bucket >= 600)
+        let mut ms = e.new_session(&req);
+        assert!(e.prefill(&mut ms).is_err());
+        // chunked: n_obs falls back to the exact prompt length
+        assert!(e.worker().chunked_prefill_supported(600, 128));
+        let mut s = e.new_session(&req);
+        e.prefill_chunked(&mut s, 128).unwrap();
+        assert_eq!(s.generated.len(), 1);
+        assert_eq!(s.budgets.iter().sum::<usize>(), 24 * 4 * 4);
+        while !s.is_done() {
+            e.decode_step(&mut s).unwrap();
+        }
+        assert_eq!(s.generated.len(), 4);
     }
 
     #[test]

@@ -43,6 +43,13 @@ pub struct Metrics {
     /// Admission deferral events (a queued request bounced for memory and
     /// requeued; one event per request per admission round).
     pub requests_deferred: u64,
+    /// Bucket-waste gauges: padding rows dispatched across all backend
+    /// prefill executions (bucket − valid tokens, summed), plus per-bucket
+    /// dispatch/valid/padded breakdowns. Chunked prefill shrinks these by
+    /// mapping each chunk to a tight bucket instead of rounding the whole
+    /// prompt up.
+    pub prefill_padded_tokens: u64,
+    pub prefill_fills: BTreeMap<usize, BucketFill>,
     /// Peak live KV bytes observed (incl. the transient uncompressed layer
     /// during prefill — the paper's "memory peak").
     pub peak_kv_bytes: usize,
@@ -90,6 +97,16 @@ pub struct Metrics {
     pub peak_tier_staged_bytes: usize,
     pub tier_busy_secs: f64,
     started: Option<Instant>,
+}
+
+/// Per-prefill-bucket fill accounting: how many dispatches ran at this
+/// bucket, how many of their rows were real prompt tokens, and how many
+/// were padding. utilization = valid / (valid + padded).
+#[derive(Debug, Default, Clone, PartialEq, Eq)]
+pub struct BucketFill {
+    pub dispatches: u64,
+    pub valid_tokens: u64,
+    pub padded_tokens: u64,
 }
 
 /// Point-in-time copy of the serving metrics plus in-flight gauges, cheap
@@ -157,6 +174,28 @@ impl Metrics {
     /// Record one admission deferral event.
     pub fn observe_deferral(&mut self) {
         self.requests_deferred += 1;
+    }
+
+    /// Record one backend prefill dispatch at `bucket` with `valid` real
+    /// prompt rows (the rest of the bucket was padding).
+    pub fn observe_prefill_fill(&mut self, bucket: usize, valid: usize) {
+        let padded = bucket.saturating_sub(valid) as u64;
+        let e = self.prefill_fills.entry(bucket).or_default();
+        e.dispatches += 1;
+        e.valid_tokens += valid as u64;
+        e.padded_tokens += padded;
+        self.prefill_padded_tokens += padded;
+    }
+
+    /// Fraction of dispatched prefill rows that were real prompt tokens
+    /// (1.0 = no bucket waste; 0 when no prefill ran yet).
+    pub fn prefill_bucket_utilization(&self) -> f64 {
+        let valid: u64 = self.prefill_fills.values().map(|f| f.valid_tokens).sum();
+        let total = valid + self.prefill_padded_tokens;
+        if total == 0 {
+            return 0.0;
+        }
+        valid as f64 / total as f64
     }
 
     /// Record one worker-pool fan-out: the pool width, each spawned
@@ -311,6 +350,7 @@ impl Metrics {
              spill_ms(mean)={:.3} prefetch_ms(mean)={:.3} \
              throughput_tok_s={:.1} admission_rounds={} decode_steps={} \
              decode_batches={} batch_occupancy={:.2} decode_dispatches={} \
+             prefill_padded_tokens={} prefill_bucket_util={:.2} \
              workers={} worker_util={:.2} worker_busy_ms=[{}] \
              tier_spill_q={} tier_prefetch_q={} tier_q_peak={} \
              tier_staged_mb(peak)={:.2} tier_busy_ms={:.3}",
@@ -342,6 +382,8 @@ impl Metrics {
             self.decode_batches,
             self.batch_occupancy(),
             self.decode_dispatches_total(),
+            self.prefill_padded_tokens,
+            self.prefill_bucket_utilization(),
             self.workers,
             self.worker_utilization(),
             worker_busy.join(","),
@@ -452,6 +494,26 @@ mod tests {
         assert!(report.contains("workers=2"));
         assert!(report.contains("worker_util=0.50"));
         assert!(report.contains("tier_q_peak=5"));
+    }
+
+    #[test]
+    fn prefill_fill_accounting() {
+        let mut m = Metrics::new();
+        assert_eq!(m.prefill_bucket_utilization(), 0.0, "no prefill yet");
+        // a monolithic 100-token prefill at bucket 128, 2 layers
+        m.observe_prefill_fill(128, 100);
+        m.observe_prefill_fill(128, 100);
+        // a chunked dispatch at a tight 32 bucket, full
+        m.observe_prefill_fill(32, 32);
+        assert_eq!(m.prefill_padded_tokens, 56);
+        let f = m.prefill_fills.get(&128).unwrap();
+        assert_eq!(f.dispatches, 2);
+        assert_eq!(f.valid_tokens, 200);
+        assert_eq!(f.padded_tokens, 56);
+        assert_eq!(m.prefill_fills.get(&32).unwrap().padded_tokens, 0);
+        let util = m.prefill_bucket_utilization();
+        assert!((util - 232.0 / 288.0).abs() < 1e-9, "{util}");
+        assert!(m.report().contains("prefill_padded_tokens=56"));
     }
 
     #[test]

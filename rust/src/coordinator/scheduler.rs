@@ -64,11 +64,30 @@
 //! victims. This is the same per-session headroom the admission contract
 //! already assumed before tiering (decode growth was never part of
 //! `projected_bytes`).
+//!
+//! ## Chunked prefill (`prefill_chunk`)
+//!
+//! With `prefill_chunk` set, admission installs the engine's resumable
+//! chunked-prefill state machine (`EngineWorker::begin_chunked_prefill` /
+//! `advance_chunked_prefill`) instead of running a monolithic prefill:
+//! every chunk dispatches at its own *tight* prefill bucket, carry-in K/V
+//! and window observations accumulate per layer, and Algorithm 2 runs on
+//! each completed layer exactly as the monolithic path — tokens, per-layer
+//! budgets, and keep-sets are bit-identical at every chunk size. Prompts
+//! longer than the largest prefill bucket become servable (the batcher
+//! files them under its largest bucket). With `prefill_chunk_budget` also
+//! set, mid-prefill sessions live in `prefilling` and advance at most that
+//! many prompt tokens per tick *after* the decode round, so a long prompt
+//! no longer head-of-line-blocks the inter-token latency of active
+//! decodes. Mid-prefill sessions hold admission slots and reserve their
+//! full projected bytes ([`Scheduler::prefilling_reserved_bytes`]), stay
+//! out of the incremental `hot_bytes` counter until their first token, and
+//! are never spill victims.
 
 use std::collections::VecDeque;
 use std::fmt;
 
-use anyhow::Result;
+use anyhow::{anyhow, Result};
 
 use super::batcher::{Batcher, QueuedRequest};
 use super::engine::{Engine, FinishStatus, GenerateRequest, GenerateResult, PrefillReport};
@@ -77,6 +96,7 @@ use super::pool::WorkerPool;
 use super::session::Session;
 use crate::kvcache::tier::{Residency, TierClient};
 use crate::model::backend::ModelBackend;
+use crate::runtime::Runtime;
 
 #[derive(Debug, Clone)]
 pub struct SchedulerOptions {
@@ -109,6 +129,22 @@ pub struct SchedulerOptions {
     /// every width — all decisions are planned before the fan-out — only
     /// wall time changes.
     pub workers: usize,
+    /// Chunked prefill: split every prompt's prefill into chunks of this
+    /// many tokens, each dispatched at its own *tight* prefill bucket
+    /// (`None` = the old monolithic one-bucket prefill). Makes prompts
+    /// beyond the largest prefill bucket servable. Tokens, budgets, and
+    /// keep-sets are bit-identical to monolithic at every chunk size —
+    /// only dispatch shapes and scheduling change. The default honors
+    /// `LAVA_PREFILL_CHUNK` (unset or 0 = off).
+    pub prefill_chunk: Option<usize>,
+    /// Decode-interleaved chunked prefill: advance at most this many
+    /// tokens of prefill work per tick (one chunk through one layer counts
+    /// its chunk length), *after* the decode round, so long prompts do not
+    /// head-of-line-block active decodes. `None` = finish each admitted
+    /// prefill within its admission tick (chunked compute, monolithic
+    /// scheduling); 0 is treated as 1 so mid-prefill sessions always make
+    /// progress. Ignored without `prefill_chunk`.
+    pub prefill_chunk_budget: Option<usize>,
 }
 
 fn default_workers() -> usize {
@@ -127,6 +163,24 @@ fn default_workers() -> usize {
     }
 }
 
+/// `LAVA_PREFILL_CHUNK` override for [`SchedulerOptions::prefill_chunk`]
+/// (CI runs the suite a second time with it set to exercise the chunked
+/// path everywhere). Unset or `0` leaves chunking off; an unparsable value
+/// warns and stays off rather than silently changing serving behavior.
+fn default_prefill_chunk() -> Option<usize> {
+    match std::env::var("LAVA_PREFILL_CHUNK") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(0) => None,
+            Ok(c) => Some(c),
+            Err(_) => {
+                eprintln!("[lava] ignoring invalid LAVA_PREFILL_CHUNK={v:?}; chunking stays off");
+                None
+            }
+        },
+        Err(_) => None,
+    }
+}
+
 impl Default for SchedulerOptions {
     fn default() -> Self {
         SchedulerOptions {
@@ -138,6 +192,8 @@ impl Default for SchedulerOptions {
             tiering: true,
             batched_decode: true,
             workers: default_workers(),
+            prefill_chunk: default_prefill_chunk(),
+            prefill_chunk_budget: None,
         }
     }
 }
@@ -237,6 +293,11 @@ pub struct Scheduler<B: ModelBackend> {
     /// Engine worker pool the decode/prefill fan-out runs on.
     pub pool: WorkerPool,
     active: VecDeque<Session>,
+    /// Mid-prefill sessions of the decode-interleaved chunked path: begun
+    /// at admission, advanced after each decode round, moved to `active`
+    /// (or retired) when the first token lands. Always empty without
+    /// `prefill_chunk` + `prefill_chunk_budget`.
+    prefilling: VecDeque<Session>,
     finished: Vec<(u64, GenerateResult)>,
     /// `(id, token)` pairs produced since the last tick drained them.
     token_events: Vec<(u64, i32)>,
@@ -268,6 +329,7 @@ impl<B: ModelBackend> Scheduler<B> {
             tier: TierClient::spawn(),
             pool,
             active: VecDeque::new(),
+            prefilling: VecDeque::new(),
             finished: Vec::new(),
             token_events: Vec::new(),
             tick: 0,
@@ -281,6 +343,9 @@ impl<B: ModelBackend> Scheduler<B> {
     /// Enqueue a request; the returned id is the one its `GenerateResult`
     /// will carry, no matter how often admission defers it.
     pub fn submit(&mut self, req: GenerateRequest) -> Result<u64, SubmitError> {
+        // keep the batcher's oversize policy in sync with the chunking knob
+        // (opts are public and may be flipped between submissions)
+        self.queue.set_allow_oversize(self.opts.prefill_chunk.is_some());
         if let Some(limit) = self.opts.kv_mem_limit {
             let projected = self.projected_bytes(req.prompt.len());
             if projected > limit {
@@ -327,6 +392,16 @@ impl<B: ModelBackend> Scheduler<B> {
             ));
             return true;
         }
+        if let Some(pos) = self.prefilling.iter().position(|s| s.id == id) {
+            let sess = self.prefilling.remove(pos).expect("position just found");
+            // mid-prefill sessions were never checked into `hot_bytes`
+            self.retire_unaccounted(
+                sess,
+                FinishStatus::Canceled,
+                Some("canceled mid-prefill".to_string()),
+            );
+            return true;
+        }
         if let Some(pos) = self.active.iter().position(|s| s.id == id) {
             let sess = self.active.remove(pos).expect("position just found");
             self.retire(sess, FinishStatus::Canceled, Some("canceled mid-decode".to_string()));
@@ -339,13 +414,23 @@ impl<B: ModelBackend> Scheduler<B> {
         self.active.len()
     }
 
+    /// Sessions mid-chunked-prefill (admitted, no first token yet).
+    pub fn prefilling_count(&self) -> usize {
+        self.prefilling.len()
+    }
+
     pub fn pending_count(&self) -> usize {
         self.queue.len()
     }
 
-    /// Ids of the currently active (decoding) sessions, in round order.
+    /// Ids of every session the scheduler owns outside the queue: decoding
+    /// sessions in round order, then mid-prefill (chunked) sessions.
     pub fn active_ids(&self) -> Vec<u64> {
-        self.active.iter().map(|s| s.id).collect()
+        self.active
+            .iter()
+            .map(|s| s.id)
+            .chain(self.prefilling.iter().map(|s| s.id))
+            .collect()
     }
 
     /// Current hot KV bytes: the incremental counter, debug-asserted
@@ -383,12 +468,24 @@ impl<B: ModelBackend> Scheduler<B> {
         self.retained_bytes(prompt_len) + self.transient_bytes(prompt_len)
     }
 
+    /// Bytes admission must hold back for mid-prefill (chunked) sessions:
+    /// their caches stay out of `hot_bytes` until the first token, so each
+    /// reserves its full projected footprint (retained budget + the
+    /// carry-in layer, which is O(prompt) even under chunking — chunking
+    /// shrinks the dispatch working set, not the per-layer carry).
+    fn prefilling_reserved_bytes(&self) -> usize {
+        self.prefilling.iter().map(|s| self.projected_bytes(s.prompt.len())).sum()
+    }
+
     /// Admission step: pull up to one same-bucket batch off the queue and
     /// split it into admitted requests (returned, in FIFO order), deferred
     /// requests (requeued at their original position, same id), and
     /// impossible requests (rejected with an error result).
     pub fn admit(&mut self) -> Vec<QueuedRequest> {
-        let slots = self.opts.max_active.saturating_sub(self.active.len());
+        let slots = self
+            .opts
+            .max_active
+            .saturating_sub(self.active.len() + self.prefilling.len());
         if slots == 0 || self.queue.is_empty() {
             return vec![];
         }
@@ -432,7 +529,7 @@ impl<B: ModelBackend> Scheduler<B> {
         // only its retained bytes. With tiering, "memory" means hot-tier
         // bytes: spilling idle layers lowers `projected` and rescues the
         // admission.
-        let mut projected = self.live_kv_bytes();
+        let mut projected = self.live_kv_bytes() + self.prefilling_reserved_bytes();
         for q in batch {
             let len = q.request.prompt.len();
             let peak = self.projected_bytes(len);
@@ -503,6 +600,16 @@ impl<B: ModelBackend> Scheduler<B> {
             return Ok(0);
         }
         let mut done = 0;
+        if self.opts.prefill_chunk.is_some() {
+            // Chunked serving routes each request individually: chunk
+            // dispatches use their own tight buckets (not the batch's
+            // bucket), and unsupported chunk shapes fall back to the
+            // monolithic path per request.
+            for q in batch {
+                done += self.prefill_one_chunked(q);
+            }
+            return Ok(done);
+        }
         if batch.len() > 1 && self.pool.workers() > 1 && self.opts.kv_mem_limit.is_none() {
             // fan out, then merge in submission order so metrics,
             // retirement, and the active queue are identical to the
@@ -537,6 +644,125 @@ impl<B: ModelBackend> Scheduler<B> {
             }
         }
         Ok(done)
+    }
+
+    /// Admit one request through the chunked-prefill state machine, with a
+    /// per-request monolithic fallback when the backend cannot serve its
+    /// chunk shapes. Without `prefill_chunk_budget` the prefill is driven
+    /// to completion right here — the monolithic path's tick placement,
+    /// chunked compute. With a budget only the cheap `begin` (embedding +
+    /// state install) happens now; [`Scheduler::advance_prefills`] does the
+    /// layer work *after* each decode round. Returns 1 when the request was
+    /// started or finished successfully.
+    fn prefill_one_chunked(&mut self, q: QueuedRequest) -> usize {
+        let chunk = self.opts.prefill_chunk.expect("chunked admission requires prefill_chunk");
+        let len = q.request.prompt.len();
+        if !self.engine.worker().chunked_prefill_supported(len, chunk) {
+            if Runtime::pick_bucket(self.engine.backend.prefill_buckets(), len).is_none() {
+                // over-bucket prompts are servable only through chunks
+                self.park_queued(
+                    q,
+                    FinishStatus::Rejected,
+                    format!(
+                        "prompt length {len} exceeds the largest prefill bucket and the \
+                         backend has no chunked prefill for its chunk shapes"
+                    ),
+                );
+                return 0;
+            }
+            let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
+            let mut sess = self.engine.new_session_with_id(q.id, &q.request);
+            let res = self.engine.worker().prefill(&mut sess);
+            return self.merge_prefill(q, wait_secs, sess, res);
+        }
+        let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
+        let mut sess = self.engine.new_session_with_id(q.id, &q.request);
+        if self.opts.prefill_chunk_budget.is_none() {
+            let worker = self.engine.worker();
+            let res = worker.begin_chunked_prefill(&mut sess, chunk).and_then(|()| {
+                let (_, report) = worker.advance_chunked_prefill(&mut sess, None)?;
+                report.ok_or_else(|| anyhow!("unbounded advance must complete the prefill"))
+            });
+            return self.merge_prefill(q, wait_secs, sess, res);
+        }
+        let begun = self.engine.worker().begin_chunked_prefill(&mut sess, chunk);
+        match begun {
+            Ok(()) => {
+                if let Some(st) = sess.prefill.as_mut() {
+                    st.wait_secs = wait_secs;
+                }
+                self.warm_bucket = Some(q.bucket);
+                self.prefilling.push_back(sess);
+                1
+            }
+            Err(e) => {
+                drop(sess);
+                self.park_queued(q, FinishStatus::Failed, format!("prefill failed: {e:#}"));
+                0
+            }
+        }
+    }
+
+    /// Advance every mid-prefill session, front of the queue first, within
+    /// this tick's shared `prefill_chunk_budget` (at least one chunk always
+    /// dispatches, so progress is guaranteed). Runs *after* the decode
+    /// round — see [`Scheduler::tick`]. A session whose final chunk lands
+    /// gets its first token merged exactly as [`Scheduler::merge_prefill`]
+    /// does: metrics, token event, hot-byte check-in, retire-or-activate.
+    /// Returns the prefill tokens advanced.
+    fn advance_prefills(&mut self) -> usize {
+        if self.prefilling.is_empty() {
+            return 0;
+        }
+        let mut budget = self.opts.prefill_chunk_budget.unwrap_or(usize::MAX).max(1);
+        let mut advanced = 0usize;
+        let mut still: VecDeque<Session> = VecDeque::new();
+        while let Some(mut sess) = self.prefilling.pop_front() {
+            if budget == 0 {
+                still.push_back(sess);
+                continue;
+            }
+            let (wait_secs, admitted_at) = sess
+                .prefill
+                .as_ref()
+                .map(|st| (st.wait_secs, st.enqueued_at))
+                .unwrap_or((0.0, sess.queued_at));
+            let res = self.engine.worker().advance_chunked_prefill(&mut sess, Some(budget));
+            match res {
+                Ok((worked, report)) => {
+                    budget = budget.saturating_sub(worked);
+                    advanced += worked;
+                    match report {
+                        Some(report) => {
+                            self.engine.absorb_prefill(&report);
+                            // TTFT spans the decode rounds interleaved
+                            // between advances: measure admission → now
+                            let ttft = wait_secs + admitted_at.elapsed().as_secs_f64();
+                            self.engine.metrics.observe_admission(wait_secs, ttft);
+                            self.token_events.push((sess.id, report.token));
+                            self.hot_bytes += sess.kv_bytes();
+                            self.engine.metrics.observe_hot(self.hot_bytes);
+                            if sess.is_done() {
+                                self.retire(sess, FinishStatus::Completed, None);
+                            } else {
+                                self.active.push_back(sess);
+                            }
+                        }
+                        None => still.push_back(sess),
+                    }
+                }
+                Err(e) => {
+                    // never checked into `hot_bytes`, so retire unaccounted
+                    self.retire_unaccounted(
+                        sess,
+                        FinishStatus::Failed,
+                        Some(format!("prefill failed: {e:#}")),
+                    );
+                }
+            }
+        }
+        self.prefilling = still;
+        advanced
     }
 
     /// Merge one prefilled request back into the scheduler: metrics,
@@ -877,8 +1103,9 @@ impl<B: ModelBackend> Scheduler<B> {
     /// dispatch terminal responses between rounds.
     pub fn tick(&mut self) -> Result<TickReport> {
         self.tick += 1;
-        let want_prefill = self.active.is_empty()
-            || (self.tick % self.opts.prefill_every == 0 && !self.queue.is_empty());
+        let idle = self.active.is_empty() && self.prefilling.is_empty();
+        let want_prefill =
+            idle || (self.tick % self.opts.prefill_every == 0 && !self.queue.is_empty());
 
         let finished_before = self.finished.len();
         let mut worked = false;
@@ -887,6 +1114,10 @@ impl<B: ModelBackend> Scheduler<B> {
             worked |= self.prefill_batch(batch)? > 0;
         }
         worked |= self.decode_round() > 0;
+        // budgeted chunked prefills advance *after* the decode round, so a
+        // long prompt costs every tick at most `prefill_chunk_budget`
+        // tokens of prefill work and active decodes keep their cadence
+        worked |= self.advance_prefills() > 0;
         self.engine.metrics.observe_hot(self.live_kv_bytes());
         let snap = self.tier.thread_snapshot();
         self.engine.metrics.observe_tier_thread(
@@ -907,7 +1138,7 @@ impl<B: ModelBackend> Scheduler<B> {
     /// True while the scheduler still owns unfinished work (queued or
     /// active requests) — the serving loop's "keep ticking" condition.
     pub fn has_work(&self) -> bool {
-        !self.queue.is_empty() || !self.active.is_empty()
+        !self.queue.is_empty() || !self.active.is_empty() || !self.prefilling.is_empty()
     }
 
     /// Shutdown path: park every queued (not yet admitted) request with a
@@ -928,7 +1159,8 @@ impl<B: ModelBackend> Scheduler<B> {
     pub fn metrics_snapshot(&self) -> MetricsSnapshot {
         MetricsSnapshot {
             metrics: self.engine.metrics.clone(),
-            active_sessions: self.active.len(),
+            // mid-prefill sessions hold admission slots, so they count
+            active_sessions: self.active.len() + self.prefilling.len(),
             queued_requests: self.queue.len(),
         }
     }
@@ -960,6 +1192,14 @@ impl<B: ModelBackend> Scheduler<B> {
         // both gauges now so a cancel's release is visible in the very next
         // metrics snapshot, without waiting for another tick
         self.hot_bytes -= sess.kv_bytes();
+        self.retire_unaccounted(sess, status, error);
+    }
+
+    /// [`Scheduler::retire`] for sessions whose bytes were never checked
+    /// into `hot_bytes` — mid-chunked-prefill sessions join the hot counter
+    /// only at their first token, so canceling or failing one must not
+    /// subtract bytes it never added.
+    fn retire_unaccounted(&mut self, sess: Session, status: FinishStatus, error: Option<String>) {
         self.tier.drop_session(sess.id);
         self.engine.metrics.observe_warm(self.tier.warm_bytes());
         self.engine.metrics.observe_hot(self.hot_bytes);
@@ -1086,6 +1326,28 @@ mod tests {
         Scheduler::new(
             engine,
             SchedulerOptions { kv_mem_limit: limit, workers, ..Default::default() },
+        )
+    }
+
+    /// Scheduler with the chunked-prefill knobs pinned explicitly (the
+    /// plain helpers inherit `LAVA_PREFILL_CHUNK` through the defaults, by
+    /// design — CI's second suite run exercises the chunked path that way).
+    fn sched_chunked(
+        chunk: Option<usize>,
+        budget: Option<usize>,
+        limit: Option<usize>,
+    ) -> Scheduler<MockBackend> {
+        let mock = MockBackend::new(MockBackend::default_config());
+        let engine =
+            Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+        Scheduler::new(
+            engine,
+            SchedulerOptions {
+                kv_mem_limit: limit,
+                prefill_chunk: chunk,
+                prefill_chunk_budget: budget,
+                ..Default::default()
+            },
         )
     }
 
@@ -1290,7 +1552,10 @@ mod tests {
 
     #[test]
     fn rejects_oversized() {
-        let mut s = sched(None);
+        // chunking pinned off: with it on, over-bucket prompts are
+        // servable (`over_bucket_prompt_served_via_chunks`) and this
+        // rejection no longer applies
+        let mut s = sched_chunked(None, None, None);
         assert!(matches!(
             s.submit(req(1 << 20, 1)),
             Err(SubmitError::PromptTooLong { .. })
@@ -1421,6 +1686,131 @@ mod tests {
         // the snapshot is an independent copy, not a live view
         assert_eq!(snap.metrics.requests_finished, 0);
         assert_eq!(s.engine.metrics.requests_finished, 2);
+    }
+
+    #[test]
+    fn chunked_scheduling_matches_monolithic_results() {
+        let run = |chunk: Option<usize>, budget: Option<usize>| {
+            let mut s = sched_chunked(chunk, budget, None);
+            for i in 0..4 {
+                let n = if i % 2 == 0 { 100 } else { 300 };
+                s.submit(req(n, 6)).unwrap();
+            }
+            let mut done = s.run_to_completion().unwrap();
+            done.sort_by_key(|(id, _)| *id);
+            done
+        };
+        let mono = run(None, None);
+        for (chunk, budget) in [(Some(96), None), (Some(96), Some(64)), (Some(17), Some(200))] {
+            let chunked = run(chunk, budget);
+            assert_eq!(mono.len(), chunked.len());
+            for ((ida, ra), (idb, rb)) in mono.iter().zip(&chunked) {
+                assert_eq!(ida, idb);
+                assert_eq!(
+                    ra.tokens, rb.tokens,
+                    "id {ida}: chunked ({chunk:?}/{budget:?}) tokens must be bit-identical"
+                );
+                assert_eq!(ra.budgets, rb.budgets);
+                assert_eq!(ra.kv_bytes_after_prefill, rb.kv_bytes_after_prefill);
+                assert_eq!(ra.status, rb.status);
+            }
+        }
+    }
+
+    #[test]
+    fn budgeted_chunked_prefill_interleaves_decode() {
+        let mut s = sched_chunked(Some(32), Some(64), None);
+        s.opts.prefill_every = 1;
+        let a = s.submit(req(100, 40)).unwrap();
+        while s.active.iter().all(|x| x.id != a) {
+            s.tick().unwrap();
+        }
+        // B's 600-token prompt is 2400 tokens of prefill work: at 64 per
+        // tick it spans dozens of ticks, during every one of which A must
+        // still emit a token (the decode round runs before prefill work).
+        let b = s.submit(req(600, 4)).unwrap();
+        let mut done = Vec::new();
+        let mut overlapped = 0;
+        while s.has_work() {
+            let a_active = s.active.iter().any(|x| x.id == a);
+            let b_prefilling = s.prefilling.iter().any(|x| x.id == b);
+            let rep = s.tick().unwrap();
+            if a_active && b_prefilling {
+                overlapped += 1;
+                assert!(
+                    rep.tokens.iter().any(|(id, _)| *id == a),
+                    "decode session stalled behind a chunked prefill"
+                );
+            }
+            done.extend(rep.finished);
+        }
+        assert!(overlapped >= 5, "expected many overlapped ticks, got {overlapped}");
+        assert_eq!(done.len(), 2);
+        for (id, r) in &done {
+            assert_eq!(r.status, FinishStatus::Completed, "{id}: {:?}", r.error);
+            assert_eq!(r.tokens.len(), if *id == a { 40 } else { 4 });
+        }
+    }
+
+    #[test]
+    fn over_bucket_prompt_served_via_chunks() {
+        // shrink the prefill ladder so a 600-token prompt exceeds every
+        // bucket: monolithic submission rejects it, chunked serving runs it
+        let mut mock = MockBackend::new(MockBackend::default_config());
+        mock.buckets_prefill = vec![64, 128, 256];
+        let engine =
+            Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+        let mut s = Scheduler::new(
+            engine,
+            SchedulerOptions { prefill_chunk: Some(128), ..Default::default() },
+        );
+        let id = s.submit(req(600, 4)).unwrap();
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, id);
+        assert_eq!(done[0].1.status, FinishStatus::Completed, "{:?}", done[0].1.error);
+        assert_eq!(done[0].1.tokens.len(), 4);
+
+        let mut mock2 = MockBackend::new(MockBackend::default_config());
+        mock2.buckets_prefill = vec![64, 128, 256];
+        let engine2 =
+            Engine::new(mock2, EngineOptions::new(Policy::by_name("lava").unwrap(), 24));
+        let mut s2 = Scheduler::new(
+            engine2,
+            SchedulerOptions { prefill_chunk: None, ..Default::default() },
+        );
+        assert!(matches!(s2.submit(req(600, 4)), Err(SubmitError::PromptTooLong { .. })));
+    }
+
+    #[test]
+    fn cancel_mid_chunked_prefill() {
+        let mut s = sched_chunked(Some(32), Some(32), None);
+        s.opts.prefill_every = 1;
+        let id = s.submit(req(300, 4)).unwrap();
+        s.tick().unwrap(); // admit + begin + one budgeted advance
+        assert_eq!(s.prefilling_count(), 1);
+        assert!(s.cancel(id));
+        assert_eq!(s.prefilling_count(), 0);
+        assert!(!s.has_work());
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].1.status, FinishStatus::Canceled);
+        assert!(done[0].1.tokens.is_empty());
+    }
+
+    #[test]
+    fn budgeted_chunked_prefill_respects_memory_accounting() {
+        // tight limit: mid-prefill sessions must reserve their projected
+        // bytes so admission cannot over-commit, and everything completes
+        let mut s = sched_chunked(Some(64), Some(128), Some(300_000));
+        for _ in 0..4 {
+            s.submit(req(200, 6)).unwrap();
+        }
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 4);
+        for (_, r) in &done {
+            assert_eq!(r.status, FinishStatus::Completed, "{:?}", r.error);
+        }
     }
 
     #[test]

@@ -424,6 +424,30 @@ fn metrics_json(snap: &MetricsSnapshot) -> Json {
                     .collect(),
             ),
         ),
+        // prefill bucket waste: padded tokens across all prefill
+        // dispatches, overall utilization (valid / dispatched), and the
+        // per-bucket dispatch/valid/padded breakdown — the gauges that
+        // make the chunked-prefill win measurable
+        ("prefill_padded_tokens", Json::num(m.prefill_padded_tokens as f64)),
+        ("prefill_bucket_util", Json::num(m.prefill_bucket_utilization())),
+        (
+            "prefill_fills",
+            Json::Obj(
+                m.prefill_fills
+                    .iter()
+                    .map(|(bucket, f)| {
+                        (
+                            bucket.to_string(),
+                            Json::obj(vec![
+                                ("dispatches", Json::num(f.dispatches as f64)),
+                                ("valid_tokens", Json::num(f.valid_tokens as f64)),
+                                ("padded_tokens", Json::num(f.padded_tokens as f64)),
+                            ]),
+                        )
+                    })
+                    .collect(),
+            ),
+        ),
         // per-tier state: hot is what kv_mem_limit bounds; warm holds
         // Q8-spilled layer caches
         ("deferred", Json::num(m.requests_deferred as f64)),

@@ -2,13 +2,76 @@
 
 use crate::kvcache::tier::Residency;
 use crate::kvcache::HotStore;
+use crate::runtime::Tensor;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum Phase {
     Queued,
-    Prefilling,
+    /// Mid-prefill. `next_chunk` is the chunk cursor within the current
+    /// layer of the resumable chunked state machine (always 0 on the
+    /// monolithic path, which enters and leaves this phase in one call).
+    Prefilling { next_chunk: usize },
     Decoding,
     Finished,
+}
+
+/// Resumable chunked-prefill state: everything the engine needs to pick the
+/// prefill back up mid-layer on a later tick. The loop is layer-outer /
+/// chunk-inner: layer `layer` has consumed chunks `[0, chunk_idx)`, earlier
+/// layers are already compressed into `Session::caches`, and later layers
+/// have not started. When the last chunk of a layer lands, the accumulated
+/// observations (`win`/`acc`/`vnorm`) and carry K/V are exactly the
+/// monolithic `layer_prefill` outputs, so scoring, Eq. 7 entropy weights,
+/// and the Algorithm 2 recompression cascade run unchanged — bit-identical
+/// tokens, budgets, and keep-sets to the one-shot path.
+///
+/// Memory note: the carry K/V is the layer's uncompressed cache and stays
+/// O(prompt) — what chunking shrinks is the *dispatch* working set (each
+/// backend call touches one chunk-bucket of rows, not the full prompt
+/// bucket) and the head-of-line time between decode rounds.
+pub struct ChunkedPrefill {
+    /// Configured chunk size in tokens.
+    pub chunk: usize,
+    /// Observation bucket: the monolithic prefill bucket for this prompt
+    /// (or the exact prompt length when it exceeds every bucket). All
+    /// accumulated observation tensors are padded to this width so the
+    /// completed layer is indistinguishable from a monolithic pass.
+    pub n_obs: usize,
+    pub n_chunks: usize,
+    /// Current layer (0-based; == n_layers means done).
+    pub layer: usize,
+    /// Next chunk within the current layer.
+    pub chunk_idx: usize,
+    /// Current layer's input rows, valid tokens only ([n, d] flattened).
+    pub x: Vec<f32>,
+    /// Accumulating layer output rows ([n, d] flattened).
+    pub x_next: Vec<f32>,
+    /// Carry-in K/V for the current layer: [Hk, n_obs, dh]. Rows for
+    /// positions >= chunk_idx * chunk are unspecified (stale from the
+    /// previous layer) — backends only read rows < the chunk's start.
+    pub carry_k: Tensor,
+    pub carry_v: Tensor,
+    /// Accumulated window-attention panel [H * w * n_obs].
+    pub win: Vec<f32>,
+    /// Accumulated column attention mass [H * n_obs].
+    pub acc: Vec<f32>,
+    /// Accumulated per-token value norms [Hk * n_obs].
+    pub vnorm: Vec<f32>,
+    /// Dynamic-allocation layer weights gathered so far (Eq. 7 / CAKE).
+    pub weights: Vec<f64>,
+    /// Per-layer budgets (updated by the Algorithm 2 cascade as layers
+    /// complete; moved into `Session::budgets` at the end).
+    pub budgets: Vec<usize>,
+    pub peak_transient: usize,
+    /// Per-dispatch (chunk bucket, valid tokens) pairs for the bucket-waste
+    /// gauges, reported with the final `PrefillReport`.
+    pub bucket_fills: Vec<(usize, usize)>,
+    /// Queue wait at admission (seconds) — the TTFT baseline.
+    pub wait_secs: f64,
+    /// When the request was enqueued; TTFT = this → first token, which for
+    /// an interleaved chunked prefill includes the decode rounds between
+    /// advances.
+    pub enqueued_at: std::time::Instant,
 }
 
 /// One in-flight request: prompt, per-layer compressed caches, generation.
@@ -30,6 +93,10 @@ pub struct Session {
     /// layers spill first.
     pub budgets: Vec<usize>,
     pub generated: Vec<i32>,
+    /// Resumable chunked-prefill state (Some only while `phase` is
+    /// `Prefilling` on the chunked path; boxed — it is fat and most
+    /// sessions never carry it).
+    pub prefill: Option<Box<ChunkedPrefill>>,
     /// Absolute position of the next token to decode.
     pub next_pos: usize,
     /// Timing (seconds, from request arrival).
@@ -49,6 +116,7 @@ impl Session {
             residency: Vec::new(),
             budgets: Vec::new(),
             generated: Vec::new(),
+            prefill: None,
             next_pos: 0,
             queued_at: std::time::Instant::now(),
             prefill_secs: 0.0,

@@ -34,6 +34,30 @@ pub struct PrefillOut {
     pub obs: LayerObs,
 }
 
+/// Output of one *chunk* of a layer's prefill pass (chunked prefill).
+///
+/// The chunk covers absolute positions `[start, start + chunk_len)` of a
+/// prompt whose completed layer is observed at width `n_obs` (the monolithic
+/// prefill bucket). K/V come back chunk-sized; observation contributions come
+/// back at full `n_obs` width so the engine can accumulate them additively —
+/// after the last chunk the accumulated tensors must be bit-identical to one
+/// monolithic [`ModelBackend::layer_prefill`] call at bucket `n_obs`.
+pub struct ChunkPrefillOut {
+    pub x_out: Tensor, // [C, d] (rows >= chunk_len are padding)
+    pub k: Tensor,     // [Hk, C, dh]
+    pub v: Tensor,     // [Hk, C, dh]
+    /// Completed window-attention rows *owned* by this chunk: `(r, row)`
+    /// where row r's query position `length - w + r` falls inside the chunk
+    /// and `row` is the full `[H * n_obs]` normalized distribution. Each of
+    /// the w rows is owned by exactly one chunk.
+    pub win_rows: Vec<(usize, Vec<f32>)>,
+    /// Additive accumulated-attention contribution `[H * n_obs]` (zero
+    /// outside the columns this chunk contributes to).
+    pub acc: Vec<f32>,
+    /// Additive value-norm contribution `[Hk * n_obs]`.
+    pub vnorm: Vec<f32>,
+}
+
 /// Output of one layer's decode step.
 pub struct DecodeOut {
     pub x_out: Tensor,  // [1, d]
@@ -75,6 +99,39 @@ pub trait ModelBackend: Send + Sync {
     fn embed(&self, ids: &[i32], bucket: usize) -> Result<Tensor>;
 
     fn layer_prefill(&self, layer: usize, x: &Tensor, length: usize) -> Result<PrefillOut>;
+
+    /// One chunk of a layer's prefill: `x_chunk` is the chunk's residual
+    /// stream padded to a *tight* chunk bucket `[C, d]`, `carry_k`/`carry_v`
+    /// are the layer's K/V accumulated from prior chunks at observation width
+    /// `[Hk, n_obs, dh]` (rows >= `start` are unspecified and must not be
+    /// read). The chunk covers absolute positions `[start, start+chunk_len)`
+    /// of a `total_len`-token prompt. Accumulating every chunk's output must
+    /// reproduce the monolithic [`ModelBackend::layer_prefill`] at bucket
+    /// `n_obs` exactly — the chunked-prefill equivalence suite holds each
+    /// backend to it. Default: unsupported (the engine falls back to the
+    /// monolithic path when [`ModelBackend::supports_chunked_prefill`] says
+    /// no).
+    #[allow(unused_variables)]
+    fn layer_prefill_chunked(
+        &self,
+        layer: usize,
+        x_chunk: &Tensor,
+        carry_k: &Tensor,
+        carry_v: &Tensor,
+        start: usize,
+        chunk_len: usize,
+        total_len: usize,
+    ) -> Result<ChunkPrefillOut> {
+        Err(anyhow!("backend has no chunked prefill implementation"))
+    }
+
+    /// Whether [`ModelBackend::layer_prefill_chunked`] can serve a chunk of
+    /// bucket `chunk_bucket` against a carry of width `n_obs` (for PJRT this
+    /// asks the artifact set for `layer_prefill_chunked_{C}x{N}`; the
+    /// per-chunk fallback routes unsupported prompts to the monolithic path).
+    fn supports_chunked_prefill(&self, _chunk_bucket: usize, _n_obs: usize) -> bool {
+        false
+    }
 
     /// Decode is a hot-tier-only operation: the cache handed in here is
     /// always a resident [`HotStore`] (the tier manager prefetches warm
@@ -251,6 +308,63 @@ impl ModelBackend for PjrtBackend {
             v,
             obs: LayerObs { win_attn, acc_attn, vnorm, length },
         })
+    }
+
+    /// Chunked prefill through the `layer_prefill_chunked_{C}x{N}` artifacts:
+    /// the artifact computes the chunk's attention over carry + chunk keys
+    /// and returns the full-width observation contributions (window panel
+    /// with non-owned rows zeroed, which we convert to owned rows here).
+    fn layer_prefill_chunked(
+        &self,
+        layer: usize,
+        x_chunk: &Tensor,
+        carry_k: &Tensor,
+        carry_v: &Tensor,
+        start: usize,
+        chunk_len: usize,
+        total_len: usize,
+    ) -> Result<ChunkPrefillOut> {
+        let c = x_chunk.shape[0];
+        let n = carry_k.shape[1];
+        let name = format!("layer_prefill_chunked_{c}x{n}");
+        let meta = Tensor::i32(vec![start as i32, chunk_len as i32, total_len as i32], &[3]);
+        let mut args: Vec<Arg> = vec![
+            Arg::Host(x_chunk),
+            Arg::Host(carry_k),
+            Arg::Host(carry_v),
+            Arg::Host(&meta),
+        ];
+        args.extend(self.layer_args(layer));
+        let mut out = self.runtime.execute(&name, &args)?;
+        if out.len() != 6 {
+            return Err(anyhow!("{name}: expected 6 outputs, got {}", out.len()));
+        }
+        let vnorm = out.pop().unwrap().into_f32()?;
+        let acc = out.pop().unwrap().into_f32()?;
+        let win_panel = out.pop().unwrap().into_f32()?; // [H, w, n], non-owned rows zero
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let x_out = out.pop().unwrap();
+        let (h, w) = (self.cfg.n_heads, self.cfg.window);
+        let mut win_rows = Vec::new();
+        for r in 0..w {
+            let qpos = total_len - w + r;
+            if qpos < start || qpos >= start + chunk_len {
+                continue;
+            }
+            let mut row = vec![0.0f32; h * n];
+            for hh in 0..h {
+                row[hh * n..(hh + 1) * n]
+                    .copy_from_slice(&win_panel[(hh * w + r) * n..(hh * w + r + 1) * n]);
+            }
+            win_rows.push((r, row));
+        }
+        Ok(ChunkPrefillOut { x_out, k, v, win_rows, acc, vnorm })
+    }
+
+    fn supports_chunked_prefill(&self, chunk_bucket: usize, n_obs: usize) -> bool {
+        self.runtime
+            .has_artifact(&format!("layer_prefill_chunked_{chunk_bucket}x{n_obs}"))
     }
 
     fn layer_decode(
@@ -461,8 +575,10 @@ impl PjrtBackend {
 /// scheduler test, at ~zero cost, any context length.
 pub struct MockBackend {
     cfg: ModelConfig,
-    buckets_prefill: Vec<usize>,
-    buckets_decode: Vec<usize>,
+    /// Public so tests can shrink the bucket ladder (e.g. to exercise
+    /// over-largest-bucket admission without megatoken prompts).
+    pub buckets_prefill: Vec<usize>,
+    pub buckets_decode: Vec<usize>,
     pub hot_positions: Vec<usize>,
     pub seed: u64,
 }
@@ -631,6 +747,100 @@ impl ModelBackend for MockBackend {
         })
     }
 
+    /// Vectorized chunked prefill. Every hash is indexed exactly as the
+    /// monolithic [`MockBackend::layer_prefill`] at bucket `n_obs` (read off
+    /// the carry width), so accumulating the chunks is bit-identical to the
+    /// one-shot pass: window rows are emitted whole by the chunk owning
+    /// their query position, acc/vnorm columns by the chunk owning the
+    /// position, and K/V rows use the monolithic flat index
+    /// `(kv * n_obs + pos) * dh + j`.
+    fn layer_prefill_chunked(
+        &self,
+        layer: usize,
+        x_chunk: &Tensor,
+        carry_k: &Tensor,
+        _carry_v: &Tensor,
+        start: usize,
+        chunk_len: usize,
+        total_len: usize,
+    ) -> Result<ChunkPrefillOut> {
+        let cfg = &self.cfg;
+        let (h, hk, w, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head);
+        let c = x_chunk.shape[0];
+        let n = carry_k.shape[1]; // observation width = monolithic bucket
+        if chunk_len == 0 || chunk_len > c || start + chunk_len > total_len || total_len > n {
+            return Err(anyhow!(
+                "layer_prefill_chunked: chunk [{start}, {}) of {total_len} (bucket {c}, obs {n}) is malformed",
+                start + chunk_len
+            ));
+        }
+        let l64 = layer as u64;
+
+        let mut win_rows = Vec::new();
+        for r in 0..w {
+            let qpos = total_len - w + r;
+            if qpos < start || qpos >= start + chunk_len {
+                continue;
+            }
+            let mut row = vec![0.0f32; h * n];
+            for hh in 0..h {
+                let mut sum = 0.0f32;
+                for i in 0..=qpos {
+                    let mut a = 0.02 + self.h01(l64 * 131 + hh as u64, (r * n + i) as u64, 2);
+                    if qpos - i < 8 {
+                        a += 1.0;
+                    }
+                    if self.hot_positions.contains(&i) {
+                        a += 6.0 * (1.0 + (hh as f32 * 0.5));
+                    }
+                    row[hh * n + i] = a;
+                    sum += a;
+                }
+                for i in 0..=qpos {
+                    row[hh * n + i] /= sum;
+                }
+            }
+            win_rows.push((r, row));
+        }
+        let mut acc = vec![0.0f32; h * n];
+        for hh in 0..h {
+            for i in start..start + chunk_len {
+                let base = self.h01(l64 * 37 + hh as u64, i as u64, 3);
+                let hot = if self.hot_positions.contains(&i) { 4.0 } else { 0.0 };
+                acc[hh * n + i] = base + hot + (total_len - i) as f32 * 0.01;
+            }
+        }
+        let mut vn = vec![0.0f32; hk * n];
+        for kv in 0..hk {
+            for i in start..start + chunk_len {
+                vn[kv * n + i] = 0.5 + self.h01(l64 * 57 + kv as u64, i as u64, 4);
+            }
+        }
+        let mut kdata = vec![0.0f32; hk * c * dh];
+        let mut vdata = vec![0.0f32; hk * c * dh];
+        for kv in 0..hk {
+            for row in 0..chunk_len {
+                for j in 0..dh {
+                    let flat = (kv * n + start + row) * dh + j;
+                    kdata[(kv * c + row) * dh + j] = self.h01(l64 * 71, flat as u64, 5) - 0.5;
+                    vdata[(kv * c + row) * dh + j] = self.h01(l64 * 83, flat as u64, 6) - 0.5;
+                }
+            }
+        }
+        Ok(ChunkPrefillOut {
+            x_out: x_chunk.clone(),
+            k: Tensor::f32(kdata, &[hk, c, dh]),
+            v: Tensor::f32(vdata, &[hk, c, dh]),
+            win_rows,
+            acc,
+            vnorm: vn,
+        })
+    }
+
+    fn supports_chunked_prefill(&self, _chunk_bucket: usize, _n_obs: usize) -> bool {
+        true
+    }
+
     fn layer_decode(
         &self,
         layer: usize,
@@ -715,6 +925,93 @@ mod tests {
         let hot = win[10];
         let cold = win[30];
         assert!(hot > cold);
+    }
+
+    #[test]
+    fn mock_chunked_prefill_accumulates_to_monolithic() {
+        let mut b = MockBackend::new(MockBackend::default_config());
+        b.hot_positions = vec![10, 40];
+        b.seed = 7;
+        let cfg = b.cfg.clone();
+        let (h, hk, w, dh, d) = (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head, cfg.d_model);
+        let length = 100;
+        let bucket = 128;
+        let ids: Vec<i32> = (0..length as i32).map(|t| t % 250).collect();
+        let x = b.embed(&ids, bucket).unwrap();
+        for layer in [0, 2] {
+            let mono = b.layer_prefill(layer, &x, length).unwrap();
+            for chunk in [128usize, 48, 17] {
+                let mut win = vec![0.0f32; h * w * bucket];
+                let mut acc = vec![0.0f32; h * bucket];
+                let mut vn = vec![0.0f32; hk * bucket];
+                let mut carry_k = vec![0.0f32; hk * bucket * dh];
+                let mut carry_v = vec![0.0f32; hk * bucket * dh];
+                let xf = x.as_f32().unwrap();
+                let mut start = 0;
+                let mut rows_seen = 0;
+                while start < length {
+                    let clen = chunk.min(length - start);
+                    let mut xc = vec![0.0f32; chunk * d];
+                    xc[..clen * d].copy_from_slice(&xf[start * d..(start + clen) * d]);
+                    let carry_kt = Tensor::f32(carry_k.clone(), &[hk, bucket, dh]);
+                    let carry_vt = Tensor::f32(carry_v.clone(), &[hk, bucket, dh]);
+                    let out = b
+                        .layer_prefill_chunked(
+                            layer,
+                            &Tensor::f32(xc, &[chunk, d]),
+                            &carry_kt,
+                            &carry_vt,
+                            start,
+                            clen,
+                            length,
+                        )
+                        .unwrap();
+                    for (r, row) in &out.win_rows {
+                        rows_seen += 1;
+                        for hh in 0..h {
+                            win[(hh * w + r) * bucket..(hh * w + r + 1) * bucket]
+                                .copy_from_slice(&row[hh * bucket..(hh + 1) * bucket]);
+                        }
+                    }
+                    for (dst, src) in acc.iter_mut().zip(&out.acc) {
+                        *dst += src;
+                    }
+                    for (dst, src) in vn.iter_mut().zip(&out.vnorm) {
+                        *dst += src;
+                    }
+                    let kc = out.k.as_f32().unwrap();
+                    let vc = out.v.as_f32().unwrap();
+                    for kv in 0..hk {
+                        for row in 0..clen {
+                            let dst = (kv * bucket + start + row) * dh;
+                            let src = (kv * chunk + row) * dh;
+                            carry_k[dst..dst + dh].copy_from_slice(&kc[src..src + dh]);
+                            carry_v[dst..dst + dh].copy_from_slice(&vc[src..src + dh]);
+                        }
+                    }
+                    start += clen;
+                }
+                assert_eq!(rows_seen, w, "chunk {chunk}: every window row owned exactly once");
+                assert_eq!(win, mono.obs.win_attn.as_f32().unwrap(), "chunk {chunk} win");
+                assert_eq!(acc, mono.obs.acc_attn.as_f32().unwrap(), "chunk {chunk} acc");
+                assert_eq!(vn, mono.obs.vnorm.as_f32().unwrap(), "chunk {chunk} vnorm");
+                // K/V only defined on valid positions (monolithic also hashes
+                // padding rows; chunked leaves them untouched)
+                let mk = mono.k.as_f32().unwrap();
+                let mv = mono.v.as_f32().unwrap();
+                for kv in 0..hk {
+                    let a = (kv * bucket) * dh;
+                    let z = (kv * bucket + length) * dh;
+                    assert_eq!(&carry_k[a..z], &mk[a..z], "chunk {chunk} k head {kv}");
+                    assert_eq!(&carry_v[a..z], &mv[a..z], "chunk {chunk} v head {kv}");
+                }
+            }
+        }
+        // malformed chunk geometry is rejected
+        let ck = Tensor::zeros(&[hk, bucket, dh]);
+        let xz = Tensor::zeros(&[16, d]);
+        assert!(b.layer_prefill_chunked(0, &xz, &ck, &ck, 120, 16, 100).is_err());
+        assert!(b.layer_prefill_chunked(0, &xz, &ck, &ck, 0, 32, 100).is_err());
     }
 
     #[test]

@@ -1,0 +1,151 @@
+//! Chunked-prefill acceptance suite (ISSUE 7): end-to-end scheduler
+//! fingerprints. With `prefill_chunk` set and no interleave budget, a tiered
+//! workload under memory pressure must reproduce the monolithic run exactly —
+//! per-request tokens, per-layer budgets, retained KV bytes, and the
+//! spill/prefetch counters — at every chunk size (one full bucket, a
+//! misaligned chunk, a tiny chunk). With a decode-interleave budget the
+//! per-request results must still match (only dispatch timing changes).
+//!
+//! Engine-level bit-identity of the caches themselves (keep-sets, scores,
+//! positions) is covered by the in-module tests in `coordinator::engine`;
+//! this file checks the scheduler composition on top.
+
+use lava::compress::Policy;
+use lava::coordinator::engine::{Engine, EngineOptions, FinishStatus, GenerateRequest};
+use lava::coordinator::scheduler::{Scheduler, SchedulerOptions};
+use lava::model::backend::MockBackend;
+
+fn engine(policy: &str) -> Engine<MockBackend> {
+    let mock = MockBackend::new(MockBackend::default_config());
+    Engine::new(mock, EngineOptions::new(Policy::by_name(policy).unwrap(), 24))
+}
+
+fn req(len: usize, offset: usize, max_new: usize) -> GenerateRequest {
+    GenerateRequest {
+        prompt: (0..len).map(|t| ((t + offset) % 251) as i32).collect(),
+        max_new_tokens: max_new,
+    }
+}
+
+/// Everything a chunked run must reproduce from the monolithic baseline.
+#[derive(Debug, PartialEq)]
+struct Fingerprint {
+    tokens: Vec<Vec<i32>>,
+    budgets: Vec<Vec<usize>>,
+    kv_bytes: Vec<usize>,
+    spills: u64,
+    prefetches: u64,
+}
+
+/// The `tiering_spills_under_pressure` workload (4 same-shape requests under
+/// a ~2-session memory limit) so the fingerprint includes real tier traffic.
+fn run_pressured(
+    policy: &str,
+    chunk: Option<usize>,
+    budget: Option<usize>,
+) -> Fingerprint {
+    let mut s = Scheduler::new(
+        engine(policy),
+        SchedulerOptions {
+            kv_mem_limit: Some(210_000),
+            prefill_chunk: chunk,
+            prefill_chunk_budget: budget,
+            ..Default::default()
+        },
+    );
+    for i in 0..4 {
+        s.submit(req(200, i, 6)).unwrap();
+    }
+    let mut done = s.run_to_completion().unwrap();
+    done.sort_by_key(|(id, _)| *id);
+    assert_eq!(done.len(), 4);
+    for (_, r) in &done {
+        assert_eq!(r.status, FinishStatus::Completed, "{:?}", r.error);
+    }
+    Fingerprint {
+        tokens: done.iter().map(|(_, r)| r.tokens.clone()).collect(),
+        budgets: done.iter().map(|(_, r)| r.budgets.clone()).collect(),
+        kv_bytes: done.iter().map(|(_, r)| r.kv_bytes_after_prefill).collect(),
+        spills: s.engine.metrics.spills,
+        prefetches: s.engine.metrics.prefetches,
+    }
+}
+
+#[test]
+fn chunked_fingerprint_matches_monolithic_under_tier_pressure() {
+    // chunk sizes: exactly one (smallest) bucket, misaligned, and tiny
+    for policy in ["lava", "h2o", "snapkv"] {
+        let mono = run_pressured(policy, None, None);
+        if policy == "lava" {
+            // same recipe as the in-module tiering test: the baseline must
+            // actually exercise the tier or the spill fingerprint is vacuous
+            assert!(mono.spills > 0, "pressure workload must spill");
+            assert!(mono.prefetches > 0, "spilled layers must prefetch back");
+        }
+        for chunk in [128usize, 96, 17] {
+            let chunked = run_pressured(policy, Some(chunk), None);
+            assert_eq!(
+                chunked, mono,
+                "{policy}/chunk={chunk} diverged from the monolithic fingerprint"
+            );
+        }
+    }
+}
+
+#[test]
+fn budgeted_chunked_results_match_monolithic_without_pressure() {
+    // no memory limit: spill timing cannot perturb results, so even the
+    // decode-interleaved schedule must reproduce per-request outputs exactly
+    let run = |chunk: Option<usize>, budget: Option<usize>| {
+        let mut s = Scheduler::new(
+            engine("lava"),
+            SchedulerOptions {
+                prefill_chunk: chunk,
+                prefill_chunk_budget: budget,
+                ..Default::default()
+            },
+        );
+        let lens = [100usize, 200, 420, 64];
+        for (i, len) in lens.iter().enumerate() {
+            s.submit(req(*len, i * 3, 3 + i)).unwrap();
+        }
+        let mut done = s.run_to_completion().unwrap();
+        done.sort_by_key(|(id, _)| *id);
+        done.into_iter()
+            .map(|(_, r)| {
+                assert_eq!(r.status, FinishStatus::Completed, "{:?}", r.error);
+                (r.tokens, r.budgets, r.kv_bytes_after_prefill)
+            })
+            .collect::<Vec<_>>()
+    };
+    let mono = run(None, None);
+    for (chunk, budget) in [(128usize, Some(32)), (96, Some(64)), (17, Some(200))] {
+        assert_eq!(
+            run(Some(chunk), budget),
+            mono,
+            "chunk={chunk} budget={budget:?} diverged from monolithic results"
+        );
+    }
+}
+
+#[test]
+fn chunked_run_reports_prefill_fill_gauges() {
+    let mut s = Scheduler::new(
+        engine("lava"),
+        SchedulerOptions {
+            prefill_chunk: Some(96),
+            prefill_chunk_budget: Some(64),
+            ..Default::default()
+        },
+    );
+    s.submit(req(300, 0, 4)).unwrap();
+    let done = s.run_to_completion().unwrap();
+    assert_eq!(done.len(), 1);
+    let m = &s.engine.metrics;
+    assert!(!m.prefill_fills.is_empty(), "chunk dispatches must be observed");
+    let util = m.prefill_bucket_utilization();
+    assert!(util > 0.0 && util <= 1.0, "utilization out of range: {util}");
+    // 300 tokens in 96-chunks at the 128 bucket: every dispatch pads, so
+    // padded tokens must be visible in the gauge
+    assert!(m.prefill_padded_tokens > 0, "misaligned chunks must report padding");
+}

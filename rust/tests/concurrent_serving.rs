@@ -445,6 +445,71 @@ fn flooded_queue_rejects_new_submissions_with_backpressure() {
 }
 
 #[test]
+fn chunked_prefill_keeps_decode_streaming_during_long_prefill() {
+    // ISSUE 7 regression: with decode-interleaved chunked prefill, a long
+    // prompt's prefill no longer head-of-line-blocks an active decode. The
+    // 1500-token prompt needs ~24 ticks at 64 tokens/tick, and every tick
+    // runs the decode round first, so A must keep emitting token lines the
+    // whole time B is mid-prefill.
+    let addr = spawn_server(SchedulerOptions {
+        prefill_chunk: Some(64),
+        prefill_chunk_budget: Some(64),
+        prefill_every: 1,
+        ..Default::default()
+    });
+
+    // A: a streamed decode, already past its prefill
+    let mut a = Client::connect(addr);
+    a.send(&req_obj(64, 0, 400, true));
+    let first = a.recv();
+    assert!(first.get("token").is_some(), "streaming must start with a token line");
+
+    // B: submit the long prompt from this thread (so it is in flight before
+    // we resume reading A's stream), then let a helper thread block on its
+    // terminal so the recv overlaps A's stream
+    let mut b = Client::connect(addr);
+    b.send(&req_obj(1500, 1, 2, false));
+    let finished = std::sync::Arc::new(std::sync::atomic::AtomicBool::new(false));
+    let fin2 = finished.clone();
+    let b_thread = std::thread::spawn(move || {
+        let v = b.recv();
+        fin2.store(true, std::sync::atomic::Ordering::SeqCst);
+        v
+    });
+
+    // count A's tokens that arrive while B is still mid-flight
+    let mut streamed = Vec::new();
+    let mut during = 0usize;
+    let terminal = loop {
+        let v = a.recv();
+        if v.get("status").is_some() {
+            break v;
+        }
+        streamed.push(v.get("token").unwrap().as_f64().unwrap() as i32);
+        if !finished.load(std::sync::atomic::Ordering::SeqCst) {
+            during += 1;
+        }
+    };
+    assert_eq!(status_of(&terminal), "completed");
+    assert_eq!(streamed.len(), 400);
+
+    let bv = b_thread.join().unwrap();
+    assert_eq!(status_of(&bv), "completed");
+    assert_eq!(tokens_of(&bv).len(), 2);
+
+    // the head-of-line regression guard: A made real progress during B's
+    // prefill window instead of stalling until it finished
+    assert!(
+        during >= 5,
+        "decode stalled during the long prefill: only {during} tokens overlapped"
+    );
+
+    // chunking must not perturb outputs: both match the serial seed path
+    assert_eq!(streamed, serial_tokens(&req(64, 0, 400)));
+    assert_eq!(tokens_of(&bv), serial_tokens(&req(1500, 1, 2)));
+}
+
+#[test]
 fn concurrent_results_match_the_serial_seed_path_exactly() {
     // every request fired concurrently from 3 connections must produce the
     // same tokens as the serial one-request-at-a-time path
