@@ -145,6 +145,22 @@ def build(out_dir, skip_existing=True):
                 + [k for k, _ in lw],
                 ["x_out", "k", "v", "win_attn", "acc_attn", "vnorm"],
             )
+    # streaming-evict chunked prefill: one chunk of C rows against a
+    # compacted carry at working cap, meta = (start, chunk_len, total_len,
+    # n_live), carry_pos maps carry columns to absolute positions
+    for c in ARTIFACTS.prefill_chunk_sizes:
+        for cap in ARTIFACTS.prefill_evict_caps:
+            if c >= cap:
+                continue
+            add(
+                f"layer_prefill_chunked_evict_{c}x{cap}",
+                M.layer_prefill_chunked_evict,
+                [sds((c, d)), sds((hk, cap, dh)), sds((hk, cap, dh)),
+                 sds((cap,), I32), sds((4,), I32)] + lw_sds,
+                ["x_chunk", "carry_k", "carry_v", "carry_pos", "meta"]
+                + [k for k, _ in lw],
+                ["x_out", "k", "v", "win_attn", "acc_attn", "vnorm"],
+            )
     for m in ARTIFACTS.decode_buckets:
         add(
             f"layer_decode_{m}",

@@ -66,6 +66,13 @@ class ArtifactConfig:
     prefill_chunk_sizes: List[int] = field(
         default_factory=lambda: [128, 256]
     )
+    # Compacted-carry working caps lowered as
+    # layer_prefill_chunked_evict_{C}x{cap} for every chunk size C < cap:
+    # streaming eviction bounds carry-in K/V at <= cap columns regardless of
+    # prompt length (layer budget + chunk + window, rounded up to a cap).
+    prefill_evict_caps: List[int] = field(
+        default_factory=lambda: [256, 512]
+    )
     pool_kernel: int = 7           # maxpool smoothing width (paper App. D)
 
 

@@ -207,6 +207,102 @@ def layer_prefill_chunked(x_chunk, carry_k, carry_v, meta,
     return x_out, k, v, win_attn, acc_attn, vnorm
 
 
+def layer_prefill_chunked_evict(x_chunk, carry_k, carry_v, carry_pos, meta,
+                                ln1, wq, wk, wv, wo, ln2, w1, w2):
+    """One chunk of a layer's prefill against a *compacted* carry.
+
+    Streaming eviction keeps only the surviving K/V columns between chunks,
+    packed at the front of a fixed working cap; `carry_pos` maps each carry
+    column to its absolute prompt position (-1 = dead/padding). The chunk
+    attends over [carry columns, own rows], so observation panels come back
+    at the compact width m = cap + C: column j < cap is carry column j,
+    column cap + r is chunk row r (absolute position start + r).
+
+    Args:
+      x_chunk:  [C, d] residual-stream rows for positions [start, start+C).
+      carry_k, carry_v: [Hk, cap, dh] compacted carry (post-RoPE keys);
+                columns >= the live count are never read.
+      carry_pos: [cap] int32 absolute positions, live columns packed at the
+                front in ascending order, then -1 padding.
+      meta:     [4] int32 = (start, chunk_len, total_len, n_live); n_live is
+                informational — masking derives from carry_pos directly.
+
+    Returns:
+      x_out    [C, d]       chunk rows of the layer output
+      k, v     [Hk, C, dh]  the chunk's KV rows (keys post-RoPE)
+      win_attn [H, w, m]    window panel; row r holds query position
+                            start + chunk_len - w + r, rows owned by earlier
+                            chunks exactly zero
+      acc_attn [H, m]       additive column-mass contribution of this
+                            chunk's valid query rows
+      vnorm    [Hk, m]      value L1 norms at this chunk's columns, 0 on
+                            carry columns (their norms were accumulated by
+                            the chunk that owned them)
+    """
+    cfg = MODEL
+    lw = dict(ln1=ln1, wq=wq, wk=wk, wv=wv, wo=wo, ln2=ln2, w1=w1, w2=w2)
+    c = x_chunk.shape[0]
+    cap = carry_k.shape[1]
+    start, chunk_len, total = meta[0], meta[1], meta[2]
+
+    h = rms_norm(x_chunk, ln1)
+    q = (h @ wq).reshape(c, cfg.n_heads, cfg.d_head).transpose(1, 0, 2)
+    k = (h @ wk).reshape(c, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    v = (h @ wv).reshape(c, cfg.n_kv_heads, cfg.d_head).transpose(1, 0, 2)
+    pos = start + jnp.arange(c, dtype=jnp.int32)
+    q = rope(q, pos)
+    k = rope(k, pos)
+
+    # compact key space: carry columns first, then the chunk's own rows
+    k_all = jnp.concatenate([carry_k, k], axis=1)            # [Hk, m, dh]
+    v_all = jnp.concatenate([carry_v, v], axis=1)
+    pos_all = jnp.concatenate([carry_pos, pos])              # [m]
+    live = jnp.concatenate(
+        [carry_pos >= 0, jnp.arange(c, dtype=jnp.int32) < chunk_len]
+    )                                                        # [m] bool
+
+    g = cfg.group_size
+    kk = jnp.repeat(k_all, g, axis=0)                        # [H, m, dh]
+    vv = jnp.repeat(v_all, g, axis=0)
+
+    scores = jnp.einsum("hqd,hkd->hqk", q, kk) / jnp.sqrt(
+        jnp.float32(cfg.d_head)
+    )                                                        # [H, C, m]
+    qpos = pos[None, :, None]
+    mask = live[None, None, :] & (pos_all[None, None, :] <= qpos)
+    scores = jnp.where(mask, scores, NEG_INF)
+    mx = jnp.max(scores, axis=-1, keepdims=True)
+    p = jnp.where(mask, jnp.exp(scores - mx), 0.0)
+    probs = p / jnp.sum(p, axis=-1, keepdims=True)           # [H, C, m]
+
+    o = jnp.einsum("hqk,hkd->hqd", probs, vv)
+    attn_out = o.transpose(1, 0, 2).reshape(c, cfg.n_heads * cfg.d_head) @ wo
+    x_out = _ffn(x_chunk + attn_out, lw)
+
+    row_valid = jnp.arange(c)[None, :, None] < chunk_len
+    acc_attn = jnp.sum(jnp.where(row_valid, probs, 0.0), axis=1)  # [H, m]
+
+    # rolling window panel: row r belongs to query position seen - w + r
+    # (seen = start + chunk_len); rows whose query falls before this chunk
+    # are owned by an earlier chunk and come back zero
+    w = cfg.window
+    wpos = start + chunk_len - w + jnp.arange(w, dtype=jnp.int32)
+    owned = (wpos >= start).astype(jnp.float32)
+    widx = jnp.clip(wpos - start, 0, c - 1)
+    win_attn = probs[:, widx, :] * owned[None, :, None]      # [H, w, m]
+
+    vnorm_chunk = jnp.sum(jnp.abs(v), axis=-1)               # [Hk, C]
+    vnorm_chunk = jnp.where(
+        jnp.arange(c)[None, :] < chunk_len, vnorm_chunk, 0.0
+    )
+    vnorm = jnp.concatenate(
+        [jnp.zeros((cfg.n_kv_heads, cap), vnorm_chunk.dtype), vnorm_chunk],
+        axis=1,
+    )                                                        # [Hk, m]
+
+    return x_out, k, v, win_attn, acc_attn, vnorm
+
+
 def lava_score_ep(win_attn, v, length, *, interpret=True):
     """Fused LAVa scoring fast path (kernels/lava_score.py)."""
     return lava_score(

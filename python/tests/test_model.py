@@ -165,6 +165,134 @@ def test_chunked_prefill_matches_monolithic(params, ids, chunk, cbucket):
         assert float(jnp.abs(got[li]["vnorm"][:, n:]).max()) == 0.0
 
 
+def test_evict_chunked_full_carry_matches_monolithic(params, ids):
+    """layer_prefill_chunked_evict with an identity carry (nothing evicted)
+    reproduces the monolithic entrypoint: K/V rows, residual stream, additive
+    panels, and every final-observation-window row."""
+    n = int(ids.shape[0])
+    cap = 128
+    w = CFG.window
+    mono = run_prefill_padded(params, ids, cap)
+    for chunk, cbucket in [(48, 64), (17, 32)]:
+        padded = jnp.concatenate(
+            [ids, jnp.full((cap - n,), CFG.pad_id, jnp.int32)]
+        )
+        x = M.embed(padded, params["tok_emb"])
+        for li in range(CFG.n_layers):
+            carry_k = jnp.zeros((CFG.n_kv_heads, cap, CFG.d_head))
+            carry_v = jnp.zeros_like(carry_k)
+            acc = np.zeros((CFG.n_heads, cap), np.float32)
+            vnorm = np.zeros((CFG.n_kv_heads, cap), np.float32)
+            rows_abs = {}
+            x_next = x
+            start = 0
+            while start < n:
+                clen = min(chunk, n - start)
+                rows = x[start:start + cbucket]
+                if rows.shape[0] < cbucket:
+                    rows = jnp.concatenate(
+                        [rows,
+                         jnp.zeros((cbucket - rows.shape[0], CFG.d_model))]
+                    )
+                carry_pos = np.full((cap,), -1, np.int32)
+                carry_pos[:start] = np.arange(start)
+                meta = jnp.array([start, clen, n, start], jnp.int32)
+                xo, k, v, winp, accp, vnp = M.layer_prefill_chunked_evict(
+                    rows, carry_k, carry_v, jnp.array(carry_pos), meta,
+                    *lw_args(params, li)
+                )
+                x_next = x_next.at[start:start + clen].set(xo[:clen])
+                carry_k = carry_k.at[:, start:start + clen].set(k[:, :clen])
+                carry_v = carry_v.at[:, start:start + clen].set(v[:, :clen])
+                accp, vnp, winp = map(np.asarray, (accp, vnp, winp))
+                # identity compaction: carry column j is absolute position j
+                acc += accp[:, :cap]
+                acc[:, start:start + clen] += accp[:, cap:cap + clen]
+                vnorm += vnp[:, :cap]
+                vnorm[:, start:start + clen] += vnp[:, cap:cap + clen]
+                for r in range(w):
+                    wpos = start + clen - w + r
+                    if wpos < start:
+                        continue
+                    row = winp[:, r, :cap].copy()
+                    row[:, start:start + clen] += winp[:, r, cap:cap + clen]
+                    assert wpos not in rows_abs, "window row owned once"
+                    rows_abs[wpos] = row
+                start += clen
+            np.testing.assert_allclose(
+                carry_k[:, :n], mono[li]["k"][:, :n], atol=3e-5, rtol=1e-4
+            )
+            np.testing.assert_allclose(
+                carry_v[:, :n], mono[li]["v"][:, :n], atol=3e-5, rtol=1e-4
+            )
+            np.testing.assert_allclose(
+                x_next[:n], mono[li]["x"][:n], atol=3e-4, rtol=1e-3
+            )
+            np.testing.assert_allclose(
+                acc[:, :n], mono[li]["acc_attn"][:, :n], atol=3e-4
+            )
+            np.testing.assert_allclose(
+                vnorm[:, :n], mono[li]["vnorm"][:, :n], atol=3e-5, rtol=1e-4
+            )
+            mono_win = np.asarray(mono[li]["win_attn"])
+            for r in range(w):
+                qpos = n - w + r
+                np.testing.assert_allclose(
+                    rows_abs[qpos][:, :n], mono_win[:, r, :n], atol=3e-5
+                )
+            x = x_next
+
+
+def test_evict_chunked_compacted_carry_renormalizes(params, ids):
+    """Dropping carry columns == renormalizing attention over the survivors
+    (the masking contract streaming eviction relies on); dead columns and
+    not-yet-seen chunk columns contribute exactly zero."""
+    n = int(ids.shape[0])
+    cap, cbucket, li, w = 64, 32, 1, CFG.window
+    mono = run_prefill_padded(params, ids, 128)
+    x_in = mono[li - 1]["x"]
+    start, clen = n - 17, 17
+    keep = np.arange(0, start, 2)
+    carry_k = jnp.zeros((CFG.n_kv_heads, cap, CFG.d_head))
+    carry_v = jnp.zeros_like(carry_k)
+    carry_k = carry_k.at[:, :len(keep)].set(mono[li]["k"][:, keep])
+    carry_v = carry_v.at[:, :len(keep)].set(mono[li]["v"][:, keep])
+    carry_pos = np.full((cap,), -1, np.int32)
+    carry_pos[:len(keep)] = keep
+    rows = x_in[start:start + cbucket]
+    meta = jnp.array([start, clen, n, len(keep)], jnp.int32)
+    xo, k, v, winp, accp, vnp = M.layer_prefill_chunked_evict(
+        rows, carry_k, carry_v, jnp.array(carry_pos), meta,
+        *lw_args(params, li)
+    )
+    np.testing.assert_allclose(
+        k[:, :clen], mono[li]["k"][:, start:n], atol=3e-5, rtol=1e-4
+    )
+    winp = np.asarray(winp)
+    mono_win = np.asarray(mono[li]["win_attn"])
+    for r in range(w):
+        qpos = start + 1 + r  # == n - w + r
+        for hh in range(CFG.n_heads):
+            live_pos = np.concatenate([keep, np.arange(start, qpos + 1)])
+            ref = mono_win[hh, r, live_pos]
+            ref = ref / ref.sum()
+            got = np.concatenate(
+                [winp[hh, r, :len(keep)],
+                 winp[hh, r, cap:cap + (qpos - start + 1)]]
+            )
+            np.testing.assert_allclose(got, ref, atol=5e-4, rtol=1e-3)
+        # dead carry columns and future chunk columns are exactly zero
+        assert float(np.abs(winp[:, r, len(keep):cap]).max()) == 0.0
+        assert float(
+            np.abs(winp[:, r, cap + (qpos - start + 1):]).max()
+        ) == 0.0
+    # accumulated mass / value norms only land on live columns
+    accp, vnp = np.asarray(accp), np.asarray(vnp)
+    assert float(np.abs(accp[:, len(keep):cap]).max()) == 0.0
+    assert float(np.abs(vnp[:, :cap]).max()) == 0.0
+    assert float(np.abs(vnp[:, cap + clen:]).max()) == 0.0
+
+
 def test_logits_match_reference(params, ids):
     n = int(ids.shape[0])
     outs = run_prefill_padded(params, ids, 128)

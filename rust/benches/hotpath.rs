@@ -72,6 +72,34 @@ fn main() {
         results.push(r);
     }
 
+    // 1c. chunked-prefill observation panels: fresh allocation per layer vs
+    // the zero-and-reuse the chunked state machine does when a layer
+    // completes (it reclaims the f32 buffers from the scored LayerObs and
+    // clears them for the next layer instead of reallocating — one panel is
+    // H·w·n + H·n + Hk·n floats, touched once per layer per session)
+    {
+        let (h, hk, w, n) = (8usize, 4usize, 16usize, 2048usize);
+        let r = bench("prefill/panel_alloc/n2048", 3, 100, || {
+            let win = vec![0.0f32; h * w * n];
+            let acc = vec![0.0f32; h * n];
+            let vn = vec![0.0f32; hk * n];
+            std::hint::black_box((&win, &acc, &vn));
+        });
+        println!("{}", r.line());
+        results.push(r);
+        let mut win = vec![0.0f32; h * w * n];
+        let mut acc = vec![0.0f32; h * n];
+        let mut vn = vec![0.0f32; hk * n];
+        let r = bench("prefill/panel_scratch/n2048", 3, 100, || {
+            win.fill(0.0);
+            acc.fill(0.0);
+            vn.fill(0.0);
+            std::hint::black_box((&win, &acc, &vn));
+        });
+        println!("{}", r.line());
+        results.push(r);
+    }
+
     // 2. top-B selection (Algorithm 1), flat vs fixed
     for n in [1024usize, 4096] {
         let mut rng = Rng::new(2);

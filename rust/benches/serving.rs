@@ -477,7 +477,11 @@ fn run_serving_loop_bench(ctx: usize, n_requests: usize, max_new: usize) -> Vec<
 /// completion inside its admission tick (one huge inter-token gap for every
 /// decoder); the chunked arm advances at most `prefill_chunk_budget` prefill
 /// tokens per tick after the decode round, so the gap stays near the
-/// per-tick decode cost. Returns the two report rows for
+/// per-tick decode cost. The third arm turns on streaming eviction
+/// (`prefill_stream_evict`): same interleaving, but the per-layer carry is
+/// evicted down to the working cap after every chunk, so the prefill
+/// transient stays flat in prompt length (measured directly by the
+/// `transient_sweep` rows). Returns the report rows for
 /// `BENCH_serving.json`.
 fn run_chunked_prefill_bench(ctx: usize, decode_new: usize) -> Vec<Json> {
     use std::collections::{BTreeMap, BTreeSet};
@@ -487,9 +491,11 @@ fn run_chunked_prefill_bench(ctx: usize, decode_new: usize) -> Vec<Json> {
     let n_long = 4usize;
     let mut rows = Vec::new();
     let mut max_gaps: BTreeMap<&str, f64> = BTreeMap::new();
-    for (label, chunk, budget) in
-        [("monolithic", None, None), ("chunked", Some(64usize), Some(64usize))]
-    {
+    for (label, chunk, budget, stream) in [
+        ("monolithic", None, None, false),
+        ("chunked", Some(64usize), Some(64usize), false),
+        ("stream_evict", Some(64), Some(64), true),
+    ] {
         let mock = MockBackend::new(MockBackend::default_config());
         let engine =
             Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
@@ -501,6 +507,7 @@ fn run_chunked_prefill_bench(ctx: usize, decode_new: usize) -> Vec<Json> {
                 max_prefill_batch: 4,
                 prefill_chunk: chunk,
                 prefill_chunk_budget: budget,
+                prefill_stream_evict: stream,
                 ..Default::default()
             },
         );
@@ -566,7 +573,7 @@ fn run_chunked_prefill_bench(ctx: usize, decode_new: usize) -> Vec<Json> {
         println!(
             "{:<40} gap_ms(mean)={:.3} gap_ms(p99)={:.3} gap_ms(max)={:.3} | \
              long_ttft_ms(mean)={:.2} long_ttft_ms(max)={:.2} prefill_tok_s={:.0} \
-             peak_kv_mb={:.2} padded_tok={} bucket_util={:.2}",
+             peak_kv_mb={:.2} transient_kb(peak)={:.1} padded_tok={} bucket_util={:.2}",
             format!("chunked-prefill/{label}/long{long_len}"),
             gap_mean * 1e3,
             gap_p99 * 1e3,
@@ -575,6 +582,7 @@ fn run_chunked_prefill_bench(ctx: usize, decode_new: usize) -> Vec<Json> {
             ttft_max * 1e3,
             prefill_tok_s,
             m.peak_kv_bytes as f64 / 1e6,
+            m.peak_prefill_transient_bytes as f64 / 1e3,
             m.prefill_padded_tokens,
             m.prefill_bucket_utilization(),
         );
@@ -588,6 +596,16 @@ fn run_chunked_prefill_bench(ctx: usize, decode_new: usize) -> Vec<Json> {
             ("long_ttft_ms_max", Json::num(ttft_max * 1e3)),
             ("prefill_tok_s", Json::num(prefill_tok_s)),
             ("peak_kv_bytes", Json::num(m.peak_kv_bytes as f64)),
+            (
+                "peak_prefill_transient_bytes",
+                Json::num(m.peak_prefill_transient_bytes as f64),
+            ),
+            ("prefill_chunk_batches", Json::num(m.prefill_chunk_batches as f64)),
+            ("prefill_chunk_occupancy", Json::num(m.prefill_chunk_batch_occupancy())),
+            (
+                "prefill_chunk_dispatches",
+                Json::num(m.prefill_chunk_batch_dispatches as f64),
+            ),
             ("prefill_padded_tokens", Json::num(m.prefill_padded_tokens as f64)),
             ("prefill_bucket_util", Json::num(m.prefill_bucket_utilization())),
         ]));
@@ -602,7 +620,65 @@ fn run_chunked_prefill_bench(ctx: usize, decode_new: usize) -> Vec<Json> {
         chunked * 1e3,
         mono * 1e3,
     );
+
+    // Transient sweep: the bounded-carry claim measured directly. One
+    // prefill per (mode, prompt length); the plain chunked carry grows
+    // linearly with the prompt while the streamed carry is pinned at the
+    // working cap — flat at every length.
+    let mut chunked_peaks = Vec::new();
+    let mut stream_peaks = Vec::new();
+    for mult in [1usize, 2, 4] {
+        let len = long_len * mult;
+        let chunked_peak = one_prefill_carry_peak(len, false);
+        let stream_peak = one_prefill_carry_peak(len, true);
+        println!(
+            "{:<40} chunked_carry_kb={:.1} stream_carry_kb={:.1}",
+            format!("chunked-prefill/transient/len{len}"),
+            chunked_peak as f64 / 1e3,
+            stream_peak as f64 / 1e3,
+        );
+        rows.push(Json::obj(vec![
+            ("mode", Json::str("transient_sweep")),
+            ("prompt_len", Json::num(len as f64)),
+            ("chunked_carry_peak_bytes", Json::num(chunked_peak as f64)),
+            ("stream_carry_peak_bytes", Json::num(stream_peak as f64)),
+        ]));
+        chunked_peaks.push(chunked_peak);
+        stream_peaks.push(stream_peak);
+    }
+    assert!(
+        chunked_peaks[2] > chunked_peaks[0] * 3,
+        "plain chunked carry must grow with the prompt: {chunked_peaks:?}"
+    );
+    assert!(
+        stream_peaks.iter().all(|&p| p == stream_peaks[0]),
+        "streamed carry must stay flat in prompt length: {stream_peaks:?}"
+    );
+    assert!(
+        stream_peaks[0] < chunked_peaks[0],
+        "streamed carry must undercut the plain chunked carry: {} vs {}",
+        stream_peaks[0],
+        chunked_peaks[0],
+    );
     rows
+}
+
+/// Peak carry K/V bytes of one chunked prefill (chunk 64) at `len` prompt
+/// tokens — the `prefill_transient_bytes` gauge after a single session.
+fn one_prefill_carry_peak(len: usize, stream: bool) -> usize {
+    let mock = MockBackend::new(MockBackend::default_config());
+    let mut engine =
+        Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+    let mut rng = Rng::new(33);
+    let inst = workloads::needle_qa(&mut rng, len, 4);
+    let req = GenerateRequest { prompt: inst.prompt, max_new_tokens: 1 };
+    let mut sess = engine.new_session_with_id(1, &req);
+    if stream {
+        engine.prefill_chunked_stream(&mut sess, 64).unwrap();
+    } else {
+        engine.prefill_chunked(&mut sess, 64).unwrap();
+    }
+    engine.metrics.peak_prefill_transient_bytes
 }
 
 fn main() {

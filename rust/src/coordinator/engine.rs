@@ -48,6 +48,41 @@
 //! length), and — via the scheduler interleaving — decode rounds that are
 //! no longer head-of-line-blocked by long prompts.
 //!
+//! ## Streaming eviction: bounded carry, mid-prefill compression
+//!
+//! The streaming-evict mode ([`EngineWorker::begin_chunked_prefill_stream`],
+//! gated by the scheduler's `prefill_stream_evict`) additionally bounds the
+//! carry itself. The carry is a *compacted* column space at a fixed working
+//! cap (`[Hk, cap, dh]`, cap = budget union + one chunk bucket + window,
+//! rounded up to a backend-supported cap): live columns are packed at the
+//! front in ascending position order with `col_pos` mapping them back to
+//! absolute prompt positions. The per-chunk state machine becomes:
+//!
+//!   1. dispatch `layer_prefill_chunked_evict` with the compacted carry and
+//!      the position map; the backend reports observation panels over the
+//!      *compact* columns (mass at carry columns is **added**, the chunk's
+//!      own columns append);
+//!   2. after each non-final chunk, if the live columns exceed the budget
+//!      union, run Algorithm 1 over the tokens seen so far — the trailing
+//!      observation window (the still-unscored suffix) is position-pinned
+//!      by `select_prefill` — and compact every panel plus the carry K/V
+//!      down to the per-head keep-set union;
+//!   3. the final chunk of a layer skips the pre-evict and runs the same
+//!      compression cascade as the plain path over the surviving columns
+//!      (`compress_streamed_layer`): Eq. 7 weights, the Algorithm 2
+//!      resplit, and a cache load that rewrites slot positions from
+//!      `col_pos`.
+//!
+//! The per-layer transient is therefore retained caches + at most `cap`
+//! carry columns — flat in prompt length, unlike the plain chunked carry.
+//! The trade: results are *not* bit-identical to the monolithic pass (a
+//! mid-prefill eviction cannot see future tokens), which is why the mode is
+//! opt-in and the gate-off path stays byte-for-byte untouched.
+//! Cross-session chunk batching rides on the same geometry: sessions whose
+//! next dispatch shares a lockstep key (layer, chunk cursor, chunk shape,
+//! cap) advance through one `layer_prefill_chunked_evict_batched` call
+//! ([`EngineWorker::advance_stream_group`]).
+//!
 //! ## Decode: gather → one dispatch per layer → scatter
 //!
 //! [`EngineWorker::decode_step_batch`] advances B sessions sharing a
@@ -88,12 +123,12 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
-use super::session::{ChunkedPrefill, Phase, Session};
+use super::session::{ChunkedPrefill, Phase, Session, StreamPrefill};
 use crate::compress::select::{select_prefill, select_recompress, KeepSet};
 use crate::compress::{alloc, score, LayerAlloc, LayerObs, Policy, ScoreKind};
 use crate::kvcache::tier::Residency;
 use crate::kvcache::HotStore;
-use crate::model::backend::ModelBackend;
+use crate::model::backend::{ChunkEvictOut, ChunkEvictReq, ModelBackend};
 use crate::model::ModelConfig;
 use crate::runtime::{Runtime, Tensor};
 
@@ -188,6 +223,12 @@ pub struct PrefillReport {
     /// per chunk per layer at the tight chunk bucket) — feeds the
     /// bucket-waste gauges.
     pub bucket_fills: Vec<(usize, usize)>,
+    /// Peak bytes of the uncompressed carry K/V alone (no retained caches):
+    /// O(prompt) on the monolithic/plain-chunked paths, bounded by the
+    /// working cap under streaming eviction — feeds the
+    /// `prefill_transient_bytes` gauge the bounded-transient claim is
+    /// measured on.
+    pub carry_peak_bytes: usize,
 }
 
 /// Shareable, `Copy` compute view of the engine: backend + options, no
@@ -264,6 +305,7 @@ impl<B: ModelBackend> Engine<B> {
     /// Merge one worker prefill report into the metrics sink.
     pub fn absorb_prefill(&mut self, report: &PrefillReport) {
         self.metrics.observe_transient(report.peak_transient);
+        self.metrics.observe_prefill_transient(report.carry_peak_bytes);
         self.metrics.observe_kv(report.live_after);
         for &(bucket, valid) in &report.bucket_fills {
             self.metrics.observe_prefill_fill(bucket, valid);
@@ -282,6 +324,20 @@ impl<B: ModelBackend> Engine<B> {
     /// Bit-identical to [`Engine::prefill`] at every chunk size.
     pub fn prefill_chunked(&mut self, sess: &mut Session, chunk: usize) -> Result<i32> {
         self.worker().begin_chunked_prefill(sess, chunk)?;
+        let (_, report) = self.worker().advance_chunked_prefill(sess, None)?;
+        let report =
+            report.ok_or_else(|| anyhow!("unbounded advance must complete the prefill"))?;
+        self.absorb_prefill(&report);
+        Ok(report.token)
+    }
+
+    /// Streaming-eviction chunked prefill driven to completion (tests/bench
+    /// use). Unlike [`Engine::prefill_chunked`] this is *not* bit-identical
+    /// to the monolithic pass — mid-prefill eviction scores only the tokens
+    /// seen so far — but the carry transient stays bounded by the working
+    /// cap regardless of prompt length.
+    pub fn prefill_chunked_stream(&mut self, sess: &mut Session, chunk: usize) -> Result<i32> {
+        self.worker().begin_chunked_prefill_stream(sess, chunk)?;
         let (_, report) = self.worker().advance_chunked_prefill(sess, None)?;
         let report =
             report.ok_or_else(|| anyhow!("unbounded advance must complete the prefill"))?;
@@ -527,7 +583,13 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         sess.next_pos = n;
         sess.phase = Phase::Decoding;
         sess.prefill_secs = t0.elapsed().as_secs_f64();
-        Ok(PrefillReport { token: tok, peak_transient, live_after: live, bucket_fills })
+        Ok(PrefillReport {
+            token: tok,
+            peak_transient,
+            live_after: live,
+            bucket_fills,
+            carry_peak_bytes: uncompressed_layer_bytes,
+        })
     }
 
     /// Tight prefill bucket for one chunk of `chunk_len` tokens (falls back
@@ -562,6 +624,30 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// (phase `Prefilling { next_chunk: 0 }`). The actual compute happens in
     /// [`EngineWorker::advance_chunked_prefill`] calls.
     pub fn begin_chunked_prefill(&self, sess: &mut Session, chunk: usize) -> Result<()> {
+        self.begin_chunked_inner(sess, chunk, None)
+    }
+
+    /// Streaming-eviction variant: the carry is allocated at the fixed
+    /// working cap from [`EngineWorker::stream_evict_cap`] and compacted
+    /// after every non-final chunk, so the per-layer transient is bounded
+    /// regardless of prompt length. Results are *not* bit-identical to the
+    /// monolithic pass — mid-prefill eviction sees only the tokens so far.
+    pub fn begin_chunked_prefill_stream(&self, sess: &mut Session, chunk: usize) -> Result<()> {
+        let cap = self.stream_evict_cap(sess.prompt.len(), chunk).ok_or_else(|| {
+            anyhow!(
+                "streaming eviction unsupported for prompt {} at chunk {chunk}",
+                sess.prompt.len()
+            )
+        })?;
+        self.begin_chunked_inner(sess, chunk, Some(cap))
+    }
+
+    fn begin_chunked_inner(
+        &self,
+        sess: &mut Session,
+        chunk: usize,
+        stream_cap: Option<usize>,
+    ) -> Result<()> {
         let t0 = std::time::Instant::now();
         let cfg = self.backend.config();
         let n = sess.prompt.len();
@@ -586,6 +672,14 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         } else {
             self.static_budgets(floor)
         };
+        // streaming mode: cap-width carry, panels live on the stream state
+        let carry_w = stream_cap.unwrap_or(n_obs);
+        let stream = stream_cap.map(|cap| Box::new(StreamPrefill::new(cap)));
+        let (win, acc, vnorm) = if stream.is_some() {
+            (Vec::new(), Vec::new(), Vec::new())
+        } else {
+            (vec![0.0; h * w * n_obs], vec![0.0; h * n_obs], vec![0.0; hk * n_obs])
+        };
         sess.phase = Phase::Prefilling { next_chunk: 0 };
         sess.prefill = Some(Box::new(ChunkedPrefill {
             chunk,
@@ -595,14 +689,15 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             chunk_idx: 0,
             x,
             x_next: vec![0.0; n * d],
-            carry_k: Tensor::zeros(&[hk, n_obs, dh]),
-            carry_v: Tensor::zeros(&[hk, n_obs, dh]),
-            win: vec![0.0; h * w * n_obs],
-            acc: vec![0.0; h * n_obs],
-            vnorm: vec![0.0; hk * n_obs],
+            carry_k: Tensor::zeros(&[hk, carry_w, dh]),
+            carry_v: Tensor::zeros(&[hk, carry_w, dh]),
+            win,
+            acc,
+            vnorm,
             weights: Vec::with_capacity(cfg.n_layers),
             budgets,
             peak_transient: 0,
+            stream,
             bucket_fills: Vec::new(),
             wait_secs: 0.0,
             enqueued_at: sess.queued_at,
@@ -633,6 +728,9 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             .prefill
             .take()
             .ok_or_else(|| anyhow!("advance_chunked_prefill before begin (session {})", sess.id))?;
+        if st.stream.is_some() {
+            return self.advance_stream_prefill(sess, st, max_tokens, t0);
+        }
         let mut worked = 0usize;
         let mut finished = false;
 
@@ -725,11 +823,17 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
                 st.chunk_idx = 0;
                 std::mem::swap(&mut st.x, &mut st.x_next);
                 if st.layer < cfg.n_layers {
-                    // fresh accumulators; the carry needs no reset — the
-                    // next layer rewrites every row before it is readable
-                    st.win = vec![0.0; h * w * st.n_obs];
-                    st.acc = vec![0.0; h * st.n_obs];
-                    st.vnorm = vec![0.0; hk * st.n_obs];
+                    // reuse the panel allocations for the next layer: the
+                    // observation tensors hand their Vecs back once scoring
+                    // is done, so steady-state layer advances allocate no
+                    // panel-sized buffers (the carry needs no reset — the
+                    // next layer rewrites every row before it is readable)
+                    st.win = obs.win_attn.into_f32()?;
+                    st.win.fill(0.0);
+                    st.acc = obs.acc_attn.into_f32()?;
+                    st.acc.fill(0.0);
+                    st.vnorm = obs.vnorm.into_f32()?;
+                    st.vnorm.fill(0.0);
                 } else {
                     finished = true;
                     break;
@@ -744,6 +848,19 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             return Ok((worked, None));
         }
 
+        let report = self.finish_chunked(sess, &mut st)?;
+        sess.prefill_secs += t0.elapsed().as_secs_f64();
+        Ok((worked, Some(report)))
+    }
+
+    /// Shared epilogue for every chunked path once all layers are
+    /// compressed: budgets move to the session, the last hidden row becomes
+    /// the first token, and the report carries the transient peaks. The
+    /// caller drops `st` (the state machine is done).
+    fn finish_chunked(&self, sess: &mut Session, st: &mut ChunkedPrefill) -> Result<PrefillReport> {
+        let cfg = self.backend.config();
+        let (hk, dh, d) = (cfg.n_kv_heads, cfg.d_head, cfg.d_model);
+        let n = sess.prompt.len();
         sess.budgets = std::mem::take(&mut st.budgets);
         let live: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
         let x_last = Tensor::f32(st.x[(n - 1) * d..n * d].to_vec(), &[1, d]);
@@ -752,14 +869,449 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         sess.generated.push(tok);
         sess.next_pos = n;
         sess.phase = Phase::Decoding;
-        sess.prefill_secs += t0.elapsed().as_secs_f64();
-        let report = PrefillReport {
+        let carry_cols = st.stream.as_ref().map_or(n, |sv| sv.max_live_cols);
+        Ok(PrefillReport {
             token: tok,
             peak_transient: st.peak_transient,
             live_after: live,
             bucket_fills: std::mem::take(&mut st.bucket_fills),
-        };
+            carry_peak_bytes: 2 * hk * carry_cols * dh * 4,
+        })
+    }
+
+    /// Streaming eviction's working-cap requirement: the worst-case keep-set
+    /// union after a mid-prefill evict (every kv head keeping a disjoint
+    /// budget, never less than the pinned window), plus one full chunk
+    /// bucket of fresh columns, plus window slack.
+    fn stream_cap_required(&self, prompt_len: usize, chunk: usize) -> usize {
+        let cfg = self.backend.config();
+        let union = cfg.n_kv_heads * self.opts.budget_per_head.max(cfg.window);
+        union + self.chunk_bucket(chunk.min(prompt_len)) + cfg.window
+    }
+
+    /// Working cap for a streaming-evict prefill of this prompt: the exact
+    /// requirement when the backend serves it (mock), else the smallest
+    /// prefill bucket above it the backend lowered evict artifacts for
+    /// (PJRT). None when no supported cap exists or the policy keeps the
+    /// full cache (nothing may be evicted mid-stream) — callers fall back
+    /// to the plain chunked or monolithic path.
+    pub fn stream_evict_cap(&self, prompt_len: usize, chunk: usize) -> Option<usize> {
+        if chunk == 0 || prompt_len == 0 || self.opts.policy.full_cache {
+            return None;
+        }
+        let need = self.stream_cap_required(prompt_len, chunk);
+        let full = chunk.min(prompt_len);
+        let tail = prompt_len % chunk;
+        let mut shapes = vec![self.chunk_bucket(full)];
+        if tail != 0 && prompt_len > chunk {
+            let tb = self.chunk_bucket(tail);
+            if !shapes.contains(&tb) {
+                shapes.push(tb);
+            }
+        }
+        let mut caps: Vec<usize> = vec![need];
+        caps.extend(self.backend.prefill_buckets().iter().copied().filter(|&b| b > need));
+        caps.sort_unstable();
+        caps.dedup();
+        caps.into_iter()
+            .find(|&cap| shapes.iter().all(|&cb| self.backend.supports_chunked_evict(cb, cap)))
+    }
+
+    /// Lockstep shape of a mid-stream session's next dispatch: (layer,
+    /// chunk cursor, chunk size, chunk length, working cap). Sessions
+    /// sharing a key can advance through one batched backend call
+    /// ([`EngineWorker::advance_stream_group`]). None for sessions not on
+    /// the streaming path.
+    pub fn stream_lockstep_key(
+        &self,
+        sess: &Session,
+    ) -> Option<(usize, usize, usize, usize, usize)> {
+        let st = sess.prefill.as_ref()?;
+        let sv = st.stream.as_ref()?;
+        let start = st.chunk_idx * st.chunk;
+        let chunk_len = st.chunk.min(sess.prompt.len() - start);
+        Some((st.layer, st.chunk_idx, st.chunk, chunk_len, sv.cap))
+    }
+
+    /// Streaming-eviction advance: the same budgeted loop as
+    /// [`EngineWorker::advance_chunked_prefill`], but every dispatch is a
+    /// `layer_prefill_chunked_evict` against the compacted carry and each
+    /// non-final chunk is followed by a mid-prefill eviction bounding the
+    /// live columns to the working cap.
+    fn advance_stream_prefill(
+        &self,
+        sess: &mut Session,
+        mut st: Box<ChunkedPrefill>,
+        max_tokens: Option<usize>,
+        t0: std::time::Instant,
+    ) -> Result<(usize, Option<PrefillReport>)> {
+        let cfg = self.backend.config().clone();
+        let d = cfg.d_model;
+        let n = sess.prompt.len();
+        let mut worked = 0usize;
+        let mut finished = false;
+        while st.layer < cfg.n_layers {
+            if let Some(budget) = max_tokens {
+                if worked >= budget {
+                    break;
+                }
+            }
+            let start = st.chunk_idx * st.chunk;
+            let chunk_len = st.chunk.min(n - start);
+            let c_bucket = self.chunk_bucket(chunk_len);
+            let (x_chunk, carry_pos) = stream_chunk_inputs(&st, start, chunk_len, c_bucket, d);
+            let out = self.backend.layer_prefill_chunked_evict(
+                st.layer,
+                &ChunkEvictReq {
+                    x_chunk: &x_chunk,
+                    carry_k: &st.carry_k,
+                    carry_v: &st.carry_v,
+                    carry_pos: &carry_pos,
+                    start,
+                    chunk_len,
+                    total_len: n,
+                    n_obs: st.n_obs,
+                },
+            )?;
+            worked += chunk_len;
+            self.consume_stream_chunk(sess, &mut st, out, start, chunk_len, c_bucket)?;
+            if st.layer == cfg.n_layers {
+                finished = true;
+                break;
+            }
+        }
+        if !finished {
+            sess.phase = Phase::Prefilling { next_chunk: st.chunk_idx };
+            sess.prefill = Some(st);
+            sess.prefill_secs += t0.elapsed().as_secs_f64();
+            return Ok((worked, None));
+        }
+        let report = self.finish_chunked(sess, &mut st)?;
+        sess.prefill_secs += t0.elapsed().as_secs_f64();
         Ok((worked, Some(report)))
+    }
+
+    /// Advance every session in `group` by exactly one streaming-evict
+    /// chunk through a single batched backend call (cross-session chunk
+    /// batching). All sessions must share a
+    /// [`EngineWorker::stream_lockstep_key`]; per-session results are
+    /// identical to serial advances — batching only changes how many
+    /// dispatches the backend sees. Returns each session's
+    /// `(tokens worked, completion report)` in group order plus the real
+    /// backend dispatch count. Fails as a unit: an error tears down every
+    /// member's prefill state, so callers retire the whole group (exactly
+    /// like a batched decode error).
+    pub fn advance_stream_group(
+        &self,
+        group: &mut [Session],
+    ) -> Result<(Vec<(usize, Option<PrefillReport>)>, usize)> {
+        if group.is_empty() {
+            return Ok((Vec::new(), 0));
+        }
+        let t0 = std::time::Instant::now();
+        let cfg = self.backend.config().clone();
+        let d = cfg.d_model;
+        let mut sts: Vec<Box<ChunkedPrefill>> = Vec::with_capacity(group.len());
+        for sess in group.iter_mut() {
+            sts.push(sess.prefill.take().ok_or_else(|| {
+                anyhow!("advance_stream_group on session {} without prefill state", sess.id)
+            })?);
+        }
+        let (layer, chunk_idx) = (sts[0].layer, sts[0].chunk_idx);
+        // per-session owned inputs (the requests below borrow them)
+        let mut inputs: Vec<(Tensor, Vec<i32>, usize, usize, usize)> =
+            Vec::with_capacity(group.len());
+        for (sess, st) in group.iter().zip(&sts) {
+            if st.stream.is_none() || st.layer != layer || st.chunk_idx != chunk_idx {
+                bail!("advance_stream_group over sessions out of lockstep");
+            }
+            let n = sess.prompt.len();
+            let start = st.chunk_idx * st.chunk;
+            let chunk_len = st.chunk.min(n - start);
+            let c_bucket = self.chunk_bucket(chunk_len);
+            let (x_chunk, carry_pos) = stream_chunk_inputs(st, start, chunk_len, c_bucket, d);
+            inputs.push((x_chunk, carry_pos, start, chunk_len, c_bucket));
+        }
+        let (outs, dispatches) = {
+            let reqs: Vec<ChunkEvictReq> = sts
+                .iter()
+                .zip(group.iter())
+                .zip(&inputs)
+                .map(|((st, sess), (x_chunk, carry_pos, start, chunk_len, _))| ChunkEvictReq {
+                    x_chunk,
+                    carry_k: &st.carry_k,
+                    carry_v: &st.carry_v,
+                    carry_pos,
+                    start: *start,
+                    chunk_len: *chunk_len,
+                    total_len: sess.prompt.len(),
+                    n_obs: st.n_obs,
+                })
+                .collect();
+            self.backend.layer_prefill_chunked_evict_batched(layer, &reqs)?
+        };
+        if outs.len() != group.len() {
+            bail!("batched evict returned {} outputs for {} sessions", outs.len(), group.len());
+        }
+        let mut results = Vec::with_capacity(group.len());
+        for (i, ((sess, mut st), out)) in group.iter_mut().zip(sts).zip(outs).enumerate() {
+            let (start, chunk_len, c_bucket) = (inputs[i].2, inputs[i].3, inputs[i].4);
+            self.consume_stream_chunk(sess, &mut st, out, start, chunk_len, c_bucket)?;
+            if st.layer == cfg.n_layers {
+                let report = self.finish_chunked(sess, &mut st)?;
+                results.push((chunk_len, Some(report)));
+            } else {
+                sess.phase = Phase::Prefilling { next_chunk: st.chunk_idx };
+                sess.prefill = Some(st);
+                results.push((chunk_len, None));
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64() / group.len() as f64;
+        for sess in group.iter_mut() {
+            sess.prefill_secs += secs;
+        }
+        Ok((results, dispatches))
+    }
+
+    /// Fold one streaming-evict dispatch into the session: scatter the
+    /// chunk's K/V after the live carry columns, merge the compact
+    /// observation panels (adding at carry columns), then either evict down
+    /// to the budget union (non-final chunk) or run the layer compression
+    /// (final chunk of the layer).
+    fn consume_stream_chunk(
+        &self,
+        sess: &mut Session,
+        st: &mut ChunkedPrefill,
+        out: ChunkEvictOut,
+        start: usize,
+        chunk_len: usize,
+        c_bucket: usize,
+    ) -> Result<()> {
+        let cfg = self.backend.config();
+        let (h, hk, w, dh, d) =
+            (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head, cfg.d_model);
+        let cap = st.stream.as_ref().expect("stream state").cap;
+        let n_live = st.stream.as_ref().expect("stream state").col_pos.len();
+        let n_cols = n_live + chunk_len;
+        let m = cap + out.k.shape[1];
+        let seen = start + chunk_len;
+        debug_assert!(n_cols <= cap, "live columns {n_cols} overflow the cap {cap}");
+
+        // chunk K/V land right after the live carry columns
+        {
+            let cb = out.k.shape[1];
+            let kc = out.k.as_f32()?;
+            let vc = out.v.as_f32()?;
+            let ck = st.carry_k.as_f32_mut()?;
+            let cv = st.carry_v.as_f32_mut()?;
+            for kv in 0..hk {
+                let dst = (kv * cap + n_live) * dh;
+                let src = kv * cb * dh;
+                ck[dst..dst + chunk_len * dh].copy_from_slice(&kc[src..src + chunk_len * dh]);
+                cv[dst..dst + chunk_len * dh].copy_from_slice(&vc[src..src + chunk_len * dh]);
+            }
+        }
+        {
+            let sv = st.stream.as_mut().expect("stream state");
+            // acc/vnorm: add at carry columns, append the chunk's columns
+            let mut acc = vec![0.0f32; h * n_cols];
+            for hh in 0..h {
+                for j in 0..n_live {
+                    acc[hh * n_cols + j] = sv.acc[hh * n_live + j] + out.acc[hh * m + j];
+                }
+                for r in 0..chunk_len {
+                    acc[hh * n_cols + n_live + r] = out.acc[hh * m + cap + r];
+                }
+            }
+            sv.acc = acc;
+            let mut vnorm = vec![0.0f32; hk * n_cols];
+            for kv in 0..hk {
+                for j in 0..n_live {
+                    vnorm[kv * n_cols + j] = sv.vnorm[kv * n_live + j] + out.vnorm[kv * m + j];
+                }
+                for r in 0..chunk_len {
+                    vnorm[kv * n_cols + n_live + r] = out.vnorm[kv * m + cap + r];
+                }
+            }
+            sv.vnorm = vnorm;
+            // rolling window: drop rows that fell out, widen the survivors
+            // with the chunk's (zero — future-position) columns, append the
+            // chunk's owned rows compacted to the new width
+            let keep_from = seen.saturating_sub(w);
+            sv.win_rows.retain(|(q, _)| *q >= keep_from);
+            for (_, row) in sv.win_rows.iter_mut() {
+                let mut wide = vec![0.0f32; h * n_cols];
+                for hh in 0..h {
+                    wide[hh * n_cols..hh * n_cols + n_live]
+                        .copy_from_slice(&row[hh * n_live..(hh + 1) * n_live]);
+                }
+                *row = wide;
+            }
+            for (qpos, row) in &out.win_rows {
+                if *qpos < keep_from {
+                    continue;
+                }
+                let mut compact = vec![0.0f32; h * n_cols];
+                for hh in 0..h {
+                    compact[hh * n_cols..hh * n_cols + n_live]
+                        .copy_from_slice(&row[hh * m..hh * m + n_live]);
+                    compact[hh * n_cols + n_live..hh * n_cols + n_cols]
+                        .copy_from_slice(&row[hh * m + cap..hh * m + cap + chunk_len]);
+                }
+                sv.win_rows.push((*qpos, compact));
+            }
+            sv.col_pos.extend((start..seen).map(|p| p as i32));
+            sv.max_live_cols = sv.max_live_cols.max(n_cols);
+        }
+
+        let xo = out.x_out.as_f32()?;
+        st.x_next[start * d..(start + chunk_len) * d].copy_from_slice(&xo[..chunk_len * d]);
+        st.bucket_fills.push((c_bucket, chunk_len));
+        st.chunk_idx += 1;
+
+        // bounded transient: retained caches + the live carry columns
+        // (never more than the cap, however long the prompt)
+        let retained: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
+        st.peak_transient = st.peak_transient.max(retained + 2 * hk * n_cols * dh * 4);
+
+        if st.chunk_idx == st.n_chunks {
+            self.compress_streamed_layer(sess, st)?;
+            st.layer += 1;
+            st.chunk_idx = 0;
+            std::mem::swap(&mut st.x, &mut st.x_next);
+            if st.layer < cfg.n_layers {
+                st.stream.as_mut().expect("stream state").reset_for_next_layer();
+            }
+        } else {
+            let union = hk * self.opts.budget_per_head.max(w);
+            if n_cols > union {
+                self.stream_evict(st, union)?;
+            }
+        }
+        Ok(())
+    }
+
+    /// Mid-prefill eviction: score the live columns (Algorithm 1 over the
+    /// tokens seen so far — the trailing observation window is the suffix
+    /// [`select_prefill`] pins), then compact every panel plus the carry
+    /// K/V down to the keep-set union. Columns stay in ascending-position
+    /// order, so the pinned suffix is exactly the trailing w positions.
+    fn stream_evict(&self, st: &mut ChunkedPrefill, union_budget: usize) -> Result<()> {
+        let cfg = self.backend.config();
+        let (h, hk, w, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head);
+        let cap = st.stream.as_ref().expect("stream state").cap;
+        let survivors: Vec<usize> = {
+            let sv = st.stream.as_ref().expect("stream state");
+            let n_cols = sv.col_pos.len();
+            let obs = stream_obs(sv, h, hk, w);
+            let p = &self.opts.policy;
+            let scores =
+                score::kv_head_scores(p.score, p.group_reduce, &obs, self.opts.pool_kernel);
+            let keepset = select_prefill(&scores, n_cols, union_budget, w, p.head_alloc);
+            let mut live = vec![false; n_cols];
+            for keep in &keepset.keep {
+                for &j in keep {
+                    live[j] = true;
+                }
+            }
+            (0..n_cols).filter(|&j| live[j]).collect()
+        };
+        let sv = st.stream.as_mut().expect("stream state");
+        let n_cols = sv.col_pos.len();
+        if survivors.len() == n_cols {
+            return Ok(());
+        }
+        let ns = survivors.len();
+        sv.col_pos = survivors.iter().map(|&j| sv.col_pos[j]).collect();
+        let mut acc = vec![0.0f32; h * ns];
+        for hh in 0..h {
+            for (dst, &src) in survivors.iter().enumerate() {
+                acc[hh * ns + dst] = sv.acc[hh * n_cols + src];
+            }
+        }
+        sv.acc = acc;
+        let mut vnorm = vec![0.0f32; hk * ns];
+        for kv in 0..hk {
+            for (dst, &src) in survivors.iter().enumerate() {
+                vnorm[kv * ns + dst] = sv.vnorm[kv * n_cols + src];
+            }
+        }
+        sv.vnorm = vnorm;
+        for (_, row) in sv.win_rows.iter_mut() {
+            let mut compact = vec![0.0f32; h * ns];
+            for hh in 0..h {
+                for (dst, &src) in survivors.iter().enumerate() {
+                    compact[hh * ns + dst] = row[hh * n_cols + src];
+                }
+            }
+            *row = compact;
+        }
+        // gather the surviving K/V rows forward; survivors ascend, so every
+        // copy moves a row to an index <= its source and ranges never overlap
+        let ck = st.carry_k.as_f32_mut()?;
+        let cv = st.carry_v.as_f32_mut()?;
+        for kv in 0..hk {
+            let base = kv * cap * dh;
+            for (dst, &src) in survivors.iter().enumerate() {
+                if dst == src {
+                    continue;
+                }
+                ck.copy_within(base + src * dh..base + (src + 1) * dh, base + dst * dh);
+                cv.copy_within(base + src * dh..base + (src + 1) * dh, base + dst * dh);
+            }
+        }
+        Ok(())
+    }
+
+    /// Final-chunk layer compression on the streamed path: the same
+    /// Algorithm 1 selection, Eq. 7 / CAKE weights, and Algorithm 2 cascade
+    /// as [`EngineWorker::compress_prefilled_layer`], but over the compact
+    /// survivor columns (scores run host-side — the fused artifact's bucket
+    /// shapes do not apply to compacted carries) with slot positions
+    /// rewritten from the column-position map.
+    fn compress_streamed_layer(&self, sess: &mut Session, st: &mut ChunkedPrefill) -> Result<()> {
+        let cfg = self.backend.config();
+        let (h, hk, w) = (cfg.n_heads, cfg.n_kv_heads, cfg.window);
+        let floor = hk * w;
+        let l = st.layer;
+        let dynamic = self.opts.policy.dynamic_layer();
+        let (scores, obs, col_pos) = {
+            let sv = st.stream.as_ref().expect("stream state");
+            let obs = stream_obs(sv, h, hk, w);
+            let p = &self.opts.policy;
+            let scores =
+                score::kv_head_scores(p.score, p.group_reduce, &obs, self.opts.pool_kernel);
+            (scores, obs, sv.col_pos.clone())
+        };
+        let n_cols = col_pos.len();
+        if dynamic {
+            st.weights.push(self.layer_weight(&scores, &obs));
+            let total = self.total_budget();
+            let split = alloc::proportional(&st.weights, total, floor);
+            st.budgets[..=l].copy_from_slice(&split);
+        }
+        let keepset =
+            select_prefill(&scores, n_cols, st.budgets[l], w, self.opts.policy.head_alloc);
+        let capacity = self.capacity_for(st.budgets[l], n_cols, sess.max_new_tokens)?;
+        let mut cache = HotStore::new(hk, cfg.d_head, capacity);
+        cache.load_from_prefill_at(
+            &st.carry_k,
+            &st.carry_v,
+            &keepset.keep,
+            &keepset.scores,
+            &col_pos,
+        );
+        sess.caches.push(cache);
+        sess.residency.push(Residency::Hot);
+        if dynamic {
+            recompress_earlier(
+                &mut sess.caches[..l],
+                &st.budgets,
+                hk,
+                self.opts.policy.head_alloc,
+            );
+        }
+        Ok(())
     }
 
     /// One serial decode step: feed the last generated token, produce the
@@ -922,6 +1474,45 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             evict_decode_overflow(cache, self.opts.budget_per_head, pos, cfg.window);
         }
         Ok(())
+    }
+}
+
+/// Build one streaming-evict dispatch's owned inputs: the chunk rows padded
+/// to the chunk bucket and the cap-width carry position map (-1 past the
+/// live columns).
+fn stream_chunk_inputs(
+    st: &ChunkedPrefill,
+    start: usize,
+    chunk_len: usize,
+    c_bucket: usize,
+    d: usize,
+) -> (Tensor, Vec<i32>) {
+    let sv = st.stream.as_ref().expect("stream_chunk_inputs on a non-stream prefill");
+    let mut xc = vec![0.0f32; c_bucket * d];
+    xc[..chunk_len * d].copy_from_slice(&st.x[start * d..(start + chunk_len) * d]);
+    let mut carry_pos = vec![-1i32; sv.cap];
+    carry_pos[..sv.col_pos.len()].copy_from_slice(&sv.col_pos);
+    (Tensor::f32(xc, &[c_bucket, d]), carry_pos)
+}
+
+/// Assemble a scoring [`LayerObs`] over the compact column space: the last
+/// w query rows in ascending qpos order (exactly the monolithic window-row
+/// layout) plus the accumulated acc/vnorm panels.
+fn stream_obs(sv: &StreamPrefill, h: usize, hk: usize, w: usize) -> LayerObs {
+    let n_cols = sv.col_pos.len();
+    debug_assert_eq!(sv.win_rows.len(), w, "scoring before the observation window filled");
+    let mut win = vec![0.0f32; h * w * n_cols];
+    for (r, (_, row)) in sv.win_rows.iter().enumerate() {
+        for hh in 0..h {
+            win[(hh * w + r) * n_cols..(hh * w + r + 1) * n_cols]
+                .copy_from_slice(&row[hh * n_cols..(hh + 1) * n_cols]);
+        }
+    }
+    LayerObs {
+        win_attn: Tensor::f32(win, &[h, w, n_cols]),
+        acc_attn: Tensor::f32(sv.acc.clone(), &[h, n_cols]),
+        vnorm: Tensor::f32(sv.vnorm.clone(), &[hk, n_cols]),
+        length: n_cols,
     }
 }
 
@@ -1411,5 +2002,181 @@ mod tests {
             }
             assert!(kept.contains(&199));
         }
+    }
+
+    #[test]
+    fn stream_prefill_bounds_carry_transient() {
+        let run = |n: usize, stream: bool| {
+            let mut e = engine("lava", 24);
+            let req = GenerateRequest { prompt: prompt(n), max_new_tokens: 3 };
+            let mut s = e.new_session(&req);
+            let w = e.worker();
+            if stream {
+                w.begin_chunked_prefill_stream(&mut s, 64).unwrap();
+            } else {
+                w.begin_chunked_prefill(&mut s, 64).unwrap();
+            }
+            let (_, report) = w.advance_chunked_prefill(&mut s, None).unwrap();
+            (e, s, report.expect("unbounded advance completes"))
+        };
+        // working cap = Hk*max(b, w) + chunk bucket + w = 96 + 128 + 16 = 240
+        // columns; one column is 2 (K+V) * Hk(4) * dh(16) * 4 = 512 bytes
+        let cap_bytes = 512 * 240;
+        let (mut e256, mut s256, r256) = run(256, true);
+        let (_, s1024, r1024) = run(1024, true);
+        for (s, r) in [(&s256, &r256), (&s1024, &r1024)] {
+            assert!(
+                r.carry_peak_bytes <= cap_bytes,
+                "carry {} exceeds the working cap {cap_bytes}",
+                r.carry_peak_bytes
+            );
+            assert!(r.peak_transient <= cap_bytes + r.live_after);
+            assert_eq!(s.budgets.iter().sum::<usize>(), 24 * 4 * 4);
+            assert_eq!(s.generated.len(), 1);
+            assert!(s.prefill.is_none(), "state machine must be torn down");
+        }
+        // the plain chunked carry is O(prompt): 512 bytes per prompt column
+        let (_, _, p256) = run(256, false);
+        let (_, _, p1024) = run(1024, false);
+        assert_eq!(p256.carry_peak_bytes, 512 * 256);
+        assert_eq!(p1024.carry_peak_bytes, 512 * 1024);
+        assert!(
+            r1024.carry_peak_bytes < p1024.carry_peak_bytes / 4,
+            "stream transient must stay flat while the plain carry grows linearly"
+        );
+        // the streamed session decodes normally on its compacted caches
+        for _ in 0..2 {
+            e256.decode_step(&mut s256).unwrap();
+        }
+        assert_eq!(s256.generated.len(), 3);
+    }
+
+    #[test]
+    fn stream_prefill_group_advance_matches_serial() {
+        let req = GenerateRequest { prompt: prompt(300), max_new_tokens: 4 };
+        let mut solo_e = engine("lava", 24);
+        let mut solo = solo_e.new_session(&req);
+        solo_e.prefill_chunked_stream(&mut solo, 96).unwrap();
+
+        let mut e = engine("lava", 24);
+        let a = {
+            let mut s = e.new_session(&req);
+            e.worker().begin_chunked_prefill_stream(&mut s, 96).unwrap();
+            s
+        };
+        let b = {
+            let mut s = e.new_session(&req);
+            e.worker().begin_chunked_prefill_stream(&mut s, 96).unwrap();
+            s
+        };
+        let w = e.worker();
+        let mut group = vec![a, b];
+        loop {
+            let ka = w.stream_lockstep_key(&group[0]);
+            let kb = w.stream_lockstep_key(&group[1]);
+            assert_eq!(ka, kb, "identical prompts stay in lockstep");
+            let (res, dispatches) = w.advance_stream_group(&mut group).unwrap();
+            assert_eq!(dispatches, 1, "one backend dispatch per lockstep group");
+            assert_eq!(res.len(), 2);
+            let done = res.iter().filter(|(_, r)| r.is_some()).count();
+            assert!(done == 0 || done == 2, "identical sessions finish together");
+            if done == 2 {
+                for (_, r) in &res {
+                    let r = r.as_ref().unwrap();
+                    assert_eq!(r.token, solo.generated[0]);
+                    assert!(r.carry_peak_bytes > 0);
+                }
+                break;
+            }
+        }
+        for s in &group {
+            assert_eq!(s.generated, solo.generated, "grouped token diverged from serial");
+            assert_eq!(s.budgets, solo.budgets, "grouped budgets diverged from serial");
+            assert_eq!(
+                cache_fingerprint(s),
+                cache_fingerprint(&solo),
+                "grouped keep-sets diverged from serial"
+            );
+        }
+    }
+
+    /// Satellite 3: streamed keep-sets must stay close to the monolithic
+    /// selection on retrieval workloads. Documented floor: at chunk sizes
+    /// 64/96/128 the streamed run must agree with the monolithic keep-set
+    /// on at least 50% of kept positions (mid-prefill eviction cannot see
+    /// future queries, so exact agreement is impossible by design).
+    #[test]
+    fn stream_keep_sets_overlap_monolithic_on_retrieval_workloads() {
+        use crate::util::rng::Rng;
+        use crate::workloads::{needle_at_depth, needle_qa, ruler};
+
+        fn keep_positions(sess: &Session) -> Vec<Vec<Vec<i32>>> {
+            sess.caches
+                .iter()
+                .map(|c| {
+                    (0..c.n_kv_heads())
+                        .map(|h| {
+                            let mut p: Vec<i32> =
+                                (0..c.head_len(h)).map(|i| c.position(h, i)).collect();
+                            p.sort_unstable();
+                            p
+                        })
+                        .collect()
+                })
+                .collect()
+        }
+
+        let mut rng = Rng::new(7);
+        let instances = vec![
+            needle_at_depth(&mut rng, 320, 0.25, 8),
+            needle_at_depth(&mut rng, 320, 0.75, 8),
+            needle_qa(&mut rng, 320, 8),
+            ruler::multi_hop(&mut rng, 320),
+        ];
+        for chunk in [64usize, 96, 128] {
+            let (mut hits, mut total) = (0usize, 0usize);
+            for inst in &instances {
+                let req =
+                    GenerateRequest { prompt: inst.prompt.clone(), max_new_tokens: 1 };
+                let mut me = engine("lava", 24);
+                let mut ms = me.new_session(&req);
+                me.prefill(&mut ms).unwrap();
+                let mut se = engine("lava", 24);
+                let mut ss = se.new_session(&req);
+                se.prefill_chunked_stream(&mut ss, chunk).unwrap();
+                let mk = keep_positions(&ms);
+                let sk = keep_positions(&ss);
+                for (lm, ls) in mk.iter().zip(&sk) {
+                    for (hm, hs) in lm.iter().zip(ls) {
+                        total += hm.len();
+                        hits += hm.iter().filter(|p| hs.binary_search(p).is_ok()).count();
+                    }
+                }
+            }
+            let overlap = hits as f64 / total as f64;
+            assert!(
+                overlap >= 0.5,
+                "chunk {chunk}: streamed keep-set overlap {overlap:.3} below the 0.5 floor"
+            );
+        }
+    }
+
+    #[test]
+    fn stream_cap_routing() {
+        let e = engine("lava", 24);
+        let w = e.worker();
+        // 4*max(24,16) + 128 + 16
+        assert_eq!(w.stream_evict_cap(256, 64), Some(240));
+        assert_eq!(w.stream_evict_cap(0, 64), None);
+        assert_eq!(w.stream_evict_cap(256, 0), None);
+        // full-cache policies must never evict mid-stream
+        let full = engine("full", 24);
+        assert_eq!(full.worker().stream_evict_cap(256, 64), None);
+        // non-stream sessions expose no lockstep key
+        let req = GenerateRequest { prompt: prompt(200), max_new_tokens: 1 };
+        let mut e2 = engine("lava", 24);
+        let mut s = e2.new_session(&req);
+        e2.worker().begin_chunked_prefill(&mut s, 64).unwrap();
+        assert!(e2.worker().stream_lockstep_key(&s).is_none());
     }
 }

@@ -65,6 +65,20 @@ pub struct Metrics {
     /// Warm-tier (Q8 spilled) bytes and their observed peak.
     pub warm_kv_bytes: usize,
     pub peak_warm_kv_bytes: usize,
+    /// Per-prefill carry transient: the largest carry K/V a single prefill
+    /// held at once (last finished prefill + observed peak). On the
+    /// monolithic and plain-chunked paths this is the full uncompressed
+    /// layer (O(prompt)); with `prefill_stream_evict` it is bounded by the
+    /// streaming working cap regardless of prompt length.
+    pub prefill_transient_bytes: usize,
+    pub peak_prefill_transient_bytes: usize,
+    /// Cross-session chunk batching: lockstep streaming-prefill rounds
+    /// (`batches`), the sessions they covered, and the backend dispatches
+    /// they cost. occupancy = sessions / batches; without batching,
+    /// dispatches == sessions.
+    pub prefill_chunk_batches: u64,
+    pub prefill_chunk_batch_sessions: u64,
+    pub prefill_chunk_batch_dispatches: u64,
     /// Tier transition counters: spills/prefetches, bytes moved (hot-side
     /// accounting), and cumulative transition latency. With the tier
     /// thread, these latencies are the *serving-thread* cost per
@@ -155,6 +169,33 @@ impl Metrics {
     pub fn observe_warm(&mut self, warm: usize) {
         self.warm_kv_bytes = warm;
         self.peak_warm_kv_bytes = self.peak_warm_kv_bytes.max(warm);
+    }
+
+    /// Record one finished prefill's peak carry K/V bytes (bounded under
+    /// streaming eviction, O(prompt) otherwise).
+    pub fn observe_prefill_transient(&mut self, bytes: usize) {
+        self.prefill_transient_bytes = bytes;
+        self.peak_prefill_transient_bytes = self.peak_prefill_transient_bytes.max(bytes);
+    }
+
+    /// Record one lockstep streaming-prefill group advance covering
+    /// `sessions` sessions at `dispatches` backend calls (1 when the
+    /// backend batched the whole group).
+    pub fn observe_prefill_chunk_batch(&mut self, sessions: usize, dispatches: usize) {
+        self.prefill_chunk_batches += 1;
+        self.prefill_chunk_batch_sessions += sessions as u64;
+        self.prefill_chunk_batch_dispatches += dispatches as u64;
+    }
+
+    /// Mean sessions advanced per lockstep streaming-prefill round (0 when
+    /// none ran; > 1 means cross-session chunk batching is amortizing
+    /// dispatches).
+    pub fn prefill_chunk_batch_occupancy(&self) -> f64 {
+        if self.prefill_chunk_batches > 0 {
+            self.prefill_chunk_batch_sessions as f64 / self.prefill_chunk_batches as f64
+        } else {
+            0.0
+        }
     }
 
     /// Record one hot→warm spill: hot bytes freed and transition latency.
@@ -351,6 +392,8 @@ impl Metrics {
              throughput_tok_s={:.1} admission_rounds={} decode_steps={} \
              decode_batches={} batch_occupancy={:.2} decode_dispatches={} \
              prefill_padded_tokens={} prefill_bucket_util={:.2} \
+             prefill_transient_mb(peak)={:.2} prefill_chunk_batches={} \
+             prefill_chunk_occupancy={:.2} prefill_chunk_dispatches={} \
              workers={} worker_util={:.2} worker_busy_ms=[{}] \
              tier_spill_q={} tier_prefetch_q={} tier_q_peak={} \
              tier_staged_mb(peak)={:.2} tier_busy_ms={:.3}",
@@ -384,6 +427,10 @@ impl Metrics {
             self.decode_dispatches_total(),
             self.prefill_padded_tokens,
             self.prefill_bucket_utilization(),
+            self.peak_prefill_transient_bytes as f64 / 1e6,
+            self.prefill_chunk_batches,
+            self.prefill_chunk_batch_occupancy(),
+            self.prefill_chunk_batch_dispatches,
             self.workers,
             self.worker_utilization(),
             worker_busy.join(","),
@@ -514,6 +561,27 @@ mod tests {
         let util = m.prefill_bucket_utilization();
         assert!((util - 232.0 / 288.0).abs() < 1e-9, "{util}");
         assert!(m.report().contains("prefill_padded_tokens=56"));
+    }
+
+    #[test]
+    fn prefill_stream_accounting() {
+        let mut m = Metrics::new();
+        assert_eq!(m.prefill_chunk_batch_occupancy(), 0.0, "no rounds yet");
+        m.observe_prefill_transient(4096);
+        m.observe_prefill_transient(1024);
+        assert_eq!(m.prefill_transient_bytes, 1024, "gauge tracks the last prefill");
+        assert_eq!(m.peak_prefill_transient_bytes, 4096, "peak holds the worst");
+        // two lockstep rounds: a batched pair (1 dispatch) and a singleton
+        m.observe_prefill_chunk_batch(2, 1);
+        m.observe_prefill_chunk_batch(1, 1);
+        assert_eq!(m.prefill_chunk_batches, 2);
+        assert_eq!(m.prefill_chunk_batch_sessions, 3);
+        assert_eq!(m.prefill_chunk_batch_dispatches, 2);
+        assert!((m.prefill_chunk_batch_occupancy() - 1.5).abs() < 1e-9);
+        let report = m.report();
+        assert!(report.contains("prefill_chunk_batches=2"));
+        assert!(report.contains("prefill_chunk_occupancy=1.50"));
+        assert!(report.contains("prefill_chunk_dispatches=2"));
     }
 
     #[test]

@@ -83,6 +83,32 @@
 //! full projected bytes ([`Scheduler::prefilling_reserved_bytes`]), stay
 //! out of the incremental `hot_bytes` counter until their first token, and
 //! are never spill victims.
+//!
+//! ## Streaming prefill compression (`prefill_stream_evict`)
+//!
+//! With `prefill_stream_evict` also set, admission routes chunk-servable
+//! prompts through the engine's streaming state machine
+//! (`EngineWorker::begin_chunked_prefill_stream`): after every non-final
+//! chunk the layer's live columns are LAVa-scored (trailing window pinned)
+//! and evicted down to the per-head budget union, so the carry K/V is
+//! bounded by the fixed working cap `hk·max(budget, w) + chunk bucket + w`
+//! columns regardless of prompt length. Admission math follows: the
+//! transient term in `projected_bytes` shrinks from one O(prompt)
+//! uncompressed layer to `min(cap, prompt)` columns, so long prompts that
+//! could never prefill under a tight `kv_mem_limit` become admissible.
+//! The trade is explicit: mid-prefill eviction sees only the tokens so
+//! far, so tokens and keep-sets are *not* bit-identical to the monolithic
+//! pass (the keep-set overlap on retrieval workloads is regression-tested
+//! in the engine); prompts whose chunk shapes have no evict support fall
+//! back to the plain chunked path per request.
+//!
+//! Mid-stream sessions also batch *across sessions*: each
+//! [`Scheduler::advance_prefills`] round groups `prefilling` sessions by
+//! their lockstep key (layer, chunk cursor, chunk shape, cap), fans the
+//! groups over the worker pool, and advances every group member through
+//! one batched backend dispatch (`advance_stream_group`) — the prefill
+//! analogue of batched decode, counted by the `prefill_chunk_batches` /
+//! `prefill_chunk_dispatches` metrics.
 
 use std::collections::VecDeque;
 use std::fmt;
@@ -145,6 +171,17 @@ pub struct SchedulerOptions {
     /// scheduling); 0 is treated as 1 so mid-prefill sessions always make
     /// progress. Ignored without `prefill_chunk`.
     pub prefill_chunk_budget: Option<usize>,
+    /// Streaming prefill compression: score and evict mid-prefill after
+    /// every chunk, bounding the per-layer carry K/V to a fixed working cap
+    /// (budget union + one chunk + window) instead of O(prompt), and
+    /// advance same-shape mid-stream sessions through one batched backend
+    /// dispatch (cross-session chunk batching). Results are *not*
+    /// bit-identical to monolithic prefill — eviction decisions see only
+    /// the prompt so far — so this is opt-in. Prompts the backend has no
+    /// evict shapes for fall back to the plain chunked path per request.
+    /// Ignored without `prefill_chunk`. The default honors
+    /// `LAVA_PREFILL_STREAM` (unset or 0 = off).
+    pub prefill_stream_evict: bool,
 }
 
 fn default_workers() -> usize {
@@ -181,6 +218,27 @@ fn default_prefill_chunk() -> Option<usize> {
     }
 }
 
+/// `LAVA_PREFILL_STREAM` override for
+/// [`SchedulerOptions::prefill_stream_evict`] (CI runs the suite once more
+/// with it set to exercise the streaming path everywhere). Unset or `0`
+/// leaves streaming off; an unparsable value warns and stays off rather
+/// than silently changing serving results.
+fn default_prefill_stream() -> bool {
+    match std::env::var("LAVA_PREFILL_STREAM") {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(0) => false,
+            Ok(_) => true,
+            Err(_) => {
+                eprintln!(
+                    "[lava] ignoring invalid LAVA_PREFILL_STREAM={v:?}; streaming stays off"
+                );
+                false
+            }
+        },
+        Err(_) => false,
+    }
+}
+
 impl Default for SchedulerOptions {
     fn default() -> Self {
         SchedulerOptions {
@@ -194,6 +252,7 @@ impl Default for SchedulerOptions {
             workers: default_workers(),
             prefill_chunk: default_prefill_chunk(),
             prefill_chunk_budget: None,
+            prefill_stream_evict: default_prefill_stream(),
         }
     }
 }
@@ -393,8 +452,15 @@ impl<B: ModelBackend> Scheduler<B> {
             return true;
         }
         if let Some(pos) = self.prefilling.iter().position(|s| s.id == id) {
-            let sess = self.prefilling.remove(pos).expect("position just found");
-            // mid-prefill sessions were never checked into `hot_bytes`
+            let mut sess = self.prefilling.remove(pos).expect("position just found");
+            // Drop the fat mid-prefill state right now: the carry K/V,
+            // hidden-state rows, and any partially compressed layers are
+            // dead the moment the cancel lands, and none of it was ever
+            // checked into `hot_bytes` — the result must report zero
+            // retained bytes, not a half-built cache.
+            sess.prefill = None;
+            sess.caches.clear();
+            sess.residency.clear();
             self.retire_unaccounted(
                 sess,
                 FinishStatus::Canceled,
@@ -456,9 +522,21 @@ impl<B: ModelBackend> Scheduler<B> {
     }
 
     /// Bytes of the transient uncompressed layer live *during* prefill only.
+    /// With streaming eviction the carry is compacted after every chunk, so
+    /// the transient is bounded by the working cap instead of the prompt
+    /// length — the whole point of the mode for admission under a limit.
     fn transient_bytes(&self, prompt_len: usize) -> usize {
         let cfg = self.engine.config();
-        2 * cfg.n_kv_heads * prompt_len * cfg.d_head * 4
+        let cols = match (self.opts.prefill_stream_evict, self.opts.prefill_chunk) {
+            (true, Some(chunk)) => self
+                .engine
+                .worker()
+                .stream_evict_cap(prompt_len, chunk)
+                .map(|cap| cap.min(prompt_len))
+                .unwrap_or(prompt_len),
+            _ => prompt_len,
+        };
+        2 * cfg.n_kv_heads * cols * cfg.d_head * 4
     }
 
     /// Peak bytes a request needs while prefilling: retained caches plus one
@@ -471,8 +549,10 @@ impl<B: ModelBackend> Scheduler<B> {
     /// Bytes admission must hold back for mid-prefill (chunked) sessions:
     /// their caches stay out of `hot_bytes` until the first token, so each
     /// reserves its full projected footprint (retained budget + the
-    /// carry-in layer, which is O(prompt) even under chunking — chunking
-    /// shrinks the dispatch working set, not the per-layer carry).
+    /// carry-in layer, which is O(prompt) even under plain chunking —
+    /// chunking shrinks the dispatch working set, not the per-layer carry.
+    /// Streaming eviction is what bounds the carry, and
+    /// [`Scheduler::transient_bytes`] prices it accordingly).
     fn prefilling_reserved_bytes(&self) -> usize {
         self.prefilling.iter().map(|s| self.projected_bytes(s.prompt.len())).sum()
     }
@@ -677,15 +757,28 @@ impl<B: ModelBackend> Scheduler<B> {
         }
         let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
         let mut sess = self.engine.new_session_with_id(q.id, &q.request);
+        // streaming eviction is best-effort per request: prompts whose chunk
+        // shapes have no evict support take the plain chunked path instead
+        let stream = self.opts.prefill_stream_evict
+            && self.engine.worker().stream_evict_cap(len, chunk).is_some();
         if self.opts.prefill_chunk_budget.is_none() {
             let worker = self.engine.worker();
-            let res = worker.begin_chunked_prefill(&mut sess, chunk).and_then(|()| {
+            let begun = if stream {
+                worker.begin_chunked_prefill_stream(&mut sess, chunk)
+            } else {
+                worker.begin_chunked_prefill(&mut sess, chunk)
+            };
+            let res = begun.and_then(|()| {
                 let (_, report) = worker.advance_chunked_prefill(&mut sess, None)?;
                 report.ok_or_else(|| anyhow!("unbounded advance must complete the prefill"))
             });
             return self.merge_prefill(q, wait_secs, sess, res);
         }
-        let begun = self.engine.worker().begin_chunked_prefill(&mut sess, chunk);
+        let begun = if stream {
+            self.engine.worker().begin_chunked_prefill_stream(&mut sess, chunk)
+        } else {
+            self.engine.worker().begin_chunked_prefill(&mut sess, chunk)
+        };
         match begun {
             Ok(()) => {
                 if let Some(st) = sess.prefill.as_mut() {
@@ -716,6 +809,30 @@ impl<B: ModelBackend> Scheduler<B> {
         }
         let mut budget = self.opts.prefill_chunk_budget.unwrap_or(usize::MAX).max(1);
         let mut advanced = 0usize;
+        // Split the round: mid-stream sessions advance in lockstep groups
+        // (one batched backend dispatch per group — cross-session chunk
+        // batching), everything else through the serial loop below.
+        let mut stream: Vec<Session> = Vec::new();
+        let mut rest: VecDeque<Session> = VecDeque::new();
+        while let Some(sess) = self.prefilling.pop_front() {
+            if self.engine.worker().stream_lockstep_key(&sess).is_some() {
+                stream.push(sess);
+            } else {
+                rest.push_back(sess);
+            }
+        }
+        while !stream.is_empty() && budget > 0 {
+            let (survivors, worked) = self.advance_stream_round(stream);
+            stream = survivors;
+            advanced += worked;
+            budget = budget.saturating_sub(worked);
+            if worked == 0 {
+                // every group errored out this round; survivors is empty,
+                // but never risk spinning here
+                break;
+            }
+        }
+        self.prefilling = rest;
         let mut still: VecDeque<Session> = VecDeque::new();
         while let Some(mut sess) = self.prefilling.pop_front() {
             if budget == 0 {
@@ -761,8 +878,98 @@ impl<B: ModelBackend> Scheduler<B> {
                 }
             }
         }
+        // stream survivors rejoin at the back: they already had this tick's
+        // lockstep advance, so the serial sessions keep queue-order priority
+        still.extend(stream);
         self.prefilling = still;
         advanced
+    }
+
+    /// One lockstep round over the mid-stream sessions: group them by
+    /// [`EngineWorker::stream_lockstep_key`] preserving arrival order, fan
+    /// the groups over the worker pool, advance every group one chunk
+    /// through a single batched backend dispatch
+    /// ([`EngineWorker::advance_stream_group`]), then merge completions
+    /// exactly as the serial arm of [`Scheduler::advance_prefills`] does.
+    /// A failed group retires as a unit (its caches are partially advanced,
+    /// same contract as a batched decode error). Returns the sessions still
+    /// mid-prefill plus the prompt tokens advanced.
+    fn advance_stream_round(&mut self, sessions: Vec<Session>) -> (Vec<Session>, usize) {
+        type Key = (usize, usize, usize, usize, usize);
+        let mut groups: Vec<(Key, Vec<Session>)> = Vec::new();
+        for sess in sessions {
+            let key = self
+                .engine
+                .worker()
+                .stream_lockstep_key(&sess)
+                .expect("stream round over a non-stream session");
+            match groups.iter_mut().find(|(k, _)| *k == key) {
+                Some((_, g)) => g.push(sess),
+                None => groups.push((key, vec![sess])),
+            }
+        }
+        // TTFT baselines must be read before the fan-out — a completing
+        // advance tears down the prefill state that carries them
+        let timings: Vec<Vec<(f64, std::time::Instant)>> = groups
+            .iter()
+            .map(|(_, g)| {
+                g.iter()
+                    .map(|s| {
+                        s.prefill
+                            .as_ref()
+                            .map(|st| (st.wait_secs, st.enqueued_at))
+                            .unwrap_or((0.0, s.queued_at))
+                    })
+                    .collect()
+            })
+            .collect();
+        let worker = self.engine.worker();
+        let (outcomes, stats) = self.pool.run(groups, |(_key, mut group)| {
+            let res = worker.advance_stream_group(&mut group);
+            (group, res)
+        });
+        self.engine.metrics.observe_worker_round(
+            self.pool.workers(),
+            &stats.busy_secs,
+            stats.wall_secs,
+        );
+        let mut survivors: Vec<Session> = Vec::new();
+        let mut advanced = 0usize;
+        for (group_timings, (group, res)) in timings.into_iter().zip(outcomes) {
+            match res {
+                Ok((results, dispatches)) => {
+                    self.engine.metrics.observe_prefill_chunk_batch(group.len(), dispatches);
+                    for ((sess, (worked, report)), (wait_secs, admitted_at)) in
+                        group.into_iter().zip(results).zip(group_timings)
+                    {
+                        advanced += worked;
+                        match report {
+                            Some(report) => {
+                                self.engine.absorb_prefill(&report);
+                                let ttft = wait_secs + admitted_at.elapsed().as_secs_f64();
+                                self.engine.metrics.observe_admission(wait_secs, ttft);
+                                self.token_events.push((sess.id, report.token));
+                                self.hot_bytes += sess.kv_bytes();
+                                self.engine.metrics.observe_hot(self.hot_bytes);
+                                if sess.is_done() {
+                                    self.retire(sess, FinishStatus::Completed, None);
+                                } else {
+                                    self.active.push_back(sess);
+                                }
+                            }
+                            None => survivors.push(sess),
+                        }
+                    }
+                }
+                Err(e) => {
+                    let msg = format!("prefill failed: {e:#}");
+                    for sess in group {
+                        self.retire_unaccounted(sess, FinishStatus::Failed, Some(msg.clone()));
+                    }
+                }
+            }
+        }
+        (survivors, advanced)
     }
 
     /// Merge one prefilled request back into the scheduler: metrics,
@@ -1332,6 +1539,9 @@ mod tests {
     /// Scheduler with the chunked-prefill knobs pinned explicitly (the
     /// plain helpers inherit `LAVA_PREFILL_CHUNK` through the defaults, by
     /// design — CI's second suite run exercises the chunked path that way).
+    /// Streaming eviction is pinned *off* too: tests built on this helper
+    /// assert bit-identity with the monolithic path, which streaming
+    /// deliberately trades away. Stream tests flip the flag on explicitly.
     fn sched_chunked(
         chunk: Option<usize>,
         budget: Option<usize>,
@@ -1346,6 +1556,7 @@ mod tests {
                 kv_mem_limit: limit,
                 prefill_chunk: chunk,
                 prefill_chunk_budget: budget,
+                prefill_stream_evict: false,
                 ..Default::default()
             },
         )
@@ -1824,5 +2035,81 @@ mod tests {
         assert_eq!(done.len(), 1);
         assert_eq!(done[0].1.status, FinishStatus::Canceled);
         assert!(done[0].1.tokens.is_empty());
+    }
+
+    #[test]
+    fn stream_chunk_batching_reduces_dispatches() {
+        // two identical prompts admitted together stay in lockstep for the
+        // whole streaming prefill, so every advance round covers both
+        // sessions through ONE batched backend dispatch
+        let mut s = sched_chunked(Some(64), Some(64), None);
+        s.opts.prefill_stream_evict = true;
+        s.opts.prefill_every = 1;
+        s.submit(req(200, 4)).unwrap();
+        s.submit(req(200, 4)).unwrap();
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 2);
+        for (_, r) in &done {
+            assert_eq!(r.status, FinishStatus::Completed, "{:?}", r.error);
+            assert_eq!(r.tokens.len(), 4);
+        }
+        let m = &s.engine.metrics;
+        assert!(m.prefill_chunk_batches > 0, "streaming advances must be counted");
+        assert_eq!(
+            m.prefill_chunk_batch_sessions,
+            2 * m.prefill_chunk_batches,
+            "lockstep pair must share every round"
+        );
+        assert_eq!(
+            m.prefill_chunk_batch_dispatches, m.prefill_chunk_batches,
+            "each lockstep group must cost one backend dispatch"
+        );
+        assert!(
+            m.prefill_chunk_batch_dispatches < m.prefill_chunk_batch_sessions,
+            "batching must reduce dispatches below one-per-session"
+        );
+        assert!((m.prefill_chunk_batch_occupancy() - 2.0).abs() < 1e-9);
+        // the bounded-transient gauge saw the stream's peak carry
+        let cap = s.engine.worker().stream_evict_cap(200, 64).unwrap();
+        let col_bytes = 2 * 4 * 16 * 4; // 2 (K+V) · hk · dh · f32
+        assert!(m.peak_prefill_transient_bytes > 0);
+        assert!(m.peak_prefill_transient_bytes <= cap * col_bytes);
+    }
+
+    #[test]
+    fn cancel_mid_stream_prefill_releases_carry() {
+        let mut s = sched_chunked(Some(64), Some(64), None);
+        s.opts.prefill_stream_evict = true;
+        s.opts.prefill_every = 1;
+        let id = s.submit(req(600, 4)).unwrap();
+        s.tick().unwrap(); // admit + begin + one budgeted stream advance
+        assert_eq!(s.prefilling_count(), 1);
+        let st = s.prefilling[0].prefill.as_ref().expect("mid-prefill state");
+        assert!(st.stream.is_some(), "session must be on the streaming path");
+        assert!(s.cancel(id));
+        assert_eq!(s.prefilling_count(), 0);
+        // the carry and any partial caches are gone immediately: both tier
+        // gauges read empty without waiting for another tick
+        assert_eq!(s.engine.metrics.hot_kv_bytes, 0);
+        assert_eq!(s.engine.metrics.warm_kv_bytes, 0);
+        let done = s.run_to_completion().unwrap();
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].1.status, FinishStatus::Canceled);
+        assert_eq!(done[0].1.kv_bytes_after_prefill, 0, "no half-built cache in the result");
+        assert!(done[0].1.tokens.is_empty());
+    }
+
+    #[test]
+    fn stream_bounds_projected_admission_bytes() {
+        let mut s = sched_chunked(Some(64), None, None);
+        let plain = s.projected_bytes(2048);
+        s.opts.prefill_stream_evict = true;
+        let streamed = s.projected_bytes(2048);
+        assert!(streamed < plain, "streamed {streamed} must undercut plain {plain}");
+        // retained budgets are identical; only the transient term shrinks,
+        // from one O(prompt) layer to the working cap
+        let cap = s.engine.worker().stream_evict_cap(2048, 64).unwrap();
+        let col_bytes = 2 * 4 * 16 * 4; // 2 (K+V) · hk · dh · f32
+        assert_eq!(plain - streamed, (2048 - cap) * col_bytes);
     }
 }

@@ -448,6 +448,20 @@ fn metrics_json(snap: &MetricsSnapshot) -> Json {
                     .collect(),
             ),
         ),
+        // streaming prefill compression: last/peak carry transient (bounded
+        // by the working cap under `prefill_stream_evict`, O(prompt)
+        // otherwise) and the cross-session chunk-batching counters
+        ("prefill_transient_mb", Json::num(m.prefill_transient_bytes as f64 / 1e6)),
+        (
+            "peak_prefill_transient_mb",
+            Json::num(m.peak_prefill_transient_bytes as f64 / 1e6),
+        ),
+        ("prefill_chunk_batches", Json::num(m.prefill_chunk_batches as f64)),
+        ("prefill_chunk_occupancy", Json::num(m.prefill_chunk_batch_occupancy())),
+        (
+            "prefill_chunk_dispatches",
+            Json::num(m.prefill_chunk_batch_dispatches as f64),
+        ),
         // per-tier state: hot is what kv_mem_limit bounds; warm holds
         // Q8-spilled layer caches
         ("deferred", Json::num(m.requests_deferred as f64)),

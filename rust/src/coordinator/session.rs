@@ -25,10 +25,15 @@ pub enum Phase {
 /// and the Algorithm 2 recompression cascade run unchanged — bit-identical
 /// tokens, budgets, and keep-sets to the one-shot path.
 ///
-/// Memory note: the carry K/V is the layer's uncompressed cache and stays
-/// O(prompt) — what chunking shrinks is the *dispatch* working set (each
-/// backend call touches one chunk-bucket of rows, not the full prompt
-/// bucket) and the head-of-line time between decode rounds.
+/// Memory note: on the plain chunked path the carry K/V is the layer's
+/// uncompressed cache and stays O(prompt) — what chunking shrinks is the
+/// *dispatch* working set (each backend call touches one chunk-bucket of
+/// rows, not the full prompt bucket) and the head-of-line time between
+/// decode rounds. With streaming eviction (`stream` is Some) the carry is
+/// additionally *compacted* after every non-final chunk, so it is bounded
+/// by the fixed working cap (layer budget + one chunk + window) regardless
+/// of prompt length — only the hidden-state rows (`x`/`x_next`) remain
+/// O(prompt).
 pub struct ChunkedPrefill {
     /// Configured chunk size in tokens.
     pub chunk: usize,
@@ -63,6 +68,11 @@ pub struct ChunkedPrefill {
     /// complete; moved into `Session::budgets` at the end).
     pub budgets: Vec<usize>,
     pub peak_transient: usize,
+    /// Streaming-eviction state (Some only in `prefill_stream_evict` mode).
+    /// When set, `carry_k`/`carry_v` are allocated at `[Hk, cap, dh]` and the
+    /// `win`/`acc`/`vnorm` panels above stay empty — the compacted panels
+    /// live here instead.
+    pub stream: Option<Box<StreamPrefill>>,
     /// Per-dispatch (chunk bucket, valid tokens) pairs for the bucket-waste
     /// gauges, reported with the final `PrefillReport`.
     pub bucket_fills: Vec<(usize, usize)>,
@@ -72,6 +82,58 @@ pub struct ChunkedPrefill {
     /// an interleaved chunked prefill includes the decode rounds between
     /// advances.
     pub enqueued_at: std::time::Instant,
+}
+
+/// Streaming-eviction prefill state: the compact column space layered on
+/// [`ChunkedPrefill`] when `prefill_stream_evict` is on. Columns are kept in
+/// ascending absolute-position order; after each non-final chunk the engine
+/// scores the live columns (trailing observation window pinned) and compacts
+/// every panel plus the carry K/V down to the per-head budget union, so the
+/// live column count never exceeds `cap`.
+pub struct StreamPrefill {
+    /// Fixed working cap in columns: the carry tensors are `[Hk, cap, dh]`
+    /// and every dispatch is a `layer_prefill_chunked_evict` at this cap
+    /// (cap >= budget-union + chunk bucket + window by construction).
+    pub cap: usize,
+    /// Absolute prompt position of each live carry column, strictly
+    /// ascending; its length is the live column count.
+    pub col_pos: Vec<i32>,
+    /// Compacted accumulated-attention panel `[H * live_cols]`. Backends
+    /// report per-chunk mass at carry columns too, so carry entries are
+    /// *added to*, never overwritten.
+    pub acc: Vec<f32>,
+    /// Compacted per-column value norms `[Hk * live_cols]`.
+    pub vnorm: Vec<f32>,
+    /// Rolling observation window: `(absolute qpos, [H * live_cols] row)`
+    /// for the last `min(w, seen)` query positions, ascending by qpos.
+    /// Rows for evicted columns are compacted along with everything else.
+    pub win_rows: Vec<(usize, Vec<f32>)>,
+    /// Peak live columns across the whole prefill — drives the bounded
+    /// carry-transient gauge (flat in prompt length, unlike the plain
+    /// chunked carry).
+    pub max_live_cols: usize,
+}
+
+impl StreamPrefill {
+    pub fn new(cap: usize) -> StreamPrefill {
+        StreamPrefill {
+            cap,
+            col_pos: Vec::new(),
+            acc: Vec::new(),
+            vnorm: Vec::new(),
+            win_rows: Vec::new(),
+            max_live_cols: 0,
+        }
+    }
+
+    /// Reset the per-layer accumulators for the next layer (the carry
+    /// tensors need no reset — live columns are rewritten from scratch).
+    pub fn reset_for_next_layer(&mut self) {
+        self.col_pos.clear();
+        self.acc.clear();
+        self.vnorm.clear();
+        self.win_rows.clear();
+    }
 }
 
 /// One in-flight request: prompt, per-layer compressed caches, generation.

@@ -160,6 +160,26 @@ impl HotStore {
         }
     }
 
+    /// Ingest a *compacted* prefill cache (streaming eviction): `keep[h]`
+    /// indexes compact columns of the k/v tensors, and `col_pos` maps each
+    /// compact column to its absolute prompt position (what recency-aware
+    /// decode scoring and analysis read back out).
+    pub fn load_from_prefill_at(
+        &mut self,
+        k_full: &Tensor,
+        v_full: &Tensor,
+        keep: &[Vec<usize>],
+        entry_scores: &[Vec<f32>],
+        col_pos: &[i32],
+    ) {
+        self.load_from_prefill(k_full, v_full, keep, entry_scores);
+        for h in 0..self.layout.n_kv_heads() {
+            for (dst, &src) in keep[h].iter().enumerate() {
+                self.positions[self.layout.flat(h, dst)] = col_pos[src];
+            }
+        }
+    }
+
     /// Algorithm 2 recompression: keep only `keep[h]` (sorted indices into
     /// the *current compact slots* of head h); compact in place.
     pub fn re_evict(&mut self, keep: &[Vec<usize>]) {
@@ -426,6 +446,26 @@ mod tests {
         let kf = k.as_f32().unwrap();
         assert_eq!(c.key(0, 1), &kf[3 * 4..3 * 4 + 4]);
         assert_eq!(c.position(0, 2), 7);
+        assert_eq!(c.score(1, 1), 0.5);
+    }
+
+    #[test]
+    fn load_at_rewrites_positions() {
+        let (k, v) = mk_prefill(2, 10, 4, 3);
+        let mut c = HotStore::new(2, 4, 16);
+        let keep = vec![vec![0, 2, 5], vec![1, 9]];
+        let scores = vec![vec![0.3, 0.2, 0.9], vec![0.1, 0.5]];
+        // compact column j holds absolute position 3j
+        let col_pos: Vec<i32> = (0..10).map(|j| 3 * j).collect();
+        c.load_from_prefill_at(&k, &v, &keep, &scores, &col_pos);
+        assert_eq!(c.head_len(0), 3);
+        c.check_invariants().unwrap();
+        // content gathered by compact index, positions mapped to absolute
+        let kf = k.as_f32().unwrap();
+        assert_eq!(c.key(0, 1), &kf[2 * 4..2 * 4 + 4]);
+        assert_eq!(c.position(0, 1), 6);
+        assert_eq!(c.position(0, 2), 15);
+        assert_eq!(c.position(1, 1), 27);
         assert_eq!(c.score(1, 1), 0.5);
     }
 

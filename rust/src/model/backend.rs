@@ -58,6 +58,48 @@ pub struct ChunkPrefillOut {
     pub vnorm: Vec<f32>,
 }
 
+/// One chunk of a layer's prefill against a *compacted* carry (streaming
+/// eviction). Unlike [`ChunkPrefillOut`]'s full-width carry, the carry here
+/// holds only the surviving columns, packed at the front of a fixed working
+/// cap, with `carry_pos` mapping each column to its absolute prompt position.
+#[derive(Clone, Copy)]
+pub struct ChunkEvictReq<'a> {
+    pub x_chunk: &'a Tensor, // [C, d] (rows >= chunk_len are padding)
+    /// Compacted carry K/V at the working cap `[Hk, cap, dh]`; live columns
+    /// are packed at the front, rows >= the live count are unspecified.
+    pub carry_k: &'a Tensor,
+    pub carry_v: &'a Tensor,
+    /// Absolute prompt position of each carry column (`cap` entries,
+    /// strictly ascending, all `< start`), then `-1` padding.
+    pub carry_pos: &'a [i32],
+    pub start: usize,
+    pub chunk_len: usize,
+    pub total_len: usize,
+    /// Monolithic observation bucket the prompt would have used. The real
+    /// model ignores it; the mock hashes against it so streamed scores at
+    /// surviving columns rank exactly like the one-shot pass.
+    pub n_obs: usize,
+}
+
+/// Output of a streaming-evict chunk. Observation panels come back at the
+/// *compact* width `m = cap + C`: column `j < cap` is carry column `j`
+/// (absolute position `carry_pos[j]`), column `cap + r` is chunk row `r`
+/// (absolute position `start + r`). Dead columns contribute zeros.
+pub struct ChunkEvictOut {
+    pub x_out: Tensor, // [C, d]
+    pub k: Tensor,     // [Hk, C, dh]
+    pub v: Tensor,     // [Hk, C, dh]
+    /// Window-attention rows owned by this chunk, keyed by *absolute* query
+    /// position: `(qpos, row)` where `row` is `[H * m]` over compact columns.
+    /// Covers `qpos` in `[max(start, seen - w), seen)`, `seen = start +
+    /// chunk_len` — the rows the rolling observation window still needs.
+    pub win_rows: Vec<(usize, Vec<f32>)>,
+    /// Additive accumulated-attention contribution `[H * m]`.
+    pub acc: Vec<f32>,
+    /// Additive value-norm contribution `[Hk * m]`.
+    pub vnorm: Vec<f32>,
+}
+
 /// Output of one layer's decode step.
 pub struct DecodeOut {
     pub x_out: Tensor,  // [1, d]
@@ -131,6 +173,45 @@ pub trait ModelBackend: Send + Sync {
     /// per-chunk fallback routes unsupported prompts to the monolithic path).
     fn supports_chunked_prefill(&self, _chunk_bucket: usize, _n_obs: usize) -> bool {
         false
+    }
+
+    /// One chunk of a layer's prefill against a compacted carry (streaming
+    /// eviction, see [`ChunkEvictReq`]). Default: unsupported — the engine
+    /// only takes this path when [`ModelBackend::supports_chunked_evict`]
+    /// says yes for the chunk bucket / cap pair.
+    #[allow(unused_variables)]
+    fn layer_prefill_chunked_evict(
+        &self,
+        layer: usize,
+        req: &ChunkEvictReq,
+    ) -> Result<ChunkEvictOut> {
+        Err(anyhow!("backend has no streaming-evict chunked prefill implementation"))
+    }
+
+    /// Whether [`ModelBackend::layer_prefill_chunked_evict`] can serve a
+    /// chunk of bucket `chunk_bucket` against a compacted carry of width
+    /// `cap` (for PJRT this asks the artifact set for
+    /// `layer_prefill_chunked_evict_{C}x{cap}`).
+    fn supports_chunked_evict(&self, _chunk_bucket: usize, _cap: usize) -> bool {
+        false
+    }
+
+    /// Streaming-evict chunks for B sessions sharing one (chunk bucket, cap)
+    /// shape, one logical dispatch. Returns the per-session outputs in
+    /// request order plus how many real backend executions served the call
+    /// (feeds the prefill dispatch gauge truthfully, like
+    /// [`DecodeBatchOut::dispatches`]). This default loops the serial form;
+    /// backends with a vectorized path override it.
+    fn layer_prefill_chunked_evict_batched(
+        &self,
+        layer: usize,
+        reqs: &[ChunkEvictReq],
+    ) -> Result<(Vec<ChunkEvictOut>, usize)> {
+        let mut outs = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            outs.push(self.layer_prefill_chunked_evict(layer, req)?);
+        }
+        Ok((outs, reqs.len()))
     }
 
     /// Decode is a hot-tier-only operation: the cache handed in here is
@@ -365,6 +446,68 @@ impl ModelBackend for PjrtBackend {
     fn supports_chunked_prefill(&self, chunk_bucket: usize, n_obs: usize) -> bool {
         self.runtime
             .has_artifact(&format!("layer_prefill_chunked_{chunk_bucket}x{n_obs}"))
+    }
+
+    /// Streaming-evict chunks through the
+    /// `layer_prefill_chunked_evict_{C}x{cap}` artifacts: the artifact takes
+    /// the compacted carry plus its position map and returns compact-width
+    /// observation panels (`cap + C` columns); the window panel row `r`
+    /// holds query position `start + chunk_len - w + r`, with rows owned by
+    /// earlier chunks zeroed, which we convert to owned rows here.
+    fn layer_prefill_chunked_evict(
+        &self,
+        layer: usize,
+        req: &ChunkEvictReq,
+    ) -> Result<ChunkEvictOut> {
+        let c = req.x_chunk.shape[0];
+        let cap = req.carry_k.shape[1];
+        let name = format!("layer_prefill_chunked_evict_{c}x{cap}");
+        let n_live = req.carry_pos.iter().take_while(|&&p| p >= 0).count();
+        let pos_t = Tensor::i32(req.carry_pos.to_vec(), &[cap]);
+        let meta = Tensor::i32(
+            vec![req.start as i32, req.chunk_len as i32, req.total_len as i32, n_live as i32],
+            &[4],
+        );
+        let mut args: Vec<Arg> = vec![
+            Arg::Host(req.x_chunk),
+            Arg::Host(req.carry_k),
+            Arg::Host(req.carry_v),
+            Arg::Host(&pos_t),
+            Arg::Host(&meta),
+        ];
+        args.extend(self.layer_args(layer));
+        let mut out = self.runtime.execute(&name, &args)?;
+        if out.len() != 6 {
+            return Err(anyhow!("{name}: expected 6 outputs, got {}", out.len()));
+        }
+        let vnorm = out.pop().unwrap().into_f32()?;
+        let acc = out.pop().unwrap().into_f32()?;
+        let win_panel = out.pop().unwrap().into_f32()?; // [H, w, cap+c]
+        let v = out.pop().unwrap();
+        let k = out.pop().unwrap();
+        let x_out = out.pop().unwrap();
+        let (h, w) = (self.cfg.n_heads, self.cfg.window);
+        let m = cap + c;
+        let seen = req.start + req.chunk_len;
+        let mut win_rows = Vec::new();
+        for r in 0..w {
+            let q = seen as i64 - w as i64 + r as i64;
+            if q < req.start as i64 {
+                continue;
+            }
+            let mut row = vec![0.0f32; h * m];
+            for hh in 0..h {
+                row[hh * m..(hh + 1) * m]
+                    .copy_from_slice(&win_panel[(hh * w + r) * m..(hh * w + r + 1) * m]);
+            }
+            win_rows.push((q as usize, row));
+        }
+        Ok(ChunkEvictOut { x_out, k, v, win_rows, acc, vnorm })
+    }
+
+    fn supports_chunked_evict(&self, chunk_bucket: usize, cap: usize) -> bool {
+        self.runtime
+            .has_artifact(&format!("layer_prefill_chunked_evict_{chunk_bucket}x{cap}"))
     }
 
     fn layer_decode(
@@ -841,6 +984,152 @@ impl ModelBackend for MockBackend {
         true
     }
 
+    /// Streaming-evict chunk. K/V and the final observation window hash
+    /// against the *absolute* position at the monolithic bucket `n_obs`, so
+    /// surviving columns score exactly as they would in the one-shot pass;
+    /// mid-stream window rows (query positions before `total_len - w`) only
+    /// exist in streaming mode and get their own collision-free hash keys.
+    fn layer_prefill_chunked_evict(
+        &self,
+        layer: usize,
+        req: &ChunkEvictReq,
+    ) -> Result<ChunkEvictOut> {
+        let cfg = &self.cfg;
+        let (h, hk, w, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head);
+        let c = req.x_chunk.shape[0];
+        let cap = req.carry_k.shape[1];
+        let (start, chunk_len) = (req.start, req.chunk_len);
+        let (total_len, n_obs) = (req.total_len, req.n_obs);
+        if chunk_len == 0 || chunk_len > c || start + chunk_len > total_len || total_len > n_obs {
+            return Err(anyhow!(
+                "layer_prefill_chunked_evict: chunk [{start}, {}) of {total_len} (bucket {c}, obs {n_obs}) is malformed",
+                start + chunk_len
+            ));
+        }
+        if req.carry_pos.len() != cap {
+            return Err(anyhow!(
+                "layer_prefill_chunked_evict: carry_pos has {} entries for cap {cap}",
+                req.carry_pos.len()
+            ));
+        }
+        let mut n_live = 0usize;
+        let mut prev = -1i64;
+        for &p in req.carry_pos {
+            if p < 0 {
+                break;
+            }
+            if i64::from(p) <= prev || p as usize >= start {
+                return Err(anyhow!(
+                    "layer_prefill_chunked_evict: carry_pos must ascend strictly below {start}"
+                ));
+            }
+            prev = i64::from(p);
+            n_live += 1;
+        }
+        if req.carry_pos[n_live..].iter().any(|&p| p >= 0) {
+            return Err(anyhow!(
+                "layer_prefill_chunked_evict: live carry columns must be packed at the front"
+            ));
+        }
+        let l64 = layer as u64;
+        let m = cap + c;
+        let seen = start + chunk_len;
+        let final_base = total_len.saturating_sub(w);
+        // absolute position of compact column j, None when dead/padding
+        let col_pos = |j: usize| -> Option<usize> {
+            if j < cap {
+                (j < n_live).then(|| req.carry_pos[j] as usize)
+            } else {
+                (j - cap < chunk_len).then(|| start + (j - cap))
+            }
+        };
+
+        let mut win_rows = Vec::new();
+        for qpos in seen.saturating_sub(w).max(start)..seen {
+            let mut row = vec![0.0f32; h * m];
+            for hh in 0..h {
+                let mut sum = 0.0f32;
+                for j in 0..m {
+                    let Some(i) = col_pos(j) else { continue };
+                    if i > qpos {
+                        continue;
+                    }
+                    let key = if qpos >= final_base {
+                        (qpos - final_base) * n_obs + i // monolithic row key
+                    } else {
+                        (w + qpos) * n_obs + i
+                    };
+                    let mut a = 0.02 + self.h01(l64 * 131 + hh as u64, key as u64, 2);
+                    if qpos - i < 8 {
+                        a += 1.0;
+                    }
+                    if self.hot_positions.contains(&i) {
+                        a += 6.0 * (1.0 + (hh as f32 * 0.5));
+                    }
+                    row[hh * m + j] = a;
+                    sum += a;
+                }
+                for j in 0..m {
+                    row[hh * m + j] /= sum;
+                }
+            }
+            win_rows.push((qpos, row));
+        }
+        let mut acc = vec![0.0f32; h * m];
+        for hh in 0..h {
+            for r in 0..chunk_len {
+                let i = start + r;
+                let base = self.h01(l64 * 37 + hh as u64, i as u64, 3);
+                let hot = if self.hot_positions.contains(&i) { 4.0 } else { 0.0 };
+                acc[hh * m + cap + r] = base + hot + (total_len - i) as f32 * 0.01;
+            }
+        }
+        let mut vn = vec![0.0f32; hk * m];
+        for kv in 0..hk {
+            for r in 0..chunk_len {
+                let i = start + r;
+                vn[kv * m + cap + r] = 0.5 + self.h01(l64 * 57 + kv as u64, i as u64, 4);
+            }
+        }
+        let mut kdata = vec![0.0f32; hk * c * dh];
+        let mut vdata = vec![0.0f32; hk * c * dh];
+        for kv in 0..hk {
+            for row in 0..chunk_len {
+                for j in 0..dh {
+                    let flat = (kv * n_obs + start + row) * dh + j;
+                    kdata[(kv * c + row) * dh + j] = self.h01(l64 * 71, flat as u64, 5) - 0.5;
+                    vdata[(kv * c + row) * dh + j] = self.h01(l64 * 83, flat as u64, 6) - 0.5;
+                }
+            }
+        }
+        Ok(ChunkEvictOut {
+            x_out: req.x_chunk.clone(),
+            k: Tensor::f32(kdata, &[hk, c, dh]),
+            v: Tensor::f32(vdata, &[hk, c, dh]),
+            win_rows,
+            acc,
+            vnorm: vn,
+        })
+    }
+
+    fn supports_chunked_evict(&self, _chunk_bucket: usize, _cap: usize) -> bool {
+        true
+    }
+
+    /// Vectorized in spirit: the mock serves any same-shape batch in one
+    /// logical dispatch, like its batched decode path.
+    fn layer_prefill_chunked_evict_batched(
+        &self,
+        layer: usize,
+        reqs: &[ChunkEvictReq],
+    ) -> Result<(Vec<ChunkEvictOut>, usize)> {
+        let mut outs = Vec::with_capacity(reqs.len());
+        for req in reqs {
+            outs.push(self.layer_prefill_chunked_evict(layer, req)?);
+        }
+        Ok((outs, if reqs.is_empty() { 0 } else { 1 }))
+    }
+
     fn layer_decode(
         &self,
         layer: usize,
@@ -1012,6 +1301,204 @@ mod tests {
         let xz = Tensor::zeros(&[16, d]);
         assert!(b.layer_prefill_chunked(0, &xz, &ck, &ck, 120, 16, 100).is_err());
         assert!(b.layer_prefill_chunked(0, &xz, &ck, &ck, 0, 32, 100).is_err());
+    }
+
+    #[test]
+    fn mock_evict_chunked_full_carry_matches_monolithic() {
+        let mut b = MockBackend::new(MockBackend::default_config());
+        b.hot_positions = vec![10, 40];
+        b.seed = 7;
+        let cfg = b.cfg.clone();
+        let (h, hk, w, dh, d) = (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head, cfg.d_model);
+        let length = 100;
+        let bucket = 128; // monolithic observation bucket == working cap
+        let cap = 128;
+        let layer = 1;
+        let ids: Vec<i32> = (0..length as i32).map(|t| t % 250).collect();
+        let x = b.embed(&ids, bucket).unwrap();
+        let xf = x.as_f32().unwrap();
+        let mono = b.layer_prefill(layer, &x, length).unwrap();
+        let mono_win = mono.obs.win_attn.as_f32().unwrap();
+        for chunk in [48usize, 17] {
+            let mut carry_k = vec![0.0f32; hk * cap * dh];
+            let mut carry_v = vec![0.0f32; hk * cap * dh];
+            let mut acc = vec![0.0f32; h * bucket];
+            let mut vn = vec![0.0f32; hk * bucket];
+            let mut rows: std::collections::HashMap<usize, Vec<f32>> = Default::default();
+            let mut start = 0;
+            while start < length {
+                let clen = chunk.min(length - start);
+                let m = cap + chunk;
+                let mut xc = vec![0.0f32; chunk * d];
+                xc[..clen * d].copy_from_slice(&xf[start * d..(start + clen) * d]);
+                let xct = Tensor::f32(xc, &[chunk, d]);
+                let ckt = Tensor::f32(carry_k.clone(), &[hk, cap, dh]);
+                let cvt = Tensor::f32(carry_v.clone(), &[hk, cap, dh]);
+                // full dense carry: identity compaction, nothing evicted
+                let mut pos: Vec<i32> = (0..start as i32).collect();
+                pos.resize(cap, -1);
+                let req = ChunkEvictReq {
+                    x_chunk: &xct,
+                    carry_k: &ckt,
+                    carry_v: &cvt,
+                    carry_pos: &pos,
+                    start,
+                    chunk_len: clen,
+                    total_len: length,
+                    n_obs: bucket,
+                };
+                let out = b.layer_prefill_chunked_evict(layer, &req).unwrap();
+                for (qpos, row) in &out.win_rows {
+                    // remap compact columns to absolute positions
+                    let mut abs_row = vec![0.0f32; h * bucket];
+                    for hh in 0..h {
+                        for j in 0..m {
+                            let i = if j < cap {
+                                if j < start {
+                                    j
+                                } else {
+                                    continue;
+                                }
+                            } else if j - cap < clen {
+                                start + (j - cap)
+                            } else {
+                                continue;
+                            };
+                            abs_row[hh * bucket + i] = row[hh * m + j];
+                        }
+                    }
+                    assert!(rows.insert(*qpos, abs_row).is_none(), "row {qpos} owned once");
+                }
+                for hh in 0..h {
+                    for r in 0..clen {
+                        acc[hh * bucket + start + r] += out.acc[hh * m + cap + r];
+                    }
+                }
+                for kv in 0..hk {
+                    for r in 0..clen {
+                        vn[kv * bucket + start + r] += out.vnorm[kv * m + cap + r];
+                    }
+                }
+                let kc = out.k.as_f32().unwrap();
+                let vc = out.v.as_f32().unwrap();
+                for kv in 0..hk {
+                    for row in 0..clen {
+                        let dst = (kv * cap + start + row) * dh;
+                        let src = (kv * chunk + row) * dh;
+                        carry_k[dst..dst + dh].copy_from_slice(&kc[src..src + dh]);
+                        carry_v[dst..dst + dh].copy_from_slice(&vc[src..src + dh]);
+                    }
+                }
+                start += clen;
+            }
+            assert_eq!(acc, mono.obs.acc_attn.as_f32().unwrap(), "chunk {chunk} acc");
+            assert_eq!(vn, mono.obs.vnorm.as_f32().unwrap(), "chunk {chunk} vnorm");
+            let mk = mono.k.as_f32().unwrap();
+            for kv in 0..hk {
+                let a = (kv * bucket) * dh;
+                let z = (kv * bucket + length) * dh;
+                assert_eq!(&carry_k[a..z], &mk[a..z], "chunk {chunk} k head {kv}");
+            }
+            // every final-window row is owned by some chunk and, with the
+            // full carry, is bit-identical to the monolithic row
+            for r in 0..w {
+                let qpos = length - w + r;
+                let got = rows.get(&qpos).unwrap_or_else(|| panic!("missing row {qpos}"));
+                for hh in 0..h {
+                    assert_eq!(
+                        &got[hh * bucket..hh * bucket + length],
+                        &mono_win[(hh * w + r) * bucket..(hh * w + r) * bucket + length],
+                        "chunk {chunk} final row {r} head {hh}"
+                    );
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn mock_evict_chunked_compacted_carry_preserves_ranking() {
+        let mut b = MockBackend::new(MockBackend::default_config());
+        b.hot_positions = vec![10, 40];
+        b.seed = 7;
+        let cfg = b.cfg.clone();
+        let (h, hk, dh, d, w) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model, cfg.window);
+        let length = 100;
+        let bucket = 128;
+        let cap = 64;
+        let layer = 2;
+        let ids: Vec<i32> = (0..length as i32).map(|t| t % 250).collect();
+        let x = b.embed(&ids, bucket).unwrap();
+        let xf = x.as_f32().unwrap();
+        let mono = b.layer_prefill(layer, &x, length).unwrap();
+        let mono_win = mono.obs.win_attn.as_f32().unwrap();
+        // last chunk [96, 100) against a compacted carry of the even
+        // positions below 96: survivor scores keep monolithic ratios
+        let start = 96;
+        let clen = length - start;
+        let chunk = 48;
+        let m = cap + chunk;
+        let survivors: Vec<usize> = (0..start).step_by(2).collect();
+        let mut pos: Vec<i32> = survivors.iter().map(|&p| p as i32).collect();
+        pos.resize(cap, -1);
+        let mk = mono.k.as_f32().unwrap();
+        let mv = mono.v.as_f32().unwrap();
+        let mut carry_k = vec![0.0f32; hk * cap * dh];
+        let mut carry_v = vec![0.0f32; hk * cap * dh];
+        for kv in 0..hk {
+            for (j, &p) in survivors.iter().enumerate() {
+                let dst = (kv * cap + j) * dh;
+                let src = (kv * bucket + p) * dh;
+                carry_k[dst..dst + dh].copy_from_slice(&mk[src..src + dh]);
+                carry_v[dst..dst + dh].copy_from_slice(&mv[src..src + dh]);
+            }
+        }
+        let mut xc = vec![0.0f32; chunk * d];
+        xc[..clen * d].copy_from_slice(&xf[start * d..(start + clen) * d]);
+        let xct = Tensor::f32(xc, &[chunk, d]);
+        let ckt = Tensor::f32(carry_k, &[hk, cap, dh]);
+        let cvt = Tensor::f32(carry_v, &[hk, cap, dh]);
+        let req = ChunkEvictReq {
+            x_chunk: &xct,
+            carry_k: &ckt,
+            carry_v: &cvt,
+            carry_pos: &pos,
+            start,
+            chunk_len: clen,
+            total_len: length,
+            n_obs: bucket,
+        };
+        let out = b.layer_prefill_chunked_evict(layer, &req).unwrap();
+        assert_eq!(out.win_rows.len(), clen);
+        for (qpos, row) in &out.win_rows {
+            let r = qpos - (length - w);
+            for hh in 0..h {
+                let base_s = row[hh * m]; // survivor column 0 = position 0
+                let base_m = mono_win[(hh * w + r) * bucket];
+                for (j, &p) in survivors.iter().enumerate() {
+                    let rs = row[hh * m + j] / base_s;
+                    let rm = mono_win[(hh * w + r) * bucket + p] / base_m;
+                    assert!(
+                        (rs - rm).abs() <= 1e-3 * rm.abs().max(1.0),
+                        "row {qpos} head {hh} survivor {p}: {rs} vs {rm}"
+                    );
+                }
+            }
+        }
+        // malformed carry maps are rejected
+        let bad_order: Vec<i32> =
+            [4i32, 2].iter().copied().chain(std::iter::repeat(-1)).take(cap).collect();
+        let req_bad = ChunkEvictReq { carry_pos: &bad_order, ..req };
+        assert!(b.layer_prefill_chunked_evict(layer, &req_bad).is_err());
+        let too_high: Vec<i32> =
+            [0i32, 97].iter().copied().chain(std::iter::repeat(-1)).take(cap).collect();
+        let req_bad = ChunkEvictReq { carry_pos: &too_high, ..req };
+        assert!(b.layer_prefill_chunked_evict(layer, &req_bad).is_err());
+        let hole: Vec<i32> = [0i32, -1, 5].iter().copied().chain(std::iter::repeat(-1)).take(cap).collect();
+        let req_bad = ChunkEvictReq { carry_pos: &hole, ..req };
+        assert!(b.layer_prefill_chunked_evict(layer, &req_bad).is_err());
+        let short = vec![0i32; cap - 1];
+        let req_bad = ChunkEvictReq { carry_pos: &short, ..req };
+        assert!(b.layer_prefill_chunked_evict(layer, &req_bad).is_err());
     }
 
     #[test]

@@ -50,6 +50,9 @@ fn run_pressured(
             kv_mem_limit: Some(210_000),
             prefill_chunk: chunk,
             prefill_chunk_budget: budget,
+            // bit-identity fingerprints are exactly what streaming eviction
+            // trades away — pin it off even under LAVA_PREFILL_STREAM=1
+            prefill_stream_evict: false,
             ..Default::default()
         },
     );
@@ -102,6 +105,8 @@ fn budgeted_chunked_results_match_monolithic_without_pressure() {
             SchedulerOptions {
                 prefill_chunk: chunk,
                 prefill_chunk_budget: budget,
+                // monolithic-equality test: streaming must stay off here
+                prefill_stream_evict: false,
                 ..Default::default()
             },
         );
