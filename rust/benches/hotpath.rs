@@ -192,6 +192,34 @@ fn main() {
         });
         println!("{}", r.line());
         results.push(r);
+
+        // Q8 block codec with a fresh Vec per block vs the preallocated
+        // *_into variants — the pair's delta is what the allocation-free
+        // rewrite saves per block on the spill path and per column on the
+        // streaming-prefill Q8 carry (one block = one head's live row here)
+        let mut rng = Rng::new(7);
+        let block: Vec<f32> = (0..128 * dh).map(|_| rng.f32() - 0.5).collect();
+        let r = bench("kvcache/q8_codec_alloc/2048", 3, 200, || {
+            let max = block.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
+            let scale = if max == 0.0 { 1.0 } else { max / 127.0 };
+            let codes: Vec<i8> = block
+                .iter()
+                .map(|&x| (x / scale).round().clamp(-127.0, 127.0) as i8)
+                .collect();
+            let back: Vec<f32> = codes.iter().map(|&q| scale * q as f32).collect();
+            std::hint::black_box(&back);
+        });
+        println!("{}", r.line());
+        results.push(r);
+        let mut codes = vec![0i8; block.len()];
+        let mut back = vec![0.0f32; block.len()];
+        let r = bench("kvcache/q8_codec_scratch/2048", 3, 200, || {
+            let scale = lava::kvcache::warm::quantize_block_into(&block, &mut codes);
+            lava::kvcache::warm::dequantize_block_into(&codes, scale, &mut back);
+            std::hint::black_box(&back);
+        });
+        println!("{}", r.line());
+        results.push(r);
     }
 
     // 5. layer-entropy (the dynamic budget overhead, Eq. 7)

@@ -36,12 +36,16 @@
 //! (`prefill_chunk`/`prefill_chunk_budget`), reporting the decode sessions'
 //! inter-token gap (mean/p99/max — the head-of-line-blocking signal),
 //! long-prompt TTFT, prefill tok/s, peak KV bytes incl. the prefill
-//! transient, and the bucket-padding gauges.
+//! transient, and the bucket-padding gauges. Two memory sweeps ride along:
+//! the carry-only transient sweep (streamed carry flat vs plain chunked
+//! linear) and the full resident sweep (layer-major vs chunk-major f32 vs
+//! chunk-major Q8 — the whole prefill working set must stay flat in prompt
+//! length on the chunk-major arms while layer-major grows linearly).
 //!
 //! In `--smoke` mode the worker sweep, the serving-loop sweep, and the
 //! chunked-prefill sweep are written to machine-readable
-//! `BENCH_serving.json` (CI uploads it as an artifact, so a perf trajectory
-//! exists across commits).
+//! `BENCH_serving.json` at the *repo root* — a committed artifact, so the
+//! perf trajectory lives in history as well as in CI uploads.
 //!
 //!   cargo bench --bench serving [-- --pjrt] [-- --ctx 512] [-- --requests 24]
 //!
@@ -660,6 +664,55 @@ fn run_chunked_prefill_bench(ctx: usize, decode_new: usize) -> Vec<Json> {
         stream_peaks[0],
         chunked_peaks[0],
     );
+
+    // Resident sweep: the chunk-major claim measured on the *whole* prefill
+    // working set (carry lanes + observation panels + hidden rows), not
+    // just the carry the transient sweep tracks. Prompt length doubles
+    // three times; both chunk-major arms must stay flat (Q8 strictly under
+    // f32) while the layer-major path grows linearly with its O(prompt)
+    // hidden rows.
+    let mut lm_peaks = Vec::new();
+    let mut cm_peaks = Vec::new();
+    let mut q8_peaks = Vec::new();
+    for mult in [1usize, 2, 4, 8] {
+        let len = long_len * mult;
+        let layer_major = one_prefill_resident_peak(len, true, false);
+        let chunk_major = one_prefill_resident_peak(len, false, false);
+        let chunk_major_q8 = one_prefill_resident_peak(len, false, true);
+        println!(
+            "{:<40} layer_major_kb={:.1} chunk_major_kb={:.1} chunk_major_q8_kb={:.1}",
+            format!("chunked-prefill/resident/len{len}"),
+            layer_major as f64 / 1e3,
+            chunk_major as f64 / 1e3,
+            chunk_major_q8 as f64 / 1e3,
+        );
+        rows.push(Json::obj(vec![
+            ("mode", Json::str("resident_sweep")),
+            ("prompt_len", Json::num(len as f64)),
+            ("layer_major_resident_bytes", Json::num(layer_major as f64)),
+            ("chunk_major_resident_bytes", Json::num(chunk_major as f64)),
+            ("chunk_major_q8_resident_bytes", Json::num(chunk_major_q8 as f64)),
+        ]));
+        lm_peaks.push(layer_major);
+        cm_peaks.push(chunk_major);
+        q8_peaks.push(chunk_major_q8);
+    }
+    assert!(
+        lm_peaks[3] > lm_peaks[0] * 4,
+        "layer-major resident set must grow linearly with the prompt: {lm_peaks:?}"
+    );
+    for peaks in [&cm_peaks, &q8_peaks] {
+        assert!(
+            peaks[3] <= peaks[0] + peaks[0] / 10,
+            "chunk-major resident set must stay flat as the prompt doubles: {peaks:?}"
+        );
+    }
+    assert!(
+        q8_peaks[0] < cm_peaks[0],
+        "Q8 carries must undercut the f32 lanes: {} vs {}",
+        q8_peaks[0],
+        cm_peaks[0],
+    );
     rows
 }
 
@@ -679,6 +732,24 @@ fn one_prefill_carry_peak(len: usize, stream: bool) -> usize {
         engine.prefill_chunked(&mut sess, 64).unwrap();
     }
     engine.metrics.peak_prefill_transient_bytes
+}
+
+/// Peak *resident* prefill bytes (carry lanes + observation panels + hidden
+/// rows) of one streaming prefill (chunk 64) at `len` prompt tokens — the
+/// `prefill_resident_bytes` gauge after a single session, per stream order
+/// and carry representation.
+fn one_prefill_resident_peak(len: usize, layer_major: bool, q8: bool) -> usize {
+    let mock = MockBackend::new(MockBackend::default_config());
+    let mut engine =
+        Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
+    engine.opts.stream_layer_major = layer_major;
+    engine.opts.carry_q8 = q8;
+    let mut rng = Rng::new(33);
+    let inst = workloads::needle_qa(&mut rng, len, 4);
+    let req = GenerateRequest { prompt: inst.prompt, max_new_tokens: 1 };
+    let mut sess = engine.new_session_with_id(1, &req);
+    engine.prefill_chunked_stream(&mut sess, 64).unwrap();
+    engine.metrics.peak_prefill_resident_bytes
 }
 
 fn main() {
@@ -728,7 +799,9 @@ fn main() {
                 ("serving_sweep", Json::Arr(serving_rows)),
                 ("chunked_sweep", Json::Arr(chunked_rows)),
             ]);
-            let path = "BENCH_serving.json";
+            // repo root (one above the cargo package), independent of the
+            // invocation CWD — the artifact is committed, not just uploaded
+            let path = concat!(env!("CARGO_MANIFEST_DIR"), "/../BENCH_serving.json");
             std::fs::write(path, json::to_string(&doc) + "\n")
                 .unwrap_or_else(|e| panic!("write {path}: {e}"));
             println!("wrote {path}");

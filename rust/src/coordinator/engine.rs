@@ -83,6 +83,34 @@
 //! cap) advance through one `layer_prefill_chunked_evict_batched` call
 //! ([`EngineWorker::advance_stream_group`]).
 //!
+//! ## Chunk-major streaming: the whole resident set goes flat
+//!
+//! Layer-major streaming bounds the *carry*, but still holds the full
+//! prompt's hidden rows (`x`/`x_next`, 2·n·d floats) across all layers, so
+//! total prefill RSS stays O(prompt). The streaming **default** is
+//! therefore chunk-major ([`EngineWorker::advance_chunk_major`], opt out
+//! via `stream_layer_major` / `LAVA_STREAM_LAYER_MAJOR`): each chunk flows
+//! through all L layers in one pass, with one bounded carry lane per layer
+//! ([`super::session::StreamLayer`]). The memory model becomes
+//!
+//!   * hidden rows: one chunk bucket in, one chunk bucket out — never the
+//!     prompt (`finish_chunked` keeps only the last row for the logits);
+//!   * carries + panels: L lanes × `cap` columns, each compacted after
+//!     every non-final pass exactly as layer-major does per layer;
+//!   * so the *entire* prefill resident set (`prefill_resident_bytes`) is
+//!     flat in prompt length — admission can price million-token prompts
+//!     at the same fixed cost as short ones.
+//!
+//! Because mid-stream evictions use the constant budget union (never the
+//! evolving per-layer budgets) and the final pass compresses lanes in
+//! ascending layer order, the compression call sequence is *identical* to
+//! layer-major: tokens, budgets, and keep-sets match between the two orders.
+//! With `carry_q8` / `LAVA_CARRY_Q8` on, lanes additionally hold their
+//! columns as Q8 codes + scales ([`crate::kvcache::Q8Carry`], the warm
+//! tier's block layout) between passes — roughly halving the lane bytes —
+//! dequantizing into one shared per-session f32 scratch at dispatch and
+//! re-quantizing only the columns the chunk landed or the cascade moved.
+//!
 //! ## Decode: gather → one dispatch per layer → scatter
 //!
 //! [`EngineWorker::decode_step_batch`] advances B sessions sharing a
@@ -123,7 +151,7 @@
 use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
-use super::session::{ChunkedPrefill, Phase, Session, StreamPrefill};
+use super::session::{ChunkedPrefill, Phase, Session, StreamLayer, StreamPrefill};
 use crate::compress::select::{select_prefill, select_recompress, KeepSet};
 use crate::compress::{alloc, score, LayerAlloc, LayerObs, Policy, ScoreKind};
 use crate::kvcache::tier::Residency;
@@ -144,6 +172,16 @@ pub struct EngineOptions {
     pub pool_kernel: usize,
     /// Use the fused L1 lava_score artifact when available.
     pub use_fused_score: bool,
+    /// Keep the PR 8 layer-major streaming order (one carry lane reset
+    /// between layers, O(prompt) hidden rows) instead of the chunk-major
+    /// default. Env: `LAVA_STREAM_LAYER_MAJOR`. Off by default — chunk-major
+    /// makes the whole prefill resident set flat in prompt length.
+    pub stream_layer_major: bool,
+    /// Q8-quantize the compacted carries between chunk-major streaming
+    /// dispatches (reuses the warm tier's block quantization; roughly halves
+    /// the bounded lane bytes). Env: `LAVA_CARRY_Q8`. No effect on the
+    /// layer-major or non-streaming paths.
+    pub carry_q8: bool,
 }
 
 impl EngineOptions {
@@ -154,7 +192,24 @@ impl EngineOptions {
             max_new_tokens: 32,
             pool_kernel: 7,
             use_fused_score: true,
+            stream_layer_major: env_flag("LAVA_STREAM_LAYER_MAJOR"),
+            carry_q8: env_flag("LAVA_CARRY_Q8"),
         }
+    }
+}
+
+/// Boolean env knob: unset or `0` = off, any other parsable integer = on.
+/// Unparsable values warn and stay off (never silently change behavior).
+fn env_flag(name: &str) -> bool {
+    match std::env::var(name) {
+        Ok(v) => match v.trim().parse::<usize>() {
+            Ok(n) => n != 0,
+            Err(_) => {
+                eprintln!("warning: {name}={v} is not an integer; treating as off");
+                false
+            }
+        },
+        Err(_) => false,
     }
 }
 
@@ -229,6 +284,13 @@ pub struct PrefillReport {
     /// `prefill_transient_bytes` gauge the bounded-transient claim is
     /// measured on.
     pub carry_peak_bytes: usize,
+    /// Peak prefill *resident* bytes over and above the retained caches:
+    /// carry K/V (f32 tensors or Q8 codes + scales at their allocated
+    /// width), observation panels, and hidden-state rows — the full working
+    /// set `carry_peak_bytes` undercounts. Flat in prompt length on the
+    /// chunk-major streaming path, O(prompt) everywhere else; feeds the
+    /// `prefill_resident_bytes` gauge admission pricing mirrors.
+    pub resident_peak_bytes: usize,
 }
 
 /// Shareable, `Copy` compute view of the engine: backend + options, no
@@ -306,6 +368,7 @@ impl<B: ModelBackend> Engine<B> {
     pub fn absorb_prefill(&mut self, report: &PrefillReport) {
         self.metrics.observe_transient(report.peak_transient);
         self.metrics.observe_prefill_transient(report.carry_peak_bytes);
+        self.metrics.observe_prefill_resident(report.resident_peak_bytes);
         self.metrics.observe_kv(report.live_after);
         for &(bucket, valid) in &report.bucket_fills {
             self.metrics.observe_prefill_fill(bucket, valid);
@@ -583,12 +646,19 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         sess.next_pos = n;
         sess.phase = Phase::Decoding;
         sess.prefill_secs = t0.elapsed().as_secs_f64();
+        // monolithic resident set: one uncompressed layer of K/V, the
+        // observation panels (win + acc + vnorm) at the prompt bucket, and
+        // the hidden rows (layer input + output) — all O(prompt)
+        let resident_peak = uncompressed_layer_bytes
+            + (cfg.n_heads * cfg.window + cfg.n_heads + cfg.n_kv_heads) * bucket * 4
+            + 2 * bucket * d * 4;
         Ok(PrefillReport {
             token: tok,
             peak_transient,
             live_after: live,
             bucket_fills,
             carry_peak_bytes: uncompressed_layer_bytes,
+            resident_peak_bytes: resident_peak,
         })
     }
 
@@ -663,7 +733,6 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         // length for prompts beyond the largest bucket (servable only here)
         let n_obs =
             Runtime::pick_bucket(self.backend.prefill_buckets(), n).unwrap_or(n);
-        let x = self.backend.embed(&sess.prompt, n)?.into_f32()?;
         let floor = hk * w;
         let budgets = if self.opts.policy.full_cache {
             vec![n * hk; cfg.n_layers]
@@ -672,14 +741,30 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         } else {
             self.static_budgets(floor)
         };
-        // streaming mode: cap-width carry, panels live on the stream state
-        let carry_w = stream_cap.unwrap_or(n_obs);
-        let stream = stream_cap.map(|cap| Box::new(StreamPrefill::new(cap)));
+        // streaming mode: per-layer carry lanes at the working cap, panels
+        // on the lanes. Chunk-major (the streaming default) keeps one lane
+        // per model layer plus one chunk of hidden rows; layer-major keeps a
+        // single lane reset between layers plus O(prompt) hidden rows.
+        let chunk_major = stream_cap.is_some() && !self.opts.stream_layer_major;
+        let q8 = chunk_major && self.opts.carry_q8;
+        let stream = stream_cap.map(|cap| {
+            let lanes = if chunk_major { cfg.n_layers } else { 1 };
+            Box::new(StreamPrefill::new(cap, chunk_major, lanes, hk, dh, q8))
+        });
         let (win, acc, vnorm) = if stream.is_some() {
             (Vec::new(), Vec::new(), Vec::new())
         } else {
             (vec![0.0; h * w * n_obs], vec![0.0; h * n_obs], vec![0.0; hk * n_obs])
         };
+        // hidden rows: chunk-major embeds per chunk (one chunk bucket of
+        // rows, never the prompt), everything else embeds the prompt here
+        let (x, x_next) = if chunk_major {
+            (Vec::new(), Vec::new())
+        } else {
+            (self.backend.embed(&sess.prompt, n)?.into_f32()?, vec![0.0; n * d])
+        };
+        // stream lanes own their carries; the shared fields stay zero-width
+        let carry_w = if stream.is_some() { 0 } else { n_obs };
         sess.phase = Phase::Prefilling { next_chunk: 0 };
         sess.prefill = Some(Box::new(ChunkedPrefill {
             chunk,
@@ -688,7 +773,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             layer: 0,
             chunk_idx: 0,
             x,
-            x_next: vec![0.0; n * d],
+            x_next,
             carry_k: Tensor::zeros(&[hk, carry_w, dh]),
             carry_v: Tensor::zeros(&[hk, carry_w, dh]),
             win,
@@ -697,6 +782,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             weights: Vec::with_capacity(cfg.n_layers),
             budgets,
             peak_transient: 0,
+            peak_resident: 0,
             stream,
             bucket_fills: Vec::new(),
             wait_secs: 0.0,
@@ -728,8 +814,13 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             .prefill
             .take()
             .ok_or_else(|| anyhow!("advance_chunked_prefill before begin (session {})", sess.id))?;
-        if st.stream.is_some() {
-            return self.advance_stream_prefill(sess, st, max_tokens, t0);
+        let stream_mode = st.stream.as_ref().map(|sv| sv.chunk_major);
+        if let Some(chunk_major) = stream_mode {
+            return if chunk_major {
+                self.advance_chunk_major(sess, st, max_tokens, t0)
+            } else {
+                self.advance_stream_prefill(sess, st, max_tokens, t0)
+            };
         }
         let mut worked = 0usize;
         let mut finished = false;
@@ -789,6 +880,13 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             let xo = out.x_out.as_f32()?;
             st.x_next[start * d..(start + chunk_len) * d].copy_from_slice(&xo[..chunk_len * d]);
             st.bucket_fills.push((c_bucket, chunk_len));
+            // full resident set: hidden rows (both layers), the O(prompt)
+            // carry K/V, and the observation panels
+            st.peak_resident = st.peak_resident.max(
+                (st.x.len() + st.x_next.len()) * 4
+                    + 2 * hk * st.n_obs * dh * 4
+                    + (st.win.len() + st.acc.len() + st.vnorm.len()) * 4,
+            );
             worked += chunk_len;
             st.chunk_idx += 1;
 
@@ -863,7 +961,10 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         let n = sess.prompt.len();
         sess.budgets = std::mem::take(&mut st.budgets);
         let live: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
-        let x_last = Tensor::f32(st.x[(n - 1) * d..n * d].to_vec(), &[1, d]);
+        // the prompt's final hidden row is the tail of `x`: the full
+        // [n, d] rows on the layer-major paths, exactly one [d] row on the
+        // chunk-major path (the last O(prompt) buffer it no longer holds)
+        let x_last = Tensor::f32(st.x[st.x.len() - d..].to_vec(), &[1, d]);
         let logits = self.backend.logits(&x_last)?;
         let tok = argmax(&logits);
         sess.generated.push(tok);
@@ -876,6 +977,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             live_after: live,
             bucket_fills: std::mem::take(&mut st.bucket_fills),
             carry_peak_bytes: 2 * hk * carry_cols * dh * 4,
+            resident_peak_bytes: st.peak_resident,
         })
     }
 
@@ -960,22 +1062,113 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             let chunk_len = st.chunk.min(n - start);
             let c_bucket = self.chunk_bucket(chunk_len);
             let (x_chunk, carry_pos) = stream_chunk_inputs(&st, start, chunk_len, c_bucket, d);
-            let out = self.backend.layer_prefill_chunked_evict(
-                st.layer,
-                &ChunkEvictReq {
-                    x_chunk: &x_chunk,
-                    carry_k: &st.carry_k,
-                    carry_v: &st.carry_v,
-                    carry_pos: &carry_pos,
-                    start,
-                    chunk_len,
-                    total_len: n,
-                    n_obs: st.n_obs,
-                },
-            )?;
+            let out = {
+                let lane = &st.stream.as_ref().expect("stream state").layers[0];
+                self.backend.layer_prefill_chunked_evict(
+                    st.layer,
+                    &ChunkEvictReq {
+                        x_chunk: &x_chunk,
+                        carry_k: &lane.carry_k,
+                        carry_v: &lane.carry_v,
+                        carry_pos: &carry_pos,
+                        start,
+                        chunk_len,
+                        total_len: n,
+                        n_obs: st.n_obs,
+                    },
+                )?
+            };
             worked += chunk_len;
             self.consume_stream_chunk(sess, &mut st, out, start, chunk_len, c_bucket)?;
             if st.layer == cfg.n_layers {
+                finished = true;
+                break;
+            }
+        }
+        if !finished {
+            sess.phase = Phase::Prefilling { next_chunk: st.chunk_idx };
+            sess.prefill = Some(st);
+            sess.prefill_secs += t0.elapsed().as_secs_f64();
+            return Ok((worked, None));
+        }
+        let report = self.finish_chunked(sess, &mut st)?;
+        sess.prefill_secs += t0.elapsed().as_secs_f64();
+        Ok((worked, Some(report)))
+    }
+
+    /// Chunk-major streaming advance (the streaming default): each chunk
+    /// flows through all L layers in one pass, one bounded carry lane per
+    /// layer. The hidden rows never exceed one chunk bucket (`x_chunk` in,
+    /// `x_out` back for the next layer), so with all L lanes capped the
+    /// whole prefill working set is flat in prompt length. The final pass
+    /// compresses the lanes in ascending layer order — the exact call
+    /// sequence the layer-major path runs — so tokens, budgets, and
+    /// keep-sets are identical between the two orders.
+    ///
+    /// A pass is atomic: the `max_tokens` budget is checked between passes
+    /// only, so one call may overshoot by up to `chunk_len * n_layers`
+    /// tokens of work (progress is still guaranteed under a tiny budget).
+    fn advance_chunk_major(
+        &self,
+        sess: &mut Session,
+        mut st: Box<ChunkedPrefill>,
+        max_tokens: Option<usize>,
+        t0: std::time::Instant,
+    ) -> Result<(usize, Option<PrefillReport>)> {
+        let cfg = self.backend.config().clone();
+        let d = cfg.d_model;
+        let n = sess.prompt.len();
+        let mut worked = 0usize;
+        let mut finished = false;
+        while st.chunk_idx < st.n_chunks {
+            if let Some(budget) = max_tokens {
+                if worked >= budget {
+                    break;
+                }
+            }
+            let start = st.chunk_idx * st.chunk;
+            let chunk_len = st.chunk.min(n - start);
+            let c_bucket = self.chunk_bucket(chunk_len);
+            let is_final = st.chunk_idx + 1 == st.n_chunks;
+            let mut x_chunk =
+                self.backend.embed(&sess.prompt[start..start + chunk_len], c_bucket)?;
+            for l in 0..cfg.n_layers {
+                let carry_pos = self.stream_dispatch_carry(&mut st, l)?;
+                let out = {
+                    let sv = st.stream.as_ref().expect("stream state");
+                    let lane = &sv.layers[l];
+                    // Q8 lanes were dequantized into the shared scratch by
+                    // stream_dispatch_carry; f32 lanes dispatch in place
+                    let (ck, cv) = if lane.q8.is_some() {
+                        (&sv.scratch_k, &sv.scratch_v)
+                    } else {
+                        (&lane.carry_k, &lane.carry_v)
+                    };
+                    self.backend.layer_prefill_chunked_evict(
+                        l,
+                        &ChunkEvictReq {
+                            x_chunk: &x_chunk,
+                            carry_k: ck,
+                            carry_v: cv,
+                            carry_pos: &carry_pos,
+                            start,
+                            chunk_len,
+                            total_len: n,
+                            n_obs: st.n_obs,
+                        },
+                    )?
+                };
+                worked += chunk_len;
+                self.consume_stream_lane(
+                    sess, &mut st, l, l, is_final, &out, start, chunk_len, c_bucket,
+                )?;
+                x_chunk = out.x_out;
+            }
+            st.chunk_idx += 1;
+            if is_final {
+                // keep only the prompt's last hidden row for the logits —
+                // the O(prompt) `x`/`x_next` buffers never exist here
+                st.x = x_chunk.as_f32()?[(chunk_len - 1) * d..chunk_len * d].to_vec();
                 finished = true;
                 break;
             }
@@ -1009,6 +1202,17 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             return Ok((Vec::new(), 0));
         }
         let t0 = std::time::Instant::now();
+        // chunk-major groups advance one full pass (all L layers of the
+        // next chunk) through L batched dispatches; layer-major groups
+        // advance one (layer, chunk) dispatch as before
+        let chunk_major = group[0]
+            .prefill
+            .as_ref()
+            .and_then(|st| st.stream.as_ref())
+            .map_or(false, |sv| sv.chunk_major);
+        if chunk_major {
+            return self.advance_chunk_major_group(group, t0);
+        }
         let cfg = self.backend.config().clone();
         let d = cfg.d_model;
         let mut sts: Vec<Box<ChunkedPrefill>> = Vec::with_capacity(group.len());
@@ -1022,7 +1226,10 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         let mut inputs: Vec<(Tensor, Vec<i32>, usize, usize, usize)> =
             Vec::with_capacity(group.len());
         for (sess, st) in group.iter().zip(&sts) {
-            if st.stream.is_none() || st.layer != layer || st.chunk_idx != chunk_idx {
+            let lockstep = st.stream.as_ref().map_or(false, |sv| !sv.chunk_major)
+                && st.layer == layer
+                && st.chunk_idx == chunk_idx;
+            if !lockstep {
                 bail!("advance_stream_group over sessions out of lockstep");
             }
             let n = sess.prompt.len();
@@ -1037,15 +1244,18 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
                 .iter()
                 .zip(group.iter())
                 .zip(&inputs)
-                .map(|((st, sess), (x_chunk, carry_pos, start, chunk_len, _))| ChunkEvictReq {
-                    x_chunk,
-                    carry_k: &st.carry_k,
-                    carry_v: &st.carry_v,
-                    carry_pos,
-                    start: *start,
-                    chunk_len: *chunk_len,
-                    total_len: sess.prompt.len(),
-                    n_obs: st.n_obs,
+                .map(|((st, sess), (x_chunk, carry_pos, start, chunk_len, _))| {
+                    let lane = &st.stream.as_ref().expect("stream state").layers[0];
+                    ChunkEvictReq {
+                        x_chunk,
+                        carry_k: &lane.carry_k,
+                        carry_v: &lane.carry_v,
+                        carry_pos,
+                        start: *start,
+                        chunk_len: *chunk_len,
+                        total_len: sess.prompt.len(),
+                        n_obs: st.n_obs,
+                    }
                 })
                 .collect();
             self.backend.layer_prefill_chunked_evict_batched(layer, &reqs)?
@@ -1073,11 +1283,124 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         Ok((results, dispatches))
     }
 
-    /// Fold one streaming-evict dispatch into the session: scatter the
-    /// chunk's K/V after the live carry columns, merge the compact
-    /// observation panels (adding at carry columns), then either evict down
-    /// to the budget union (non-final chunk) or run the layer compression
-    /// (final chunk of the layer).
+    /// Chunk-major form of [`EngineWorker::advance_stream_group`]: every
+    /// session advances one full pass (its next chunk through all L layers)
+    /// via L batched backend dispatches — per-layer, the sessions' lane
+    /// dispatches share one `layer_prefill_chunked_evict_batched` call.
+    /// Per-session results are identical to serial
+    /// [`EngineWorker::advance_chunk_major`] passes. Sessions whose pass was
+    /// their last finish here; the rest reinstall their state machines.
+    fn advance_chunk_major_group(
+        &self,
+        group: &mut [Session],
+        t0: std::time::Instant,
+    ) -> Result<(Vec<(usize, Option<PrefillReport>)>, usize)> {
+        let cfg = self.backend.config().clone();
+        let d = cfg.d_model;
+        let mut sts: Vec<Box<ChunkedPrefill>> = Vec::with_capacity(group.len());
+        for sess in group.iter_mut() {
+            sts.push(sess.prefill.take().ok_or_else(|| {
+                anyhow!("advance_stream_group on session {} without prefill state", sess.id)
+            })?);
+        }
+        let chunk_idx = sts[0].chunk_idx;
+        // per-session pass geometry + the chunk embeds (the only hidden rows)
+        let mut geom: Vec<(usize, usize, usize, bool)> = Vec::with_capacity(group.len());
+        let mut xs: Vec<Tensor> = Vec::with_capacity(group.len());
+        for (sess, st) in group.iter().zip(&sts) {
+            let lockstep = st.stream.as_ref().map_or(false, |sv| sv.chunk_major)
+                && st.chunk_idx == chunk_idx;
+            if !lockstep {
+                bail!("advance_stream_group over sessions out of lockstep");
+            }
+            let n = sess.prompt.len();
+            let start = st.chunk_idx * st.chunk;
+            let chunk_len = st.chunk.min(n - start);
+            let c_bucket = self.chunk_bucket(chunk_len);
+            let is_final = st.chunk_idx + 1 == st.n_chunks;
+            geom.push((start, chunk_len, c_bucket, is_final));
+            xs.push(self.backend.embed(&sess.prompt[start..start + chunk_len], c_bucket)?);
+        }
+        let mut total_dispatches = 0usize;
+        let mut worked = vec![0usize; group.len()];
+        for l in 0..cfg.n_layers {
+            // per-session dispatch prep (each session has its own scratch,
+            // so Q8 dequantization never conflicts across the group)
+            let mut carry_poss: Vec<Vec<i32>> = Vec::with_capacity(group.len());
+            for st in sts.iter_mut() {
+                carry_poss.push(self.stream_dispatch_carry(st, l)?);
+            }
+            let outs = {
+                let reqs: Vec<ChunkEvictReq> = sts
+                    .iter()
+                    .zip(group.iter())
+                    .enumerate()
+                    .map(|(i, (st, sess))| {
+                        let sv = st.stream.as_ref().expect("stream state");
+                        let lane = &sv.layers[l];
+                        let (ck, cv) = if lane.q8.is_some() {
+                            (&sv.scratch_k, &sv.scratch_v)
+                        } else {
+                            (&lane.carry_k, &lane.carry_v)
+                        };
+                        ChunkEvictReq {
+                            x_chunk: &xs[i],
+                            carry_k: ck,
+                            carry_v: cv,
+                            carry_pos: &carry_poss[i],
+                            start: geom[i].0,
+                            chunk_len: geom[i].1,
+                            total_len: sess.prompt.len(),
+                            n_obs: st.n_obs,
+                        }
+                    })
+                    .collect();
+                let (outs, dispatches) =
+                    self.backend.layer_prefill_chunked_evict_batched(l, &reqs)?;
+                total_dispatches += dispatches;
+                outs
+            };
+            if outs.len() != group.len() {
+                bail!(
+                    "batched evict returned {} outputs for {} sessions",
+                    outs.len(),
+                    group.len()
+                );
+            }
+            for (i, out) in outs.into_iter().enumerate() {
+                let (start, chunk_len, c_bucket, is_final) = geom[i];
+                self.consume_stream_lane(
+                    &mut group[i], &mut sts[i], l, l, is_final, &out, start, chunk_len, c_bucket,
+                )?;
+                worked[i] += chunk_len;
+                xs[i] = out.x_out;
+            }
+        }
+        let mut results = Vec::with_capacity(group.len());
+        for (i, (sess, mut st)) in group.iter_mut().zip(sts).enumerate() {
+            let (_, chunk_len, _, is_final) = geom[i];
+            st.chunk_idx += 1;
+            if is_final {
+                st.x = xs[i].as_f32()?[(chunk_len - 1) * d..chunk_len * d].to_vec();
+                let report = self.finish_chunked(sess, &mut st)?;
+                results.push((worked[i], Some(report)));
+            } else {
+                sess.phase = Phase::Prefilling { next_chunk: st.chunk_idx };
+                sess.prefill = Some(st);
+                results.push((worked[i], None));
+            }
+        }
+        let secs = t0.elapsed().as_secs_f64() / group.len() as f64;
+        for sess in group.iter_mut() {
+            sess.prefill_secs += secs;
+        }
+        Ok((results, total_dispatches))
+    }
+
+    /// Layer-major wrapper around [`EngineWorker::consume_stream_lane`]:
+    /// lane 0 carries the current layer, the full-prompt hidden rows
+    /// accumulate into `x_next`, and the cursor advances layer-outer /
+    /// chunk-inner exactly as PR 8 did.
     fn consume_stream_chunk(
         &self,
         sess: &mut Session,
@@ -1087,11 +1410,47 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         chunk_len: usize,
         c_bucket: usize,
     ) -> Result<()> {
+        let d = self.backend.config().d_model;
+        let is_final = st.chunk_idx + 1 == st.n_chunks;
+        self.consume_stream_lane(sess, st, 0, st.layer, is_final, &out, start, chunk_len, c_bucket)?;
+        let xo = out.x_out.as_f32()?;
+        st.x_next[start * d..(start + chunk_len) * d].copy_from_slice(&xo[..chunk_len * d]);
+        st.chunk_idx += 1;
+        if is_final {
+            st.layer += 1;
+            st.chunk_idx = 0;
+            std::mem::swap(&mut st.x, &mut st.x_next);
+        }
+        Ok(())
+    }
+
+    /// Fold one streaming-evict dispatch into lane `lane_idx` (serving model
+    /// layer `layer`): scatter the chunk's K/V after the live carry columns
+    /// — into the shared f32 scratch for Q8 lanes (whose authoritative
+    /// columns re-quantize below), straight into the lane's carry otherwise
+    /// — merge the compact observation panels (adding at carry columns),
+    /// then either evict down to the budget union (+ Q8 re-quantization of
+    /// the changed columns) or, on the layer's final chunk, run the layer
+    /// compression and reset the lane so stale panels stop counting
+    /// against the resident set. Cursor advancement is the caller's job.
+    #[allow(clippy::too_many_arguments)]
+    fn consume_stream_lane(
+        &self,
+        sess: &mut Session,
+        st: &mut ChunkedPrefill,
+        lane_idx: usize,
+        layer: usize,
+        is_final: bool,
+        out: &ChunkEvictOut,
+        start: usize,
+        chunk_len: usize,
+        c_bucket: usize,
+    ) -> Result<()> {
         let cfg = self.backend.config();
         let (h, hk, w, dh, d) =
             (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head, cfg.d_model);
         let cap = st.stream.as_ref().expect("stream state").cap;
-        let n_live = st.stream.as_ref().expect("stream state").col_pos.len();
+        let n_live = st.stream.as_ref().expect("stream state").layers[lane_idx].n_live();
         let n_cols = n_live + chunk_len;
         let m = cap + out.k.shape[1];
         let seen = start + chunk_len;
@@ -1102,8 +1461,14 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             let cb = out.k.shape[1];
             let kc = out.k.as_f32()?;
             let vc = out.v.as_f32()?;
-            let ck = st.carry_k.as_f32_mut()?;
-            let cv = st.carry_v.as_f32_mut()?;
+            let sv = st.stream.as_mut().expect("stream state");
+            let StreamPrefill { layers, scratch_k, scratch_v, .. } = &mut **sv;
+            let lane = &mut layers[lane_idx];
+            let (ck, cv) = if lane.q8.is_some() {
+                (scratch_k.as_f32_mut()?, scratch_v.as_f32_mut()?)
+            } else {
+                (lane.carry_k.as_f32_mut()?, lane.carry_v.as_f32_mut()?)
+            };
             for kv in 0..hk {
                 let dst = (kv * cap + n_live) * dh;
                 let src = kv * cb * dh;
@@ -1113,33 +1478,34 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         }
         {
             let sv = st.stream.as_mut().expect("stream state");
+            let lane = &mut sv.layers[lane_idx];
             // acc/vnorm: add at carry columns, append the chunk's columns
             let mut acc = vec![0.0f32; h * n_cols];
             for hh in 0..h {
                 for j in 0..n_live {
-                    acc[hh * n_cols + j] = sv.acc[hh * n_live + j] + out.acc[hh * m + j];
+                    acc[hh * n_cols + j] = lane.acc[hh * n_live + j] + out.acc[hh * m + j];
                 }
                 for r in 0..chunk_len {
                     acc[hh * n_cols + n_live + r] = out.acc[hh * m + cap + r];
                 }
             }
-            sv.acc = acc;
+            lane.acc = acc;
             let mut vnorm = vec![0.0f32; hk * n_cols];
             for kv in 0..hk {
                 for j in 0..n_live {
-                    vnorm[kv * n_cols + j] = sv.vnorm[kv * n_live + j] + out.vnorm[kv * m + j];
+                    vnorm[kv * n_cols + j] = lane.vnorm[kv * n_live + j] + out.vnorm[kv * m + j];
                 }
                 for r in 0..chunk_len {
                     vnorm[kv * n_cols + n_live + r] = out.vnorm[kv * m + cap + r];
                 }
             }
-            sv.vnorm = vnorm;
+            lane.vnorm = vnorm;
             // rolling window: drop rows that fell out, widen the survivors
             // with the chunk's (zero — future-position) columns, append the
             // chunk's owned rows compacted to the new width
             let keep_from = seen.saturating_sub(w);
-            sv.win_rows.retain(|(q, _)| *q >= keep_from);
-            for (_, row) in sv.win_rows.iter_mut() {
+            lane.win_rows.retain(|(q, _)| *q >= keep_from);
+            for (_, row) in lane.win_rows.iter_mut() {
                 let mut wide = vec![0.0f32; h * n_cols];
                 for hh in 0..h {
                     wide[hh * n_cols..hh * n_cols + n_live]
@@ -1158,52 +1524,143 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
                     compact[hh * n_cols + n_live..hh * n_cols + n_cols]
                         .copy_from_slice(&row[hh * m + cap..hh * m + cap + chunk_len]);
                 }
-                sv.win_rows.push((*qpos, compact));
+                lane.win_rows.push((*qpos, compact));
             }
-            sv.col_pos.extend((start..seen).map(|p| p as i32));
+            lane.col_pos.extend((start..seen).map(|p| p as i32));
             sv.max_live_cols = sv.max_live_cols.max(n_cols);
         }
-
-        let xo = out.x_out.as_f32()?;
-        st.x_next[start * d..(start + chunk_len) * d].copy_from_slice(&xo[..chunk_len * d]);
         st.bucket_fills.push((c_bucket, chunk_len));
-        st.chunk_idx += 1;
 
-        // bounded transient: retained caches + the live carry columns
-        // (never more than the cap, however long the prompt)
+        // bounded transient: retained caches + every lane's live carry
+        // columns (+ the Q8 scratch) — never more than L·cap, however long
+        // the prompt. Resident adds the allocated lanes, panels, and the
+        // hidden rows: one chunk bucket (chunk-major) or O(prompt) rows
+        // (layer-major).
         let retained: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
-        st.peak_transient = st.peak_transient.max(retained + 2 * hk * n_cols * dh * 4);
+        let (live_carry, resident) = {
+            let sv = st.stream.as_ref().expect("stream state");
+            let live_carry: usize = sv
+                .layers
+                .iter()
+                .map(|lane| match &lane.q8 {
+                    Some(q8) => q8.live_bytes(lane.n_live()),
+                    None => 2 * hk * lane.n_live() * dh * 4,
+                })
+                .sum();
+            let lanes_alloc: usize = sv.layers.iter().map(|l| l.resident_bytes()).sum();
+            let hidden = if sv.chunk_major {
+                2 * c_bucket * d * 4
+            } else {
+                (st.x.len() + st.x_next.len()) * 4
+            };
+            (live_carry + sv.scratch_bytes(), lanes_alloc + sv.scratch_bytes() + hidden)
+        };
+        st.peak_transient = st.peak_transient.max(retained + live_carry);
+        st.peak_resident = st.peak_resident.max(resident);
 
-        if st.chunk_idx == st.n_chunks {
-            self.compress_streamed_layer(sess, st)?;
-            st.layer += 1;
-            st.chunk_idx = 0;
-            std::mem::swap(&mut st.x, &mut st.x_next);
-            if st.layer < cfg.n_layers {
-                st.stream.as_mut().expect("stream state").reset_for_next_layer();
-            }
+        if is_final {
+            self.compress_streamed_layer(sess, st, lane_idx, layer)?;
+            st.stream.as_mut().expect("stream state").layers[lane_idx].reset_for_next_layer();
         } else {
             let union = hk * self.opts.budget_per_head.max(w);
-            if n_cols > union {
-                self.stream_evict(st, union)?;
+            let survivors = if n_cols > union {
+                self.stream_evict(st, lane_idx, union)?
+            } else {
+                None
+            };
+            self.requant_lane(st, lane_idx, n_live, survivors)?;
+        }
+        Ok(())
+    }
+
+    /// Prepare lane `lane_idx` for its next dispatch: Q8 lanes dequantize
+    /// their live columns into the session's shared f32 scratch (the
+    /// dispatch reads the scratch; its contents are only valid until the
+    /// next lane dispatches), f32 lanes need no preparation. Returns the
+    /// cap-width carry position map (-1 past the live columns).
+    fn stream_dispatch_carry(
+        &self,
+        st: &mut ChunkedPrefill,
+        lane_idx: usize,
+    ) -> Result<Vec<i32>> {
+        let sv = st.stream.as_mut().expect("stream state");
+        let cap = sv.cap;
+        let StreamPrefill { layers, scratch_k, scratch_v, .. } = &mut **sv;
+        let lane = &mut layers[lane_idx];
+        let mut carry_pos = vec![-1i32; cap];
+        carry_pos[..lane.n_live()].copy_from_slice(&lane.col_pos);
+        if let Some(q8) = &lane.q8 {
+            q8.dequantize_cols(lane.n_live(), scratch_k.as_f32_mut()?, scratch_v.as_f32_mut()?);
+        }
+        Ok(carry_pos)
+    }
+
+    /// Bring a Q8 lane's authoritative codes back in sync after a chunk
+    /// landed (and possibly evicted): surviving pre-existing columns move
+    /// their codes with [`crate::kvcache::Q8Carry::copy_col`] (no fresh
+    /// quantization, so no added drift), chunk-appended survivors quantize
+    /// from the compacted f32 scratch. `survivors` is the eviction's
+    /// ascending keep list (None = nothing evicted, only the appended
+    /// columns are new). No-op for f32 lanes.
+    fn requant_lane(
+        &self,
+        st: &mut ChunkedPrefill,
+        lane_idx: usize,
+        n_live_pre: usize,
+        survivors: Option<Vec<usize>>,
+    ) -> Result<()> {
+        let sv = st.stream.as_mut().expect("stream state");
+        let StreamPrefill { layers, scratch_k, scratch_v, .. } = &mut **sv;
+        let lane = &mut layers[lane_idx];
+        if lane.q8.is_none() {
+            return Ok(());
+        }
+        let n_cols = lane.n_live();
+        let sk = scratch_k.as_f32()?;
+        let svv = scratch_v.as_f32()?;
+        let q8 = lane.q8.as_mut().expect("q8 lane");
+        match survivors {
+            None => q8.quantize_cols(n_live_pre, n_cols, sk, svv),
+            Some(surv) => {
+                debug_assert_eq!(surv.len(), n_cols, "survivor list must match live columns");
+                // ascending dst with dst <= surv[dst]: copies move codes
+                // leftward and fresh quantizations write below every source
+                // still to be read, so a single in-place pass is safe
+                for (dst, &src) in surv.iter().enumerate() {
+                    if src < n_live_pre {
+                        q8.copy_col(dst, src);
+                    } else {
+                        q8.quantize_cols(dst, dst + 1, sk, svv);
+                    }
+                }
             }
         }
         Ok(())
     }
 
-    /// Mid-prefill eviction: score the live columns (Algorithm 1 over the
-    /// tokens seen so far — the trailing observation window is the suffix
-    /// [`select_prefill`] pins), then compact every panel plus the carry
-    /// K/V down to the keep-set union. Columns stay in ascending-position
-    /// order, so the pinned suffix is exactly the trailing w positions.
-    fn stream_evict(&self, st: &mut ChunkedPrefill, union_budget: usize) -> Result<()> {
+    /// Mid-prefill eviction on lane `lane_idx`: score the live columns
+    /// (Algorithm 1 over the tokens seen so far — the trailing observation
+    /// window is the suffix [`select_prefill`] pins), then compact every
+    /// panel plus the carry K/V down to the keep-set union. Columns stay in
+    /// ascending-position order, so the pinned suffix is exactly the
+    /// trailing w positions. Q8 lanes compact the shared f32 scratch (their
+    /// authoritative f32 view at this point); the caller re-quantizes from
+    /// it via [`EngineWorker::requant_lane`]. Returns the ascending
+    /// survivor list when columns were dropped, `None` when the keep-set
+    /// covered everything.
+    fn stream_evict(
+        &self,
+        st: &mut ChunkedPrefill,
+        lane_idx: usize,
+        union_budget: usize,
+    ) -> Result<Option<Vec<usize>>> {
         let cfg = self.backend.config();
         let (h, hk, w, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head);
         let cap = st.stream.as_ref().expect("stream state").cap;
         let survivors: Vec<usize> = {
-            let sv = st.stream.as_ref().expect("stream state");
-            let n_cols = sv.col_pos.len();
-            let obs = stream_obs(sv, h, hk, w);
+            let lane = &st.stream.as_ref().expect("stream state").layers[lane_idx];
+            let n_cols = lane.n_live();
+            let obs = stream_obs(lane, h, hk, w);
             let p = &self.opts.policy;
             let scores =
                 score::kv_head_scores(p.score, p.group_reduce, &obs, self.opts.pool_kernel);
@@ -1217,27 +1674,29 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             (0..n_cols).filter(|&j| live[j]).collect()
         };
         let sv = st.stream.as_mut().expect("stream state");
-        let n_cols = sv.col_pos.len();
+        let StreamPrefill { layers, scratch_k, scratch_v, .. } = &mut **sv;
+        let lane = &mut layers[lane_idx];
+        let n_cols = lane.n_live();
         if survivors.len() == n_cols {
-            return Ok(());
+            return Ok(None);
         }
         let ns = survivors.len();
-        sv.col_pos = survivors.iter().map(|&j| sv.col_pos[j]).collect();
+        lane.col_pos = survivors.iter().map(|&j| lane.col_pos[j]).collect();
         let mut acc = vec![0.0f32; h * ns];
         for hh in 0..h {
             for (dst, &src) in survivors.iter().enumerate() {
-                acc[hh * ns + dst] = sv.acc[hh * n_cols + src];
+                acc[hh * ns + dst] = lane.acc[hh * n_cols + src];
             }
         }
-        sv.acc = acc;
+        lane.acc = acc;
         let mut vnorm = vec![0.0f32; hk * ns];
         for kv in 0..hk {
             for (dst, &src) in survivors.iter().enumerate() {
-                vnorm[kv * ns + dst] = sv.vnorm[kv * n_cols + src];
+                vnorm[kv * ns + dst] = lane.vnorm[kv * n_cols + src];
             }
         }
-        sv.vnorm = vnorm;
-        for (_, row) in sv.win_rows.iter_mut() {
+        lane.vnorm = vnorm;
+        for (_, row) in lane.win_rows.iter_mut() {
             let mut compact = vec![0.0f32; h * ns];
             for hh in 0..h {
                 for (dst, &src) in survivors.iter().enumerate() {
@@ -1248,8 +1707,11 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         }
         // gather the surviving K/V rows forward; survivors ascend, so every
         // copy moves a row to an index <= its source and ranges never overlap
-        let ck = st.carry_k.as_f32_mut()?;
-        let cv = st.carry_v.as_f32_mut()?;
+        let (ck, cv) = if lane.q8.is_some() {
+            (scratch_k.as_f32_mut()?, scratch_v.as_f32_mut()?)
+        } else {
+            (lane.carry_k.as_f32_mut()?, lane.carry_v.as_f32_mut()?)
+        };
         for kv in 0..hk {
             let base = kv * cap * dh;
             for (dst, &src) in survivors.iter().enumerate() {
@@ -1260,7 +1722,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
                 cv.copy_within(base + src * dh..base + (src + 1) * dh, base + dst * dh);
             }
         }
-        Ok(())
+        Ok(Some(survivors))
     }
 
     /// Final-chunk layer compression on the streamed path: the same
@@ -1268,20 +1730,28 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// as [`EngineWorker::compress_prefilled_layer`], but over the compact
     /// survivor columns (scores run host-side — the fused artifact's bucket
     /// shapes do not apply to compacted carries) with slot positions
-    /// rewritten from the column-position map.
-    fn compress_streamed_layer(&self, sess: &mut Session, st: &mut ChunkedPrefill) -> Result<()> {
+    /// rewritten from the column-position map. Q8 lanes load from the
+    /// shared f32 scratch, which holds their authoritative columns after
+    /// the final chunk's scatter (no re-quantization happens on the final
+    /// chunk, so nothing round-trips one extra time).
+    fn compress_streamed_layer(
+        &self,
+        sess: &mut Session,
+        st: &mut ChunkedPrefill,
+        lane_idx: usize,
+        l: usize,
+    ) -> Result<()> {
         let cfg = self.backend.config();
         let (h, hk, w) = (cfg.n_heads, cfg.n_kv_heads, cfg.window);
         let floor = hk * w;
-        let l = st.layer;
         let dynamic = self.opts.policy.dynamic_layer();
         let (scores, obs, col_pos) = {
-            let sv = st.stream.as_ref().expect("stream state");
-            let obs = stream_obs(sv, h, hk, w);
+            let lane = &st.stream.as_ref().expect("stream state").layers[lane_idx];
+            let obs = stream_obs(lane, h, hk, w);
             let p = &self.opts.policy;
             let scores =
                 score::kv_head_scores(p.score, p.group_reduce, &obs, self.opts.pool_kernel);
-            (scores, obs, sv.col_pos.clone())
+            (scores, obs, lane.col_pos.clone())
         };
         let n_cols = col_pos.len();
         if dynamic {
@@ -1294,13 +1764,16 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             select_prefill(&scores, n_cols, st.budgets[l], w, self.opts.policy.head_alloc);
         let capacity = self.capacity_for(st.budgets[l], n_cols, sess.max_new_tokens)?;
         let mut cache = HotStore::new(hk, cfg.d_head, capacity);
-        cache.load_from_prefill_at(
-            &st.carry_k,
-            &st.carry_v,
-            &keepset.keep,
-            &keepset.scores,
-            &col_pos,
-        );
+        {
+            let sv = st.stream.as_ref().expect("stream state");
+            let lane = &sv.layers[lane_idx];
+            let (ck, cv) = if lane.q8.is_some() {
+                (&sv.scratch_k, &sv.scratch_v)
+            } else {
+                (&lane.carry_k, &lane.carry_v)
+            };
+            cache.load_from_prefill_at(ck, cv, &keepset.keep, &keepset.scores, &col_pos);
+        }
         sess.caches.push(cache);
         sess.residency.push(Residency::Hot);
         if dynamic {
@@ -1477,9 +1950,10 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     }
 }
 
-/// Build one streaming-evict dispatch's owned inputs: the chunk rows padded
-/// to the chunk bucket and the cap-width carry position map (-1 past the
-/// live columns).
+/// Build one layer-major streaming dispatch's owned inputs: the chunk rows
+/// padded to the chunk bucket (sliced from the full-prompt hidden buffer)
+/// and lane 0's cap-width carry position map (-1 past the live columns).
+/// Chunk-major passes build these per-lane inline instead.
 fn stream_chunk_inputs(
     st: &ChunkedPrefill,
     start: usize,
@@ -1488,21 +1962,22 @@ fn stream_chunk_inputs(
     d: usize,
 ) -> (Tensor, Vec<i32>) {
     let sv = st.stream.as_ref().expect("stream_chunk_inputs on a non-stream prefill");
+    let lane = &sv.layers[0];
     let mut xc = vec![0.0f32; c_bucket * d];
     xc[..chunk_len * d].copy_from_slice(&st.x[start * d..(start + chunk_len) * d]);
     let mut carry_pos = vec![-1i32; sv.cap];
-    carry_pos[..sv.col_pos.len()].copy_from_slice(&sv.col_pos);
+    carry_pos[..lane.n_live()].copy_from_slice(&lane.col_pos);
     (Tensor::f32(xc, &[c_bucket, d]), carry_pos)
 }
 
-/// Assemble a scoring [`LayerObs`] over the compact column space: the last
-/// w query rows in ascending qpos order (exactly the monolithic window-row
-/// layout) plus the accumulated acc/vnorm panels.
-fn stream_obs(sv: &StreamPrefill, h: usize, hk: usize, w: usize) -> LayerObs {
-    let n_cols = sv.col_pos.len();
-    debug_assert_eq!(sv.win_rows.len(), w, "scoring before the observation window filled");
+/// Assemble a scoring [`LayerObs`] over one lane's compact column space: the
+/// last w query rows in ascending qpos order (exactly the monolithic
+/// window-row layout) plus the accumulated acc/vnorm panels.
+fn stream_obs(lane: &StreamLayer, h: usize, hk: usize, w: usize) -> LayerObs {
+    let n_cols = lane.n_live();
+    debug_assert_eq!(lane.win_rows.len(), w, "scoring before the observation window filled");
     let mut win = vec![0.0f32; h * w * n_cols];
-    for (r, (_, row)) in sv.win_rows.iter().enumerate() {
+    for (r, (_, row)) in lane.win_rows.iter().enumerate() {
         for hh in 0..h {
             win[(hh * w + r) * n_cols..(hh * w + r + 1) * n_cols]
                 .copy_from_slice(&row[hh * n_cols..(hh + 1) * n_cols]);
@@ -1510,8 +1985,8 @@ fn stream_obs(sv: &StreamPrefill, h: usize, hk: usize, w: usize) -> LayerObs {
     }
     LayerObs {
         win_attn: Tensor::f32(win, &[h, w, n_cols]),
-        acc_attn: Tensor::f32(sv.acc.clone(), &[h, n_cols]),
-        vnorm: Tensor::f32(sv.vnorm.clone(), &[hk, n_cols]),
+        acc_attn: Tensor::f32(lane.acc.clone(), &[h, n_cols]),
+        vnorm: Tensor::f32(lane.vnorm.clone(), &[hk, n_cols]),
         length: n_cols,
     }
 }
@@ -2022,6 +2497,7 @@ mod tests {
         // working cap = Hk*max(b, w) + chunk bucket + w = 96 + 128 + 16 = 240
         // columns; one column is 2 (K+V) * Hk(4) * dh(16) * 4 = 512 bytes
         let cap_bytes = 512 * 240;
+        let n_layers = 4;
         let (mut e256, mut s256, r256) = run(256, true);
         let (_, s1024, r1024) = run(1024, true);
         for (s, r) in [(&s256, &r256), (&s1024, &r1024)] {
@@ -2030,11 +2506,22 @@ mod tests {
                 "carry {} exceeds the working cap {cap_bytes}",
                 r.carry_peak_bytes
             );
-            assert!(r.peak_transient <= cap_bytes + r.live_after);
+            // chunk-major holds all L bounded lanes live at once
+            assert!(r.peak_transient <= n_layers * cap_bytes + r.live_after);
             assert_eq!(s.budgets.iter().sum::<usize>(), 24 * 4 * 4);
             assert_eq!(s.generated.len(), 1);
             assert!(s.prefill.is_none(), "state machine must be torn down");
         }
+        // the headline claim: the *full* resident set (lanes + panels +
+        // hidden rows) stays flat as the prompt quadruples — panel live
+        // widths wobble a little between runs, nothing more
+        assert!(r256.resident_peak_bytes > 0);
+        assert!(
+            r1024.resident_peak_bytes <= r256.resident_peak_bytes * 11 / 10,
+            "chunk-major resident set must stay flat: {} at n=256 vs {} at n=1024",
+            r256.resident_peak_bytes,
+            r1024.resident_peak_bytes
+        );
         // the plain chunked carry is O(prompt): 512 bytes per prompt column
         let (_, _, p256) = run(256, false);
         let (_, _, p1024) = run(1024, false);
@@ -2043,6 +2530,13 @@ mod tests {
         assert!(
             r1024.carry_peak_bytes < p1024.carry_peak_bytes / 4,
             "stream transient must stay flat while the plain carry grows linearly"
+        );
+        // ... and so is the plain resident set (hidden rows dominate)
+        assert!(
+            p1024.resident_peak_bytes > p256.resident_peak_bytes * 3,
+            "plain chunked resident set must grow linearly: {} vs {}",
+            p256.resident_peak_bytes,
+            p1024.resident_peak_bytes
         );
         // the streamed session decodes normally on its compacted caches
         for _ in 0..2 {
@@ -2076,7 +2570,9 @@ mod tests {
             let kb = w.stream_lockstep_key(&group[1]);
             assert_eq!(ka, kb, "identical prompts stay in lockstep");
             let (res, dispatches) = w.advance_stream_group(&mut group).unwrap();
-            assert_eq!(dispatches, 1, "one backend dispatch per lockstep group");
+            // chunk-major groups advance a full pass: one batched dispatch
+            // per layer instead of one per (layer, chunk) step
+            assert_eq!(dispatches, 4, "one backend dispatch per layer per lockstep group");
             assert_eq!(res.len(), 2);
             let done = res.iter().filter(|(_, r)| r.is_some()).count();
             assert!(done == 0 || done == 2, "identical sessions finish together");
@@ -2157,6 +2653,107 @@ mod tests {
             assert!(
                 overlap >= 0.5,
                 "chunk {chunk}: streamed keep-set overlap {overlap:.3} below the 0.5 floor"
+            );
+        }
+    }
+
+    #[test]
+    fn chunk_major_matches_layer_major_stream() {
+        // the two streaming orders run the identical compression call
+        // sequence (mid-stream evictions use the constant budget union and
+        // the final pass compresses lanes in ascending layer order), so
+        // tokens, budgets, and keep-sets must match exactly
+        for chunk in [64usize, 96, 128] {
+            let req = GenerateRequest { prompt: prompt(300), max_new_tokens: 4 };
+            let mut cm = engine("lava", 24);
+            cm.opts.stream_layer_major = false;
+            cm.opts.carry_q8 = false;
+            let mut cs = cm.new_session(&req);
+            cm.prefill_chunked_stream(&mut cs, chunk).unwrap();
+            let mut lm = engine("lava", 24);
+            lm.opts.stream_layer_major = true;
+            lm.opts.carry_q8 = false;
+            let mut ls = lm.new_session(&req);
+            lm.prefill_chunked_stream(&mut ls, chunk).unwrap();
+            assert_eq!(cs.generated, ls.generated, "chunk {chunk}: first token");
+            assert_eq!(cs.budgets, ls.budgets, "chunk {chunk}: budgets");
+            assert_eq!(
+                cache_fingerprint(&cs),
+                cache_fingerprint(&ls),
+                "chunk {chunk}: keep-sets"
+            );
+            for _ in 0..3 {
+                let a = cm.decode_step(&mut cs).unwrap();
+                let b = lm.decode_step(&mut ls).unwrap();
+                assert_eq!(a, b, "chunk {chunk}: decode token");
+            }
+        }
+    }
+
+    /// Satellite 3: Q8 carries must not disturb the streamed keep-set
+    /// selection. On the mock backend the observation panels are functions
+    /// of positions only, so this is a plumbing guard (quantize → dequantize
+    /// → evict → requantize must not corrupt column bookkeeping) with a
+    /// 0.99 overlap floor rather than an accuracy measurement — accuracy is
+    /// covered by the Q8 round-trip tolerance property tests in
+    /// `kvcache::warm`.
+    #[test]
+    fn q8_carries_preserve_stream_keep_sets() {
+        use crate::util::rng::Rng;
+        use crate::workloads::{needle_at_depth, needle_qa, ruler};
+
+        fn keep_positions(sess: &Session) -> Vec<Vec<Vec<i32>>> {
+            sess.caches
+                .iter()
+                .map(|c| {
+                    (0..c.n_kv_heads())
+                        .map(|h| {
+                            let mut p: Vec<i32> =
+                                (0..c.head_len(h)).map(|i| c.position(h, i)).collect();
+                            p.sort_unstable();
+                            p
+                        })
+                        .collect()
+                })
+                .collect()
+        }
+
+        let mut rng = Rng::new(13);
+        let instances = vec![
+            needle_at_depth(&mut rng, 320, 0.25, 8),
+            needle_at_depth(&mut rng, 320, 0.75, 8),
+            needle_qa(&mut rng, 320, 8),
+            ruler::multi_hop(&mut rng, 320),
+        ];
+        for chunk in [64usize, 96, 128] {
+            let (mut hits, mut total) = (0usize, 0usize);
+            for inst in &instances {
+                let req =
+                    GenerateRequest { prompt: inst.prompt.clone(), max_new_tokens: 1 };
+                let mut fe = engine("lava", 24);
+                fe.opts.stream_layer_major = false;
+                fe.opts.carry_q8 = false;
+                let mut fs = fe.new_session(&req);
+                fe.prefill_chunked_stream(&mut fs, chunk).unwrap();
+                let mut qe = engine("lava", 24);
+                qe.opts.stream_layer_major = false;
+                qe.opts.carry_q8 = true;
+                let mut qs = qe.new_session(&req);
+                qe.prefill_chunked_stream(&mut qs, chunk).unwrap();
+                assert_eq!(fs.budgets, qs.budgets, "chunk {chunk}: Q8 changed budgets");
+                let fk = keep_positions(&fs);
+                let qk = keep_positions(&qs);
+                for (lf, lq) in fk.iter().zip(&qk) {
+                    for (hf, hq) in lf.iter().zip(lq) {
+                        total += hf.len();
+                        hits += hf.iter().filter(|p| hq.binary_search(p).is_ok()).count();
+                    }
+                }
+            }
+            let overlap = hits as f64 / total as f64;
+            assert!(
+                overlap >= 0.99,
+                "chunk {chunk}: Q8 keep-set overlap {overlap:.4} below the 0.99 floor"
             );
         }
     }

@@ -72,6 +72,14 @@ pub struct Metrics {
     /// streaming working cap regardless of prompt length.
     pub prefill_transient_bytes: usize,
     pub peak_prefill_transient_bytes: usize,
+    /// Per-prefill *resident* working set: carries (f32 or Q8 at allocated
+    /// width), observation panels, and hidden-state rows — the full set the
+    /// carry gauge above undercounts (it omits panels and hidden rows).
+    /// Flat in prompt length on the chunk-major streaming path, O(prompt)
+    /// on the monolithic / plain-chunked / layer-major paths; admission
+    /// prices the same quantity.
+    pub prefill_resident_bytes: usize,
+    pub peak_prefill_resident_bytes: usize,
     /// Cross-session chunk batching: lockstep streaming-prefill rounds
     /// (`batches`), the sessions they covered, and the backend dispatches
     /// they cost. occupancy = sessions / batches; without batching,
@@ -176,6 +184,14 @@ impl Metrics {
     pub fn observe_prefill_transient(&mut self, bytes: usize) {
         self.prefill_transient_bytes = bytes;
         self.peak_prefill_transient_bytes = self.peak_prefill_transient_bytes.max(bytes);
+    }
+
+    /// Record one finished prefill's peak resident working set (carries +
+    /// observation panels + hidden rows — everything over the retained
+    /// caches). Flat under chunk-major streaming, O(prompt) otherwise.
+    pub fn observe_prefill_resident(&mut self, bytes: usize) {
+        self.prefill_resident_bytes = bytes;
+        self.peak_prefill_resident_bytes = self.peak_prefill_resident_bytes.max(bytes);
     }
 
     /// Record one lockstep streaming-prefill group advance covering
@@ -392,7 +408,8 @@ impl Metrics {
              throughput_tok_s={:.1} admission_rounds={} decode_steps={} \
              decode_batches={} batch_occupancy={:.2} decode_dispatches={} \
              prefill_padded_tokens={} prefill_bucket_util={:.2} \
-             prefill_transient_mb(peak)={:.2} prefill_chunk_batches={} \
+             prefill_transient_mb(peak)={:.2} prefill_resident_mb(peak)={:.2} \
+             prefill_chunk_batches={} \
              prefill_chunk_occupancy={:.2} prefill_chunk_dispatches={} \
              workers={} worker_util={:.2} worker_busy_ms=[{}] \
              tier_spill_q={} tier_prefetch_q={} tier_q_peak={} \
@@ -428,6 +445,7 @@ impl Metrics {
             self.prefill_padded_tokens,
             self.prefill_bucket_utilization(),
             self.peak_prefill_transient_bytes as f64 / 1e6,
+            self.peak_prefill_resident_bytes as f64 / 1e6,
             self.prefill_chunk_batches,
             self.prefill_chunk_batch_occupancy(),
             self.prefill_chunk_batch_dispatches,
@@ -571,6 +589,11 @@ mod tests {
         m.observe_prefill_transient(1024);
         assert_eq!(m.prefill_transient_bytes, 1024, "gauge tracks the last prefill");
         assert_eq!(m.peak_prefill_transient_bytes, 4096, "peak holds the worst");
+        m.observe_prefill_resident(8192);
+        m.observe_prefill_resident(2048);
+        assert_eq!(m.prefill_resident_bytes, 2048, "resident gauge tracks the last prefill");
+        assert_eq!(m.peak_prefill_resident_bytes, 8192, "resident peak holds the worst");
+        assert!(m.report().contains("prefill_resident_mb(peak)=0.01"));
         // two lockstep rounds: a batched pair (1 dispatch) and a singleton
         m.observe_prefill_chunk_batch(2, 1);
         m.observe_prefill_chunk_batch(1, 1);

@@ -90,23 +90,33 @@
 //! prompts through the engine's streaming state machine
 //! (`EngineWorker::begin_chunked_prefill_stream`): after every non-final
 //! chunk the layer's live columns are LAVa-scored (trailing window pinned)
-//! and evicted down to the per-head budget union, so the carry K/V is
+//! and evicted down to the per-head budget union, so each carry lane is
 //! bounded by the fixed working cap `hk·max(budget, w) + chunk bucket + w`
-//! columns regardless of prompt length. Admission math follows: the
-//! transient term in `projected_bytes` shrinks from one O(prompt)
-//! uncompressed layer to `min(cap, prompt)` columns, so long prompts that
-//! could never prefill under a tight `kv_mem_limit` become admissible.
-//! The trade is explicit: mid-prefill eviction sees only the tokens so
-//! far, so tokens and keep-sets are *not* bit-identical to the monolithic
-//! pass (the keep-set overlap on retrieval workloads is regression-tested
-//! in the engine); prompts whose chunk shapes have no evict support fall
-//! back to the plain chunked path per request.
+//! columns regardless of prompt length. The default order is *chunk-major*:
+//! each chunk runs through all L layers in one pass, every layer keeps its
+//! own bounded lane, and the hidden-state rows shrink to one chunk — so
+//! the *whole* prefill resident set (carries + observation panels + hidden
+//! rows) is flat in prompt length, and admission prices it that way: the
+//! transient term in [`Scheduler::projected_bytes`] becomes
+//! prompt-length-independent, so long prompts that could never prefill
+//! under a tight `kv_mem_limit` become admissible at a fixed cost.
+//! `EngineOptions::stream_layer_major` keeps the PR 8 layer-major order
+//! (one lane reset between layers, but O(prompt) hidden rows);
+//! `EngineOptions::carry_q8` Q8-quantizes the chunk-major lanes between
+//! dispatches, roughly halving their bytes for one shared f32
+//! dequantization scratch. The trade is explicit: mid-prefill eviction
+//! sees only the tokens so far, so tokens and keep-sets are *not*
+//! bit-identical to the monolithic pass (the keep-set overlap on retrieval
+//! workloads is regression-tested in the engine); prompts whose chunk
+//! shapes have no evict support fall back to the plain chunked path per
+//! request.
 //!
 //! Mid-stream sessions also batch *across sessions*: each
 //! [`Scheduler::advance_prefills`] round groups `prefilling` sessions by
 //! their lockstep key (layer, chunk cursor, chunk shape, cap), fans the
 //! groups over the worker pool, and advances every group member through
-//! one batched backend dispatch (`advance_stream_group`) — the prefill
+//! batched backend dispatches (`advance_stream_group`; one dispatch per
+//! pass layer-major, one per layer per pass chunk-major) — the prefill
 //! analogue of batched decode, counted by the `prefill_chunk_batches` /
 //! `prefill_chunk_dispatches` metrics.
 
@@ -521,26 +531,59 @@ impl<B: ModelBackend> Scheduler<B> {
         budget_entries.min(prompt_len * cfg.n_kv_heads * cfg.n_layers) * cfg.d_head * 2 * 4
     }
 
-    /// Bytes of the transient uncompressed layer live *during* prefill only.
-    /// With streaming eviction the carry is compacted after every chunk, so
-    /// the transient is bounded by the working cap instead of the prompt
-    /// length — the whole point of the mode for admission under a limit.
+    /// Bytes of the full prefill working set live *during* prefill only:
+    /// carry K/V, observation panels (attention mass, window rows, value
+    /// norms, positions), and hidden-state rows — everything the engine
+    /// measures into `PrefillReport::resident_peak_bytes` beyond the
+    /// retained caches. Path-dependent:
+    ///
+    /// * plain chunked / monolithic — one O(prompt) uncompressed layer
+    ///   plus O(prompt) panels and hidden rows;
+    /// * layer-major streaming (`stream_layer_major`) — one lane bounded
+    ///   at the working cap, but still O(prompt) hidden rows;
+    /// * chunk-major streaming (the streaming default) — L lanes bounded
+    ///   at the cap plus one chunk of hidden rows: flat in prompt length.
+    ///   With `carry_q8` the lanes shrink to int8 codes + scales and one
+    ///   shared f32 dequantization scratch is added.
+    ///
+    /// Per-column constants mirror the engine's stream-lane accounting;
+    /// the chunk/prefill *buckets* are approximated by the configured
+    /// chunk and prompt length (pricing, not measurement).
     fn transient_bytes(&self, prompt_len: usize) -> usize {
         let cfg = self.engine.config();
-        let cols = match (self.opts.prefill_stream_evict, self.opts.prefill_chunk) {
+        let (h, hk, dh, d) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head, cfg.d_model);
+        // f32 carry K/V per live column, and the observation panels per
+        // column (acc `[H]`, up to w window rows `[H]`, vnorm `[Hk]`, pos)
+        let carry_col = 2 * hk * dh * 4;
+        let panel_col = (h * (cfg.window + 1) + hk + 1) * 4;
+        let streamed_cap = match (self.opts.prefill_stream_evict, self.opts.prefill_chunk) {
             (true, Some(chunk)) => self
                 .engine
                 .worker()
                 .stream_evict_cap(prompt_len, chunk)
-                .map(|cap| cap.min(prompt_len))
-                .unwrap_or(prompt_len),
-            _ => prompt_len,
+                .map(|cap| cap.min(prompt_len)),
+            _ => None,
         };
-        2 * cfg.n_kv_heads * cols * cfg.d_head * 4
+        match streamed_cap {
+            Some(cap) if !self.engine.opts.stream_layer_major => {
+                let chunk_rows = self.opts.prefill_chunk.unwrap_or(0).min(prompt_len);
+                let (lane_carry, scratch) = if self.engine.opts.carry_q8 {
+                    (2 * hk * cap * (dh + 4), cap * carry_col)
+                } else {
+                    (cap * carry_col, 0)
+                };
+                cfg.n_layers * (lane_carry + cap * panel_col)
+                    + scratch
+                    + 2 * chunk_rows * d * 4
+            }
+            Some(cap) => cap * (carry_col + panel_col) + 2 * prompt_len * d * 4,
+            None => prompt_len * (carry_col + panel_col) + 2 * prompt_len * d * 4,
+        }
     }
 
-    /// Peak bytes a request needs while prefilling: retained caches plus one
-    /// uncompressed layer. Public for the same calibration reason as
+    /// Peak bytes a request needs while prefilling: retained caches plus
+    /// the full transient working set ([`Scheduler::transient_bytes`]).
+    /// Public for the same calibration reason as
     /// [`Scheduler::retained_bytes`].
     pub fn projected_bytes(&self, prompt_len: usize) -> usize {
         self.retained_bytes(prompt_len) + self.transient_bytes(prompt_len)
@@ -549,10 +592,11 @@ impl<B: ModelBackend> Scheduler<B> {
     /// Bytes admission must hold back for mid-prefill (chunked) sessions:
     /// their caches stay out of `hot_bytes` until the first token, so each
     /// reserves its full projected footprint (retained budget + the
-    /// carry-in layer, which is O(prompt) even under plain chunking —
-    /// chunking shrinks the dispatch working set, not the per-layer carry.
-    /// Streaming eviction is what bounds the carry, and
-    /// [`Scheduler::transient_bytes`] prices it accordingly).
+    /// transient working set, which is O(prompt) even under plain chunking
+    /// — chunking shrinks the dispatch working set, not the per-layer
+    /// carry or the hidden rows. Chunk-major streaming eviction is what
+    /// makes the whole working set flat, and
+    /// [`Scheduler::transient_bytes`] prices each path accordingly).
     fn prefilling_reserved_bytes(&self) -> usize {
         self.prefilling.iter().map(|s| self.projected_bytes(s.prompt.len())).sum()
     }
@@ -1600,8 +1644,10 @@ mod tests {
 
     #[test]
     fn memory_limit_defers_admission() {
-        // limit allows roughly one session's budget
-        let mut s = sched(Some(300_000));
+        // limit fits one prefill peak plus ~2 retained sessions: later
+        // requests must wait for earlier ones to finish, never reject
+        let mut s = sched(None);
+        s.opts.kv_mem_limit = Some(s.projected_bytes(200) + 2 * s.retained_bytes(200));
         for _ in 0..4 {
             s.submit(req(200, 6)).unwrap();
         }
@@ -1614,10 +1660,12 @@ mod tests {
 
     #[test]
     fn tiering_spills_under_pressure_and_completes_all() {
-        // ~2 sessions' peak fits; the rest must be rescued by spilling idle
-        // sessions' layers to the warm tier instead of deferring forever
-        let limit = 210_000;
-        let mut s = sched(Some(limit));
+        // one prefill peak plus ~1 retained session fits; the rest must be
+        // rescued by spilling idle sessions' layers to the warm tier
+        // instead of deferring forever
+        let mut s = sched(None);
+        let limit = s.projected_bytes(200) + s.retained_bytes(200) * 5 / 4;
+        s.opts.kv_mem_limit = Some(limit);
         for _ in 0..4 {
             s.submit(req(200, 6)).unwrap();
         }
@@ -1641,7 +1689,8 @@ mod tests {
 
     #[test]
     fn tiering_off_reverts_to_deferral() {
-        let mut s = sched(Some(210_000));
+        let mut s = sched(None);
+        s.opts.kv_mem_limit = Some(s.projected_bytes(200) + s.retained_bytes(200) * 5 / 4);
         s.opts.tiering = false;
         for _ in 0..4 {
             s.submit(req(200, 6)).unwrap();
@@ -2013,7 +2062,8 @@ mod tests {
     fn budgeted_chunked_prefill_respects_memory_accounting() {
         // tight limit: mid-prefill sessions must reserve their projected
         // bytes so admission cannot over-commit, and everything completes
-        let mut s = sched_chunked(Some(64), Some(128), Some(300_000));
+        let mut s = sched_chunked(Some(64), Some(128), None);
+        s.opts.kv_mem_limit = Some(s.projected_bytes(200) + 2 * s.retained_bytes(200));
         for _ in 0..4 {
             s.submit(req(200, 6)).unwrap();
         }
@@ -2060,13 +2110,16 @@ mod tests {
             2 * m.prefill_chunk_batches,
             "lockstep pair must share every round"
         );
+        // chunk-major advances fan each lockstep pass over the layers: one
+        // batched dispatch per layer per group round (L = 4 on the mock)
         assert_eq!(
-            m.prefill_chunk_batch_dispatches, m.prefill_chunk_batches,
-            "each lockstep group must cost one backend dispatch"
+            m.prefill_chunk_batch_dispatches,
+            4 * m.prefill_chunk_batches,
+            "each chunk-major lockstep round must cost one dispatch per layer"
         );
         assert!(
-            m.prefill_chunk_batch_dispatches < m.prefill_chunk_batch_sessions,
-            "batching must reduce dispatches below one-per-session"
+            m.prefill_chunk_batch_dispatches < 4 * m.prefill_chunk_batch_sessions,
+            "batching must reduce dispatches below one-per-layer-per-session"
         );
         assert!((m.prefill_chunk_batch_occupancy() - 2.0).abs() < 1e-9);
         // the bounded-transient gauge saw the stream's peak carry
@@ -2106,10 +2159,30 @@ mod tests {
         s.opts.prefill_stream_evict = true;
         let streamed = s.projected_bytes(2048);
         assert!(streamed < plain, "streamed {streamed} must undercut plain {plain}");
-        // retained budgets are identical; only the transient term shrinks,
-        // from one O(prompt) layer to the working cap
-        let cap = s.engine.worker().stream_evict_cap(2048, 64).unwrap();
-        let col_bytes = 2 * 4 * 16 * 4; // 2 (K+V) · hk · dh · f32
-        assert_eq!(plain - streamed, (2048 - cap) * col_bytes);
+        // chunk-major (the streaming default) prices the whole working set
+        // flat: doubling the prompt moves neither the bounded lanes nor the
+        // one-chunk hidden rows, and the retained budget is saturated
+        assert_eq!(
+            s.projected_bytes(4096),
+            streamed,
+            "chunk-major projection must be prompt-length-independent"
+        );
+        // Q8 carries undercut the f32 lanes even after paying for the
+        // shared dequantization scratch
+        s.engine.opts.carry_q8 = true;
+        let q8 = s.projected_bytes(2048);
+        assert!(q8 < streamed, "q8 {q8} must undercut f32 lanes {streamed}");
+        s.engine.opts.carry_q8 = false;
+        // layer-major keeps O(prompt) hidden rows: cheaper than plain (one
+        // bounded lane instead of an O(prompt) layer) but not flat
+        s.engine.opts.stream_layer_major = true;
+        let lm_2k = s.projected_bytes(2048);
+        let lm_4k = s.projected_bytes(4096);
+        assert!(lm_2k < plain);
+        assert!(lm_4k > lm_2k, "layer-major hidden rows must grow with the prompt");
+        assert!(
+            lm_4k - lm_2k >= 2048 * 2 * 128 * 4, // 2 hidden f32 rows · d_model
+            "growth must be dominated by the x/x_next rows"
+        );
     }
 }

@@ -456,6 +456,13 @@ fn metrics_json(snap: &MetricsSnapshot) -> Json {
             "peak_prefill_transient_mb",
             Json::num(m.peak_prefill_transient_bytes as f64 / 1e6),
         ),
+        // the full prefill resident set (carries + panels + hidden rows):
+        // flat in prompt length under chunk-major streaming
+        ("prefill_resident_mb", Json::num(m.prefill_resident_bytes as f64 / 1e6)),
+        (
+            "peak_prefill_resident_mb",
+            Json::num(m.peak_prefill_resident_bytes as f64 / 1e6),
+        ),
         ("prefill_chunk_batches", Json::num(m.prefill_chunk_batches as f64)),
         ("prefill_chunk_occupancy", Json::num(m.prefill_chunk_batch_occupancy())),
         (

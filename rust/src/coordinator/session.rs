@@ -1,7 +1,7 @@
 //! Per-request serving state.
 
 use crate::kvcache::tier::Residency;
-use crate::kvcache::HotStore;
+use crate::kvcache::{HotStore, Q8Carry};
 use crate::runtime::Tensor;
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -30,10 +30,16 @@ pub enum Phase {
 /// *dispatch* working set (each backend call touches one chunk-bucket of
 /// rows, not the full prompt bucket) and the head-of-line time between
 /// decode rounds. With streaming eviction (`stream` is Some) the carry is
-/// additionally *compacted* after every non-final chunk, so it is bounded
-/// by the fixed working cap (layer budget + one chunk + window) regardless
-/// of prompt length — only the hidden-state rows (`x`/`x_next`) remain
-/// O(prompt).
+/// additionally *compacted* after every non-final chunk, so each layer's
+/// lane is bounded by the fixed working cap (layer budget + one chunk +
+/// window) regardless of prompt length. The streaming default is
+/// **chunk-major**: each chunk flows through all L layers in one pass, so
+/// all L lanes are live at once (`L · cap` columns, still flat in prompt
+/// length) while the hidden-state rows shrink from O(prompt) to one chunk
+/// bucket — *nothing* in the prefill resident set grows with the prompt.
+/// The legacy layer-major order (`stream_layer_major`) keeps one lane but
+/// holds O(prompt) hidden rows across layers; Q8 carries (`carry_q8`)
+/// halve the chunk-major lane bytes again between dispatches.
 pub struct ChunkedPrefill {
     /// Configured chunk size in tokens.
     pub chunk: usize,
@@ -68,10 +74,17 @@ pub struct ChunkedPrefill {
     /// complete; moved into `Session::budgets` at the end).
     pub budgets: Vec<usize>,
     pub peak_transient: usize,
+    /// Peak prefill *resident* bytes: the full working set over and above
+    /// the retained compressed caches — carry K/V (or Q8 codes + scales),
+    /// observation panels, and hidden-state rows. This is what admission
+    /// prices and what the flat-in-prompt-length claim is asserted on;
+    /// `peak_transient` above tracks only the carry K/V (kept for the PR 8
+    /// gauge's continuity).
+    pub peak_resident: usize,
     /// Streaming-eviction state (Some only in `prefill_stream_evict` mode).
-    /// When set, `carry_k`/`carry_v` are allocated at `[Hk, cap, dh]` and the
-    /// `win`/`acc`/`vnorm` panels above stay empty — the compacted panels
-    /// live here instead.
+    /// When set, the carries and compacted panels live in per-layer lanes
+    /// here and the `carry_k`/`carry_v`/`win`/`acc`/`vnorm` fields above
+    /// stay empty.
     pub stream: Option<Box<StreamPrefill>>,
     /// Per-dispatch (chunk bucket, valid tokens) pairs for the bucket-waste
     /// gauges, reported with the final `PrefillReport`.
@@ -84,17 +97,12 @@ pub struct ChunkedPrefill {
     pub enqueued_at: std::time::Instant,
 }
 
-/// Streaming-eviction prefill state: the compact column space layered on
-/// [`ChunkedPrefill`] when `prefill_stream_evict` is on. Columns are kept in
-/// ascending absolute-position order; after each non-final chunk the engine
-/// scores the live columns (trailing observation window pinned) and compacts
-/// every panel plus the carry K/V down to the per-head budget union, so the
-/// live column count never exceeds `cap`.
-pub struct StreamPrefill {
-    /// Fixed working cap in columns: the carry tensors are `[Hk, cap, dh]`
-    /// and every dispatch is a `layer_prefill_chunked_evict` at this cap
-    /// (cap >= budget-union + chunk bucket + window by construction).
-    pub cap: usize,
+/// One layer's streaming-eviction lane: the compacted carry K/V plus the
+/// observation panels for that layer's live columns. Layer-major streaming
+/// uses a single lane reset between layers; chunk-major streaming keeps one
+/// lane per layer live for the whole prefill (each bounded at `cap`
+/// columns, so the total stays flat in prompt length).
+pub struct StreamLayer {
     /// Absolute prompt position of each live carry column, strictly
     /// ascending; its length is the live column count.
     pub col_pos: Vec<i32>,
@@ -108,31 +116,142 @@ pub struct StreamPrefill {
     /// for the last `min(w, seen)` query positions, ascending by qpos.
     /// Rows for evicted columns are compacted along with everything else.
     pub win_rows: Vec<(usize, Vec<f32>)>,
-    /// Peak live columns across the whole prefill — drives the bounded
-    /// carry-transient gauge (flat in prompt length, unlike the plain
-    /// chunked carry).
-    pub max_live_cols: usize,
+    /// f32 carry K/V `[Hk, cap, dh]` — the authoritative inter-chunk
+    /// representation unless `q8` is set, in which case these are
+    /// zero-width `[Hk, 0, dh]` and the lane's columns live quantized.
+    pub carry_k: Tensor,
+    pub carry_v: Tensor,
+    /// Q8-quantized carry (chunk-major only, `carry_q8`): between chunk
+    /// passes the compacted columns are held as int8 codes + per-(head,
+    /// column) scales; at dispatch they dequantize into the shared
+    /// [`StreamPrefill::scratch_k`]/`scratch_v` pair.
+    pub q8: Option<Q8Carry>,
 }
 
-impl StreamPrefill {
-    pub fn new(cap: usize) -> StreamPrefill {
-        StreamPrefill {
-            cap,
+impl StreamLayer {
+    pub fn new_f32(n_kv_heads: usize, cap: usize, d_head: usize) -> StreamLayer {
+        StreamLayer {
             col_pos: Vec::new(),
             acc: Vec::new(),
             vnorm: Vec::new(),
             win_rows: Vec::new(),
-            max_live_cols: 0,
+            carry_k: Tensor::zeros(&[n_kv_heads, cap, d_head]),
+            carry_v: Tensor::zeros(&[n_kv_heads, cap, d_head]),
+            q8: None,
         }
     }
 
-    /// Reset the per-layer accumulators for the next layer (the carry
-    /// tensors need no reset — live columns are rewritten from scratch).
+    pub fn new_q8(n_kv_heads: usize, cap: usize, d_head: usize) -> StreamLayer {
+        StreamLayer {
+            col_pos: Vec::new(),
+            acc: Vec::new(),
+            vnorm: Vec::new(),
+            win_rows: Vec::new(),
+            carry_k: Tensor::zeros(&[n_kv_heads, 0, d_head]),
+            carry_v: Tensor::zeros(&[n_kv_heads, 0, d_head]),
+            q8: Some(Q8Carry::new(n_kv_heads, d_head, cap)),
+        }
+    }
+
+    /// Live column count (also the panel width).
+    pub fn n_live(&self) -> usize {
+        self.col_pos.len()
+    }
+
+    /// Reset the per-layer accumulators for the next layer (layer-major
+    /// reuse; the carry tensors need no reset — live columns are rewritten
+    /// from scratch). Chunk-major calls this after the lane's layer is
+    /// compressed so stale panels stop counting against the resident set.
     pub fn reset_for_next_layer(&mut self) {
         self.col_pos.clear();
         self.acc.clear();
         self.vnorm.clear();
         self.win_rows.clear();
+    }
+
+    /// Allocated bytes this lane holds between dispatches: carry K/V (f32
+    /// tensors or Q8 codes + scales) plus the live observation panels.
+    pub fn resident_bytes(&self) -> usize {
+        let carry = match &self.q8 {
+            Some(q8) => q8.allocated_bytes(),
+            None => (self.carry_k.shape.iter().product::<usize>()
+                + self.carry_v.shape.iter().product::<usize>())
+                * 4,
+        };
+        let panels = (self.acc.len() + self.vnorm.len() + self.col_pos.len()) * 4
+            + self
+                .win_rows
+                .iter()
+                .map(|(_, row)| 16 + row.len() * 4)
+                .sum::<usize>();
+        carry + panels
+    }
+}
+
+/// Streaming-eviction prefill state layered on [`ChunkedPrefill`] when
+/// `prefill_stream_evict` is on. Columns are kept in ascending
+/// absolute-position order; after each non-final chunk the engine scores a
+/// lane's live columns (trailing observation window pinned) and compacts
+/// every panel plus the carry K/V down to the per-head budget union, so no
+/// lane ever exceeds `cap` columns.
+pub struct StreamPrefill {
+    /// Fixed working cap in columns: each lane's carry is `[Hk, cap, dh]`
+    /// and every dispatch is a `layer_prefill_chunked_evict` at this cap
+    /// (cap >= budget-union + chunk bucket + window by construction).
+    pub cap: usize,
+    /// Chunk-major order (the default): each chunk runs through all L
+    /// layers in one pass, `layers` holds one lane per model layer, and the
+    /// hidden rows are one chunk wide. False = legacy layer-major order:
+    /// one lane in `layers`, reset between layers, O(prompt) hidden rows.
+    pub chunk_major: bool,
+    /// Per-layer lanes (length = n_layers when chunk-major, else 1).
+    pub layers: Vec<StreamLayer>,
+    /// Shared f32 dequantization scratch `[Hk, cap, dh]` for Q8 lanes —
+    /// one pair per session, reused by every lane in a pass (a lane's
+    /// dequantized carry is only needed for the duration of its own
+    /// dispatch + compaction). Zero-width when Q8 is off.
+    pub scratch_k: Tensor,
+    pub scratch_v: Tensor,
+    /// Peak live columns in any one lane across the whole prefill — drives
+    /// the bounded carry-transient gauge (flat in prompt length, unlike the
+    /// plain chunked carry).
+    pub max_live_cols: usize,
+}
+
+impl StreamPrefill {
+    pub fn new(
+        cap: usize,
+        chunk_major: bool,
+        n_lanes: usize,
+        n_kv_heads: usize,
+        d_head: usize,
+        q8: bool,
+    ) -> StreamPrefill {
+        let layers = (0..n_lanes)
+            .map(|_| {
+                if q8 {
+                    StreamLayer::new_q8(n_kv_heads, cap, d_head)
+                } else {
+                    StreamLayer::new_f32(n_kv_heads, cap, d_head)
+                }
+            })
+            .collect();
+        let scratch_shape = if q8 { [n_kv_heads, cap, d_head] } else { [n_kv_heads, 0, d_head] };
+        StreamPrefill {
+            cap,
+            chunk_major,
+            layers,
+            scratch_k: Tensor::zeros(&scratch_shape),
+            scratch_v: Tensor::zeros(&scratch_shape),
+            max_live_cols: 0,
+        }
+    }
+
+    /// Bytes of the shared Q8 dequantization scratch (zero when Q8 is off).
+    pub fn scratch_bytes(&self) -> usize {
+        (self.scratch_k.shape.iter().product::<usize>()
+            + self.scratch_v.shape.iter().product::<usize>())
+            * 4
     }
 }
 

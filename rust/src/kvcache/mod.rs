@@ -35,7 +35,7 @@ pub mod warm;
 pub use hot::{BatchDecodeView, HotStore};
 pub use layout::SlotLayout;
 pub use tier::{Residency, TierClient, TierManager, TierThreadSnapshot};
-pub use warm::{projected_warm_bytes, q8_tolerance, WarmBlock};
+pub use warm::{projected_warm_bytes, q8_tolerance, Q8Carry, WarmBlock};
 
 /// Historical name of the hot store, kept so call sites and docs that speak
 /// "layer cache" keep compiling; new code should say [`HotStore`].

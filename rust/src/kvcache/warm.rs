@@ -31,19 +31,31 @@ pub fn q8_tolerance(block_max_abs: f32) -> f32 {
     block_max_abs / (2.0 * Q8_LEVELS) + block_max_abs * 1e-5 + 1e-6
 }
 
-/// Quantize one block (an entry's `d_head` row): scale + int8 codes.
-fn quantize_block(src: &[f32], out: &mut Vec<i8>) -> f32 {
+/// Quantize one block (an entry's `d_head` row) into a preallocated code
+/// slice of the same length; returns the scale. Allocation-free so both the
+/// spill path and the streaming-prefill Q8 carry can run it per-row in hot
+/// loops without growing a `Vec` per block.
+pub fn quantize_block_into(src: &[f32], out: &mut [i8]) -> f32 {
+    debug_assert_eq!(src.len(), out.len(), "code slice must match the block");
     let max = src.iter().fold(0.0f32, |m, &x| m.max(x.abs()));
     if max == 0.0 {
-        out.resize(out.len() + src.len(), 0i8);
+        out.fill(0);
         return 0.0;
     }
     let scale = max / Q8_LEVELS;
-    for &x in src {
-        let q = (x / scale).round().clamp(-Q8_LEVELS, Q8_LEVELS);
-        out.push(q as i8);
+    for (o, &x) in out.iter_mut().zip(src) {
+        *o = (x / scale).round().clamp(-Q8_LEVELS, Q8_LEVELS) as i8;
     }
     scale
+}
+
+/// Dequantize one block into a preallocated f32 slice (the inverse of
+/// [`quantize_block_into`], same allocation-free contract).
+pub fn dequantize_block_into(codes: &[i8], scale: f32, out: &mut [f32]) {
+    debug_assert_eq!(codes.len(), out.len(), "output slice must match the block");
+    for (o, &q) in out.iter_mut().zip(codes) {
+        *o = scale * q as f32;
+    }
 }
 
 /// One spilled layer cache. Entries are stored compactly in head order:
@@ -79,20 +91,29 @@ impl WarmBlock {
             d_head: dh,
             capacity: hot.capacity(),
             head_len: (0..hk).map(|h| hot.head_len(h)).collect(),
-            k_q: Vec::with_capacity(total * dh),
-            v_q: Vec::with_capacity(total * dh),
+            // pre-sized code buffers: each entry quantizes straight into its
+            // slice (no per-block push growth on the spill hot loop)
+            k_q: vec![0i8; total * dh],
+            v_q: vec![0i8; total * dh],
             k_scales: Vec::with_capacity(total),
             v_scales: Vec::with_capacity(total),
             positions: Vec::with_capacity(total),
             scores: Vec::with_capacity(total),
             hot_live_bytes: hot.live_bytes(),
         };
+        let mut entry = 0usize;
         for h in 0..hk {
             for i in 0..hot.head_len(h) {
-                block.k_scales.push(quantize_block(hot.key(h, i), &mut block.k_q));
-                block.v_scales.push(quantize_block(hot.value(h, i), &mut block.v_q));
+                let codes = entry * dh..(entry + 1) * dh;
+                block
+                    .k_scales
+                    .push(quantize_block_into(hot.key(h, i), &mut block.k_q[codes.clone()]));
+                block
+                    .v_scales
+                    .push(quantize_block_into(hot.value(h, i), &mut block.v_q[codes]));
                 block.positions.push(hot.position(h, i));
                 block.scores.push(hot.score(h, i));
+                entry += 1;
             }
         }
         debug_assert_eq!(
@@ -113,12 +134,9 @@ impl WarmBlock {
         let mut entry = 0usize;
         for h in 0..self.n_kv_heads {
             for _ in 0..self.head_len[h] {
-                let ks = self.k_scales[entry];
-                let vs = self.v_scales[entry];
-                for j in 0..dh {
-                    krow[j] = ks * self.k_q[entry * dh + j] as f32;
-                    vrow[j] = vs * self.v_q[entry * dh + j] as f32;
-                }
+                let codes = entry * dh..(entry + 1) * dh;
+                dequantize_block_into(&self.k_q[codes.clone()], self.k_scales[entry], &mut krow);
+                dequantize_block_into(&self.v_q[codes], self.v_scales[entry], &mut vrow);
                 hot.push_entry(h, &krow, &vrow, self.positions[entry], self.scores[entry]);
                 entry += 1;
             }
@@ -151,6 +169,112 @@ impl WarmBlock {
 /// debug-asserts the two agree.
 pub fn projected_warm_bytes(total_entries: usize, d_head: usize, n_kv_heads: usize) -> usize {
     total_entries * (2 * d_head + 16) + n_kv_heads * 8
+}
+
+/// Q8-quantized compacted carry for chunk-major streaming prefill: between
+/// chunk passes each layer's live carry columns are held as int8 codes plus
+/// one f32 scale per (kv head, column) K/V row — the same blockwise layout
+/// and [`q8_tolerance`] contract as [`WarmBlock`] — instead of f32 rows.
+/// Codes live in fixed `[Hk, cap, dh]`-shaped buffers (flat in prompt
+/// length); the engine dequantizes the live columns into a shared f32
+/// scratch at dispatch and re-quantizes only the columns a chunk appended.
+/// Columns that survive a mid-prefill eviction move with
+/// [`Q8Carry::copy_col`] — codes and scales verbatim, so repeated evict
+/// cascades never compound quantization error (the block max is a fixed
+/// point of the round trip, as documented above).
+#[derive(Debug, Clone)]
+pub struct Q8Carry {
+    n_kv_heads: usize,
+    d_head: usize,
+    cap: usize,
+    /// `[Hk * cap * dh]` codes, column-major within each head like the f32
+    /// carry tensors they mirror.
+    k_q: Vec<i8>,
+    v_q: Vec<i8>,
+    /// `[Hk * cap]` scales, one per (head, column) row.
+    k_scales: Vec<f32>,
+    v_scales: Vec<f32>,
+}
+
+impl Q8Carry {
+    pub fn new(n_kv_heads: usize, d_head: usize, cap: usize) -> Q8Carry {
+        Q8Carry {
+            n_kv_heads,
+            d_head,
+            cap,
+            k_q: vec![0i8; n_kv_heads * cap * d_head],
+            v_q: vec![0i8; n_kv_heads * cap * d_head],
+            k_scales: vec![0.0; n_kv_heads * cap],
+            v_scales: vec![0.0; n_kv_heads * cap],
+        }
+    }
+
+    /// Quantize columns `[col0, col1)` of an `[Hk, cap, dh]` f32 carry pair
+    /// into this block (every kv head).
+    pub fn quantize_cols(&mut self, col0: usize, col1: usize, k: &[f32], v: &[f32]) {
+        let (dh, cap) = (self.d_head, self.cap);
+        debug_assert!(col1 <= cap, "columns {col1} overflow the cap {cap}");
+        for kv in 0..self.n_kv_heads {
+            for col in col0..col1 {
+                let row = (kv * cap + col) * dh;
+                self.k_scales[kv * cap + col] =
+                    quantize_block_into(&k[row..row + dh], &mut self.k_q[row..row + dh]);
+                self.v_scales[kv * cap + col] =
+                    quantize_block_into(&v[row..row + dh], &mut self.v_q[row..row + dh]);
+            }
+        }
+    }
+
+    /// Dequantize the first `n_live` columns into an `[Hk, cap, dh]` f32
+    /// carry pair (the dispatch scratch); columns past `n_live` are left
+    /// untouched — contractually unread by the backend.
+    pub fn dequantize_cols(&self, n_live: usize, k_out: &mut [f32], v_out: &mut [f32]) {
+        let (dh, cap) = (self.d_head, self.cap);
+        debug_assert!(n_live <= cap, "live columns {n_live} overflow the cap {cap}");
+        for kv in 0..self.n_kv_heads {
+            for col in 0..n_live {
+                let row = (kv * cap + col) * dh;
+                dequantize_block_into(
+                    &self.k_q[row..row + dh],
+                    self.k_scales[kv * cap + col],
+                    &mut k_out[row..row + dh],
+                );
+                dequantize_block_into(
+                    &self.v_q[row..row + dh],
+                    self.v_scales[kv * cap + col],
+                    &mut v_out[row..row + dh],
+                );
+            }
+        }
+    }
+
+    /// Move one column's codes and scales (every kv head) from `src` to
+    /// `dst` — exact, no re-quantization. Eviction compaction calls this for
+    /// ascending `dst <= src`, so moves never clobber a yet-unread source.
+    pub fn copy_col(&mut self, dst: usize, src: usize) {
+        if dst == src {
+            return;
+        }
+        let (dh, cap) = (self.d_head, self.cap);
+        for kv in 0..self.n_kv_heads {
+            let s = (kv * cap + src) * dh;
+            let d = (kv * cap + dst) * dh;
+            self.k_q.copy_within(s..s + dh, d);
+            self.v_q.copy_within(s..s + dh, d);
+            self.k_scales[kv * cap + dst] = self.k_scales[kv * cap + src];
+            self.v_scales[kv * cap + dst] = self.v_scales[kv * cap + src];
+        }
+    }
+
+    /// Q8 bytes held for `n_live` columns: K+V codes plus f32 scales.
+    pub fn live_bytes(&self, n_live: usize) -> usize {
+        2 * self.n_kv_heads * n_live * (self.d_head + 4)
+    }
+
+    /// Bytes of the fixed-cap buffers (what actually stays resident).
+    pub fn allocated_bytes(&self) -> usize {
+        self.live_bytes(self.cap)
+    }
 }
 
 impl KvTierStore for WarmBlock {
@@ -275,6 +399,81 @@ mod tests {
                         let vd = (back.value(h, i)[j] - hot.value(h, i)[j]).abs();
                         prop::assert_prop(kd <= ktol, "K within Q8 tol", &(h, i, j, kd, ktol))?;
                         prop::assert_prop(vd <= vtol, "V within Q8 tol", &(h, i, j, vd, vtol))?;
+                    }
+                }
+            }
+            Ok(())
+        });
+    }
+
+    #[test]
+    fn prop_q8_carry_round_trip() {
+        // the streaming-prefill carry form obeys the same tolerance contract
+        // as warm blocks: one trip within q8_tolerance per row, survivor
+        // moves exact, and re-quantizing a dequantized column reproduces it
+        prop::check(60, |rng| {
+            let hk = 1 + rng.below(4);
+            let dh = 2 + rng.below(14);
+            let cap = 8 + rng.below(56);
+            let n_live = 1 + rng.below(cap);
+            let k: Vec<f32> = (0..hk * cap * dh).map(|_| rng.normal() as f32).collect();
+            let v: Vec<f32> = (0..hk * cap * dh).map(|_| rng.normal() as f32).collect();
+            let mut q8 = Q8Carry::new(hk, dh, cap);
+            q8.quantize_cols(0, n_live, &k, &v);
+            let mut k1 = vec![0.0f32; hk * cap * dh];
+            let mut v1 = vec![0.0f32; hk * cap * dh];
+            q8.dequantize_cols(n_live, &mut k1, &mut v1);
+            for kv in 0..hk {
+                for col in 0..n_live {
+                    let row = (kv * cap + col) * dh;
+                    let ktol = q8_tolerance(max_abs(&k[row..row + dh]));
+                    let vtol = q8_tolerance(max_abs(&v[row..row + dh]));
+                    for j in row..row + dh {
+                        prop::assert_prop(
+                            (k1[j] - k[j]).abs() <= ktol,
+                            "K within Q8 tol",
+                            &(kv, col, k[j], k1[j], ktol),
+                        )?;
+                        prop::assert_prop(
+                            (v1[j] - v[j]).abs() <= vtol,
+                            "V within Q8 tol",
+                            &(kv, col, v[j], v1[j], vtol),
+                        )?;
+                    }
+                }
+            }
+            // survivor compaction: moving the last live column to the front
+            // is bitwise (codes and scales copy verbatim)
+            let mut moved = q8.clone();
+            moved.copy_col(0, n_live - 1);
+            let mut k2 = vec![0.0f32; hk * cap * dh];
+            let mut v2 = vec![0.0f32; hk * cap * dh];
+            moved.dequantize_cols(n_live, &mut k2, &mut v2);
+            for kv in 0..hk {
+                let src = (kv * cap + n_live - 1) * dh;
+                let dst = kv * cap * dh;
+                for j in 0..dh {
+                    prop::assert_prop(
+                        k2[dst + j] == k1[src + j] && v2[dst + j] == v1[src + j],
+                        "copy_col exact",
+                        &(kv, j),
+                    )?;
+                }
+            }
+            // idempotence: a second quantize of the dequantized columns is a
+            // fixed point up to float-product noise (far below one step)
+            let mut again = Q8Carry::new(hk, dh, cap);
+            again.quantize_cols(0, n_live, &k1, &v1);
+            let mut k3 = vec![0.0f32; hk * cap * dh];
+            let mut v3 = vec![0.0f32; hk * cap * dh];
+            again.dequantize_cols(n_live, &mut k3, &mut v3);
+            for kv in 0..hk {
+                for col in 0..n_live {
+                    let row = (kv * cap + col) * dh;
+                    for j in row..row + dh {
+                        let drift_ok = (k3[j] - k1[j]).abs() <= k1[j].abs() * 1e-5 + 1e-6
+                            && (v3[j] - v1[j]).abs() <= v1[j].abs() * 1e-5 + 1e-6;
+                        prop::assert_prop(drift_ok, "round trips do not drift", &(kv, col))?;
                     }
                 }
             }

@@ -67,6 +67,13 @@ pub struct ChunkEvictReq<'a> {
     pub x_chunk: &'a Tensor, // [C, d] (rows >= chunk_len are padding)
     /// Compacted carry K/V at the working cap `[Hk, cap, dh]`; live columns
     /// are packed at the front, rows >= the live count are unspecified.
+    ///
+    /// Under chunk-major streaming with Q8 carries these borrow the
+    /// session's *shared dequantization scratch*, valid only for the
+    /// duration of this call and overwritten when the next lane dispatches
+    /// — backends must not retain references past the call. Q8 lanes round
+    /// trip within `kvcache::q8_tolerance` of the f32 values a layer-major
+    /// run would carry; f32 lanes are bit-exact.
     pub carry_k: &'a Tensor,
     pub carry_v: &'a Tensor,
     /// Absolute prompt position of each carry column (`cap` entries,

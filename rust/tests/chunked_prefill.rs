@@ -47,7 +47,6 @@ fn run_pressured(
     let mut s = Scheduler::new(
         engine(policy),
         SchedulerOptions {
-            kv_mem_limit: Some(210_000),
             prefill_chunk: chunk,
             prefill_chunk_budget: budget,
             // bit-identity fingerprints are exactly what streaming eviction
@@ -56,6 +55,11 @@ fn run_pressured(
             ..Default::default()
         },
     );
+    // one prefill peak + ~1 retained session, from admission's own pricing:
+    // identical across chunk settings (the plain-path projection does not
+    // depend on the chunk), so the fingerprints stay comparable while the
+    // limit keeps forcing real spill/prefetch traffic
+    s.opts.kv_mem_limit = Some(s.projected_bytes(200) + s.retained_bytes(200) * 5 / 4);
     for i in 0..4 {
         s.submit(req(200, i, 6)).unwrap();
     }

@@ -179,9 +179,13 @@ fn cancel_terminates_the_stream_with_a_partial_result() {
 
 #[test]
 fn cancel_from_second_connection_releases_hot_and_warm_bytes() {
-    // the tiering workload: tight enough to spill, eight long generations
+    // the tiering workload: tight enough to spill (one len-400 prefill
+    // peak + one retained session, priced by admission's own accounting),
+    // eight long generations
+    let probe = Scheduler::new(engine(), SchedulerOptions::default());
+    let limit = probe.projected_bytes(400) + probe.retained_bytes(400);
     let addr = spawn_server(SchedulerOptions {
-        kv_mem_limit: Some(300_000),
+        kv_mem_limit: Some(limit),
         tiering: true,
         ..Default::default()
     });

@@ -23,11 +23,10 @@ fn req(n: usize, out: usize) -> GenerateRequest {
 fn ids_stable_under_memory_pressure_and_deferral() {
     // more requests than max_active, under a memory limit: every result must
     // map back to the id submit() returned, even for deferred requests
-    let mut s = sched(SchedulerOptions {
-        kv_mem_limit: Some(400_000),
-        max_active: 2,
-        ..Default::default()
-    });
+    let mut s = sched(SchedulerOptions { max_active: 2, ..Default::default() });
+    // one prefill peak plus ~2 retained sessions, from admission's own
+    // pricing so the squeeze survives accounting-model changes
+    s.opts.kv_mem_limit = Some(s.projected_bytes(200) + 2 * s.retained_bytes(200));
     let mut expected: BTreeMap<u64, usize> = BTreeMap::new();
     for i in 0..6 {
         let out = i + 2; // distinct generation length per request
@@ -51,14 +50,12 @@ fn ids_stable_under_memory_pressure_and_deferral() {
 
 #[test]
 fn fifo_order_preserved_across_deferrals() {
-    // limit admits ~2 sessions at a time (peak per request ~151 KB, retained
-    // ~49 KB); deferred requests are requeued at their original position and
-    // admission stops at the first deferral, so completion order ==
-    // submission order
-    let mut s = sched(SchedulerOptions {
-        kv_mem_limit: Some(210_000),
-        ..Default::default()
-    });
+    // limit admits ~2 sessions at a time (one prefill peak + ~1 retained
+    // session, priced by admission's own accounting); deferred requests are
+    // requeued at their original position and admission stops at the first
+    // deferral, so completion order == submission order
+    let mut s = sched(SchedulerOptions::default());
+    s.opts.kv_mem_limit = Some(s.projected_bytes(200) + s.retained_bytes(200) * 5 / 4);
     let mut ids = Vec::new();
     for _ in 0..4 {
         ids.push(s.submit(req(200, 6)).unwrap());

@@ -44,9 +44,13 @@ fn mixed_workload() -> Vec<GenerateRequest> {
 
 /// Tight enough that the seed scheduler defers most of the workload, big
 /// enough that the largest request's prefill peak still fits (so nothing
-/// is rejected outright): retained = 24*4*4 entries * 16 dh * 8 B = 49 KB,
-/// largest transient (len 400) = 2*4*400*16*4 B = 204.8 KB.
-const LIMIT: usize = 300_000;
+/// is rejected outright): one len-400 projected peak plus one retained
+/// session, derived from the same accounting admission uses so the limit
+/// tracks the pricing model (carries + observation panels + hidden rows).
+fn limit() -> usize {
+    let probe = sched(None, false);
+    probe.projected_bytes(400) + probe.retained_bytes(400)
+}
 
 fn run(
     s: &mut Scheduler<MockBackend>,
@@ -67,7 +71,8 @@ fn run(
 fn tiered_completes_workload_the_seed_defers() {
     // seed behavior (tiering off): everything eventually completes, but at
     // least half the workload bounces off admission at least once
-    let mut seed = sched(Some(LIMIT), false);
+    let limit = limit();
+    let mut seed = sched(Some(limit), false);
     let (_, seed_status) = run(&mut seed);
     assert_eq!(seed_status.len(), 8);
     assert!(
@@ -82,7 +87,7 @@ fn tiered_completes_workload_the_seed_defers() {
     assert_eq!(seed.engine.metrics.spills, 0);
 
     // tiered: same limit, all requests complete, hot tier stays bounded
-    let mut tiered = sched(Some(LIMIT), true);
+    let mut tiered = sched(Some(limit), true);
     let (tiered_tokens, tiered_status) = run(&mut tiered);
     assert_eq!(tiered_status.len(), 8);
     for (id, status) in &tiered_status {
@@ -94,8 +99,8 @@ fn tiered_completes_workload_the_seed_defers() {
     }
     let m = &tiered.engine.metrics;
     assert!(
-        m.peak_hot_kv_bytes <= LIMIT,
-        "hot-tier bytes exceeded kv_mem_limit: {} > {LIMIT}",
+        m.peak_hot_kv_bytes <= limit,
+        "hot-tier bytes exceeded kv_mem_limit: {} > {limit}",
         m.peak_hot_kv_bytes
     );
     assert!(m.spills > 0, "pressure must move layers to the warm tier");
@@ -123,7 +128,8 @@ fn tiered_completes_workload_the_seed_defers() {
 #[test]
 fn hot_tier_bounded_throughout_not_just_at_peaks() {
     // drive tick-by-tick and check the live hot gauge after every tick
-    let mut s = sched(Some(LIMIT), true);
+    let limit = limit();
+    let mut s = sched(Some(limit), true);
     for req in mixed_workload() {
         s.submit(req).unwrap();
     }
@@ -132,8 +138,8 @@ fn hot_tier_bounded_throughout_not_just_at_peaks() {
         s.tick().unwrap();
         ticks += 1;
         assert!(
-            s.engine.metrics.hot_kv_bytes <= LIMIT,
-            "tick {ticks}: hot gauge {} over limit {LIMIT}",
+            s.engine.metrics.hot_kv_bytes <= limit,
+            "tick {ticks}: hot gauge {} over limit {limit}",
             s.engine.metrics.hot_kv_bytes
         );
     }
@@ -144,7 +150,7 @@ fn hot_tier_bounded_throughout_not_just_at_peaks() {
 
 #[test]
 fn cancel_mid_flight_releases_warm_blocks() {
-    let mut s = sched(Some(LIMIT), true);
+    let mut s = sched(Some(limit()), true);
     let mut ids = Vec::new();
     for req in mixed_workload() {
         ids.push(s.submit(req).unwrap());
