@@ -8,6 +8,7 @@
 use lava::bench::harness::{bench, BenchResult};
 use lava::compress::select::{select_prefill, select_recompress};
 use lava::compress::{score, GroupReduce, HeadAlloc, LayerObs, ScoreKind};
+use lava::coordinator::pool::{PoolMode, WorkerPool};
 use lava::kvcache::LayerCache;
 use lava::runtime::Tensor;
 use lava::util::rng::Rng;
@@ -233,6 +234,25 @@ fn main() {
         });
         println!("{}", r.line());
         results.push(r);
+    }
+
+    // 6. worker-pool dispatch: spawn-per-round (scoped) vs the persistent
+    // injector pool. 64 near-zero units at width 4, so the pair is almost
+    // pure dispatch cost — thread spawn/join per round vs wake/park of
+    // long-lived workers; the delta is what every scheduler tick saves
+    {
+        for (label, mode) in
+            [("scoped", PoolMode::Scoped), ("persistent", PoolMode::Persistent)]
+        {
+            let pool = WorkerPool::with_mode(4, mode);
+            let r = bench(&format!("pool/dispatch64/{label}/w4"), 3, 50, || {
+                let units: Vec<usize> = (0..64).collect();
+                let (out, _stats) = pool.run(units, |_ctx, u| u * 2 + 1);
+                std::hint::black_box(&out);
+            });
+            println!("{}", r.line());
+            results.push(r);
+        }
     }
 
     // sanity: fail loudly if anything is absurdly slow (>50ms) — these are

@@ -22,9 +22,13 @@
 //! `layer_decode_batched` dispatch per group per layer), reporting wall
 //! time, decode tok/s, batch occupancy, and total backend dispatches.
 //!
-//! Part 5 — engine sharding: the same memory-pressured mixed workload (so
-//! spill/prefetch overlap is exercised) swept over worker-pool widths
-//! 1/2/4, reporting wall time, decode tok/s, and worker utilization.
+//! Part 5 — engine sharding: a memory-pressured *imbalanced* workload
+//! (half the requests share one capacity bucket — one heavy batched-decode
+//! unit — while the rest spread across distinct scales as many light
+//! units) swept over worker-pool widths 1/2/4 × pool modes
+//! scoped/persistent, reporting wall time, decode tok/s, worker
+//! utilization, and the mean per-round dispatch overhead the persistent
+//! injector pool exists to shrink.
 //!
 //! Part 6 — serving loop: the mixed workload submitted over real TCP
 //! connections into the continuous serving loop (acceptor → command
@@ -58,6 +62,7 @@ use std::net::{TcpListener, TcpStream};
 use lava::bench::harness::bench_for;
 use lava::compress::Policy;
 use lava::coordinator::engine::{Engine, EngineOptions, GenerateRequest};
+use lava::coordinator::pool::PoolMode;
 use lava::coordinator::scheduler::{Scheduler, SchedulerOptions};
 use lava::coordinator::server::Server;
 use lava::model::backend::{MockBackend, ModelBackend, PjrtBackend};
@@ -286,15 +291,39 @@ fn run_batched_decode_bench(ctx: usize, max_new: usize, reps: usize) {
     }
 }
 
-/// Part 5: worker-count sweep. The mixed workload runs under the same
-/// tiering-pressure limit as Part 3, so the sweep exercises exactly the
-/// overlap the sharded engine is for: bucket groups decoding on the pool
-/// while the tier thread rehydrates next-round sessions. Returns the
-/// per-width report rows plus the limit used, for `BENCH_serving.json`.
+/// Imbalanced request list for the Part 5 sweep: half the requests share
+/// one full-ctx shape (one heavy same-bucket decode group), the rest
+/// spread across four distinct smaller scales (many light units). Static
+/// contiguous chunking strands the light units behind whichever worker
+/// drew the heavy group; the persistent injector's dynamic pulls keep the
+/// rest of the pool busy.
+fn imbalanced_workload(ctx: usize, n_requests: usize) -> Vec<GenerateRequest> {
+    let mut rng = Rng::new(9);
+    (0..n_requests)
+        .map(|i| {
+            let scale = if i < n_requests / 2 {
+                ctx
+            } else {
+                (ctx / 8).max(64) * ((i - n_requests / 2) % 4 + 1)
+            };
+            let inst = workloads::needle_qa(&mut rng, scale.max(64), 4);
+            GenerateRequest { prompt: inst.prompt, max_new_tokens: 8 }
+        })
+        .collect()
+}
+
+/// Part 5: worker-count × pool-mode sweep. The imbalanced workload runs
+/// under the same tiering-pressure recipe as Part 3, so the sweep
+/// exercises exactly the overlap the sharded engine is for: bucket groups
+/// decoding on the pool while the tier thread rehydrates next-round
+/// sessions — with the scoped spawn-per-round oracle against the
+/// persistent injector pool, whose dispatch-overhead column is the
+/// tentpole number. Returns the per-config report rows plus the limit
+/// used, for `BENCH_serving.json`.
 fn run_worker_sweep(ctx: usize, n_requests: usize, reps: usize) -> (Vec<Json>, usize) {
     let limit = {
         let probe = tiering_sched(false, None);
-        let max_len = mixed_workload(ctx, n_requests)
+        let max_len = imbalanced_workload(ctx, n_requests)
             .iter()
             .map(|r| r.prompt.len())
             .max()
@@ -303,70 +332,88 @@ fn run_worker_sweep(ctx: usize, n_requests: usize, reps: usize) -> (Vec<Json>, u
     };
     let mut rows: Vec<Json> = Vec::new();
     for &workers in &[1usize, 2, 4] {
-        let mut walls = Vec::new();
-        let mut tok_s_sum = 0.0;
-        let mut util_sum = 0.0;
-        // spill/prefetch decisions are deterministic per workload, so the
-        // last rep's counters equal every rep's
-        let mut spills = 0u64;
-        let mut prefetches = 0u64;
-        for _ in 0..reps {
-            let mock = MockBackend::new(MockBackend::default_config());
-            let engine =
-                Engine::new(mock, EngineOptions::new(Policy::by_name("lava").unwrap(), 32));
-            let mut sched = Scheduler::new(
-                engine,
-                SchedulerOptions {
-                    kv_mem_limit: Some(limit),
-                    max_active: 8,
-                    prefill_every: 2,
-                    max_prefill_batch: 4,
-                    workers,
-                    ..Default::default()
-                },
-            );
-            let reqs = mixed_workload(ctx, n_requests);
-            let t0 = std::time::Instant::now();
-            for req in reqs {
-                sched.submit(req).unwrap();
+        for (mode_label, mode) in
+            [("scoped", PoolMode::Scoped), ("persistent", PoolMode::Persistent)]
+        {
+            let mut walls = Vec::new();
+            let mut tok_s_sum = 0.0;
+            let mut util_sum = 0.0;
+            let mut dispatch_sum = 0.0;
+            let mut queue_peak = 0usize;
+            // spill/prefetch decisions are deterministic per workload, so
+            // the last rep's counters equal every rep's
+            let mut spills = 0u64;
+            let mut prefetches = 0u64;
+            for _ in 0..reps {
+                let mock = MockBackend::new(MockBackend::default_config());
+                let engine = Engine::new(
+                    mock,
+                    EngineOptions::new(Policy::by_name("lava").unwrap(), 32),
+                );
+                let mut sched = Scheduler::new(
+                    engine,
+                    SchedulerOptions {
+                        kv_mem_limit: Some(limit),
+                        max_active: 8,
+                        prefill_every: 2,
+                        max_prefill_batch: 4,
+                        workers,
+                        pool_mode: mode,
+                        ..Default::default()
+                    },
+                );
+                let reqs = imbalanced_workload(ctx, n_requests);
+                let t0 = std::time::Instant::now();
+                for req in reqs {
+                    sched.submit(req).unwrap();
+                }
+                let done = sched.run_to_completion().unwrap();
+                walls.push(t0.elapsed().as_secs_f64());
+                assert_eq!(done.len(), n_requests);
+                let m = &sched.engine.metrics;
+                assert!(
+                    m.peak_hot_kv_bytes <= limit,
+                    "hot tier exceeded the limit: {} > {limit}",
+                    m.peak_hot_kv_bytes
+                );
+                tok_s_sum += m.decode_tok_per_sec();
+                util_sum += m.worker_utilization();
+                dispatch_sum += m.mean_dispatch_overhead_ms();
+                queue_peak = queue_peak.max(m.pool_queue_depth_peak);
+                spills = m.spills;
+                prefetches = m.prefetches;
             }
-            let done = sched.run_to_completion().unwrap();
-            walls.push(t0.elapsed().as_secs_f64());
-            assert_eq!(done.len(), n_requests);
-            let m = &sched.engine.metrics;
-            assert!(
-                m.peak_hot_kv_bytes <= limit,
-                "hot tier exceeded the limit: {} > {limit}",
-                m.peak_hot_kv_bytes
+            let mean_wall: f64 = walls.iter().sum::<f64>() / walls.len() as f64;
+            let decode_tok_s = tok_s_sum / reps as f64;
+            let utilization = util_sum / reps as f64;
+            let dispatch_ms = dispatch_sum / reps as f64;
+            println!(
+                "{:<40} {:>10.2} ms wall ({} reqs, limit {:.2} MB) | decode_tok_s={:.1} \
+                 worker_util={:.2} dispatch_ms(mean)={:.3} pool_q_peak={} spills={} \
+                 prefetches={}",
+                format!("sharding/workers-{workers}/{mode_label}/ctx{ctx}"),
+                mean_wall * 1e3,
+                n_requests,
+                limit as f64 / 1e6,
+                decode_tok_s,
+                utilization,
+                dispatch_ms,
+                queue_peak,
+                spills,
+                prefetches,
             );
-            tok_s_sum += m.decode_tok_per_sec();
-            util_sum += m.worker_utilization();
-            spills = m.spills;
-            prefetches = m.prefetches;
+            rows.push(Json::obj(vec![
+                ("workers", Json::num(workers as f64)),
+                ("pool_mode", Json::str(mode_label)),
+                ("wall_ms", Json::num(mean_wall * 1e3)),
+                ("decode_tok_s", Json::num(decode_tok_s)),
+                ("worker_utilization", Json::num(utilization)),
+                ("dispatch_ms_mean", Json::num(dispatch_ms)),
+                ("pool_queue_depth_peak", Json::num(queue_peak as f64)),
+                ("spills", Json::num(spills as f64)),
+                ("prefetches", Json::num(prefetches as f64)),
+            ]));
         }
-        let mean_wall: f64 = walls.iter().sum::<f64>() / walls.len() as f64;
-        let decode_tok_s = tok_s_sum / reps as f64;
-        let utilization = util_sum / reps as f64;
-        println!(
-            "{:<40} {:>10.2} ms wall ({} reqs, limit {:.2} MB) | decode_tok_s={:.1} \
-             worker_util={:.2} spills={} prefetches={}",
-            format!("sharding/workers-{workers}/ctx{ctx}"),
-            mean_wall * 1e3,
-            n_requests,
-            limit as f64 / 1e6,
-            decode_tok_s,
-            utilization,
-            spills,
-            prefetches,
-        );
-        rows.push(Json::obj(vec![
-            ("workers", Json::num(workers as f64)),
-            ("wall_ms", Json::num(mean_wall * 1e3)),
-            ("decode_tok_s", Json::num(decode_tok_s)),
-            ("worker_utilization", Json::num(utilization)),
-            ("spills", Json::num(spills as f64)),
-            ("prefetches", Json::num(prefetches as f64)),
-        ]));
     }
     (rows, limit)
 }
@@ -781,7 +828,7 @@ fn main() {
         run_tiering_bench(ctx, n_requests, reps);
         println!("-- batched decode: same-bucket grouping off vs on --");
         run_batched_decode_bench(ctx, if smoke { 8 } else { 64 }, reps);
-        println!("-- engine sharding: worker-count sweep, prefetch overlap on --");
+        println!("-- engine sharding: worker x pool-mode sweep, imbalanced units --");
         let (worker_rows, limit) = run_worker_sweep(ctx, n_requests, reps);
         println!("-- serving loop: 1 vs 8 concurrent TCP connections --");
         let serving_rows =

@@ -218,6 +218,29 @@ pub fn kv_head_scores(
     out
 }
 
+/// [`kv_head_scores`] scoring every head serially with a caller-owned
+/// scratch — the worker-pool hot paths call this with their
+/// [`WorkerContext`](crate::coordinator::pool::WorkerContext) arena so a
+/// streamed chunk round allocates no per-call row buffers. (These call
+/// sites run *inside* a pool unit; nesting another scoped fan-out there
+/// would oversubscribe the cores, so serial is also the right shape.)
+pub fn kv_head_scores_with(
+    kind: ScoreKind,
+    reduce: GroupReduce,
+    obs: &LayerObs,
+    pool_kernel: usize,
+    scratch: &mut ScoreScratch,
+) -> Vec<Vec<f32>> {
+    let h = obs.n_heads();
+    let hk = obs.n_kv_heads();
+    let group = h / hk;
+    let mut out: Vec<Vec<f32>> = vec![Vec::new(); hk];
+    for (kv, row) in out.iter_mut().enumerate() {
+        *row = kv_head_row(kind, reduce, obs, pool_kernel, kv, group, scratch);
+    }
+    out
+}
+
 #[cfg(test)]
 pub(crate) mod tests {
     use super::*;

@@ -108,8 +108,9 @@
 //! With `carry_q8` / `LAVA_CARRY_Q8` on, lanes additionally hold their
 //! columns as Q8 codes + scales ([`crate::kvcache::Q8Carry`], the warm
 //! tier's block layout) between passes — roughly halving the lane bytes —
-//! dequantizing into one shared per-session f32 scratch at dispatch and
-//! re-quantizing only the columns the chunk landed or the cascade moved.
+//! dequantizing into the executing worker's dequant arena
+//! ([`super::pool::WorkerScratch`]) at dispatch and re-quantizing only the
+//! columns the chunk landed or the cascade moved.
 //!
 //! ## Decode: gather → one dispatch per layer → scatter
 //!
@@ -144,14 +145,22 @@
 //! ([`crate::model::backend::ModelBackend`] is `Send + Sync`). A worker
 //! returns a [`StepReport`]/[`PrefillReport`] of everything it observed;
 //! the serving thread merges reports into [`Metrics`] in plan order, so
-//! metric totals are independent of worker interleaving. The `&mut self`
-//! methods on [`Engine`] are the single-threaded composition of the two
-//! (compute + absorb), kept as the canonical serial path.
+//! metric totals are independent of worker interleaving. Every dispatching
+//! worker method takes a [`WorkerContext`] — the executing pool worker's
+//! persistent identity: its pinned backend device slot (bound lazily, once
+//! per context, via `ModelBackend::bind_device`) and its reusable scratch
+//! arenas (score buffers, Q8 dequant tensors), which replace the old
+//! per-session scratch allocations. The `&mut self` methods on [`Engine`]
+//! are the single-threaded composition of the two (compute + absorb),
+//! running on the engine's own serving-thread context — the canonical
+//! serial path.
 
 use anyhow::{anyhow, bail, Result};
 
 use super::metrics::Metrics;
+use super::pool::WorkerContext;
 use super::session::{ChunkedPrefill, Phase, Session, StreamLayer, StreamPrefill};
+use crate::compress::score::ScoreScratch;
 use crate::compress::select::{select_prefill, select_recompress, KeepSet};
 use crate::compress::{alloc, score, LayerAlloc, LayerObs, Policy, ScoreKind};
 use crate::kvcache::tier::Residency;
@@ -318,11 +327,21 @@ pub struct Engine<B: ModelBackend> {
     pub opts: EngineOptions,
     pub metrics: Metrics,
     next_id: u64,
+    /// Serving-thread worker context for the `&mut self` serial wrappers:
+    /// slot 0, the same slot the pool's serial arms use, so standalone
+    /// engine use gets the identical scratch reuse and device binding.
+    serial_ctx: WorkerContext,
 }
 
 impl<B: ModelBackend> Engine<B> {
     pub fn new(backend: B, opts: EngineOptions) -> Engine<B> {
-        Engine { backend, opts, metrics: Metrics::new(), next_id: 0 }
+        Engine {
+            backend,
+            opts,
+            metrics: Metrics::new(),
+            next_id: 0,
+            serial_ctx: WorkerContext::new(0),
+        }
     }
 
     pub fn config(&self) -> &ModelConfig {
@@ -377,7 +396,8 @@ impl<B: ModelBackend> Engine<B> {
 
     /// Run prefill under the configured policy (Algorithms 1 + 2).
     pub fn prefill(&mut self, sess: &mut Session) -> Result<i32> {
-        let report = self.worker().prefill(sess)?;
+        let worker = EngineWorker { backend: &self.backend, opts: &self.opts };
+        let report = worker.prefill(&mut self.serial_ctx, sess)?;
         self.absorb_prefill(&report);
         Ok(report.token)
     }
@@ -387,7 +407,8 @@ impl<B: ModelBackend> Engine<B> {
     /// Bit-identical to [`Engine::prefill`] at every chunk size.
     pub fn prefill_chunked(&mut self, sess: &mut Session, chunk: usize) -> Result<i32> {
         self.worker().begin_chunked_prefill(sess, chunk)?;
-        let (_, report) = self.worker().advance_chunked_prefill(sess, None)?;
+        let worker = EngineWorker { backend: &self.backend, opts: &self.opts };
+        let (_, report) = worker.advance_chunked_prefill(&mut self.serial_ctx, sess, None)?;
         let report =
             report.ok_or_else(|| anyhow!("unbounded advance must complete the prefill"))?;
         self.absorb_prefill(&report);
@@ -401,7 +422,8 @@ impl<B: ModelBackend> Engine<B> {
     /// cap regardless of prompt length.
     pub fn prefill_chunked_stream(&mut self, sess: &mut Session, chunk: usize) -> Result<i32> {
         self.worker().begin_chunked_prefill_stream(sess, chunk)?;
-        let (_, report) = self.worker().advance_chunked_prefill(sess, None)?;
+        let worker = EngineWorker { backend: &self.backend, opts: &self.opts };
+        let (_, report) = worker.advance_chunked_prefill(&mut self.serial_ctx, sess, None)?;
         let report =
             report.ok_or_else(|| anyhow!("unbounded advance must complete the prefill"))?;
         self.absorb_prefill(&report);
@@ -412,7 +434,8 @@ impl<B: ModelBackend> Engine<B> {
     /// Residency boundary: the engine only ever sees hot caches — a session
     /// with warm layers must be prefetched by the tier manager first.
     pub fn decode_step(&mut self, sess: &mut Session) -> Result<i32> {
-        let report = self.worker().decode_step(sess)?;
+        let worker = EngineWorker { backend: &self.backend, opts: &self.opts };
+        let report = worker.decode_step(&mut self.serial_ctx, sess)?;
         self.absorb_step(&report);
         Ok(report.tokens[0])
     }
@@ -428,7 +451,8 @@ impl<B: ModelBackend> Engine<B> {
         if sessions.is_empty() {
             return Ok(vec![]);
         }
-        let report = self.worker().decode_step_batch(sessions)?;
+        let worker = EngineWorker { backend: &self.backend, opts: &self.opts };
+        let report = worker.decode_step_batch(&mut self.serial_ctx, sessions)?;
         self.absorb_step(&report);
         Ok(report.tokens)
     }
@@ -468,6 +492,17 @@ impl<B: ModelBackend> Engine<B> {
 impl<B: ModelBackend> EngineWorker<'_, B> {
     pub fn config(&self) -> &ModelConfig {
         self.backend.config()
+    }
+
+    /// Bind the backend device pinned to this worker context, once per
+    /// context lifetime. Every entry point that touches the backend calls
+    /// this first, so a freshly spawned (or scoped-oracle) worker binds
+    /// before its first dispatch and never again afterwards.
+    fn ensure_device(&self, ctx: &mut WorkerContext) {
+        if !ctx.device_bound {
+            self.backend.bind_device(ctx.device_slot);
+            ctx.device_bound = true;
+        }
     }
 
     fn total_budget(&self) -> usize {
@@ -582,7 +617,8 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
 
     /// Run prefill under the configured policy (Algorithms 1 + 2). Pure
     /// compute: metrics observations come back in the report.
-    pub fn prefill(&self, sess: &mut Session) -> Result<PrefillReport> {
+    pub fn prefill(&self, ctx: &mut WorkerContext, sess: &mut Session) -> Result<PrefillReport> {
+        self.ensure_device(ctx);
         let t0 = std::time::Instant::now();
         let cfg = self.backend.config().clone();
         let n = sess.prompt.len();
@@ -800,10 +836,12 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// final [`PrefillReport`] once the prompt's first token exists.
     pub fn advance_chunked_prefill(
         &self,
+        ctx: &mut WorkerContext,
         sess: &mut Session,
         max_tokens: Option<usize>,
     ) -> Result<(usize, Option<PrefillReport>)> {
         let t0 = std::time::Instant::now();
+        self.ensure_device(ctx);
         let cfg = self.backend.config().clone();
         let (h, hk, w, dh, d) =
             (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head, cfg.d_model);
@@ -817,9 +855,9 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         let stream_mode = st.stream.as_ref().map(|sv| sv.chunk_major);
         if let Some(chunk_major) = stream_mode {
             return if chunk_major {
-                self.advance_chunk_major(sess, st, max_tokens, t0)
+                self.advance_chunk_major(ctx, sess, st, max_tokens, t0)
             } else {
-                self.advance_stream_prefill(sess, st, max_tokens, t0)
+                self.advance_stream_prefill(ctx, sess, st, max_tokens, t0)
             };
         }
         let mut worked = 0usize;
@@ -1042,6 +1080,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// live columns to the working cap.
     fn advance_stream_prefill(
         &self,
+        ctx: &mut WorkerContext,
         sess: &mut Session,
         mut st: Box<ChunkedPrefill>,
         max_tokens: Option<usize>,
@@ -1050,6 +1089,10 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         let cfg = self.backend.config().clone();
         let d = cfg.d_model;
         let n = sess.prompt.len();
+        // layer-major lanes are never Q8, so the dequant slot is zero-width
+        let (score, slots) =
+            ctx.scratch.score_and_dequant(1, &[cfg.n_kv_heads, 0, cfg.d_head]);
+        let kv = &mut slots[0];
         let mut worked = 0usize;
         let mut finished = false;
         while st.layer < cfg.n_layers {
@@ -1079,7 +1122,16 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
                 )?
             };
             worked += chunk_len;
-            self.consume_stream_chunk(sess, &mut st, out, start, chunk_len, c_bucket)?;
+            self.consume_stream_chunk(
+                sess,
+                &mut st,
+                out,
+                start,
+                chunk_len,
+                c_bucket,
+                &mut *score,
+                &mut *kv,
+            )?;
             if st.layer == cfg.n_layers {
                 finished = true;
                 break;
@@ -1110,6 +1162,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// tokens of work (progress is still guaranteed under a tiny budget).
     fn advance_chunk_major(
         &self,
+        ctx: &mut WorkerContext,
         sess: &mut Session,
         mut st: Box<ChunkedPrefill>,
         max_tokens: Option<usize>,
@@ -1117,7 +1170,17 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     ) -> Result<(usize, Option<PrefillReport>)> {
         let cfg = self.backend.config().clone();
         let d = cfg.d_model;
+        let (hk, dh) = (cfg.n_kv_heads, cfg.d_head);
         let n = sess.prompt.len();
+        // Q8 lanes dequantize into the worker's dequant slot at dispatch;
+        // f32 lanes never touch it (zero-width allocation)
+        let (q8, cap) = {
+            let sv = st.stream.as_ref().expect("stream state");
+            (sv.q8(), sv.cap)
+        };
+        let shape = if q8 { [hk, cap, dh] } else { [hk, 0, dh] };
+        let (score, slots) = ctx.scratch.score_and_dequant(1, &shape);
+        let kv = &mut slots[0];
         let mut worked = 0usize;
         let mut finished = false;
         while st.chunk_idx < st.n_chunks {
@@ -1133,14 +1196,15 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             let mut x_chunk =
                 self.backend.embed(&sess.prompt[start..start + chunk_len], c_bucket)?;
             for l in 0..cfg.n_layers {
-                let carry_pos = self.stream_dispatch_carry(&mut st, l)?;
+                let carry_pos = self.stream_dispatch_carry(&st, l, &mut *kv)?;
                 let out = {
                     let sv = st.stream.as_ref().expect("stream state");
                     let lane = &sv.layers[l];
-                    // Q8 lanes were dequantized into the shared scratch by
-                    // stream_dispatch_carry; f32 lanes dispatch in place
+                    // Q8 lanes were dequantized into the worker's dequant
+                    // slot by stream_dispatch_carry; f32 lanes dispatch in
+                    // place
                     let (ck, cv) = if lane.q8.is_some() {
-                        (&sv.scratch_k, &sv.scratch_v)
+                        (&kv.0, &kv.1)
                     } else {
                         (&lane.carry_k, &lane.carry_v)
                     };
@@ -1160,7 +1224,17 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
                 };
                 worked += chunk_len;
                 self.consume_stream_lane(
-                    sess, &mut st, l, l, is_final, &out, start, chunk_len, c_bucket,
+                    sess,
+                    &mut st,
+                    l,
+                    l,
+                    is_final,
+                    &out,
+                    start,
+                    chunk_len,
+                    c_bucket,
+                    &mut *score,
+                    &mut *kv,
                 )?;
                 x_chunk = out.x_out;
             }
@@ -1196,12 +1270,14 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// like a batched decode error).
     pub fn advance_stream_group(
         &self,
+        ctx: &mut WorkerContext,
         group: &mut [Session],
     ) -> Result<(Vec<(usize, Option<PrefillReport>)>, usize)> {
         if group.is_empty() {
             return Ok((Vec::new(), 0));
         }
         let t0 = std::time::Instant::now();
+        self.ensure_device(ctx);
         // chunk-major groups advance one full pass (all L layers of the
         // next chunk) through L batched dispatches; layer-major groups
         // advance one (layer, chunk) dispatch as before
@@ -1211,10 +1287,15 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             .and_then(|st| st.stream.as_ref())
             .map_or(false, |sv| sv.chunk_major);
         if chunk_major {
-            return self.advance_chunk_major_group(group, t0);
+            return self.advance_chunk_major_group(ctx, group, t0);
         }
         let cfg = self.backend.config().clone();
         let d = cfg.d_model;
+        // one zero-width dequant slot, shared sequentially by the group's
+        // consume calls (layer-major lanes are never Q8)
+        let (score, slots) =
+            ctx.scratch.score_and_dequant(1, &[cfg.n_kv_heads, 0, cfg.d_head]);
+        let kv = &mut slots[0];
         let mut sts: Vec<Box<ChunkedPrefill>> = Vec::with_capacity(group.len());
         for sess in group.iter_mut() {
             sts.push(sess.prefill.take().ok_or_else(|| {
@@ -1266,7 +1347,16 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         let mut results = Vec::with_capacity(group.len());
         for (i, ((sess, mut st), out)) in group.iter_mut().zip(sts).zip(outs).enumerate() {
             let (start, chunk_len, c_bucket) = (inputs[i].2, inputs[i].3, inputs[i].4);
-            self.consume_stream_chunk(sess, &mut st, out, start, chunk_len, c_bucket)?;
+            self.consume_stream_chunk(
+                sess,
+                &mut st,
+                out,
+                start,
+                chunk_len,
+                c_bucket,
+                &mut *score,
+                &mut *kv,
+            )?;
             if st.layer == cfg.n_layers {
                 let report = self.finish_chunked(sess, &mut st)?;
                 results.push((chunk_len, Some(report)));
@@ -1292,11 +1382,13 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// their last finish here; the rest reinstall their state machines.
     fn advance_chunk_major_group(
         &self,
+        ctx: &mut WorkerContext,
         group: &mut [Session],
         t0: std::time::Instant,
     ) -> Result<(Vec<(usize, Option<PrefillReport>)>, usize)> {
         let cfg = self.backend.config().clone();
         let d = cfg.d_model;
+        let (hk, dh) = (cfg.n_kv_heads, cfg.d_head);
         let mut sts: Vec<Box<ChunkedPrefill>> = Vec::with_capacity(group.len());
         for sess in group.iter_mut() {
             sts.push(sess.prefill.take().ok_or_else(|| {
@@ -1321,25 +1413,34 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             geom.push((start, chunk_len, c_bucket, is_final));
             xs.push(self.backend.embed(&sess.prompt[start..start + chunk_len], c_bucket)?);
         }
+        // one dequant slot per session: batched dispatches read every Q8
+        // lane's dequantized columns at once, so the slots must coexist
+        // (the lockstep key pins a shared cap; engine opts pin uniform Q8)
+        let (q8, cap) = {
+            let sv = sts[0].stream.as_ref().expect("stream state");
+            (sv.q8(), sv.cap)
+        };
+        let shape = if q8 { [hk, cap, dh] } else { [hk, 0, dh] };
+        let (score, slots) = ctx.scratch.score_and_dequant(group.len(), &shape);
         let mut total_dispatches = 0usize;
         let mut worked = vec![0usize; group.len()];
         for l in 0..cfg.n_layers {
-            // per-session dispatch prep (each session has its own scratch,
-            // so Q8 dequantization never conflicts across the group)
+            // per-session dispatch prep (each session gets its own dequant
+            // slot, so Q8 dequantization never conflicts across the group)
             let mut carry_poss: Vec<Vec<i32>> = Vec::with_capacity(group.len());
-            for st in sts.iter_mut() {
-                carry_poss.push(self.stream_dispatch_carry(st, l)?);
+            for (st, kv) in sts.iter().zip(slots.iter_mut()) {
+                carry_poss.push(self.stream_dispatch_carry(st, l, kv)?);
             }
             let outs = {
+                let slots_ro: &[(Tensor, Tensor)] = &*slots;
                 let reqs: Vec<ChunkEvictReq> = sts
                     .iter()
                     .zip(group.iter())
                     .enumerate()
                     .map(|(i, (st, sess))| {
-                        let sv = st.stream.as_ref().expect("stream state");
-                        let lane = &sv.layers[l];
+                        let lane = &st.stream.as_ref().expect("stream state").layers[l];
                         let (ck, cv) = if lane.q8.is_some() {
-                            (&sv.scratch_k, &sv.scratch_v)
+                            (&slots_ro[i].0, &slots_ro[i].1)
                         } else {
                             (&lane.carry_k, &lane.carry_v)
                         };
@@ -1370,7 +1471,17 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             for (i, out) in outs.into_iter().enumerate() {
                 let (start, chunk_len, c_bucket, is_final) = geom[i];
                 self.consume_stream_lane(
-                    &mut group[i], &mut sts[i], l, l, is_final, &out, start, chunk_len, c_bucket,
+                    &mut group[i],
+                    &mut sts[i],
+                    l,
+                    l,
+                    is_final,
+                    &out,
+                    start,
+                    chunk_len,
+                    c_bucket,
+                    &mut *score,
+                    &mut slots[i],
                 )?;
                 worked[i] += chunk_len;
                 xs[i] = out.x_out;
@@ -1401,6 +1512,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// lane 0 carries the current layer, the full-prompt hidden rows
     /// accumulate into `x_next`, and the cursor advances layer-outer /
     /// chunk-inner exactly as PR 8 did.
+    #[allow(clippy::too_many_arguments)]
     fn consume_stream_chunk(
         &self,
         sess: &mut Session,
@@ -1409,10 +1521,14 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         start: usize,
         chunk_len: usize,
         c_bucket: usize,
+        score: &mut ScoreScratch,
+        kv: &mut (Tensor, Tensor),
     ) -> Result<()> {
         let d = self.backend.config().d_model;
         let is_final = st.chunk_idx + 1 == st.n_chunks;
-        self.consume_stream_lane(sess, st, 0, st.layer, is_final, &out, start, chunk_len, c_bucket)?;
+        self.consume_stream_lane(
+            sess, st, 0, st.layer, is_final, &out, start, chunk_len, c_bucket, score, kv,
+        )?;
         let xo = out.x_out.as_f32()?;
         st.x_next[start * d..(start + chunk_len) * d].copy_from_slice(&xo[..chunk_len * d]);
         st.chunk_idx += 1;
@@ -1426,13 +1542,14 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
 
     /// Fold one streaming-evict dispatch into lane `lane_idx` (serving model
     /// layer `layer`): scatter the chunk's K/V after the live carry columns
-    /// — into the shared f32 scratch for Q8 lanes (whose authoritative
-    /// columns re-quantize below), straight into the lane's carry otherwise
-    /// — merge the compact observation panels (adding at carry columns),
-    /// then either evict down to the budget union (+ Q8 re-quantization of
-    /// the changed columns) or, on the layer's final chunk, run the layer
-    /// compression and reset the lane so stale panels stop counting
-    /// against the resident set. Cursor advancement is the caller's job.
+    /// — into the worker's f32 dequant slot for Q8 lanes (whose
+    /// authoritative columns re-quantize below), straight into the lane's
+    /// carry otherwise — merge the compact observation panels (adding at
+    /// carry columns), then either evict down to the budget union (+ Q8
+    /// re-quantization of the changed columns) or, on the layer's final
+    /// chunk, run the layer compression and reset the lane so stale panels
+    /// stop counting against the resident set. Cursor advancement is the
+    /// caller's job.
     #[allow(clippy::too_many_arguments)]
     fn consume_stream_lane(
         &self,
@@ -1445,6 +1562,8 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         start: usize,
         chunk_len: usize,
         c_bucket: usize,
+        score: &mut ScoreScratch,
+        kv: &mut (Tensor, Tensor),
     ) -> Result<()> {
         let cfg = self.backend.config();
         let (h, hk, w, dh, d) =
@@ -1462,10 +1581,9 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             let kc = out.k.as_f32()?;
             let vc = out.v.as_f32()?;
             let sv = st.stream.as_mut().expect("stream state");
-            let StreamPrefill { layers, scratch_k, scratch_v, .. } = &mut **sv;
-            let lane = &mut layers[lane_idx];
+            let lane = &mut sv.layers[lane_idx];
             let (ck, cv) = if lane.q8.is_some() {
-                (scratch_k.as_f32_mut()?, scratch_v.as_f32_mut()?)
+                (kv.0.as_f32_mut()?, kv.1.as_f32_mut()?)
             } else {
                 (lane.carry_k.as_f32_mut()?, lane.carry_v.as_f32_mut()?)
             };
@@ -1532,10 +1650,11 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         st.bucket_fills.push((c_bucket, chunk_len));
 
         // bounded transient: retained caches + every lane's live carry
-        // columns (+ the Q8 scratch) — never more than L·cap, however long
-        // the prompt. Resident adds the allocated lanes, panels, and the
-        // hidden rows: one chunk bucket (chunk-major) or O(prompt) rows
-        // (layer-major).
+        // columns — never more than L·cap, however long the prompt (the Q8
+        // dequant slot is per-worker and amortized across sessions, so it
+        // no longer counts here). Resident adds the allocated lanes,
+        // panels, and the hidden rows: one chunk bucket (chunk-major) or
+        // O(prompt) rows (layer-major).
         let retained: usize = sess.caches.iter().map(|c| c.live_bytes()).sum();
         let (live_carry, resident) = {
             let sv = st.stream.as_ref().expect("stream state");
@@ -1553,44 +1672,43 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             } else {
                 (st.x.len() + st.x_next.len()) * 4
             };
-            (live_carry + sv.scratch_bytes(), lanes_alloc + sv.scratch_bytes() + hidden)
+            (live_carry, lanes_alloc + hidden)
         };
         st.peak_transient = st.peak_transient.max(retained + live_carry);
         st.peak_resident = st.peak_resident.max(resident);
 
         if is_final {
-            self.compress_streamed_layer(sess, st, lane_idx, layer)?;
+            self.compress_streamed_layer(sess, st, lane_idx, layer, score, kv)?;
             st.stream.as_mut().expect("stream state").layers[lane_idx].reset_for_next_layer();
         } else {
             let union = hk * self.opts.budget_per_head.max(w);
             let survivors = if n_cols > union {
-                self.stream_evict(st, lane_idx, union)?
+                self.stream_evict(st, lane_idx, union, score, kv)?
             } else {
                 None
             };
-            self.requant_lane(st, lane_idx, n_live, survivors)?;
+            self.requant_lane(st, lane_idx, n_live, survivors, kv)?;
         }
         Ok(())
     }
 
     /// Prepare lane `lane_idx` for its next dispatch: Q8 lanes dequantize
-    /// their live columns into the session's shared f32 scratch (the
-    /// dispatch reads the scratch; its contents are only valid until the
-    /// next lane dispatches), f32 lanes need no preparation. Returns the
-    /// cap-width carry position map (-1 past the live columns).
+    /// their live columns into the worker's f32 dequant slot `kv` (the
+    /// dispatch reads the slot; its contents are only valid until another
+    /// lane dequantizes into it), f32 lanes need no preparation. Returns
+    /// the cap-width carry position map (-1 past the live columns).
     fn stream_dispatch_carry(
         &self,
-        st: &mut ChunkedPrefill,
+        st: &ChunkedPrefill,
         lane_idx: usize,
+        kv: &mut (Tensor, Tensor),
     ) -> Result<Vec<i32>> {
-        let sv = st.stream.as_mut().expect("stream state");
-        let cap = sv.cap;
-        let StreamPrefill { layers, scratch_k, scratch_v, .. } = &mut **sv;
-        let lane = &mut layers[lane_idx];
-        let mut carry_pos = vec![-1i32; cap];
+        let sv = st.stream.as_ref().expect("stream state");
+        let lane = &sv.layers[lane_idx];
+        let mut carry_pos = vec![-1i32; sv.cap];
         carry_pos[..lane.n_live()].copy_from_slice(&lane.col_pos);
         if let Some(q8) = &lane.q8 {
-            q8.dequantize_cols(lane.n_live(), scratch_k.as_f32_mut()?, scratch_v.as_f32_mut()?);
+            q8.dequantize_cols(lane.n_live(), kv.0.as_f32_mut()?, kv.1.as_f32_mut()?);
         }
         Ok(carry_pos)
     }
@@ -1599,25 +1717,25 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// landed (and possibly evicted): surviving pre-existing columns move
     /// their codes with [`crate::kvcache::Q8Carry::copy_col`] (no fresh
     /// quantization, so no added drift), chunk-appended survivors quantize
-    /// from the compacted f32 scratch. `survivors` is the eviction's
-    /// ascending keep list (None = nothing evicted, only the appended
-    /// columns are new). No-op for f32 lanes.
+    /// from the compacted f32 columns in the worker's dequant slot `kv`.
+    /// `survivors` is the eviction's ascending keep list (None = nothing
+    /// evicted, only the appended columns are new). No-op for f32 lanes.
     fn requant_lane(
         &self,
         st: &mut ChunkedPrefill,
         lane_idx: usize,
         n_live_pre: usize,
         survivors: Option<Vec<usize>>,
+        kv: &(Tensor, Tensor),
     ) -> Result<()> {
         let sv = st.stream.as_mut().expect("stream state");
-        let StreamPrefill { layers, scratch_k, scratch_v, .. } = &mut **sv;
-        let lane = &mut layers[lane_idx];
+        let lane = &mut sv.layers[lane_idx];
         if lane.q8.is_none() {
             return Ok(());
         }
         let n_cols = lane.n_live();
-        let sk = scratch_k.as_f32()?;
-        let svv = scratch_v.as_f32()?;
+        let sk = kv.0.as_f32()?;
+        let svv = kv.1.as_f32()?;
         let q8 = lane.q8.as_mut().expect("q8 lane");
         match survivors {
             None => q8.quantize_cols(n_live_pre, n_cols, sk, svv),
@@ -1643,16 +1761,18 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// window is the suffix [`select_prefill`] pins), then compact every
     /// panel plus the carry K/V down to the keep-set union. Columns stay in
     /// ascending-position order, so the pinned suffix is exactly the
-    /// trailing w positions. Q8 lanes compact the shared f32 scratch (their
-    /// authoritative f32 view at this point); the caller re-quantizes from
-    /// it via [`EngineWorker::requant_lane`]. Returns the ascending
-    /// survivor list when columns were dropped, `None` when the keep-set
-    /// covered everything.
+    /// trailing w positions. Q8 lanes compact the worker's f32 dequant slot
+    /// `kv` (their authoritative f32 view at this point); the caller
+    /// re-quantizes from it via [`EngineWorker::requant_lane`]. Returns the
+    /// ascending survivor list when columns were dropped, `None` when the
+    /// keep-set covered everything.
     fn stream_evict(
         &self,
         st: &mut ChunkedPrefill,
         lane_idx: usize,
         union_budget: usize,
+        scratch: &mut ScoreScratch,
+        kv: &mut (Tensor, Tensor),
     ) -> Result<Option<Vec<usize>>> {
         let cfg = self.backend.config();
         let (h, hk, w, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.window, cfg.d_head);
@@ -1662,8 +1782,13 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             let n_cols = lane.n_live();
             let obs = stream_obs(lane, h, hk, w);
             let p = &self.opts.policy;
-            let scores =
-                score::kv_head_scores(p.score, p.group_reduce, &obs, self.opts.pool_kernel);
+            let scores = score::kv_head_scores_with(
+                p.score,
+                p.group_reduce,
+                &obs,
+                self.opts.pool_kernel,
+                scratch,
+            );
             let keepset = select_prefill(&scores, n_cols, union_budget, w, p.head_alloc);
             let mut live = vec![false; n_cols];
             for keep in &keepset.keep {
@@ -1674,8 +1799,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             (0..n_cols).filter(|&j| live[j]).collect()
         };
         let sv = st.stream.as_mut().expect("stream state");
-        let StreamPrefill { layers, scratch_k, scratch_v, .. } = &mut **sv;
-        let lane = &mut layers[lane_idx];
+        let lane = &mut sv.layers[lane_idx];
         let n_cols = lane.n_live();
         if survivors.len() == n_cols {
             return Ok(None);
@@ -1708,7 +1832,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         // gather the surviving K/V rows forward; survivors ascend, so every
         // copy moves a row to an index <= its source and ranges never overlap
         let (ck, cv) = if lane.q8.is_some() {
-            (scratch_k.as_f32_mut()?, scratch_v.as_f32_mut()?)
+            (kv.0.as_f32_mut()?, kv.1.as_f32_mut()?)
         } else {
             (lane.carry_k.as_f32_mut()?, lane.carry_v.as_f32_mut()?)
         };
@@ -1731,15 +1855,17 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// survivor columns (scores run host-side — the fused artifact's bucket
     /// shapes do not apply to compacted carries) with slot positions
     /// rewritten from the column-position map. Q8 lanes load from the
-    /// shared f32 scratch, which holds their authoritative columns after
-    /// the final chunk's scatter (no re-quantization happens on the final
-    /// chunk, so nothing round-trips one extra time).
+    /// worker's f32 dequant slot `kv`, which holds their authoritative
+    /// columns after the final chunk's scatter (no re-quantization happens
+    /// on the final chunk, so nothing round-trips one extra time).
     fn compress_streamed_layer(
         &self,
         sess: &mut Session,
         st: &mut ChunkedPrefill,
         lane_idx: usize,
         l: usize,
+        scratch: &mut ScoreScratch,
+        kv: &(Tensor, Tensor),
     ) -> Result<()> {
         let cfg = self.backend.config();
         let (h, hk, w) = (cfg.n_heads, cfg.n_kv_heads, cfg.window);
@@ -1749,8 +1875,13 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
             let lane = &st.stream.as_ref().expect("stream state").layers[lane_idx];
             let obs = stream_obs(lane, h, hk, w);
             let p = &self.opts.policy;
-            let scores =
-                score::kv_head_scores(p.score, p.group_reduce, &obs, self.opts.pool_kernel);
+            let scores = score::kv_head_scores_with(
+                p.score,
+                p.group_reduce,
+                &obs,
+                self.opts.pool_kernel,
+                scratch,
+            );
             (scores, obs, lane.col_pos.clone())
         };
         let n_cols = col_pos.len();
@@ -1765,10 +1896,9 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
         let capacity = self.capacity_for(st.budgets[l], n_cols, sess.max_new_tokens)?;
         let mut cache = HotStore::new(hk, cfg.d_head, capacity);
         {
-            let sv = st.stream.as_ref().expect("stream state");
-            let lane = &sv.layers[lane_idx];
+            let lane = &st.stream.as_ref().expect("stream state").layers[lane_idx];
             let (ck, cv) = if lane.q8.is_some() {
-                (&sv.scratch_k, &sv.scratch_v)
+                (&kv.0, &kv.1)
             } else {
                 (&lane.carry_k, &lane.carry_v)
             };
@@ -1790,7 +1920,8 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// One serial decode step: feed the last generated token, produce the
     /// next. Residency boundary: workers only ever see hot caches — a
     /// session with warm layers must be prefetched by the tier side first.
-    pub fn decode_step(&self, sess: &mut Session) -> Result<StepReport> {
+    pub fn decode_step(&self, ctx: &mut WorkerContext, sess: &mut Session) -> Result<StepReport> {
+        self.ensure_device(ctx);
         if !sess.is_fully_hot() {
             bail!(
                 "decode_step on session {} with non-resident layers (prefetch before decode)",
@@ -1836,7 +1967,11 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
     /// session's attention row back into its own score update / append /
     /// eviction. Produces tokens, scores, and cache contents bit-identical
     /// to looping [`EngineWorker::decode_step`] over the same sessions.
-    pub fn decode_step_batch(&self, sessions: &mut [Session]) -> Result<StepReport> {
+    pub fn decode_step_batch(
+        &self,
+        ctx: &mut WorkerContext,
+        sessions: &mut [Session],
+    ) -> Result<StepReport> {
         if sessions.is_empty() {
             return Ok(StepReport {
                 tokens: vec![],
@@ -1845,6 +1980,7 @@ impl<B: ModelBackend> EngineWorker<'_, B> {
                 sessions: 0,
             });
         }
+        self.ensure_device(ctx);
         let sig = sessions[0].capacity_signature();
         for sess in sessions.iter() {
             if !sess.is_fully_hot() {
@@ -2330,12 +2466,13 @@ mod tests {
         let mut a = via_engine.new_session(&req);
         via_engine.prefill(&mut a).unwrap();
         let mut b = via_worker.new_session(&req);
-        let pre = via_worker.worker().prefill(&mut b).unwrap();
+        let mut ctx = WorkerContext::new(0);
+        let pre = via_worker.worker().prefill(&mut ctx, &mut b).unwrap();
         via_worker.absorb_prefill(&pre);
         assert_eq!(a.generated, b.generated, "prefill token");
         for _ in 0..4 {
             let t1 = via_engine.decode_step(&mut a).unwrap();
-            let report = via_worker.worker().decode_step(&mut b).unwrap();
+            let report = via_worker.worker().decode_step(&mut ctx, &mut b).unwrap();
             via_worker.absorb_step(&report);
             assert_eq!(vec![t1], report.tokens);
         }
@@ -2412,11 +2549,12 @@ mod tests {
         let req = GenerateRequest { prompt: prompt(150), max_new_tokens: 2 };
         let mut s = e.new_session(&req);
         let w = e.worker();
+        let mut ctx = WorkerContext::new(0);
         w.begin_chunked_prefill(&mut s, 32).unwrap();
         assert_eq!(s.phase, Phase::Prefilling { next_chunk: 0 });
         let mut advances = 0;
         let report = loop {
-            let (tokens, report) = w.advance_chunked_prefill(&mut s, Some(64)).unwrap();
+            let (tokens, report) = w.advance_chunked_prefill(&mut ctx, &mut s, Some(64)).unwrap();
             advances += 1;
             assert!(tokens > 0, "every advance makes progress");
             assert!(tokens <= 64, "budget respected (one-chunk overshoot only)");
@@ -2436,7 +2574,7 @@ mod tests {
         // identical to the monolithic run
         let mut mono = engine("lava", 24);
         let mut ms = mono.new_session(&req);
-        let mr = mono.worker().prefill(&mut ms).unwrap();
+        let mr = mono.worker().prefill(&mut WorkerContext::new(0), &mut ms).unwrap();
         assert_eq!(report.token, mr.token);
         assert_eq!(report.peak_transient, mr.peak_transient);
         assert_eq!(report.live_after, mr.live_after);
@@ -2486,12 +2624,13 @@ mod tests {
             let req = GenerateRequest { prompt: prompt(n), max_new_tokens: 3 };
             let mut s = e.new_session(&req);
             let w = e.worker();
+            let mut ctx = WorkerContext::new(0);
             if stream {
                 w.begin_chunked_prefill_stream(&mut s, 64).unwrap();
             } else {
                 w.begin_chunked_prefill(&mut s, 64).unwrap();
             }
-            let (_, report) = w.advance_chunked_prefill(&mut s, None).unwrap();
+            let (_, report) = w.advance_chunked_prefill(&mut ctx, &mut s, None).unwrap();
             (e, s, report.expect("unbounded advance completes"))
         };
         // working cap = Hk*max(b, w) + chunk bucket + w = 96 + 128 + 16 = 240
@@ -2564,12 +2703,13 @@ mod tests {
             s
         };
         let w = e.worker();
+        let mut ctx = WorkerContext::new(0);
         let mut group = vec![a, b];
         loop {
             let ka = w.stream_lockstep_key(&group[0]);
             let kb = w.stream_lockstep_key(&group[1]);
             assert_eq!(ka, kb, "identical prompts stay in lockstep");
-            let (res, dispatches) = w.advance_stream_group(&mut group).unwrap();
+            let (res, dispatches) = w.advance_stream_group(&mut ctx, &mut group).unwrap();
             // chunk-major groups advance a full pass: one batched dispatch
             // per layer instead of one per (layer, chunk) step
             assert_eq!(dispatches, 4, "one backend dispatch per layer per lockstep group");

@@ -5,6 +5,7 @@
 use std::collections::BTreeMap;
 use std::time::Instant;
 
+use super::pool::RoundStats;
 use crate::util::stats;
 
 #[derive(Debug, Default, Clone)]
@@ -106,6 +107,20 @@ pub struct Metrics {
     pub worker_busy_secs: Vec<f64>,
     pub worker_rounds: u64,
     pub worker_wall_secs: f64,
+    /// Persistent-pool gauges: deepest injector queue seen at round start
+    /// (units submitted in one fan-out), units pulled per worker slot
+    /// (work-stealing balance — skew here with even `worker_busy_secs`
+    /// means the dynamic cursor is compensating for uneven unit costs),
+    /// pool-lifetime park/unpark totals (sampled cumulative; high churn
+    /// relative to `worker_rounds` means workers thrash between ticks),
+    /// and cumulative dispatch overhead — the wall time per round not
+    /// covered by the busiest worker (submit + wake + join cost, the
+    /// quantity the persistent pool exists to shrink vs spawn-per-tick).
+    pub pool_queue_depth_peak: usize,
+    pub worker_units: Vec<u64>,
+    pub pool_parks: u64,
+    pub pool_unparks: u64,
+    pub pool_dispatch_secs: f64,
     /// Tier-thread gauges, sampled at tick end: command-queue backlogs
     /// (spill commands not yet quantized, prefetch-ahead hints not yet
     /// staged), their observed combined peak, host-side f32 bytes parked in
@@ -255,19 +270,32 @@ impl Metrics {
         valid as f64 / total as f64
     }
 
-    /// Record one worker-pool fan-out: the pool width, each spawned
-    /// worker's busy seconds (may be fewer entries than `workers` when
-    /// there were fewer units), and the fan-out's wall seconds.
-    pub fn observe_worker_round(&mut self, workers: usize, busy_secs: &[f64], wall_secs: f64) {
+    /// Record one worker-pool fan-out from the pool's per-round stats: the
+    /// pool width, each worker slot's busy seconds and pulled-unit count
+    /// (may be fewer entries than `workers` on the scoped path when there
+    /// were fewer units), the round's queue depth and wall/dispatch
+    /// seconds, and the pool-lifetime park/unpark totals (cumulative —
+    /// stored, not summed).
+    pub fn observe_worker_round(&mut self, workers: usize, stats: &RoundStats) {
         self.workers = self.workers.max(workers);
-        if self.worker_busy_secs.len() < busy_secs.len() {
-            self.worker_busy_secs.resize(busy_secs.len(), 0.0);
+        if self.worker_busy_secs.len() < stats.busy_secs.len() {
+            self.worker_busy_secs.resize(stats.busy_secs.len(), 0.0);
         }
-        for (slot, &b) in busy_secs.iter().enumerate() {
+        for (slot, &b) in stats.busy_secs.iter().enumerate() {
             self.worker_busy_secs[slot] += b;
         }
+        if self.worker_units.len() < stats.pulled.len() {
+            self.worker_units.resize(stats.pulled.len(), 0);
+        }
+        for (slot, &n) in stats.pulled.iter().enumerate() {
+            self.worker_units[slot] += n;
+        }
         self.worker_rounds += 1;
-        self.worker_wall_secs += wall_secs;
+        self.worker_wall_secs += stats.wall_secs;
+        self.pool_queue_depth_peak = self.pool_queue_depth_peak.max(stats.queued_units);
+        self.pool_parks = self.pool_parks.max(stats.parks);
+        self.pool_unparks = self.pool_unparks.max(stats.unparks);
+        self.pool_dispatch_secs += stats.dispatch_secs;
     }
 
     /// Mean fraction of the pool kept busy during fan-outs (1.0 = every
@@ -279,6 +307,17 @@ impl Metrics {
         }
         let busy: f64 = self.worker_busy_secs.iter().sum();
         busy / (self.workers as f64 * self.worker_wall_secs)
+    }
+
+    /// Mean dispatch overhead per fan-out round in milliseconds: the wall
+    /// time not covered by the busiest worker (submit + wake + join). 0
+    /// when no fan-outs ran.
+    pub fn mean_dispatch_overhead_ms(&self) -> f64 {
+        if self.worker_rounds > 0 {
+            self.pool_dispatch_secs / self.worker_rounds as f64 * 1e3
+        } else {
+            0.0
+        }
     }
 
     /// Record a sample of the tier thread's queue/busy/staging gauges.
@@ -398,6 +437,8 @@ impl Metrics {
     pub fn report(&self) -> String {
         let worker_busy: Vec<String> =
             self.worker_busy_secs.iter().map(|b| format!("{:.3}", b * 1e3)).collect();
+        let worker_units: Vec<String> =
+            self.worker_units.iter().map(|n| n.to_string()).collect();
         format!(
             "requests={} rejected={} canceled={} failed={} deferred={} tokens={} \
              streamed={} ttft_ms(mean)={:.2} queue_wait_ms(mean)={:.2} prefill_ms(mean)={:.2} \
@@ -412,6 +453,8 @@ impl Metrics {
              prefill_chunk_batches={} \
              prefill_chunk_occupancy={:.2} prefill_chunk_dispatches={} \
              workers={} worker_util={:.2} worker_busy_ms=[{}] \
+             worker_units=[{}] pool_q_peak={} pool_parks={} pool_unparks={} \
+             pool_dispatch_ms(mean)={:.3} \
              tier_spill_q={} tier_prefetch_q={} tier_q_peak={} \
              tier_staged_mb(peak)={:.2} tier_busy_ms={:.3}",
             self.requests_finished,
@@ -452,6 +495,11 @@ impl Metrics {
             self.workers,
             self.worker_utilization(),
             worker_busy.join(","),
+            worker_units.join(","),
+            self.pool_queue_depth_peak,
+            self.pool_parks,
+            self.pool_unparks,
+            self.mean_dispatch_overhead_ms(),
             self.tier_spill_queue_depth,
             self.tier_prefetch_queue_depth,
             self.tier_queue_depth_peak,
@@ -537,15 +585,44 @@ mod tests {
     fn worker_and_tier_thread_gauges() {
         let mut m = Metrics::new();
         assert_eq!(m.worker_utilization(), 0.0, "no rounds yet");
-        // two rounds on a width-2 pool: one balanced, one with a single
-        // spawned worker (fewer units than width)
-        m.observe_worker_round(2, &[0.5, 0.5], 1.0);
-        m.observe_worker_round(2, &[1.0], 1.0);
+        assert_eq!(m.mean_dispatch_overhead_ms(), 0.0, "no rounds yet");
+        // two rounds on a width-2 pool: one balanced with skewed pulls,
+        // one where a single slot did all the work
+        m.observe_worker_round(
+            2,
+            &RoundStats {
+                busy_secs: vec![0.5, 0.5],
+                wall_secs: 1.0,
+                pulled: vec![3, 1],
+                queued_units: 4,
+                parks: 2,
+                unparks: 2,
+                dispatch_secs: 0.5,
+            },
+        );
+        m.observe_worker_round(
+            2,
+            &RoundStats {
+                busy_secs: vec![1.0],
+                wall_secs: 1.0,
+                pulled: vec![1],
+                queued_units: 1,
+                parks: 4,
+                unparks: 4,
+                dispatch_secs: 0.0,
+            },
+        );
         assert_eq!(m.workers, 2);
         assert_eq!(m.worker_rounds, 2);
         assert_eq!(m.worker_busy_secs, vec![1.5, 0.5]);
         // Σbusy = 2.0 over width 2 × wall 2.0 = 0.5
         assert!((m.worker_utilization() - 0.5).abs() < 1e-9);
+        assert_eq!(m.worker_units, vec![4, 1], "pulled counts accumulate per slot");
+        assert_eq!(m.pool_queue_depth_peak, 4, "peak holds the deepest submit");
+        assert_eq!(m.pool_parks, 4, "park totals are cumulative samples");
+        assert_eq!(m.pool_unparks, 4);
+        // 0.5 s of overhead over 2 rounds = 250 ms mean
+        assert!((m.mean_dispatch_overhead_ms() - 250.0).abs() < 1e-9);
 
         m.observe_tier_thread(3, 2, 4096, 0.25);
         m.observe_tier_thread(1, 0, 1024, 0.5);
@@ -558,6 +635,10 @@ mod tests {
         let report = m.report();
         assert!(report.contains("workers=2"));
         assert!(report.contains("worker_util=0.50"));
+        assert!(report.contains("worker_units=[4,1]"));
+        assert!(report.contains("pool_q_peak=4"));
+        assert!(report.contains("pool_parks=4"));
+        assert!(report.contains("pool_dispatch_ms(mean)=250.000"));
         assert!(report.contains("tier_q_peak=5"));
     }
 

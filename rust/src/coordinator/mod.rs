@@ -4,8 +4,11 @@
 //!   session ids) and the shareable `EngineWorker` compute view: layer-wise
 //!   prefill with cascading compression (Algorithm 2), the serial + batched
 //!   decode paths, and per-policy budget handling.
-//! * [`pool`] — `WorkerPool`: ordered fan-out of planned round units over
-//!   scoped worker threads.
+//! * [`pool`] — `WorkerPool`: persistent worker threads fed per-tick unit
+//!   plans through an injector (spawn-free fan-out, dynamic work stealing),
+//!   each owning a `WorkerContext` (stable id, pinned device slot, reusable
+//!   scratch); `LAVA_POOL=scoped` keeps the legacy per-round
+//!   `thread::scope` dispatcher as a bit-equivalence oracle.
 //! * [`session`] — per-request state: token ids, per-layer caches, metrics.
 //! * [`scheduler`] — continuous-batching scheduler: admission control by
 //!   KV-memory budget, prefill/decode interleaving, fairness, hot/warm
@@ -19,8 +22,9 @@
 //! * [`server`] — JSON-lines TCP front-end over the serving loop.
 //! * [`metrics`] — latency/memory counters (the quantities Fig. 3 plots),
 //!   plus serving gauges: tier traffic, batch occupancy, per-bucket decode
-//!   dispatches, worker utilization, tier-thread queue depths, in-flight
-//!   session/queue gauges, and streamed-token counts.
+//!   dispatches, worker utilization, pool queue depth / per-worker pulled
+//!   units / park churn / dispatch overhead, tier-thread queue depths,
+//!   in-flight session/queue gauges, and streamed-token counts.
 //!
 //! ## Serving architecture: acceptor → command channel → serving thread → pool
 //!
@@ -62,14 +66,27 @@
 //!    the planner reserves one-step append headroom for the whole parallel
 //!    stage, spilling victims from the sequential arm (demoting units when
 //!    that cannot cover).
-//! 2. **Run** — the planned units fan out over the [`pool::WorkerPool`]:
-//!    each worker holds an `EngineWorker` (`&backend`, `&options`) and
-//!    advances its unit — gather last tokens → one
-//!    `layer_decode_batched_{M}x{B}` dispatch per layer → scatter into
-//!    per-session score update/append/eviction — returning a `StepReport`.
-//!    The serving thread merges reports *in plan order*, so tokens,
-//!    evictions, and metric totals are bit-identical at any worker count.
-//!    The sequential arm then steps in order: tier fetch (blocking only on
+//! 2. **Run** — the planned units are *submitted* to the persistent
+//!    [`pool::WorkerPool`]: the round lands in an injector (an atomic
+//!    cursor over the unit list) and the parked workers are woken. Each
+//!    worker pulls the next un-taken unit index off the injector —
+//!    dynamic scheduling, so a slow unit never strands the rest of the
+//!    plan behind it — and advances it through an `EngineWorker`
+//!    (`&backend`, `&options`) with its own long-lived
+//!    [`pool::WorkerContext`]: a stable worker id, a backend device slot
+//!    bound once per thread (`ModelBackend::bind_device`), and reusable
+//!    scoring/dequant scratch. A decode unit gathers last tokens → one
+//!    `layer_decode_batched_{M}x{B}` dispatch per layer → scatters into
+//!    per-session score update/append/eviction — returning a
+//!    `StepReport`. Every result is written into a pre-sized slot at the
+//!    unit's *plan index* (a panicked unit writes `Err` and the pool
+//!    keeps serving; the scheduler fails that request and moves on), so
+//!    the serving thread merges reports in plan order and tokens,
+//!    evictions, and metric totals are bit-identical at any worker count
+//!    and in both pool modes. Prefill batches and streaming lockstep
+//!    groups submit to the same pool; single-session arms run through the
+//!    pool's serial context (`with_serial_ctx`, worker slot 0). The
+//!    sequential arm then steps in order: tier fetch (blocking only on
 //!    staging misses), per-session decode, victim spills as needed.
 //!
 //! ## Tier-thread handoff protocol
@@ -105,6 +122,6 @@ pub use engine::{
     PrefillReport, StepReport,
 };
 pub use metrics::MetricsSnapshot;
-pub use pool::WorkerPool;
+pub use pool::{PoolMode, WorkerContext, WorkerPool};
 pub use scheduler::{Scheduler, SchedulerOptions, SubmitError, TickReport};
 pub use serve_loop::{Event, ServeHandle, SubmitItem};

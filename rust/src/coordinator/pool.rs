@@ -1,44 +1,428 @@
-//! Engine worker pool: ordered fan-out of per-round work units.
+//! Persistent engine worker pool: spawn-free round dispatch with dynamic
+//! unit scheduling.
 //!
-//! The scheduler plans a decode round (or a prefill batch) into independent
-//! units — capacity-bucket session groups, single sessions, queued
-//! prefills — and hands the whole plan to [`WorkerPool::run`], which fans
-//! the units out over up to N scoped worker threads via
-//! [`crate::util::par::scoped_map_timed`] and returns the results **in
-//! plan order**. Because planning is done entirely on the serving thread
-//! before the fan-out, results (tokens, evictions, spill decisions) are
-//! bit-identical at every worker count; only wall time changes. The pool
-//! also reports per-worker busy time per round, which the scheduler folds
-//! into the utilization gauges.
+//! The scheduler plans a tick's work — capacity-bucket decode groups,
+//! queued prefills, lockstep stream groups — into independent units and
+//! hands each plan to [`WorkerPool::run`]. The pool's N worker threads are
+//! spawned **once** at scheduler build and live until drop; a round is
+//! submitted by publishing the plan behind a shared *injector* (an atomic
+//! cursor over the unit list) and waking the parked workers. Each worker
+//! pulls the next unscheduled unit whenever it finishes one, so a heavy
+//! unit no longer strands its statically-assigned neighbors on an idle
+//! worker: load balancing is dynamic, replacing the contiguous-chunk
+//! sharding of the scoped dispatcher. Results are written into pre-sized
+//! per-unit slots by index, so [`WorkerPool::run`] still returns them **in
+//! plan order** — planning happens entirely on the serving thread before
+//! the fan-out, so tokens, evictions, and spill decisions stay
+//! bit-identical at every width and in both dispatch modes; only wall time
+//! changes.
 //!
-//! Workers are scoped threads, not a persistent pool: spawn cost (~tens of
-//! microseconds) is far below a decode round's dispatch work, and scoped
-//! lifetimes let units borrow the shared backend with no `Arc`/channel
-//! machinery. `workers == 1` (or a single unit) short-circuits to a serial
-//! loop on the caller's thread — the escape hatch CI uses to flush out
-//! nondeterminism.
+//! Submit → injector → worker-context → slot-writeback flow:
+//!
+//! ```text
+//!  run(units, f)
+//!    │ publish Round{units, result slots} + bump epoch ── unpark workers
+//!    ▼
+//!  injector: AtomicUsize cursor over 0..n_units
+//!    │ worker w: idx = cursor.fetch_add(1)  (pull when free)
+//!    ▼
+//!  WorkerContext w: stable id, pinned device slot, scratch arenas
+//!    │ catch_unwind(f(&mut ctx, unit[idx]))
+//!    ▼
+//!  results[idx] = Ok(R) | Err(panic message)   (slot writeback, plan order)
+//! ```
+//!
+//! Each worker owns a [`WorkerContext`]: a stable worker id, a backend
+//! device slot bound once per thread (`ModelBackend::bind_device`, so a
+//! PJRT backend can pin one accelerator per worker), and reusable scratch
+//! arenas ([`WorkerScratch`]) — per-round score buffers and Q8
+//! dequantization tensors that used to be allocated per session now live
+//! for the worker's lifetime.
+//!
+//! A panicking unit is caught ([`std::panic::catch_unwind`]) and surfaced
+//! as that unit's `Err(message)`; the other units of the round and the
+//! worker threads themselves are unaffected, so one poisoned session can
+//! no longer abort the serve loop.
+//!
+//! `LAVA_POOL=scoped` ([`PoolMode::Scoped`]) keeps the legacy scoped
+//! dispatcher — a fresh `std::thread::scope` fan-out per round through
+//! [`crate::util::par::scoped_map_timed`]'s static contiguous chunking —
+//! as the bit-equivalence oracle the fingerprint tests compare against.
+//! `workers == 1` (or a single-unit round) short-circuits to a serial loop
+//! on the caller's thread using the pool's serving-thread context — the
+//! escape hatch CI uses to flush out nondeterminism.
+//!
+//! Shutdown: dropping the pool flags the gate and joins every worker. A
+//! round is only ever in flight while `run` is on the stack (submission is
+//! synchronous), so there are no queued units to drain at drop time — the
+//! drop-joins test asserts no thread (or shared state) leaks.
 
+use std::fmt;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+use std::time::Instant;
+
+use crate::compress::score::ScoreScratch;
+use crate::runtime::Tensor;
 use crate::util::par;
 
+/// How one unit of a round ended: the closure's value, or the message of
+/// the panic that killed it (contained to this unit).
+pub type UnitResult<R> = std::result::Result<R, String>;
+
+/// Reusable per-worker scratch arenas. Living on the worker (not the
+/// session) turns the decode/stream hot-path scratch allocations into
+/// amortized, per-worker buffers: any session a worker picks up reuses
+/// them. Contents are *stale* between units by design — every consumer
+/// confines its reads to the columns it just wrote (the Q8 carry masks
+/// dead columns with position -1), exactly as the old per-session scratch
+/// already tolerated stale tails after eviction compaction.
+#[derive(Debug, Default)]
+pub struct WorkerScratch {
+    /// Score-pipeline row buffers (`kv_head_scores_with` serial scoring).
+    pub score: ScoreScratch,
+    /// Q8 carry dequantization tensors, one (K, V) pair per lockstep group
+    /// member — a chunk-major group dequantizes every member's carry
+    /// before one batched dispatch borrows them all simultaneously.
+    dequant: Vec<(Tensor, Tensor)>,
+}
+
+impl WorkerScratch {
+    /// Hand out the first `n` dequant pairs, each guaranteed to have
+    /// exactly `shape` (backends read `Tensor::shape`, so a larger-than-
+    /// needed buffer is not an option). Same-shape slots keep their
+    /// allocation (and stale contents); a shape change reallocates that
+    /// slot zeroed.
+    pub fn dequant_slots(&mut self, n: usize, shape: &[usize]) -> &mut [(Tensor, Tensor)] {
+        while self.dequant.len() < n {
+            self.dequant.push((Tensor::zeros(shape), Tensor::zeros(shape)));
+        }
+        for pair in self.dequant[..n].iter_mut() {
+            if pair.0.shape != shape {
+                pair.0 = Tensor::zeros(shape);
+            }
+            if pair.1.shape != shape {
+                pair.1 = Tensor::zeros(shape);
+            }
+        }
+        &mut self.dequant[..n]
+    }
+
+    /// Split borrow for the stream hot path: the score buffers and `n`
+    /// dequant pairs (shaped as in [`WorkerScratch::dequant_slots`]) at
+    /// once — eviction scoring and Q8 carry staging happen inside the same
+    /// per-lane loop.
+    pub fn score_and_dequant(
+        &mut self,
+        n: usize,
+        shape: &[usize],
+    ) -> (&mut ScoreScratch, &mut [(Tensor, Tensor)]) {
+        self.dequant_slots(n, shape);
+        (&mut self.score, &mut self.dequant[..n])
+    }
+}
+
+/// Per-worker state that survives across rounds: identity, device
+/// binding, and scratch. One lives on each persistent worker thread, one
+/// on the pool for the serving thread's serial arms, and the scoped
+/// oracle fabricates a throwaway one per unit.
+#[derive(Debug)]
+pub struct WorkerContext {
+    /// Stable worker slot (0-based; the serving-thread context is 0).
+    pub worker_id: usize,
+    /// Backend device slot this worker pins (`worker_id`; backends map it
+    /// onto their device count, e.g. `slot % device_count()`).
+    pub device_slot: usize,
+    /// Whether `ModelBackend::bind_device` ran on this context's thread
+    /// yet (the engine binds lazily before the first dispatch).
+    pub device_bound: bool,
+    /// Reusable hot-path buffers.
+    pub scratch: WorkerScratch,
+}
+
+impl WorkerContext {
+    pub fn new(worker_id: usize) -> WorkerContext {
+        WorkerContext {
+            worker_id,
+            device_slot: worker_id,
+            device_bound: false,
+            scratch: WorkerScratch::default(),
+        }
+    }
+}
+
+/// Which dispatcher [`WorkerPool::run`] uses.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PoolMode {
+    /// Long-lived workers + injector cursor (the default).
+    Persistent,
+    /// Legacy per-round `std::thread::scope` fan-out with static
+    /// contiguous chunking — the bit-equivalence oracle (`LAVA_POOL=scoped`).
+    Scoped,
+}
+
+impl PoolMode {
+    /// `LAVA_POOL` override (CI runs the suite once more with `scoped`).
+    /// Unset or `persistent` selects the persistent pool; an unrecognized
+    /// value warns and keeps the default rather than silently changing
+    /// the dispatcher.
+    pub fn from_env() -> PoolMode {
+        match std::env::var("LAVA_POOL") {
+            Ok(v) if v.trim().eq_ignore_ascii_case("scoped") => PoolMode::Scoped,
+            Ok(v) if v.trim().is_empty() || v.trim().eq_ignore_ascii_case("persistent") => {
+                PoolMode::Persistent
+            }
+            Ok(v) => {
+                eprintln!("[lava] ignoring invalid LAVA_POOL={v:?}; using the persistent pool");
+                PoolMode::Persistent
+            }
+            Err(_) => PoolMode::Persistent,
+        }
+    }
+}
+
 /// Per-round fan-out statistics.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, Default)]
 pub struct RoundStats {
-    /// Busy seconds per worker actually spawned (one entry on the serial
-    /// fallback).
+    /// Busy seconds per worker slot (one entry per pool slot in
+    /// persistent mode, per spawned worker in scoped mode, one entry on
+    /// the serial fallback).
     pub busy_secs: Vec<f64>,
     /// Wall seconds the fan-out took end to end.
     pub wall_secs: f64,
+    /// Units each worker slot pulled from the injector this round
+    /// (empty in scoped mode — static chunks are not pulls).
+    pub pulled: Vec<u64>,
+    /// Injector depth at submit (= units in the plan).
+    pub queued_units: usize,
+    /// Pool-lifetime worker park events (cumulative; 0 in scoped mode).
+    pub parks: u64,
+    /// Pool-lifetime worker unpark events (cumulative; 0 in scoped mode).
+    pub unparks: u64,
+    /// Dispatch overhead: wall seconds beyond the critical-path worker's
+    /// busy time (`wall - max(busy)`, clamped at 0). Spawn-free rounds
+    /// shrink this; the serving bench sweeps it scoped-vs-persistent.
+    pub dispatch_secs: f64,
+}
+
+/// Type-erased view of one round the workers execute through.
+trait RoundRunner: Sync {
+    fn run_unit(&self, ctx: &mut WorkerContext, idx: usize);
+}
+
+/// One submitted round: the closure plus per-unit pickup and writeback
+/// slots. Unit `idx` is taken (once) and its result written back by
+/// whichever worker pulled `idx` off the injector.
+struct Round<'a, T, R, F> {
+    f: &'a F,
+    units: Vec<Mutex<Option<T>>>,
+    results: Vec<Mutex<Option<UnitResult<R>>>>,
+}
+
+impl<'a, T, R, F> Round<'a, T, R, F>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&mut WorkerContext, T) -> R + Sync,
+{
+    fn new(f: &'a F, units: Vec<T>) -> Round<'a, T, R, F> {
+        Round {
+            f,
+            results: units.iter().map(|_| Mutex::new(None)).collect(),
+            units: units.into_iter().map(|u| Mutex::new(Some(u))).collect(),
+        }
+    }
+
+    fn into_results(self) -> Vec<UnitResult<R>> {
+        self.results
+            .into_iter()
+            .map(|m| m.into_inner().expect("result slot lock").expect("unit result missing"))
+            .collect()
+    }
+}
+
+impl<T, R, F> RoundRunner for Round<'_, T, R, F>
+where
+    T: Send,
+    R: Send,
+    F: Fn(&mut WorkerContext, T) -> R + Sync,
+{
+    fn run_unit(&self, ctx: &mut WorkerContext, idx: usize) {
+        let unit =
+            self.units[idx].lock().expect("unit slot lock").take().expect("unit taken twice");
+        let out = catch_unwind(AssertUnwindSafe(|| (self.f)(ctx, unit))).map_err(panic_message);
+        *self.results[idx].lock().expect("result slot lock") = Some(out);
+    }
+}
+
+fn panic_message(payload: Box<dyn std::any::Any + Send>) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "worker panicked".to_string()
+    }
+}
+
+/// Lifetime-erased pointer to the current round. Sound because `run`
+/// blocks until every worker has exited the round (`in_round == 0`), so
+/// workers never dereference it after `run` returns and drops the round.
+#[derive(Clone, Copy)]
+struct RunnerPtr(*const (dyn RoundRunner + 'static));
+// SAFETY: the pointee is Sync (RoundRunner: Sync) and its lifetime is
+// managed by the run/in_round protocol above.
+unsafe impl Send for RunnerPtr {}
+unsafe impl Sync for RunnerPtr {}
+
+#[derive(Clone, Copy)]
+struct Job {
+    runner: RunnerPtr,
+    n_units: usize,
+}
+
+/// Condvar-protected submission state.
+struct Gate {
+    /// Bumped per submit; a worker joins a job only when the epoch moved
+    /// past the last one it ran (prevents re-entering a finished round).
+    epoch: u64,
+    job: Option<Job>,
+    /// Workers currently inside the round (joined, not yet exited). `run`
+    /// waits for 0 before collecting results and resetting the injector.
+    in_round: usize,
+    shutdown: bool,
+}
+
+struct PoolShared {
+    gate: Mutex<Gate>,
+    /// Workers park here between rounds.
+    work_cv: Condvar,
+    /// `run` waits here for round completion.
+    done_cv: Condvar,
+    /// The injector: next unscheduled unit index of the current round.
+    cursor: AtomicUsize,
+    /// Units finished so far in the current round.
+    completed: AtomicUsize,
+    parks: AtomicU64,
+    unparks: AtomicU64,
+    /// Per-worker units pulled this round (reset at submit).
+    pulled_round: Vec<AtomicU64>,
+    /// Per-worker busy nanoseconds this round (reset at submit).
+    busy_round_nanos: Vec<AtomicU64>,
+}
+
+fn worker_loop(shared: &PoolShared, id: usize) {
+    let mut ctx = WorkerContext::new(id);
+    let mut last_epoch = 0u64;
+    loop {
+        let job = {
+            let mut gate = shared.gate.lock().expect("pool gate");
+            loop {
+                if gate.shutdown {
+                    return;
+                }
+                match gate.job {
+                    Some(job) if gate.epoch != last_epoch => {
+                        last_epoch = gate.epoch;
+                        gate.in_round += 1;
+                        break job;
+                    }
+                    _ => {
+                        shared.parks.fetch_add(1, Ordering::Relaxed);
+                        gate = shared.work_cv.wait(gate).expect("pool gate");
+                        shared.unparks.fetch_add(1, Ordering::Relaxed);
+                    }
+                }
+            }
+        };
+        loop {
+            let idx = shared.cursor.fetch_add(1, Ordering::SeqCst);
+            if idx >= job.n_units {
+                break;
+            }
+            shared.pulled_round[id].fetch_add(1, Ordering::Relaxed);
+            let t0 = Instant::now();
+            // SAFETY: idx < n_units is handed out exactly n_units times and
+            // `run` holds the Round alive until in_round drops to 0, which
+            // this worker only allows after leaving this loop.
+            unsafe { (*job.runner.0).run_unit(&mut ctx, idx) };
+            shared.busy_round_nanos[id]
+                .fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            shared.completed.fetch_add(1, Ordering::SeqCst);
+        }
+        let mut gate = shared.gate.lock().expect("pool gate");
+        gate.in_round -= 1;
+        drop(gate);
+        shared.done_cv.notify_all();
+    }
 }
 
 /// Fixed-width pool of engine workers (width chosen at scheduler build).
-#[derive(Debug, Clone)]
 pub struct WorkerPool {
     workers: usize,
+    mode: PoolMode,
+    /// Present only for a multi-worker persistent pool.
+    shared: Option<Arc<PoolShared>>,
+    handles: Vec<JoinHandle<()>>,
+    /// Serializes concurrent `run` calls in persistent mode (one round in
+    /// flight at a time — the injector/slot state is single-round).
+    round_lock: Mutex<()>,
+    /// The serving thread's context: serial fallbacks and the scheduler's
+    /// sequential arms run with it, getting the same scratch reuse and
+    /// device binding as pool workers.
+    serial_ctx: Mutex<WorkerContext>,
+}
+
+impl fmt::Debug for WorkerPool {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.debug_struct("WorkerPool")
+            .field("workers", &self.workers)
+            .field("mode", &self.mode)
+            .field("live_workers", &self.handles.len())
+            .finish()
+    }
 }
 
 impl WorkerPool {
     pub fn new(workers: usize) -> WorkerPool {
-        WorkerPool { workers: workers.max(1) }
+        WorkerPool::with_mode(workers, PoolMode::from_env())
+    }
+
+    pub fn with_mode(workers: usize, mode: PoolMode) -> WorkerPool {
+        let workers = workers.max(1);
+        let mut pool = WorkerPool {
+            workers,
+            mode,
+            shared: None,
+            handles: Vec::new(),
+            round_lock: Mutex::new(()),
+            serial_ctx: Mutex::new(WorkerContext::new(0)),
+        };
+        if mode == PoolMode::Persistent && workers > 1 {
+            let shared = Arc::new(PoolShared {
+                gate: Mutex::new(Gate { epoch: 0, job: None, in_round: 0, shutdown: false }),
+                work_cv: Condvar::new(),
+                done_cv: Condvar::new(),
+                cursor: AtomicUsize::new(0),
+                completed: AtomicUsize::new(0),
+                parks: AtomicU64::new(0),
+                unparks: AtomicU64::new(0),
+                pulled_round: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+                busy_round_nanos: (0..workers).map(|_| AtomicU64::new(0)).collect(),
+            });
+            for id in 0..workers {
+                let sh = Arc::clone(&shared);
+                let handle = std::thread::Builder::new()
+                    .name(format!("lava-worker-{id}"))
+                    .spawn(move || worker_loop(&sh, id))
+                    .expect("spawn pool worker");
+                pool.handles.push(handle);
+            }
+            pool.shared = Some(shared);
+        }
+        pool
     }
 
     /// Configured width.
@@ -46,18 +430,195 @@ impl WorkerPool {
         self.workers
     }
 
+    /// Active dispatcher.
+    pub fn mode(&self) -> PoolMode {
+        self.mode
+    }
+
+    /// Live persistent worker threads (0 in scoped mode / at width 1).
+    pub fn live_workers(&self) -> usize {
+        self.handles.len()
+    }
+
+    /// Run `f` with the serving-thread worker context (the one serial
+    /// arms and width-1 rounds use).
+    pub fn with_serial_ctx<R>(&self, f: impl FnOnce(&mut WorkerContext) -> R) -> R {
+        let mut guard = self.serial_ctx.lock().expect("serial context");
+        let ctx: &mut WorkerContext = &mut guard;
+        f(ctx)
+    }
+
     /// Run `f` over every unit, fanning out across the pool; results come
     /// back in unit order. `f` must be independent per unit (each unit is
-    /// owned by exactly one worker).
-    pub fn run<T, R, F>(&self, units: Vec<T>, f: F) -> (Vec<R>, RoundStats)
+    /// owned by exactly one worker). A unit that panics yields
+    /// `Err(message)` in its slot; the rest of the round completes and
+    /// the pool keeps serving.
+    pub fn run<T, R, F>(&self, units: Vec<T>, f: F) -> (Vec<UnitResult<R>>, RoundStats)
     where
         T: Send,
         R: Send,
-        F: Fn(T) -> R + Sync,
+        F: Fn(&mut WorkerContext, T) -> R + Sync,
     {
-        let t0 = std::time::Instant::now();
-        let (results, busy_secs) = par::scoped_map_timed(units, f, self.workers);
-        (results, RoundStats { busy_secs, wall_secs: t0.elapsed().as_secs_f64() })
+        match self.mode {
+            PoolMode::Scoped => self.run_scoped(units, f),
+            PoolMode::Persistent if self.shared.is_none() || units.len() <= 1 => {
+                self.run_serial(units, f)
+            }
+            PoolMode::Persistent => self.run_persistent(units, f),
+        }
+    }
+
+    fn run_serial<T, R, F>(&self, units: Vec<T>, f: F) -> (Vec<UnitResult<R>>, RoundStats)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(&mut WorkerContext, T) -> R + Sync,
+    {
+        let n = units.len();
+        let t0 = Instant::now();
+        let mut guard = self.serial_ctx.lock().expect("serial context");
+        let ctx: &mut WorkerContext = &mut guard;
+        let results: Vec<UnitResult<R>> = units
+            .into_iter()
+            .map(|u| catch_unwind(AssertUnwindSafe(|| f(&mut *ctx, u))).map_err(panic_message))
+            .collect();
+        drop(guard);
+        let wall = t0.elapsed().as_secs_f64();
+        let (parks, unparks) = self.lifetime_parks();
+        let stats = RoundStats {
+            busy_secs: vec![wall],
+            wall_secs: wall,
+            pulled: vec![n as u64],
+            queued_units: n,
+            parks,
+            unparks,
+            dispatch_secs: 0.0,
+        };
+        (results, stats)
+    }
+
+    fn run_scoped<T, R, F>(&self, units: Vec<T>, f: F) -> (Vec<UnitResult<R>>, RoundStats)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(&mut WorkerContext, T) -> R + Sync,
+    {
+        let n = units.len();
+        let t0 = Instant::now();
+        let (results, busy_secs) = par::scoped_map_timed(
+            units,
+            |u| {
+                // the oracle has no persistent workers: a throwaway context
+                // per unit (slot 0 — scoped threads process several units,
+                // and device pinning is per-thread consistency)
+                let mut ctx = WorkerContext::new(0);
+                catch_unwind(AssertUnwindSafe(|| f(&mut ctx, u))).map_err(panic_message)
+            },
+            self.workers,
+        );
+        let wall = t0.elapsed().as_secs_f64();
+        let max_busy = busy_secs.iter().cloned().fold(0.0f64, f64::max);
+        let stats = RoundStats {
+            busy_secs,
+            wall_secs: wall,
+            pulled: vec![],
+            queued_units: n,
+            parks: 0,
+            unparks: 0,
+            dispatch_secs: (wall - max_busy).max(0.0),
+        };
+        (results, stats)
+    }
+
+    fn run_persistent<T, R, F>(&self, units: Vec<T>, f: F) -> (Vec<UnitResult<R>>, RoundStats)
+    where
+        T: Send,
+        R: Send,
+        F: Fn(&mut WorkerContext, T) -> R + Sync,
+    {
+        let shared = self.shared.as_ref().expect("persistent pool state");
+        let _round = self.round_lock.lock().expect("round lock");
+        let n = units.len();
+        let round = Round::new(&f, units);
+        let runner: *const (dyn RoundRunner + '_) = &round;
+        // SAFETY: lifetime erasure only — the wait below keeps `round`
+        // alive past the last worker dereference.
+        #[allow(clippy::useless_transmute)] // only the region changes
+        let ptr = RunnerPtr(unsafe {
+            std::mem::transmute::<
+                *const (dyn RoundRunner + '_),
+                *const (dyn RoundRunner + 'static),
+            >(runner)
+        });
+        for a in &shared.pulled_round {
+            a.store(0, Ordering::Relaxed);
+        }
+        for a in &shared.busy_round_nanos {
+            a.store(0, Ordering::Relaxed);
+        }
+        shared.cursor.store(0, Ordering::SeqCst);
+        shared.completed.store(0, Ordering::SeqCst);
+        let t0 = Instant::now();
+        {
+            let mut gate = shared.gate.lock().expect("pool gate");
+            gate.epoch += 1;
+            gate.job = Some(Job { runner: ptr, n_units: n });
+            shared.work_cv.notify_all();
+        }
+        {
+            let mut gate = shared.gate.lock().expect("pool gate");
+            while gate.in_round > 0 || shared.completed.load(Ordering::SeqCst) < n {
+                gate = shared.done_cv.wait(gate).expect("pool gate");
+            }
+            // late wakers must park, not re-join a dead round
+            gate.job = None;
+        }
+        let wall = t0.elapsed().as_secs_f64();
+        let busy_secs: Vec<f64> = shared
+            .busy_round_nanos
+            .iter()
+            .map(|a| a.load(Ordering::Relaxed) as f64 * 1e-9)
+            .collect();
+        let pulled: Vec<u64> =
+            shared.pulled_round.iter().map(|a| a.load(Ordering::Relaxed)).collect();
+        let max_busy = busy_secs.iter().cloned().fold(0.0f64, f64::max);
+        let stats = RoundStats {
+            busy_secs,
+            wall_secs: wall,
+            pulled,
+            queued_units: n,
+            parks: shared.parks.load(Ordering::Relaxed),
+            unparks: shared.unparks.load(Ordering::Relaxed),
+            dispatch_secs: (wall - max_busy).max(0.0),
+        };
+        (round.into_results(), stats)
+    }
+
+    fn lifetime_parks(&self) -> (u64, u64) {
+        match &self.shared {
+            Some(s) => (s.parks.load(Ordering::Relaxed), s.unparks.load(Ordering::Relaxed)),
+            None => (0, 0),
+        }
+    }
+
+    #[cfg(test)]
+    fn shared_weak(&self) -> Option<std::sync::Weak<PoolShared>> {
+        self.shared.as_ref().map(Arc::downgrade)
+    }
+}
+
+impl Drop for WorkerPool {
+    fn drop(&mut self) {
+        if let Some(shared) = self.shared.take() {
+            {
+                let mut gate = shared.gate.lock().expect("pool gate");
+                gate.shutdown = true;
+            }
+            shared.work_cv.notify_all();
+            for h in self.handles.drain(..) {
+                let _ = h.join();
+            }
+        }
     }
 }
 
@@ -65,26 +626,131 @@ impl WorkerPool {
 mod tests {
     use super::*;
 
+    const MODES: [PoolMode; 2] = [PoolMode::Persistent, PoolMode::Scoped];
+
     #[test]
     fn results_stay_in_plan_order() {
-        for width in [1usize, 2, 4, 9] {
-            let pool = WorkerPool::new(width);
-            assert_eq!(pool.workers(), width);
-            let units: Vec<usize> = (0..23).collect();
-            let (out, stats) = pool.run(units, |u| u * u);
-            assert_eq!(out, (0..23).map(|u| u * u).collect::<Vec<_>>(), "width {width}");
-            assert!(!stats.busy_secs.is_empty());
-            assert!(stats.busy_secs.len() <= width);
-            assert!(stats.wall_secs >= 0.0);
+        for mode in MODES {
+            for width in [1usize, 2, 4, 9] {
+                let pool = WorkerPool::with_mode(width, mode);
+                assert_eq!(pool.workers(), width);
+                let units: Vec<usize> = (0..23).collect();
+                let (out, stats) = pool.run(units, |_ctx, u| u * u);
+                let got: Vec<usize> = out.into_iter().map(|r| r.expect("no panics")).collect();
+                assert_eq!(
+                    got,
+                    (0..23).map(|u| u * u).collect::<Vec<_>>(),
+                    "{mode:?} width {width}"
+                );
+                assert_eq!(stats.queued_units, 23);
+                assert!(!stats.busy_secs.is_empty());
+                assert!(stats.wall_secs >= 0.0);
+                if mode == PoolMode::Persistent && width > 1 {
+                    assert_eq!(stats.busy_secs.len(), width);
+                    assert_eq!(stats.pulled.len(), width);
+                    assert_eq!(stats.pulled.iter().sum::<u64>(), 23, "every unit pulled once");
+                }
+            }
         }
     }
 
     #[test]
     fn zero_width_clamps_to_one() {
-        let pool = WorkerPool::new(0);
+        let pool = WorkerPool::with_mode(0, PoolMode::Persistent);
         assert_eq!(pool.workers(), 1);
-        let (out, stats) = pool.run(vec![1, 2, 3], |u| u + 1);
-        assert_eq!(out, vec![2, 3, 4]);
+        assert_eq!(pool.live_workers(), 0, "width 1 runs serial, no threads");
+        let (out, stats) = pool.run(vec![1, 2, 3], |_ctx, u| u + 1);
+        let got: Vec<i32> = out.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(got, vec![2, 3, 4]);
         assert_eq!(stats.busy_secs.len(), 1, "serial fallback");
+    }
+
+    #[test]
+    fn panicking_unit_fails_alone_and_pool_keeps_serving() {
+        for mode in MODES {
+            for width in [1usize, 3] {
+                let pool = WorkerPool::with_mode(width, mode);
+                let units: Vec<usize> = (0..8).collect();
+                let (out, _) = pool.run(units, |_ctx, u| {
+                    if u == 5 {
+                        panic!("poisoned unit {u}");
+                    }
+                    u + 1
+                });
+                for (i, r) in out.iter().enumerate() {
+                    if i == 5 {
+                        let msg = r.as_ref().expect_err("unit 5 must fail");
+                        assert!(msg.contains("poisoned unit 5"), "{mode:?}: got {msg:?}");
+                    } else {
+                        assert_eq!(*r.as_ref().expect("healthy unit"), i + 1, "{mode:?}");
+                    }
+                }
+                // the same pool (same threads, same contexts) keeps serving
+                let (out, _) = pool.run(vec![10usize, 20], |_ctx, u| u * 2);
+                let got: Vec<usize> = out.into_iter().map(|r| r.unwrap()).collect();
+                assert_eq!(got, vec![20, 40], "{mode:?} width {width}");
+            }
+        }
+    }
+
+    #[test]
+    fn worker_ids_stay_within_width() {
+        let pool = WorkerPool::with_mode(4, PoolMode::Persistent);
+        let (out, _) = pool.run((0..32).collect::<Vec<usize>>(), |ctx, _u| ctx.worker_id);
+        for r in out {
+            assert!(r.unwrap() < 4);
+        }
+    }
+
+    #[test]
+    fn serial_context_scratch_is_reused_across_rounds() {
+        let pool = WorkerPool::with_mode(1, PoolMode::Persistent);
+        let grab = |pool: &WorkerPool| -> usize {
+            let (out, _) = pool.run(vec![()], |ctx: &mut WorkerContext, ()| {
+                let slots = ctx.scratch.dequant_slots(2, &[2, 3, 4]);
+                slots[1].0.as_f32().expect("f32 scratch").as_ptr() as usize
+            });
+            out.into_iter().next().unwrap().unwrap()
+        };
+        assert_eq!(grab(&pool), grab(&pool), "same allocation across rounds");
+    }
+
+    #[test]
+    fn dequant_slots_keep_shape_exact() {
+        let mut ws = WorkerScratch::default();
+        let slots = ws.dequant_slots(2, &[1, 2, 2]);
+        assert_eq!(slots.len(), 2);
+        assert_eq!(slots[0].0.shape, vec![1, 2, 2]);
+        slots[0].0.as_f32_mut().unwrap()[0] = 7.0;
+        let slots = ws.dequant_slots(1, &[1, 2, 2]);
+        assert_eq!(slots[0].0.as_f32().unwrap()[0], 7.0, "same shape keeps the buffer");
+        let slots = ws.dequant_slots(1, &[2, 2, 2]);
+        assert_eq!(slots[0].0.shape, vec![2, 2, 2], "backends read the exact shape");
+        assert_eq!(slots[0].0.as_f32().unwrap()[0], 0.0, "reshape reallocates zeroed");
+    }
+
+    #[test]
+    fn drop_joins_workers_and_frees_shared_state() {
+        let pool = WorkerPool::with_mode(4, PoolMode::Persistent);
+        assert_eq!(pool.live_workers(), 4);
+        let weak = pool.shared_weak().expect("persistent pool has shared state");
+        let (out, _) = pool.run((0..9).collect::<Vec<usize>>(), |_ctx, u| u);
+        assert_eq!(out.len(), 9);
+        drop(pool);
+        // every worker held an Arc clone; upgrade failing proves they all
+        // exited and were joined (no leaked threads, nothing left queued)
+        assert!(weak.upgrade().is_none(), "drop must join every worker");
+    }
+
+    #[test]
+    fn scoped_oracle_matches_persistent_results() {
+        let persistent = WorkerPool::with_mode(4, PoolMode::Persistent);
+        let scoped = WorkerPool::with_mode(4, PoolMode::Scoped);
+        let work = |_: &mut WorkerContext, u: usize| (u, u * 31 % 7);
+        let (a, _) = persistent.run((0..17).collect::<Vec<usize>>(), work);
+        let (b, _) = scoped.run((0..17).collect::<Vec<usize>>(), work);
+        let a: Vec<_> = a.into_iter().map(|r| r.unwrap()).collect();
+        let b: Vec<_> = b.into_iter().map(|r| r.unwrap()).collect();
+        assert_eq!(a, b);
     }
 }

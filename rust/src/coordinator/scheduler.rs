@@ -30,6 +30,29 @@
 //! One request id, assigned by the batcher at `submit`, names the request
 //! end-to-end: queue entry, session, and `GenerateResult`.
 //!
+//! ## Worker pool dataflow
+//!
+//! All three fan-outs (prefill batches, stream lockstep groups, decode
+//! round units) run on one persistent [`WorkerPool`], built once at
+//! [`Scheduler::new`] and joined on drop — no per-tick thread spawns. A
+//! round is: **submit** the planned units into the pool's injector (an
+//! atomic cursor over the plan), wake the parked workers, and let each
+//! worker **pull** the next un-taken unit whenever it finishes one —
+//! dynamic load balancing, so an imbalanced plan (one fat bucket group +
+//! many small ones) never idles a worker behind a static chunk. Every
+//! worker owns a `WorkerContext` — stable id, pinned backend device slot,
+//! reusable score/dequant scratch — threaded into each engine call. Results
+//! are written back into pre-sized **slots by unit index**, so merge order
+//! is plan order and outputs are bit-identical at every width and in both
+//! pool modes (`SchedulerOptions::pool_mode`; `LAVA_POOL=scoped` keeps the
+//! legacy scoped fan-out as the equivalence oracle). A unit that panics
+//! poisons only itself: its request fails with an explicit result
+//! ([`Scheduler::fail_lost`]) and the round's other units keep serving.
+//! Serial arms (width 1, tiered decode, budgeted chunked advances) run the
+//! same engine calls under the pool's serving-thread context
+//! (`WorkerPool::with_serial_ctx`), so scratch reuse and device binding
+//! behave identically on and off the pool.
+//!
 //! ## KV tiering and the tier thread
 //!
 //! With `tiering` on (the default), `kv_mem_limit` bounds only the *hot*
@@ -128,7 +151,7 @@ use anyhow::{anyhow, Result};
 use super::batcher::{Batcher, QueuedRequest};
 use super::engine::{Engine, FinishStatus, GenerateRequest, GenerateResult, PrefillReport};
 use super::metrics::{Metrics, MetricsSnapshot};
-use super::pool::WorkerPool;
+use super::pool::{PoolMode, WorkerPool};
 use super::session::Session;
 use crate::kvcache::tier::{Residency, TierClient};
 use crate::model::backend::ModelBackend;
@@ -192,6 +215,13 @@ pub struct SchedulerOptions {
     /// Ignored without `prefill_chunk`. The default honors
     /// `LAVA_PREFILL_STREAM` (unset or 0 = off).
     pub prefill_stream_evict: bool,
+    /// Which dispatcher the worker pool uses: the persistent spawn-free
+    /// pool (the default) or the legacy per-round `std::thread::scope`
+    /// fan-out kept as the bit-equivalence oracle. Results are identical
+    /// in both modes at every width; only dispatch overhead changes. The
+    /// default honors `LAVA_POOL` (CI runs the suite once more with
+    /// `scoped`).
+    pub pool_mode: PoolMode,
 }
 
 fn default_workers() -> usize {
@@ -263,6 +293,7 @@ impl Default for SchedulerOptions {
             prefill_chunk: default_prefill_chunk(),
             prefill_chunk_budget: None,
             prefill_stream_evict: default_prefill_stream(),
+            pool_mode: PoolMode::from_env(),
         }
     }
 }
@@ -390,7 +421,7 @@ pub struct Scheduler<B: ModelBackend> {
 impl<B: ModelBackend> Scheduler<B> {
     pub fn new(engine: Engine<B>, opts: SchedulerOptions) -> Scheduler<B> {
         let queue = Batcher::new(engine.backend.prefill_buckets());
-        let pool = WorkerPool::new(opts.workers);
+        let pool = WorkerPool::with_mode(opts.workers, opts.pool_mode);
         Scheduler {
             engine,
             queue,
@@ -543,8 +574,9 @@ impl<B: ModelBackend> Scheduler<B> {
     ///   at the working cap, but still O(prompt) hidden rows;
     /// * chunk-major streaming (the streaming default) — L lanes bounded
     ///   at the cap plus one chunk of hidden rows: flat in prompt length.
-    ///   With `carry_q8` the lanes shrink to int8 codes + scales and one
-    ///   shared f32 dequantization scratch is added.
+    ///   With `carry_q8` the lanes shrink to int8 codes + scales (the f32
+    ///   dequantization buffer lives on the executing worker's context,
+    ///   amortized across every session, so it is not priced per request).
     ///
     /// Per-column constants mirror the engine's stream-lane accounting;
     /// the chunk/prefill *buckets* are approximated by the configured
@@ -567,14 +599,12 @@ impl<B: ModelBackend> Scheduler<B> {
         match streamed_cap {
             Some(cap) if !self.engine.opts.stream_layer_major => {
                 let chunk_rows = self.opts.prefill_chunk.unwrap_or(0).min(prompt_len);
-                let (lane_carry, scratch) = if self.engine.opts.carry_q8 {
-                    (2 * hk * cap * (dh + 4), cap * carry_col)
+                let lane_carry = if self.engine.opts.carry_q8 {
+                    2 * hk * cap * (dh + 4)
                 } else {
-                    (cap * carry_col, 0)
+                    cap * carry_col
                 };
-                cfg.n_layers * (lane_carry + cap * panel_col)
-                    + scratch
-                    + 2 * chunk_rows * d * 4
+                cfg.n_layers * (lane_carry + cap * panel_col) + 2 * chunk_rows * d * 4
             }
             Some(cap) => cap * (carry_col + panel_col) + 2 * prompt_len * d * 4,
             None => prompt_len * (carry_col + panel_col) + 2 * prompt_len * d * 4,
@@ -746,24 +776,29 @@ impl<B: ModelBackend> Scheduler<B> {
                     (q, wait_secs, sess)
                 })
                 .collect();
+            // a panicking unit drops its request + session in the unwind;
+            // only the id survives to name the failure result
+            let ids: Vec<u64> = units.iter().map(|(q, _, _)| q.id).collect();
             let worker = self.engine.worker();
-            let (results, stats) = self.pool.run(units, |(q, wait_secs, mut sess)| {
-                let res = worker.prefill(&mut sess);
+            let (results, stats) = self.pool.run(units, |ctx, (q, wait_secs, mut sess)| {
+                let res = worker.prefill(ctx, &mut sess);
                 (q, wait_secs, sess, res)
             });
-            self.engine.metrics.observe_worker_round(
-                self.pool.workers(),
-                &stats.busy_secs,
-                stats.wall_secs,
-            );
-            for (q, wait_secs, sess, res) in results {
-                done += self.merge_prefill(q, wait_secs, sess, res);
+            self.engine.metrics.observe_worker_round(self.pool.workers(), &stats);
+            for (id, unit) in ids.into_iter().zip(results) {
+                match unit {
+                    Ok((q, wait_secs, sess, res)) => {
+                        done += self.merge_prefill(q, wait_secs, sess, res);
+                    }
+                    Err(reason) => self.fail_lost(id, &reason),
+                }
             }
         } else {
             for q in batch {
                 let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
                 let mut sess = self.engine.new_session_with_id(q.id, &q.request);
-                let res = self.engine.worker().prefill(&mut sess);
+                let worker = self.engine.worker();
+                let res = self.pool.with_serial_ctx(|ctx| worker.prefill(ctx, &mut sess));
                 done += self.merge_prefill(q, wait_secs, sess, res);
             }
         }
@@ -796,7 +831,8 @@ impl<B: ModelBackend> Scheduler<B> {
             }
             let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
             let mut sess = self.engine.new_session_with_id(q.id, &q.request);
-            let res = self.engine.worker().prefill(&mut sess);
+            let worker = self.engine.worker();
+            let res = self.pool.with_serial_ctx(|ctx| worker.prefill(ctx, &mut sess));
             return self.merge_prefill(q, wait_secs, sess, res);
         }
         let wait_secs = q.enqueued_at.elapsed().as_secs_f64();
@@ -813,7 +849,9 @@ impl<B: ModelBackend> Scheduler<B> {
                 worker.begin_chunked_prefill(&mut sess, chunk)
             };
             let res = begun.and_then(|()| {
-                let (_, report) = worker.advance_chunked_prefill(&mut sess, None)?;
+                let (_, report) = self
+                    .pool
+                    .with_serial_ctx(|ctx| worker.advance_chunked_prefill(ctx, &mut sess, None))?;
                 report.ok_or_else(|| anyhow!("unbounded advance must complete the prefill"))
             });
             return self.merge_prefill(q, wait_secs, sess, res);
@@ -888,7 +926,10 @@ impl<B: ModelBackend> Scheduler<B> {
                 .as_ref()
                 .map(|st| (st.wait_secs, st.enqueued_at))
                 .unwrap_or((0.0, sess.queued_at));
-            let res = self.engine.worker().advance_chunked_prefill(&mut sess, Some(budget));
+            let worker = self.engine.worker();
+            let res = self.pool.with_serial_ctx(|ctx| {
+                worker.advance_chunked_prefill(ctx, &mut sess, Some(budget))
+            });
             match res {
                 Ok((worked, report)) => {
                     budget = budget.saturating_sub(worked);
@@ -967,19 +1008,28 @@ impl<B: ModelBackend> Scheduler<B> {
                     .collect()
             })
             .collect();
+        // a panicking group drops its sessions in the unwind (they were
+        // never in `hot_bytes` mid-prefill); keep the ids for the results
+        let group_ids: Vec<Vec<u64>> =
+            groups.iter().map(|(_, g)| g.iter().map(|s| s.id).collect()).collect();
         let worker = self.engine.worker();
-        let (outcomes, stats) = self.pool.run(groups, |(_key, mut group)| {
-            let res = worker.advance_stream_group(&mut group);
+        let (outcomes, stats) = self.pool.run(groups, |ctx, (_key, mut group)| {
+            let res = worker.advance_stream_group(ctx, &mut group);
             (group, res)
         });
-        self.engine.metrics.observe_worker_round(
-            self.pool.workers(),
-            &stats.busy_secs,
-            stats.wall_secs,
-        );
+        self.engine.metrics.observe_worker_round(self.pool.workers(), &stats);
         let mut survivors: Vec<Session> = Vec::new();
         let mut advanced = 0usize;
-        for (group_timings, (group, res)) in timings.into_iter().zip(outcomes) {
+        for ((group_timings, ids), unit) in timings.into_iter().zip(group_ids).zip(outcomes) {
+            let (group, res) = match unit {
+                Ok(pair) => pair,
+                Err(reason) => {
+                    for id in ids {
+                        self.fail_lost(id, &reason);
+                    }
+                    continue;
+                }
+            };
             match res {
                 Ok((results, dispatches)) => {
                     self.engine.metrics.observe_prefill_chunk_batch(group.len(), dispatches);
@@ -1119,23 +1169,35 @@ impl<B: ModelBackend> Scheduler<B> {
                     self.hot_bytes -= s.kv_bytes();
                 }
             }
+            // a panicking unit drops its sessions in the unwind — their
+            // bytes are already checked out, so nothing re-enters
+            // `hot_bytes`; the ids name the failure results
+            let unit_ids: Vec<Vec<u64>> = parallel
+                .iter()
+                .map(|u| u.sessions().iter().map(|s| s.id).collect())
+                .collect();
             let worker = self.engine.worker();
-            let (results, stats) = self.pool.run(parallel, |unit| match unit {
+            let (results, stats) = self.pool.run(parallel, |ctx, unit| match unit {
                 RoundUnit::Group(mut group) => {
-                    let res = worker.decode_step_batch(&mut group);
+                    let res = worker.decode_step_batch(ctx, &mut group);
                     (RoundUnit::Group(group), res)
                 }
                 RoundUnit::One(mut sess) => {
-                    let res = worker.decode_step(&mut sess);
+                    let res = worker.decode_step(ctx, &mut sess);
                     (RoundUnit::One(sess), res)
                 }
             });
-            self.engine.metrics.observe_worker_round(
-                self.pool.workers(),
-                &stats.busy_secs,
-                stats.wall_secs,
-            );
-            for (unit, res) in results {
+            self.engine.metrics.observe_worker_round(self.pool.workers(), &stats);
+            for (ids, outcome) in unit_ids.into_iter().zip(results) {
+                let (unit, res) = match outcome {
+                    Ok(pair) => pair,
+                    Err(reason) => {
+                        for id in ids {
+                            self.fail_lost(id, &reason);
+                        }
+                        continue;
+                    }
+                };
                 let sessions = unit.into_sessions();
                 match res {
                     Ok(report) => {
@@ -1414,6 +1476,35 @@ impl<B: ModelBackend> Scheduler<B> {
             active_sessions: self.active.len() + self.prefilling.len(),
             queued_requests: self.queue.len(),
         }
+    }
+
+    /// Terminal result for a request whose session was lost inside a
+    /// panicking work unit. The unwind already dropped the session — its
+    /// bytes were checked out of `hot_bytes` before the fan-out (decode)
+    /// or never checked in (prefill) — so only the bookkeeping that needs
+    /// no session runs: tier teardown, gauge refresh, and a `Failed`
+    /// result. The rest of the round keeps serving
+    /// (`tests/sharded_decode.rs` regression-tests one poisoned session
+    /// among healthy ones).
+    fn fail_lost(&mut self, id: u64, reason: &str) {
+        self.tier.drop_session(id);
+        self.engine.metrics.observe_warm(self.tier.warm_bytes());
+        self.engine.metrics.observe_hot(self.hot_bytes);
+        self.engine.metrics.requests_failed += 1;
+        self.finished.push((
+            id,
+            GenerateResult {
+                id,
+                status: FinishStatus::Failed,
+                error: Some(format!("work unit panicked: {reason}")),
+                tokens: vec![],
+                prefill_secs: 0.0,
+                decode_secs: 0.0,
+                kv_bytes_after_prefill: 0,
+                peak_kv_bytes: self.engine.metrics.peak_kv_bytes,
+                budgets: vec![],
+            },
+        ));
     }
 
     /// Park a queued request with a terminal non-completed result.

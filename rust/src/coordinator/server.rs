@@ -491,6 +491,17 @@ fn metrics_json(snap: &MetricsSnapshot) -> Json {
             "worker_busy_secs",
             Json::Arr(m.worker_busy_secs.iter().map(|&b| Json::num(b)).collect()),
         ),
+        // persistent pool: units pulled per slot (work-stealing balance),
+        // deepest injector queue, lifetime park/unpark churn, and the
+        // mean per-round dispatch overhead the spawn-free path shrinks
+        (
+            "worker_units",
+            Json::Arr(m.worker_units.iter().map(|&n| Json::num(n as f64)).collect()),
+        ),
+        ("pool_queue_depth_peak", Json::num(m.pool_queue_depth_peak as f64)),
+        ("pool_parks", Json::num(m.pool_parks as f64)),
+        ("pool_unparks", Json::num(m.pool_unparks as f64)),
+        ("pool_dispatch_ms_mean", Json::num(m.mean_dispatch_overhead_ms())),
         // tier thread: command-queue backlogs (sampled at tick end),
         // their observed peak, and background quantize/dequantize time
         ("tier_spill_queue_depth", Json::num(m.tier_spill_queue_depth as f64)),
@@ -766,6 +777,13 @@ mod tests {
         // worker-pool + tier-thread gauges are always present
         assert!(m.get("workers").unwrap().as_f64().unwrap() >= 1.0);
         assert!(m.get("worker_utilization").unwrap().as_f64().unwrap() >= 0.0);
+        // persistent-pool gauges are present even when the serving loop
+        // never fanned out (all zero then)
+        assert!(m.get("worker_units").unwrap().as_arr().is_some());
+        assert!(m.get("pool_queue_depth_peak").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(m.get("pool_parks").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(m.get("pool_unparks").unwrap().as_f64().unwrap() >= 0.0);
+        assert!(m.get("pool_dispatch_ms_mean").unwrap().as_f64().unwrap() >= 0.0);
         assert_eq!(m.get("tier_spill_queue_depth").unwrap().as_usize().unwrap(), 0);
         assert_eq!(m.get("tier_prefetch_queue_depth").unwrap().as_usize().unwrap(), 0);
         assert!(m.get("tier_busy_ms").unwrap().as_f64().unwrap() >= 0.0);

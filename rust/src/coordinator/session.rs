@@ -123,8 +123,10 @@ pub struct StreamLayer {
     pub carry_v: Tensor,
     /// Q8-quantized carry (chunk-major only, `carry_q8`): between chunk
     /// passes the compacted columns are held as int8 codes + per-(head,
-    /// column) scales; at dispatch they dequantize into the shared
-    /// [`StreamPrefill::scratch_k`]/`scratch_v` pair.
+    /// column) scales; at dispatch they dequantize into the executing
+    /// worker's dequant arena
+    /// ([`WorkerScratch`](crate::coordinator::pool::WorkerScratch)), so the
+    /// f32 working pair is per-worker, not per-session.
     pub q8: Option<Q8Carry>,
 }
 
@@ -206,12 +208,6 @@ pub struct StreamPrefill {
     pub chunk_major: bool,
     /// Per-layer lanes (length = n_layers when chunk-major, else 1).
     pub layers: Vec<StreamLayer>,
-    /// Shared f32 dequantization scratch `[Hk, cap, dh]` for Q8 lanes —
-    /// one pair per session, reused by every lane in a pass (a lane's
-    /// dequantized carry is only needed for the duration of its own
-    /// dispatch + compaction). Zero-width when Q8 is off.
-    pub scratch_k: Tensor,
-    pub scratch_v: Tensor,
     /// Peak live columns in any one lane across the whole prefill — drives
     /// the bounded carry-transient gauge (flat in prompt length, unlike the
     /// plain chunked carry).
@@ -236,22 +232,13 @@ impl StreamPrefill {
                 }
             })
             .collect();
-        let scratch_shape = if q8 { [n_kv_heads, cap, d_head] } else { [n_kv_heads, 0, d_head] };
-        StreamPrefill {
-            cap,
-            chunk_major,
-            layers,
-            scratch_k: Tensor::zeros(&scratch_shape),
-            scratch_v: Tensor::zeros(&scratch_shape),
-            max_live_cols: 0,
-        }
+        StreamPrefill { cap, chunk_major, layers, max_live_cols: 0 }
     }
 
-    /// Bytes of the shared Q8 dequantization scratch (zero when Q8 is off).
-    pub fn scratch_bytes(&self) -> usize {
-        (self.scratch_k.shape.iter().product::<usize>()
-            + self.scratch_v.shape.iter().product::<usize>())
-            * 4
+    /// Whether the lanes hold Q8 carries (the executing worker then sizes
+    /// its dequant arena at `[Hk, cap, dh]` per lane member at dispatch).
+    pub fn q8(&self) -> bool {
+        self.layers.first().is_some_and(|l| l.q8.is_some())
     }
 }
 

@@ -18,6 +18,8 @@
 //! form — the engine treats the two paths as interchangeable and the
 //! `batched_decode` equivalence suite enforces it per backend.
 
+use std::sync::Mutex;
+
 use anyhow::{anyhow, Result};
 
 use super::{Manifest, ModelConfig, Weights};
@@ -290,6 +292,24 @@ pub trait ModelBackend: Send + Sync {
     ) -> Result<Option<Vec<Vec<f32>>>> {
         Ok(None)
     }
+
+    /// Distinct accelerator device slots persistent-pool workers can pin
+    /// (1 = one shared device). Workers bind their stable `worker_id` as
+    /// the slot; backends map it onto this count (`slot % device_count()`).
+    fn device_count(&self) -> usize {
+        1
+    }
+
+    /// Pin the calling thread to device slot `slot % device_count()`.
+    /// The engine calls this lazily, once per [`WorkerContext`] before its
+    /// first dispatch, so a PJRT backend can bind one device per pool
+    /// worker. Contract: the pool never asks one thread to bind two
+    /// different slots (a worker's slot is stable for its lifetime);
+    /// re-binding the same slot must be a no-op. Default: no-op for
+    /// single-device backends.
+    ///
+    /// [`WorkerContext`]: crate::coordinator::pool::WorkerContext
+    fn bind_device(&self, _slot: usize) {}
 }
 
 // ---------------------------------------------------------------- PJRT
@@ -731,6 +751,21 @@ pub struct MockBackend {
     pub buckets_decode: Vec<usize>,
     pub hot_positions: Vec<usize>,
     pub seed: u64,
+    /// Mock accelerator slots ([`ModelBackend::device_count`]): two, so a
+    /// multi-worker pool exercises a non-trivial `slot -> device` mapping.
+    pub mock_devices: usize,
+    /// `thread -> device` recorded by [`ModelBackend::bind_device`]. The
+    /// mock *asserts* pinning: a thread that re-binds a different device
+    /// than it already holds panics (the pool contract is one stable slot
+    /// per worker thread).
+    bindings: Mutex<Vec<(std::thread::ThreadId, usize)>>,
+    /// Test poison knob: panic inside `embed` when the ids contain this
+    /// token — exercises the pool's panic containment on the prefill path.
+    pub panic_on_embed_token: Option<i32>,
+    /// Test poison knob: panic inside the decode core at this position —
+    /// exercises panic containment on the decode path (only the session
+    /// whose decode crosses the position is poisoned).
+    pub panic_at_decode_pos: Option<usize>,
 }
 
 impl MockBackend {
@@ -741,7 +776,17 @@ impl MockBackend {
             buckets_decode: vec![128, 256, 512, 1024, 2048, 4096, 8192, 16384, 32768, 131072, 262144],
             hot_positions: vec![],
             seed: 0,
+            mock_devices: 2,
+            bindings: Mutex::new(Vec::new()),
+            panic_on_embed_token: None,
+            panic_at_decode_pos: None,
         }
+    }
+
+    /// The `(thread, device)` bindings recorded so far (tests assert the
+    /// pool pinned every worker and stayed within `device_count`).
+    pub fn device_bindings(&self) -> Vec<(std::thread::ThreadId, usize)> {
+        self.bindings.lock().expect("mock bindings").clone()
     }
 
     /// Default config mirroring the build-time python model.
@@ -777,6 +822,9 @@ impl MockBackend {
         cache: &HotStore,
         pos: usize,
     ) -> (Vec<f32>, Vec<f32>, Vec<f32>) {
+        if self.panic_at_decode_pos == Some(pos) {
+            panic!("mock poison: decode at position {pos}");
+        }
         let cfg = &self.cfg;
         let (h, hk, dh) = (cfg.n_heads, cfg.n_kv_heads, cfg.d_head);
         let m = cache.capacity();
@@ -826,6 +874,11 @@ impl ModelBackend for MockBackend {
     }
 
     fn embed(&self, ids: &[i32], bucket: usize) -> Result<Tensor> {
+        if let Some(poison) = self.panic_on_embed_token {
+            if ids.contains(&poison) {
+                panic!("mock poison: embed saw token {poison}");
+            }
+        }
         let d = self.cfg.d_model;
         let mut x = vec![0.0f32; bucket * d];
         for (i, &id) in ids.iter().enumerate() {
@@ -1197,6 +1250,23 @@ impl ModelBackend for MockBackend {
             *o = self.h01(999, i as u64, 10);
         }
         Ok(v)
+    }
+
+    fn device_count(&self) -> usize {
+        self.mock_devices.max(1)
+    }
+
+    fn bind_device(&self, slot: usize) {
+        let dev = slot % self.device_count();
+        let tid = std::thread::current().id();
+        let mut bindings = self.bindings.lock().expect("mock bindings");
+        match bindings.iter().find(|(t, _)| *t == tid) {
+            Some((_, prev)) => assert_eq!(
+                *prev, dev,
+                "worker thread rebound from device {prev} to {dev}: per-worker pinning violated"
+            ),
+            None => bindings.push((tid, dev)),
+        }
     }
 }
 

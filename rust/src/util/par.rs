@@ -1,23 +1,43 @@
-//! Scoped-thread fan-out for the scoring / recompression / decode hot paths.
+//! Scoped-thread fan-out for small intra-unit hot paths, and the legacy
+//! round-dispatch oracle.
 //!
 //! rayon is not in the offline vendor set, so this is the minimal shape the
-//! engine and the worker pool need: run a closure over a set of items on
+//! code base needs: run a closure over a set of items on
 //! `std::thread::scope` workers. Items are sharded in *contiguous chunks*
 //! (worker w takes one consecutive run of items), which keeps neighboring
-//! items — adjacent layers of one cache, adjacent sessions of one round —
-//! on the same core's cache instead of interleaving them round-robin across
-//! workers. Each item is touched by exactly one worker, so `&mut` items are
-//! fine. Callers gate on a work-size threshold and fall back to a serial
-//! loop below it — thread spawn is ~tens of microseconds, which dwarfs
-//! small layers; `scoped_map_timed` also short-circuits to a serial loop
-//! for one worker or one item.
+//! items — adjacent layers of one cache, adjacent kv heads of one score
+//! pass — on the same core's cache instead of interleaving them round-robin
+//! across workers. Each item is touched by exactly one worker, so `&mut`
+//! items are fine. Callers gate on a work-size threshold and fall back to a
+//! serial loop below it — thread spawn is ~tens of microseconds, which
+//! dwarfs small layers; `scoped_map_timed` also short-circuits to a serial
+//! loop for one worker or one item.
+//!
+//! Two distinct roles remain after the persistent-pool rewrite
+//! ([`crate::coordinator::pool`]):
+//!
+//! * [`scoped_for_each`] still serves *intra-unit* fan-outs whose width is
+//!   data-dependent and short-lived (per-kv-head scoring, recompression
+//!   cascades) — spawning there is rare and amortized over real arithmetic.
+//! * [`scoped_map_timed`] is no longer the scheduler's round dispatcher;
+//!   per-tick rounds run on the persistent pool's long-lived workers. It is
+//!   kept, chunking and all, as the `LAVA_POOL=scoped` *bit-equivalence
+//!   oracle*: the pool's scoped mode routes every round through this exact
+//!   static contiguous-chunk sharding, and the fingerprint tests assert the
+//!   two dispatchers produce identical results at every width.
 
 use std::num::NonZeroUsize;
+use std::sync::OnceLock;
 use std::time::Instant;
 
-/// Worker cap: one thread per available core.
+/// Worker cap: one thread per available core. The `available_parallelism`
+/// syscall result is cached process-wide — this is called on fan-out hot
+/// paths (per layer, per score pass), not just at pool construction.
 pub fn max_threads() -> usize {
-    std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+    static MAX_THREADS: OnceLock<usize> = OnceLock::new();
+    *MAX_THREADS.get_or_init(|| {
+        std::thread::available_parallelism().map(NonZeroUsize::get).unwrap_or(1)
+    })
 }
 
 /// Split `len` items into at most `workers` contiguous chunk lengths, the
